@@ -1,0 +1,101 @@
+//! End-to-end driver (the repo's composition proof): serve real batched
+//! DLRM inference requests through the AOT-compiled PJRT artifacts while
+//! the EONSim engine simulates each served batch on the TPUv6e model —
+//! L1 (Pallas kernels) -> L2 (JAX DLRM, lowered to HLO text) -> L3 (this
+//! rust coordinator) all composing on one workload.
+//!
+//! Reports: functional predictions, host latency/throughput, simulated
+//! NPU latency per batch, and the paper's headline validation metric
+//! (EONSim vs the TPUv6e baseline) at the served batch sizes.
+//!
+//! Needs `make artifacts` first. Run:
+//! `cargo run --release --example dlrm_inference`
+
+use eonsim::config::presets;
+use eonsim::coordinator::{BatchExecutor, Coordinator, EngineTiming};
+use eonsim::runtime::dlrm::{random_request, DlrmExecutor};
+use eonsim::runtime::Runtime;
+use eonsim::testutil::SplitMix64;
+use eonsim::tpuv6e;
+
+struct Exec<'a>(DlrmExecutor<'a>);
+
+impl BatchExecutor for Exec<'_> {
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.0.batch_sizes()
+    }
+
+    fn run(&self, dense: &[f32], indices: &[i32], n: usize) -> anyhow::Result<Vec<f32>> {
+        self.0.infer(dense, indices, n)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    println!("== loading AOT artifacts ({dir}/) ==");
+    let runtime = Runtime::load(&dir)?;
+    println!("  compiled variants: batch sizes {:?}", runtime.batch_sizes());
+    let executor = DlrmExecutor::new(&runtime, 0xD1_13)?;
+    let meta = runtime.models()[0].meta.clone();
+    println!(
+        "  model: {} tables x {} rows x {}-dim, pool {}",
+        meta.num_tables, meta.rows, meta.dim, meta.pool
+    );
+
+    // Timing model: the engine simulating the *functional* model's scale.
+    let mut sim_cfg = presets::tpuv6e_dlrm_small();
+    sim_cfg.workload.embedding.num_tables = meta.num_tables;
+    sim_cfg.workload.embedding.rows_per_table = meta.rows as u64;
+    sim_cfg.workload.embedding.pool = meta.pool;
+    sim_cfg.workload.embedding.dim = meta.dim;
+
+    let mut coord = Coordinator::new(Exec(executor), EngineTiming::new(sim_cfg.clone()));
+
+    println!("\n== serving 200 requests with dynamic batching ==");
+    let mut rng = SplitMix64::new(42);
+    let t0 = std::time::Instant::now();
+    let mut responses = Vec::new();
+    for i in 0..200u64 {
+        let (dense, indices) = random_request(&meta, 1, rng.next_u64() ^ i);
+        coord.submit(dense, indices);
+        if coord.batch_ready() {
+            responses.extend(coord.serve_one()?);
+        }
+    }
+    responses.extend(coord.drain()?);
+    let wall = t0.elapsed().as_secs_f64();
+
+    assert_eq!(responses.len(), 200);
+    let mean_pred: f64 = responses.iter().map(|r| r.prediction as f64).sum::<f64>() / 200.0;
+    let mean_sim: f64 = responses.iter().map(|r| r.sim_latency_secs).sum::<f64>() / 200.0;
+    let p95 = {
+        let mut ls: Vec<f64> = responses.iter().map(|r| r.wall_latency_secs).collect();
+        ls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ls[(ls.len() * 95) / 100]
+    };
+    println!("  requests        : {}", responses.len());
+    println!("  batches         : {}", coord.served_batches());
+    println!("  host throughput : {:.1} req/s", 200.0 / wall);
+    println!("  host p95 latency: {:.1} ms", p95 * 1e3);
+    println!("  sim NPU latency : {:.3} ms mean per request", mean_sim * 1e3);
+    println!("  mean prediction : {mean_pred:.4} (sigmoid output, sanity: 0..1)");
+    assert!(responses.iter().all(|r| (0.0..=1.0).contains(&r.prediction)));
+
+    println!("\n== headline validation at served scale ==");
+    for batch in [8usize, 32] {
+        let mut cfg = sim_cfg.clone();
+        cfg.workload.batch_size = batch;
+        cfg.workload.num_batches = 1;
+        let report = eonsim::engine::Simulator::new(cfg.clone()).run()?;
+        let measured = tpuv6e::measure(&cfg)?;
+        let err = (report.exec_time_secs() - measured.exec_secs).abs() / measured.exec_secs;
+        println!(
+            "  batch {batch:3}: eonsim {:.4} ms, tpuv6e-baseline {:.4} ms, err {:.2}%",
+            report.exec_time_secs() * 1e3,
+            measured.exec_secs * 1e3,
+            err * 100.0
+        );
+    }
+    println!("\nOK: all three layers composed on a real served workload.");
+    Ok(())
+}

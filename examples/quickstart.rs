@@ -1,0 +1,51 @@
+//! Quickstart: configure EONSim with the paper's Table-I platform
+//! (TPUv6e + DLRM-RMC2-small), run a short simulation, and print the
+//! headline metrics.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use eonsim::config::presets;
+use eonsim::engine::Simulator;
+use eonsim::stats::writer;
+
+fn main() -> anyhow::Result<()> {
+    // Table I configuration.
+    let mut cfg = presets::tpuv6e_dlrm_small();
+    let hw = &cfg.hardware;
+    println!("== Table I: hardware + model configuration ==");
+    println!("  NPU cores            : {}", hw.num_cores);
+    println!("  systolic array       : {}x{}", hw.core.sa_rows, hw.core.sa_cols);
+    println!(
+        "  vector unit          : {} lanes, {} sublanes",
+        hw.core.vpu_lanes, hw.core.vpu_sublanes
+    );
+    println!("  local buffer         : {} MB", hw.mem.onchip_bytes >> 20);
+    println!(
+        "  off-chip             : {} GB, {:.0} GB/s",
+        hw.mem.dram.capacity_bytes >> 30,
+        hw.mem.dram.bandwidth_bytes_per_sec / 1e9
+    );
+    let e = &cfg.workload.embedding;
+    println!(
+        "  DLRM model           : {} tables, {} rows/table, {}-dim vectors",
+        e.num_tables, e.rows_per_table, e.dim
+    );
+    println!("  pooling factor       : {} lookups/table", e.pool);
+    println!(
+        "  MLPs                 : {}-{:?} bottom, {}-{:?} top",
+        cfg.workload.dense_in, cfg.workload.bottom_mlp, e.dim, cfg.workload.top_mlp
+    );
+
+    // Short run: batch 128, 2 batches, SPM policy (TPUv6e behaviour).
+    cfg.workload.batch_size = 128;
+    cfg.workload.num_batches = 2;
+    println!("\n== simulating {} batches of {} ==", cfg.workload.num_batches, cfg.workload.batch_size);
+    let report = Simulator::new(cfg).run()?;
+    let m = report.total_mem();
+    println!("  simulated time : {:.3} ms", report.exec_time_secs() * 1e3);
+    println!("  cycles         : {}", report.total_cycles());
+    println!("  on-chip ratio  : {:.3}", m.onchip_ratio());
+    println!("  energy         : {:.2} mJ", report.energy_joules * 1e3);
+    println!("\nper-batch CSV:\n{}", writer::to_csv(&report));
+    Ok(())
+}

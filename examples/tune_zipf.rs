@@ -1,0 +1,27 @@
+//! Calibration utility: measure the hot-set fraction (unique vectors
+//! covering 90 % of accesses) as a function of the Zipf exponent, used to
+//! pick the ReuseDataset alphas in `config::presets` against the paper's
+//! "4 % dominate / spread across 46 %" characterization.
+//!
+//! Run: `cargo run --release --example tune_zipf`
+use eonsim::trace::zipf::ZipfSampler;
+use eonsim::testutil::SplitMix64;
+fn frac(alpha: f64) -> f64 {
+    let n = 1_000_000u64;
+    let z = ZipfSampler::new(n, alpha);
+    let mut rng = SplitMix64::new(5);
+    let draws = 2_000_000usize;
+    let mut counts = std::collections::HashMap::new();
+    for _ in 0..draws { *counts.entry(z.sample(&mut rng)).or_insert(0usize) += 1; }
+    let mut freq: Vec<usize> = counts.values().copied().collect();
+    freq.sort_unstable_by(|a,b| b.cmp(a));
+    let target = (draws as f64 * 0.9) as usize;
+    let (mut acc, mut k) = (0usize, 0usize);
+    for f in &freq { acc += f; k += 1; if acc >= target { break; } }
+    k as f64 / counts.len() as f64
+}
+fn main() {
+    for alpha in [0.4, 0.5, 0.6, 0.8, 0.9, 1.0, 1.1, 1.2, 1.3, 1.5] {
+        println!("alpha={alpha}: hot90={:.3}", frac(alpha));
+    }
+}

@@ -1,0 +1,132 @@
+"""AOT pipeline: lower the L2 DLRM model to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and /opt/xla-example/README.md.
+
+Artifacts (one per model variant the rust coordinator can batch to):
+  artifacts/dlrm_b{B}.hlo.txt   — plain-XLA DLRM forward, batch B
+  artifacts/dlrm_pallas.hlo.txt — Pallas-kernel DLRM (small shapes),
+                                  proves L1->L2->L3 composition
+  artifacts/meta.json           — shape/ordering contract for rust
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Batch variants for the plain artifact: the rust dynamic batcher picks
+# the smallest variant that fits the queued requests.
+BATCH_VARIANTS = (1, 8, 32)
+
+# The Pallas artifact uses small shapes: interpret-mode pallas lowers its
+# grid to HLO while-loops, so we keep the composition proof cheap.
+PALLAS_CFG = M.DlrmConfig(batch=4, num_tables=4, rows=64, dim=32, pool=8,
+                          dense_in=16, bottom=(32, 32), top=(16, 1))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(cfg: M.DlrmConfig):
+    out = []
+    for _, shape, dtype in cfg.param_shapes():
+        jdt = jnp.int32 if dtype == "i32" else jnp.float32
+        out.append(jax.ShapeDtypeStruct(shape, jdt))
+    return out
+
+
+def lower_variant(cfg: M.DlrmConfig, use_pallas: bool) -> str:
+    fn = functools.partial(M.dlrm_forward, cfg, use_pallas=use_pallas)
+    lowered = jax.jit(fn).lower(*_specs(cfg))
+    return to_hlo_text(lowered)
+
+
+def build_all(out_dir: str, rows: int, tables: int, pool: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    meta = {"variants": [], "pallas": None}
+
+    for b in BATCH_VARIANTS:
+        cfg = M.DlrmConfig(batch=b, num_tables=tables, rows=rows, pool=pool)
+        text = lower_variant(cfg, use_pallas=False)
+        name = f"dlrm_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        meta["variants"].append(
+            {
+                "file": name,
+                "batch": b,
+                "num_tables": cfg.num_tables,
+                "rows": cfg.rows,
+                "dim": cfg.dim,
+                "pool": cfg.pool,
+                "dense_in": cfg.dense_in,
+                "bottom": list(cfg.bottom),
+                "top": list(cfg.top),
+                "params": [
+                    {"name": n, "shape": list(s), "dtype": d}
+                    for n, s, d in cfg.param_shapes()
+                ],
+            }
+        )
+        print(f"wrote {name}: {len(text)} chars")
+
+    text = lower_variant(PALLAS_CFG, use_pallas=True)
+    with open(os.path.join(out_dir, "dlrm_pallas.hlo.txt"), "w") as f:
+        f.write(text)
+    cfg = PALLAS_CFG
+    meta["pallas"] = {
+        "file": "dlrm_pallas.hlo.txt",
+        "batch": cfg.batch,
+        "num_tables": cfg.num_tables,
+        "rows": cfg.rows,
+        "dim": cfg.dim,
+        "pool": cfg.pool,
+        "dense_in": cfg.dense_in,
+        "bottom": list(cfg.bottom),
+        "top": list(cfg.top),
+        "params": [
+            {"name": n, "shape": list(s), "dtype": d}
+            for n, s, d in cfg.param_shapes()
+        ],
+    }
+    print(f"wrote dlrm_pallas.hlo.txt: {len(text)} chars")
+
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print("wrote meta.json")
+    return meta
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--rows", type=int, default=512,
+                   help="functional table rows (timing path simulates 1M)")
+    p.add_argument("--tables", type=int, default=60)
+    p.add_argument("--pool", type=int, default=120)
+    args = p.parse_args()
+    build_all(args.out_dir, args.rows, args.tables, args.pool)
+
+
+if __name__ == "__main__":
+    main()

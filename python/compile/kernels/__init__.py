@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + pure-jnp oracles for EONSim DLRM workload."""
+
+from . import embedding_bag, mlp, ref  # noqa: F401

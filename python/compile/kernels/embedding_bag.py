@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: sum-pooled embedding bag (the embedding hot-spot).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the embedding bag is a
+gather + reduction, i.e. a VPU workload, not an MXU one. The kernel tiles
+the *bag* axis across the grid — one grid step owns a block of bags, its
+pooled accumulator lives in VMEM for the whole step, and rows are pulled
+from the table (HBM-resident in the real machine) with dynamic-slice
+loads. Pooling reduces along the pool axis in-register, the shape a
+128-lane x 8-sublane VPU consumes natively.
+
+Must run with ``interpret=True``: the CPU PJRT plugin cannot execute the
+Mosaic custom-call a real TPU lowering would emit (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _embedding_bag_kernel(idx_ref, table_ref, o_ref, *, pool: int):
+    """One grid step: pool `pool` rows for a block of bags.
+
+    idx_ref:   (block_bags, pool) int32 — row ids for this block.
+    table_ref: (rows, dim)              — full table (HBM view).
+    o_ref:     (block_bags, dim)        — pooled output block (VMEM).
+    """
+    block_bags = o_ref.shape[0]
+
+    def bag_body(b, _):
+        def pool_body(p, acc):
+            row = idx_ref[b, p]
+            # dynamic single-row gather: (1, dim) slice from the table
+            vec = table_ref[pl.dslice(row, 1), :]
+            return acc + vec[0, :]
+
+        acc0 = jnp.zeros((o_ref.shape[1],), dtype=o_ref.dtype)
+        pooled = jax.lax.fori_loop(0, pool, pool_body, acc0)
+        o_ref[pl.dslice(b, 1), :] = pooled[None, :]
+        return 0
+
+    jax.lax.fori_loop(0, block_bags, bag_body, 0)
+
+
+def embedding_bag(
+    table: jax.Array,
+    indices: jax.Array,
+    *,
+    block_bags: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Sum-pooled embedding bag via Pallas.
+
+    Args:
+      table:      (rows, dim) embedding table.
+      indices:    (bags, pool) int32 row indices.
+      block_bags: bags per grid step (VMEM accumulator block height).
+
+    Returns:
+      (bags, dim) pooled vectors, matching ``ref.embedding_bag_ref``.
+    """
+    bags, pool = indices.shape
+    rows, dim = table.shape
+    if bags % block_bags != 0:
+        # fall back to one bag per step for ragged sizes
+        block_bags = 1
+    grid = (bags // block_bags,)
+
+    kernel = functools.partial(_embedding_bag_kernel, pool=pool)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_bags, pool), lambda i: (i, 0)),
+            pl.BlockSpec((rows, dim), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_bags, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bags, dim), table.dtype),
+        interpret=interpret,
+    )(indices, table)
+
+
+def multi_table_embedding_bag(
+    tables: jax.Array,
+    indices: jax.Array,
+    *,
+    block_bags: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Embedding bag across a (T, rows, dim) stack of tables.
+
+    indices: (B, T, pool) -> returns (B, T, dim). Each table is processed
+    by the single-table Pallas kernel; vmap lifts over the table axis so
+    the whole stack still lowers into one HLO module.
+    """
+
+    def one(table, idx):  # (rows,dim), (B,pool)
+        return embedding_bag(table, idx, block_bags=block_bags, interpret=interpret)
+
+    return jax.vmap(one, in_axes=(0, 1), out_axes=1)(tables, indices)
+
+
+def vmem_footprint_bytes(block_bags: int, pool: int, dim: int, elem: int = 4) -> int:
+    """Estimated VMEM bytes per grid step (DESIGN.md §Perf, L1 target).
+
+    accumulator block + index block + one staged row.
+    """
+    acc = block_bags * dim * elem
+    idx = block_bags * pool * 4
+    staged = dim * elem
+    return acc + idx + staged

@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: tiled MXU matmul for the DLRM MLP layers.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): classic MXU tiling — the
+grid walks (M/bm, N/bn, K/bk); each step keeps a (bm, bn) f32 accumulator
+block in VMEM (the revisited output block), streams (bm, bk) x (bk, bn)
+operand tiles HBM->VMEM via BlockSpec (the schedule a GPU kernel would
+express with threadblocks + shared memory), and feeds the systolic array
+MXU-aligned tiles. Bias + ReLU are fused into the K-epilogue so the
+activation never round-trips to HBM.
+
+interpret=True for CPU-PJRT execution (see embedding_bag.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, k_steps: int, relu: bool):
+    """Grid (M/bm, N/bn, K/bk); K is the innermost (sequential) axis.
+
+    The (bm, bn) output block is revisited across all K steps and serves
+    as the f32 accumulator (all operands are f32 in this model).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y
+
+
+def _pad_to(x: jax.Array, mult) -> jax.Array:
+    pm = (-x.shape[0]) % mult[0]
+    pn = (-x.shape[1]) % mult[1]
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+def mlp_layer(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    relu: bool = True,
+    block_m: int = 32,
+    block_n: int = 64,
+    block_k: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused dense layer relu(x @ w + b) via a tiled Pallas matmul.
+
+    Operands are zero-padded up to tile multiples (zero rows/cols are
+    exact no-ops for matmul, and the bias epilogue only touches columns
+    that survive the final slice), then the result is sliced back — so
+    arbitrary layer shapes are supported while the kernel itself only
+    ever sees aligned tiles.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    xp = _pad_to(x, (bm, bk))
+    wp = _pad_to(w, (bk, bn))
+    bp = jnp.pad(b, (0, wp.shape[1] - n))[None, :]  # (1, Np)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    k_steps = kp // bk
+
+    kernel = functools.partial(_matmul_kernel, k_steps=k_steps, relu=relu)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, elem: int = 4) -> int:
+    """Estimated VMEM bytes per grid step: x tile + w tile + bias row +
+    output accumulator (DESIGN.md §Perf, L1 target)."""
+    return (bm * bk + bk * bn + bn + bm * bn) * elem
+
+
+def mxu_utilization(m: int, n: int, k: int, sa: int = 256) -> float:
+    """Estimated MXU utilization for an (m,k)@(k,n) layer on an sa x sa
+    systolic array — macs / (array capacity x occupied cycles); the §Perf
+    L1 metric recorded in EXPERIMENTS.md."""
+    tiles = math.ceil(m / sa) * math.ceil(n / sa) * math.ceil(k / sa)
+    cycles = tiles * sa + 2 * sa  # folded tiles + fill/drain
+    return (m * n * k) / (sa * sa * cycles)

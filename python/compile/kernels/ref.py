@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only (no pallas, no custom control flow
+beyond what XLA fuses natively). pytest + hypothesis assert allclose
+between kernel and oracle across shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """Sum-pooled embedding bag.
+
+    Args:
+      table:   (rows, dim) embedding table.
+      indices: (bags, pool) int32 row indices; each bag sums `pool` rows.
+
+    Returns:
+      (bags, dim) pooled vectors: ``out[b] = sum_p table[indices[b, p]]``.
+    """
+    return jnp.take(table, indices, axis=0).sum(axis=1)
+
+
+def multi_table_embedding_bag_ref(tables: jax.Array, indices: jax.Array) -> jax.Array:
+    """Embedding bag across a stack of tables.
+
+    Args:
+      tables:  (T, rows, dim) stacked embedding tables.
+      indices: (B, T, pool) int32 per-sample, per-table row indices.
+
+    Returns:
+      (B, T, dim) pooled vectors per sample and table.
+    """
+    # vmap over the table axis: each table gathers its own index column.
+    def one_table(table, idx):  # (rows, dim), (B, pool) -> (B, dim)
+        return embedding_bag_ref(table, idx)
+
+    pooled = jax.vmap(one_table, in_axes=(0, 1), out_axes=1)(
+        tables, indices
+    )  # (B, T, dim)
+    return pooled
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain matmul oracle: (M, K) @ (K, N) -> (M, N) in f32 accumulation."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def mlp_layer_ref(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    """One dense layer: relu(x @ w + b) (relu optional, for final layers)."""
+    y = matmul_ref(x, w) + b
+    return jax.nn.relu(y) if relu else y
+
+
+def dlrm_forward_ref(params: dict, dense: jax.Array, indices: jax.Array) -> jax.Array:
+    """Oracle for the full DLRM forward pass (see model.py for shapes)."""
+    h = dense
+    for w, b in params["bottom"]:
+        h = mlp_layer_ref(h, w, b, relu=True)
+    pooled = multi_table_embedding_bag_ref(params["tables"], indices)  # (B,T,D)
+    # Sum-based feature interaction: combine the dense projection with every
+    # pooled embedding (top-MLP input stays at `dim`, matching the paper's
+    # 128-in top MLP).
+    z = h + pooled.sum(axis=1)
+    n_top = len(params["top"])
+    for i, (w, b) in enumerate(params["top"]):
+        z = mlp_layer_ref(z, w, b, relu=(i < n_top - 1))
+    return jax.nn.sigmoid(z)

@@ -1,0 +1,107 @@
+"""L2: DLRM forward pass in JAX, optionally routed through the L1 Pallas
+kernels, lowered once by aot.py to HLO text for the rust runtime.
+
+Model (DLRM-RMC2-small, paper Table I):
+  dense (B, 256) -> bottom MLP 256-128-128 (two fused dense+ReLU layers)
+  indices (B, T, pool) -> per-table sum-pooled embedding bags (B, T, 128)
+  sum-interaction: bottom_out + sum_t pooled_t            (B, 128)
+  top MLP 128-64-1 (ReLU, then linear) -> sigmoid          (B, 1)
+
+Parameter order is FIXED and mirrored by the rust runtime
+(rust/src/runtime/dlrm.rs): tables, bw1, bb1, bw2, bb2, tw1, tb1, tw2,
+tb2, dense, indices. Keep in sync with aot.py's meta.json.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import embedding_bag as eb
+from .kernels import mlp as mlpk
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class DlrmConfig:
+    """Shape configuration for one AOT DLRM variant."""
+
+    batch: int = 32
+    num_tables: int = 60
+    rows: int = 512  # functional path is scaled down (DESIGN.md §3)
+    dim: int = 128
+    pool: int = 120
+    dense_in: int = 256
+    bottom: tuple = (128, 128)  # 256-128-128 chain
+    top: tuple = (64, 1)  # 128-64-1 chain
+
+    def param_shapes(self):
+        """(name, shape, dtype) for every HLO parameter, in order."""
+        shapes = [("tables", (self.num_tables, self.rows, self.dim), "f32")]
+        prev = self.dense_in
+        for i, width in enumerate(self.bottom):
+            shapes.append((f"bw{i + 1}", (prev, width), "f32"))
+            shapes.append((f"bb{i + 1}", (width,), "f32"))
+            prev = width
+        prev = self.dim
+        for i, width in enumerate(self.top):
+            shapes.append((f"tw{i + 1}", (prev, width), "f32"))
+            shapes.append((f"tb{i + 1}", (width,), "f32"))
+            prev = width
+        shapes.append(("dense", (self.batch, self.dense_in), "f32"))
+        shapes.append(
+            ("indices", (self.batch, self.num_tables, self.pool), "i32")
+        )
+        return shapes
+
+
+def _layers(cfg: DlrmConfig, flat: list):
+    """Split the flat parameter list into (tables, bottom, top, dense, idx)."""
+    it = iter(flat)
+    tables = next(it)
+    bottom = [(next(it), next(it)) for _ in cfg.bottom]
+    top = [(next(it), next(it)) for _ in cfg.top]
+    dense = next(it)
+    indices = next(it)
+    return tables, bottom, top, dense, indices
+
+
+def dlrm_forward(cfg: DlrmConfig, *flat, use_pallas: bool = False) -> jax.Array:
+    """DLRM forward over the flat parameter list (AOT entrypoint).
+
+    use_pallas=False lowers to plain XLA ops (fast hot-path artifact);
+    use_pallas=True routes the MLP layers and embedding bags through the
+    L1 Pallas kernels (composition-proof artifact) — numerics must match,
+    which rust/tests/integration.rs checks end-to-end.
+    """
+    tables, bottom, top, dense, indices = _layers(cfg, list(flat))
+
+    if use_pallas:
+        h = dense
+        for w, b in bottom:
+            h = mlpk.mlp_layer(h, w, b, relu=True)
+        pooled = eb.multi_table_embedding_bag(tables, indices)
+        z = h + pooled.sum(axis=1)
+        for i, (w, b) in enumerate(top):
+            z = mlpk.mlp_layer(z, w, b, relu=(i < len(top) - 1))
+        return jax.nn.sigmoid(z)
+
+    params = {"tables": tables, "bottom": bottom, "top": top}
+    return ref.dlrm_forward_ref(params, dense, indices)
+
+
+def init_params(cfg: DlrmConfig, seed: int = 0):
+    """Deterministic random parameters + inputs for tests/examples."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape, dtype in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if dtype == "i32":
+            out.append(
+                jax.random.randint(sub, shape, 0, cfg.rows, dtype=jnp.int32)
+            )
+        else:
+            out.append(jax.random.normal(sub, shape, dtype=jnp.float32) * 0.05)
+    return out

@@ -1,0 +1,87 @@
+//! Design-choice ablations (DESIGN.md §5 forward-looking row): the
+//! architectural knobs the paper's §IV discussion motivates for
+//! next-generation NPUs — hierarchy depth (shared global buffer),
+//! core count, and software-prefetch depth — each isolated against the
+//! same workload.
+//!
+//! Run: `cargo bench --bench ablation`
+
+mod common;
+
+use eonsim::config::{presets, CachePolicyKind, GlobalBufferConfig, OnchipPolicy, SimConfig};
+use eonsim::engine::Simulator;
+
+fn base_cfg() -> SimConfig {
+    let mut cfg = presets::tpuv6e_dlrm_small();
+    cfg.workload.batch_size = 128;
+    cfg.workload.num_batches = 1;
+    cfg.workload.embedding.num_tables = 30;
+    cfg.workload.trace.alpha = 1.1;
+    // widen the local SRAM port so the *off-chip* path is the bottleneck
+    // (the regime where hierarchy depth and prefetch matter; the stock
+    // TPUv6e config is near parity between the two)
+    cfg.hardware.mem.onchip_bytes_per_cycle = 8192.0;
+    cfg
+}
+
+fn run(cfg: SimConfig) -> (u64, f64) {
+    let r = Simulator::new(cfg).run().unwrap();
+    (r.total_cycles(), r.total_mem().onchip_ratio())
+}
+
+fn main() -> anyhow::Result<()> {
+    common::section("ablation 1: hierarchy depth (local SPM vs +global buffer)");
+    let flat = run(base_cfg());
+    let mut deep_cfg = base_cfg();
+    deep_cfg.hardware.mem.global = Some(GlobalBufferConfig {
+        bytes: 128 << 20,
+        assoc: 16,
+        policy: CachePolicyKind::Lru,
+        latency_cycles: 40,
+        // wide shared port: a narrow one (1024 B/cyc) measurably becomes
+        // the new bottleneck — itself a finding this ablation can show
+        bytes_per_cycle: 4096.0,
+    });
+    let deep = run(deep_cfg);
+    println!("  depth 1 (spm)        : {:>12} cycles, onchip ratio {:.3}", flat.0, flat.1);
+    println!("  depth 2 (spm+global) : {:>12} cycles, onchip ratio {:.3}", deep.0, deep.1);
+    anyhow::ensure!(deep.0 < flat.0, "global buffer must cut off-chip-bound cycles");
+    anyhow::ensure!(deep.1 > flat.1, "global buffer must raise onchip ratio");
+
+    common::section("ablation 2: core count (shared DRAM)");
+    for cores in [1usize, 2, 4, 8] {
+        let mut cfg = base_cfg();
+        cfg.hardware.num_cores = cores;
+        cfg.hardware.mem.policy = OnchipPolicy::Cache(CachePolicyKind::Lru);
+        let (cycles, ratio) = run(cfg);
+        println!("  {cores} cores: {cycles:>12} cycles, onchip ratio {ratio:.3}");
+    }
+
+    common::section("ablation 3: software prefetch depth (SPM)");
+    let mut first = 0u64;
+    for depth in [0usize, 2, 8, 32] {
+        let mut cfg = base_cfg();
+        cfg.hardware.mem.prefetch_depth = depth;
+        let (cycles, _) = run(cfg);
+        println!("  depth {depth:>2}: {cycles:>12} cycles");
+        if depth == 0 {
+            first = cycles;
+        }
+        // deeper prefetch widens the reorder window; scheduling jitter of
+        // a few cycles is expected, regressions beyond 0.5% are not
+        anyhow::ensure!(
+            cycles as f64 <= first as f64 * 1.005,
+            "prefetch depth {depth} regressed: {cycles} vs {first}"
+        );
+    }
+
+    common::section("ablation 4: cache associativity (LRU)");
+    for assoc in [4usize, 8, 16, 32] {
+        let mut cfg = base_cfg();
+        cfg.hardware.mem.policy = OnchipPolicy::Cache(CachePolicyKind::Lru);
+        cfg.hardware.mem.cache_assoc = assoc;
+        let (cycles, ratio) = run(cfg);
+        println!("  {assoc:>2}-way: {cycles:>12} cycles, onchip ratio {ratio:.3}");
+    }
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Shared bench harness (no criterion in the offline vendor set,
+//! DESIGN.md §6): wall-clock timing with warmup + repetitions, printing
+//! mean / min / max per labelled section, plus the paper-figure series
+//! each bench regenerates.
+#![allow(dead_code)] // each bench target compiles common.rs independently
+
+
+use std::time::Instant;
+
+/// Time `f` over `reps` repetitions after one warmup; print stats and
+/// return the mean seconds.
+pub fn bench<F: FnMut()>(label: &str, reps: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    println!("bench {label:<40} mean {mean:>9.4}s  min {min:>9.4}s  max {max:>9.4}s  (n={reps})");
+    mean
+}
+
+/// Throughput helper: items processed per second.
+pub fn throughput(label: &str, items: u64, secs: f64) {
+    println!(
+        "bench {label:<40} {:>12.2} M items/s  ({items} items in {secs:.4}s)",
+        items as f64 / secs / 1e6
+    );
+}
+
+/// Section header for the figure series a bench regenerates.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,38 @@
+//! Paper Fig. 3a: execution time, EONSim vs the TPUv6e baseline, varying
+//! the number of embedding tables (30-60). Prints the figure series and
+//! times the end-to-end simulation per point.
+//!
+//! Run: `cargo bench --bench fig3a_tables`
+
+mod common;
+
+use eonsim::figures;
+
+fn main() -> anyhow::Result<()> {
+    common::section("Fig 3a: exec time vs number of tables (batch 128, bench scale)");
+    // bench scale: batch 128 keeps cargo-bench time reasonable while
+    // exercising every point; `eonsim figures --fig 3a` runs batch 256.
+    let tables = [30usize, 40, 50, 60];
+    let mut points = Vec::new();
+    for &t in &tables {
+        let mut pts = Vec::new();
+        common::bench(&format!("fig3a tables={t}"), 2, || {
+            pts = figures::fig3a(&[t], 128).unwrap();
+        });
+        points.push(pts[0]);
+    }
+    common::section("series (paper: avg err ~2%)");
+    for p in &points {
+        println!(
+            "  tables {:3}: eonsim {:.6}s  tpuv6e {:.6}s  err {:.2}%",
+            p.x, p.eonsim_secs, p.tpuv6e_secs, p.err_pct()
+        );
+    }
+    println!(
+        "  avg err {:.2}%  max {:.2}%",
+        figures::mean_err_pct(&points),
+        figures::max_err_pct(&points)
+    );
+    anyhow::ensure!(figures::mean_err_pct(&points) < 6.0, "validation drifted");
+    Ok(())
+}

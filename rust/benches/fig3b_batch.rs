@@ -1,0 +1,36 @@
+//! Paper Fig. 3b: execution time, EONSim vs the TPUv6e baseline, varying
+//! batch size (paper: 32-2048 step 32; bench samples the range — the
+//! full sweep is `eonsim validate --full`).
+//!
+//! Run: `cargo bench --bench fig3b_batch`
+
+mod common;
+
+use eonsim::figures;
+
+fn main() -> anyhow::Result<()> {
+    common::section("Fig 3b: exec time vs batch size (60 tables)");
+    let batches = [32usize, 128, 512];
+    let mut points = Vec::new();
+    for &b in &batches {
+        let mut pts = Vec::new();
+        common::bench(&format!("fig3b batch={b}"), 2, || {
+            pts = figures::fig3b(&[b], 60).unwrap();
+        });
+        points.push(pts[0]);
+    }
+    common::section("series (paper: avg err 1.4%, max 4%)");
+    for p in &points {
+        println!(
+            "  batch {:4}: eonsim {:.6}s  tpuv6e {:.6}s  err {:.2}%",
+            p.x, p.eonsim_secs, p.tpuv6e_secs, p.err_pct()
+        );
+    }
+    println!(
+        "  avg err {:.2}%  max {:.2}%",
+        figures::mean_err_pct(&points),
+        figures::max_err_pct(&points)
+    );
+    anyhow::ensure!(figures::max_err_pct(&points) < 8.0, "validation drifted");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Paper Fig. 3c: on-/off-chip memory access counts, EONSim normalized
+//! to the TPUv6e baseline's bandwidth-utilization estimate (paper: 2.2%
+//! / 2.8% average error).
+//!
+//! Run: `cargo bench --bench fig3c_access`
+
+mod common;
+
+use eonsim::figures;
+
+fn main() -> anyhow::Result<()> {
+    common::section("Fig 3c: memory access counts normalized to TPUv6e");
+    let batches = [32usize, 128, 512];
+    let mut points = Vec::new();
+    for &b in &batches {
+        let mut pts = Vec::new();
+        common::bench(&format!("fig3c batch={b}"), 2, || {
+            pts = figures::fig3c(&[b], 60).unwrap();
+        });
+        points.push(pts[0]);
+    }
+    common::section("series");
+    let mut on_sum = 0.0;
+    let mut off_sum = 0.0;
+    for p in &points {
+        println!(
+            "  batch {:4}: onchip {:.3} (err {:.2}%)  offchip {:.3} (err {:.2}%)",
+            p.batch,
+            p.onchip_ratio_vs_tpu,
+            p.onchip_err_pct(),
+            p.offchip_ratio_vs_tpu,
+            p.offchip_err_pct()
+        );
+        on_sum += p.onchip_err_pct();
+        off_sum += p.offchip_err_pct();
+    }
+    let n = points.len() as f64;
+    println!("  avg onchip err {:.2}%  avg offchip err {:.2}%", on_sum / n, off_sum / n);
+    anyhow::ensure!(on_sum / n < 6.0 && off_sum / n < 6.0, "access counts drifted");
+    Ok(())
+}

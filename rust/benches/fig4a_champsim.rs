@@ -1,0 +1,33 @@
+//! Paper Fig. 4a: cache hit/miss counts, EONSim's on-chip model vs the
+//! independent ChampSim-style implementation, under LRU and SRRIP across
+//! the reuse datasets (paper: identical).
+//!
+//! Run: `cargo bench --bench fig4a_champsim`
+
+mod common;
+
+use eonsim::figures;
+
+fn main() -> anyhow::Result<()> {
+    common::section("Fig 4a: EONSim vs ChampSim cache behaviour");
+    let mut rows = Vec::new();
+    common::bench("fig4a all datasets x {lru,srrip}", 3, || {
+        rows = figures::fig4a(8 << 20, 2, 64).unwrap();
+    });
+    common::section("series (paper: identical counts)");
+    for c in &rows {
+        println!(
+            "  {:10} {:6}: eonsim {}/{}  champsim {}/{}  identical: {}",
+            c.dataset,
+            c.policy,
+            c.eonsim_hits,
+            c.eonsim_misses,
+            c.champsim_hits,
+            c.champsim_misses,
+            c.identical()
+        );
+        anyhow::ensure!(c.identical(), "{} {} diverged", c.dataset, c.policy);
+    }
+    println!("  all identical: true");
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline vendor set).
+//!
+//! Grammar: `eonsim <command> [--flag value]... [--switch]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a command word + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> anyhow::Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(arg) = it.next() {
+            let name = arg
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("unexpected positional argument `{arg}`"))?
+                .to_string();
+            // `--key=value` or `--key value` or bare switch
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                flags.insert(name, it.next().unwrap());
+            } else {
+                switches.push(name);
+            }
+        }
+        Ok(Args { command, flags, switches })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}: bad integer `{v}`: {e}")),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}: bad number `{v}`: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_and_flags() {
+        let a = parse(&["run", "--batch", "64", "--policy=lru", "--full"]);
+        assert_eq!(a.command, "run");
+        assert_eq!(a.flag("batch"), Some("64"));
+        assert_eq!(a.flag("policy"), Some("lru"));
+        assert!(a.has("full"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn typed_flags() {
+        let a = parse(&["run", "--batch", "64", "--alpha", "1.25"]);
+        assert_eq!(a.usize_flag("batch", 1).unwrap(), 64);
+        assert_eq!(a.usize_flag("other", 7).unwrap(), 7);
+        assert_eq!(a.f64_flag("alpha", 0.0).unwrap(), 1.25);
+        assert!(a.usize_flag("alpha", 0).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = parse(&[]);
+        assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(["run".to_string(), "stray".to_string()]).is_err());
+    }
+
+    #[test]
+    fn switch_followed_by_flag() {
+        let a = parse(&["x", "--full", "--batch", "8"]);
+        assert!(a.has("full"));
+        assert_eq!(a.flag("batch"), Some("8"));
+    }
+}

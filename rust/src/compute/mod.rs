@@ -1,0 +1,11 @@
+//! Compute-side models: the SCALE-Sim-style analytical systolic-array
+//! model for matrix operations, the `T = D/B + L` transfer model, and the
+//! vector-unit model for embedding arithmetic.
+
+pub mod systolic;
+pub mod transfer;
+pub mod vector;
+
+pub use systolic::{estimate as matmul_estimate, MatmulEstimate};
+pub use transfer::{double_buffered, transfer_cycles};
+pub use vector::{elementwise_cycles, pooling_cycles};

@@ -1,0 +1,153 @@
+//! SCALE-Sim-style analytical systolic-array model (paper §III: "a
+//! SCALE-Sim-based model for computation cycles").
+//!
+//! Matrix operations have deterministic, tile-based access patterns, so
+//! cycle counts follow closed forms: the `M x K` input and `K x N` weight
+//! are folded over the `SR x SC` physical array, and each fold costs a
+//! pipeline-fill plus streaming term that depends on the dataflow
+//! (SCALE-Sim's OS/WS/IS taxonomy). Tile operand/result sizes feed the
+//! `T = D/B + L` transfer model in [`super::transfer`].
+
+use crate::config::{CoreConfig, Dataflow, MnkLayer};
+
+/// Compute-cycle estimate plus per-layer tile traffic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MatmulEstimate {
+    /// Total systolic-array busy cycles.
+    pub compute_cycles: u64,
+    /// Bytes of input-operand traffic (HBM -> local buffer).
+    pub input_bytes: u64,
+    /// Bytes of weight traffic.
+    pub weight_bytes: u64,
+    /// Bytes of output traffic (local buffer -> HBM or next stage).
+    pub output_bytes: u64,
+    /// Multiply-accumulate count (for energy and utilization).
+    pub macs: u64,
+}
+
+impl MatmulEstimate {
+    /// Fraction of peak MAC throughput actually achieved.
+    pub fn utilization(&self, core: &CoreConfig) -> f64 {
+        let peak = (core.sa_rows * core.sa_cols) as f64;
+        if self.compute_cycles == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (peak * self.compute_cycles as f64)
+    }
+}
+
+/// Analytical cycles for one MNK layer on the configured array.
+///
+/// Formulas follow SCALE-Sim (Samajdar et al.): each fold pays an array
+/// fill/drain plus one cycle per streamed element; folds are the products
+/// of the ceil-divided logical dims over the physical dims.
+pub fn estimate(layer: MnkLayer, core: &CoreConfig, elem_bytes: u64) -> MatmulEstimate {
+    let (m, n, k) = (layer.m as u64, layer.n as u64, layer.k as u64);
+    let sr = core.sa_rows as u64;
+    let sc = core.sa_cols as u64;
+
+    let compute_cycles = match core.dataflow {
+        // Output stationary: each PE owns one output; folds over (M/SR,
+        // N/SC); per fold: 2*SR + SC + K - 2 (skew-in + K MACs + drain).
+        Dataflow::OutputStationary => {
+            let folds = m.div_ceil(sr) * n.div_ceil(sc);
+            folds * (2 * sr + sc + k - 2)
+        }
+        // Weight stationary: K x N weights resident; folds over (K/SR,
+        // N/SC); per fold: SR (load) + M + SR + SC - 2 (stream M rows).
+        Dataflow::WeightStationary => {
+            let folds = k.div_ceil(sr) * n.div_ceil(sc);
+            folds * (sr + m + sr + sc - 2)
+        }
+        // Input stationary: M x K inputs resident; symmetric to WS with
+        // N streamed.
+        Dataflow::InputStationary => {
+            let folds = k.div_ceil(sr) * m.div_ceil(sc);
+            folds * (sr + n + sr + sc - 2)
+        }
+    };
+
+    MatmulEstimate {
+        compute_cycles,
+        input_bytes: m * k * elem_bytes,
+        weight_bytes: k * n * elem_bytes,
+        output_bytes: m * n * elem_bytes,
+        macs: m * n * k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn core(df: Dataflow) -> CoreConfig {
+        let mut c = presets::tpuv6e_hardware().core;
+        c.dataflow = df;
+        c
+    }
+
+    #[test]
+    fn single_fold_os_formula() {
+        let c = CoreConfig {
+            sa_rows: 4,
+            sa_cols: 4,
+            vpu_lanes: 8,
+            vpu_sublanes: 1,
+            dataflow: Dataflow::OutputStationary,
+        };
+        let e = estimate(MnkLayer { m: 4, n: 4, k: 10 }, &c, 4);
+        // 1 fold * (2*4 + 4 + 10 - 2) = 20
+        assert_eq!(e.compute_cycles, 20);
+        assert_eq!(e.macs, 160);
+    }
+
+    #[test]
+    fn folds_scale_linearly() {
+        let c = core(Dataflow::OutputStationary);
+        let small = estimate(MnkLayer { m: 256, n: 256, k: 64 }, &c, 4);
+        let tall = estimate(MnkLayer { m: 1024, n: 256, k: 64 }, &c, 4);
+        assert_eq!(tall.compute_cycles, 4 * small.compute_cycles);
+    }
+
+    #[test]
+    fn utilization_in_unit_range() {
+        let c = core(Dataflow::WeightStationary);
+        for layer in [
+            MnkLayer { m: 2048, n: 128, k: 256 },
+            MnkLayer { m: 8, n: 8, k: 8 },
+            MnkLayer { m: 256, n: 256, k: 256 },
+        ] {
+            let u = estimate(layer, &c, 4).utilization(&c);
+            assert!((0.0..=1.0).contains(&u), "utilization {u} for {layer:?}");
+        }
+    }
+
+    #[test]
+    fn bigger_batch_amortizes_ws_weight_load() {
+        // WS: per-fold cost has a fixed SR load; larger M amortizes it.
+        let c = core(Dataflow::WeightStationary);
+        let l32 = MnkLayer { m: 32, n: 128, k: 256 };
+        let l2048 = MnkLayer { m: 2048, n: 128, k: 256 };
+        let u32 = estimate(l32, &c, 4).utilization(&c);
+        let u2048 = estimate(l2048, &c, 4).utilization(&c);
+        assert!(u2048 > u32 * 5.0, "u32={u32}, u2048={u2048}");
+    }
+
+    #[test]
+    fn traffic_bytes_match_operand_sizes() {
+        let c = core(Dataflow::OutputStationary);
+        let e = estimate(MnkLayer { m: 10, n: 20, k: 30 }, &c, 4);
+        assert_eq!(e.input_bytes, 10 * 30 * 4);
+        assert_eq!(e.weight_bytes, 30 * 20 * 4);
+        assert_eq!(e.output_bytes, 10 * 20 * 4);
+    }
+
+    #[test]
+    fn dataflows_differ_for_skewed_shapes() {
+        let layer = MnkLayer { m: 4096, n: 16, k: 64 };
+        let os = estimate(layer, &core(Dataflow::OutputStationary), 4).compute_cycles;
+        let ws = estimate(layer, &core(Dataflow::WeightStationary), 4).compute_cycles;
+        assert_ne!(os, ws);
+    }
+}

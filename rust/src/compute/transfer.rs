@@ -1,0 +1,62 @@
+//! Analytical memory-transfer model: `T = D/B + L` (paper §III).
+//!
+//! "This equation effectively models the delay of large data transfers
+//! for matrix tiles" — D is the data size, B the sustained bandwidth, L
+//! the access latency. Double-buffered tile pipelines overlap compute
+//! with transfer, so a layer's wall time is `max(compute, transfer)` per
+//! tile plus one pipeline fill.
+
+/// Transfer time in cycles for `bytes` at `bytes_per_cycle` with a flat
+/// `latency` (the paper's `T = D/B + L`).
+#[inline]
+pub fn transfer_cycles(bytes: u64, bytes_per_cycle: f64, latency: u64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    (bytes as f64 / bytes_per_cycle).ceil() as u64 + latency
+}
+
+/// Double-buffered pipeline composition over `tiles` identical stages:
+/// `fill + tiles * max(compute, transfer)`.
+#[inline]
+pub fn double_buffered(tiles: u64, compute_per_tile: u64, transfer_per_tile: u64) -> u64 {
+    if tiles == 0 {
+        return 0;
+    }
+    let steady = compute_per_tile.max(transfer_per_tile);
+    transfer_per_tile + tiles * steady
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_formula() {
+        // 1000 B at 10 B/cyc + 50 = 150
+        assert_eq!(transfer_cycles(1000, 10.0, 50), 150);
+    }
+
+    #[test]
+    fn zero_bytes_is_free() {
+        assert_eq!(transfer_cycles(0, 10.0, 50), 0);
+    }
+
+    #[test]
+    fn fractional_bandwidth_rounds_up() {
+        assert_eq!(transfer_cycles(10, 3.0, 0), 4);
+    }
+
+    #[test]
+    fn double_buffer_hides_faster_stage() {
+        // compute-bound: transfer fully hidden after fill
+        assert_eq!(double_buffered(10, 100, 20), 20 + 10 * 100);
+        // memory-bound: compute hidden
+        assert_eq!(double_buffered(10, 20, 100), 100 + 10 * 100);
+    }
+
+    #[test]
+    fn zero_tiles_is_free() {
+        assert_eq!(double_buffered(0, 100, 100), 0);
+    }
+}

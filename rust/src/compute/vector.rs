@@ -1,0 +1,79 @@
+//! Vector-unit (VPU) cycle model for embedding arithmetic (paper §III:
+//! "EONSim further models both the vector unit and the full memory
+//! hierarchy").
+//!
+//! TPUv6e's VPU is organized as `lanes x sublanes` (128 x 8): per cycle
+//! it executes one `lanes`-wide elementwise op on each of `sublanes`
+//! independent groups. Sum-pooling one embedding bag of `pool` vectors of
+//! `dim` elements is `pool - 1` vector additions; consecutive additions
+//! for the same bag are dependent, but `sublanes` different bags proceed
+//! in parallel.
+
+use crate::config::CoreConfig;
+
+/// Cycles for the pooling (reduction) work of one batch of embedding
+/// bags: `bags` bags, each summing `pool` vectors of `dim` elements.
+pub fn pooling_cycles(core: &CoreConfig, bags: u64, pool: u64, dim: u64) -> u64 {
+    if bags == 0 || pool <= 1 || dim == 0 {
+        return 0;
+    }
+    // one vector-add issues ceil(dim / lanes) ops on one sublane slot
+    let ops_per_add = dim.div_ceil(core.vpu_lanes as u64);
+    let adds_per_bag = pool - 1;
+    // bags are spread across sublanes
+    let bag_waves = bags.div_ceil(core.vpu_sublanes as u64);
+    bag_waves * adds_per_bag * ops_per_add
+}
+
+/// Cycles for a generic elementwise pass over `elems` elements (feature
+/// interaction, activation, etc.).
+pub fn elementwise_cycles(core: &CoreConfig, elems: u64) -> u64 {
+    let per_cycle = (core.vpu_lanes * core.vpu_sublanes) as u64;
+    elems.div_ceil(per_cycle.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn core() -> CoreConfig {
+        presets::tpuv6e_hardware().core
+    }
+
+    #[test]
+    fn paper_scale_pooling() {
+        // one bag: 120 lookups of 128-dim = 119 adds, 1 op each, 1 wave
+        let c = core();
+        assert_eq!(pooling_cycles(&c, 1, 120, 128), 119);
+        // 8 bags ride the 8 sublanes in one wave
+        assert_eq!(pooling_cycles(&c, 8, 120, 128), 119);
+        // 9 bags need two waves
+        assert_eq!(pooling_cycles(&c, 9, 120, 128), 238);
+    }
+
+    #[test]
+    fn wide_vectors_cost_more_ops() {
+        let c = core();
+        assert_eq!(
+            pooling_cycles(&c, 1, 2, 256),
+            2 * pooling_cycles(&c, 1, 2, 128)
+        );
+    }
+
+    #[test]
+    fn degenerate_cases_are_free() {
+        let c = core();
+        assert_eq!(pooling_cycles(&c, 0, 120, 128), 0);
+        assert_eq!(pooling_cycles(&c, 4, 1, 128), 0, "pool=1 needs no adds");
+        assert_eq!(pooling_cycles(&c, 4, 0, 128), 0);
+    }
+
+    #[test]
+    fn elementwise_throughput() {
+        let c = core(); // 1024 elems/cycle
+        assert_eq!(elementwise_cycles(&c, 1024), 1);
+        assert_eq!(elementwise_cycles(&c, 1025), 2);
+        assert_eq!(elementwise_cycles(&c, 0), 0);
+    }
+}

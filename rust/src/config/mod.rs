@@ -1,0 +1,579 @@
+//! Simulation configuration: typed structs, a TOML-subset loader, and
+//! presets for the paper's evaluated platform (TPUv6e + DLRM-RMC2-small).
+//!
+//! EONSim takes three categories of input (paper §III): the *hardware
+//! configuration* (accelerator-level parameters), *core settings* (vector
+//! + matrix units), and *memory system parameters* (capacities, latency,
+//! bandwidth, access granularity, and the on-chip management policy).
+//! [`WorkloadConfig`] describes the computational task in the generalized
+//! MNK format for matrix ops plus embedding parameters and an index trace
+//! spec.
+
+pub mod parse;
+pub mod presets;
+
+use parse::{ConfigError, Table};
+use std::path::Path;
+
+/// Systolic-array dataflow (SCALE-Sim terminology).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    OutputStationary,
+    WeightStationary,
+    InputStationary,
+}
+
+impl Dataflow {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "os" | "output_stationary" => Ok(Dataflow::OutputStationary),
+            "ws" | "weight_stationary" => Ok(Dataflow::WeightStationary),
+            "is" | "input_stationary" => Ok(Dataflow::InputStationary),
+            other => Err(ConfigError::Invalid {
+                key: "core.dataflow".into(),
+                msg: format!("unknown dataflow `{other}` (want os|ws|is)"),
+            }),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataflow::OutputStationary => "os",
+            Dataflow::WeightStationary => "ws",
+            Dataflow::InputStationary => "is",
+        }
+    }
+}
+
+/// Cache replacement policy selector for cache-mode on-chip memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePolicyKind {
+    Lru,
+    Srrip,
+    Brrip,
+    Drrip,
+    Fifo,
+    Random,
+}
+
+impl CachePolicyKind {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "lru" => Ok(Self::Lru),
+            "srrip" => Ok(Self::Srrip),
+            "brrip" => Ok(Self::Brrip),
+            "drrip" => Ok(Self::Drrip),
+            "fifo" => Ok(Self::Fifo),
+            "random" => Ok(Self::Random),
+            other => Err(ConfigError::Invalid {
+                key: "mem.cache_policy".into(),
+                msg: format!("unknown cache policy `{other}`"),
+            }),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Lru => "lru",
+            Self::Srrip => "srrip",
+            Self::Brrip => "brrip",
+            Self::Drrip => "drrip",
+            Self::Fifo => "fifo",
+            Self::Random => "random",
+        }
+    }
+}
+
+/// On-chip memory management scheme (paper §II/§IV: SPM double-buffering,
+/// hardware-cache modes, and profiling-based pinning).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OnchipPolicy {
+    /// Scratchpad staging buffer: every embedding vector is fetched from
+    /// off-chip regardless of hotness (TPUv6e behaviour, paper §IV).
+    Spm,
+    /// On-chip memory configured as a set-associative cache (MTIA-style
+    /// "LLC mode") with the given replacement policy.
+    Cache(CachePolicyKind),
+    /// Profiling-based pinning: the most frequently accessed vectors are
+    /// pinned in on-chip memory up to capacity; the rest stream as SPM.
+    Pinning,
+}
+
+impl OnchipPolicy {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "spm" => Ok(Self::Spm),
+            "pinning" | "profiling" => Ok(Self::Pinning),
+            other => Ok(Self::Cache(CachePolicyKind::parse(other)?)),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Spm => "spm",
+            Self::Cache(k) => k.name(),
+            Self::Pinning => "profiling",
+        }
+    }
+}
+
+/// Vector + matrix unit configuration for one NPU core.
+#[derive(Debug, Clone)]
+pub struct CoreConfig {
+    /// Systolic array height (rows of PEs).
+    pub sa_rows: usize,
+    /// Systolic array width (columns of PEs).
+    pub sa_cols: usize,
+    /// Vector unit lanes (elements per VPU cycle per sublane).
+    pub vpu_lanes: usize,
+    /// Vector unit sublanes (independent lane groups per cycle).
+    pub vpu_sublanes: usize,
+    /// Systolic array dataflow.
+    pub dataflow: Dataflow,
+}
+
+/// DRAM device timing in memory-controller cycles (DRAMSim3-lite).
+#[derive(Debug, Clone)]
+pub struct DramTiming {
+    /// ACT -> column command (row activation).
+    pub t_rcd: u64,
+    /// PRE -> ACT (precharge).
+    pub t_rp: u64,
+    /// Column access strobe (read latency after column command).
+    pub t_cas: u64,
+    /// Minimum row-open time (ACT -> PRE).
+    pub t_ras: u64,
+    /// Burst transfer time for one access-granularity beat.
+    pub t_burst: u64,
+    /// Column-to-column (back-to-back CAS to the same bank group).
+    pub t_ccd: u64,
+}
+
+impl Default for DramTiming {
+    fn default() -> Self {
+        // HBM2e-class timings in DRAM-clock cycles.
+        DramTiming {
+            t_rcd: 14,
+            t_rp: 14,
+            t_cas: 14,
+            t_ras: 34,
+            t_burst: 2,
+            t_ccd: 4,
+        }
+    }
+}
+
+/// Off-chip memory (HBM) configuration.
+#[derive(Debug, Clone)]
+pub struct DramConfig {
+    /// Total capacity in bytes.
+    pub capacity_bytes: u64,
+    /// Aggregate peak bandwidth in bytes/second (analytical `B` in T=D/B+L).
+    pub bandwidth_bytes_per_sec: f64,
+    /// Number of independent channels.
+    pub channels: usize,
+    /// Banks per channel (flattened bank groups).
+    pub banks_per_channel: usize,
+    /// Row-buffer (page) size per bank, bytes.
+    pub row_bytes: u64,
+    /// Device timing.
+    pub timing: DramTiming,
+    /// Flat access latency used by the analytical model (`L`), in core cycles.
+    pub flat_latency_cycles: u64,
+}
+
+/// Shared global on-chip buffer (paper §II: "All NPU cores share a
+/// global on-chip memory"). Optional — hierarchy depth is configurable
+/// (paper abstract): None = local-only (TPUv6e), Some = two-level.
+#[derive(Debug, Clone)]
+pub struct GlobalBufferConfig {
+    /// Capacity in bytes.
+    pub bytes: u64,
+    /// Associativity (runs as a shared cache).
+    pub assoc: usize,
+    /// Replacement policy.
+    pub policy: CachePolicyKind,
+    /// Access latency in core cycles (slower than core-local memory).
+    pub latency_cycles: u64,
+    /// Shared port bandwidth in bytes per core cycle.
+    pub bytes_per_cycle: f64,
+}
+
+/// Memory-system configuration (on-chip local buffer + off-chip DRAM).
+#[derive(Debug, Clone)]
+pub struct MemoryConfig {
+    /// Local (on-chip) buffer capacity in bytes.
+    pub onchip_bytes: u64,
+    /// On-chip access latency in core cycles.
+    pub onchip_latency_cycles: u64,
+    /// On-chip bandwidth in bytes per core cycle.
+    pub onchip_bytes_per_cycle: f64,
+    /// Access granularity in bytes (cache line / sector size).
+    pub access_granularity: u64,
+    /// Cache associativity when on-chip memory runs in cache mode.
+    pub cache_assoc: usize,
+    /// On-chip management policy.
+    pub policy: OnchipPolicy,
+    /// Max outstanding off-chip misses (MSHR-like window).
+    pub max_outstanding: usize,
+    /// Software-prefetch depth in vectors (0 = disabled): the runtime
+    /// issues gathers this far ahead of the consuming kernel, deepening
+    /// the effective off-chip pipeline (paper §I: "software prefetching").
+    pub prefetch_depth: usize,
+    /// Optional shared global buffer between the core-local buffers and
+    /// DRAM (hierarchy depth 2). TPUv6e has none (paper §IV).
+    pub global: Option<GlobalBufferConfig>,
+    /// Off-chip configuration.
+    pub dram: DramConfig,
+}
+
+/// Accelerator-level hardware configuration.
+#[derive(Debug, Clone)]
+pub struct HardwareConfig {
+    /// Human-readable platform name.
+    pub name: String,
+    /// Core clock in GHz.
+    pub freq_ghz: f64,
+    /// Number of NPU cores (TPUv6e: 1).
+    pub num_cores: usize,
+    pub core: CoreConfig,
+    pub mem: MemoryConfig,
+}
+
+impl HardwareConfig {
+    /// Core cycles per second.
+    pub fn freq_hz(&self) -> f64 {
+        self.freq_ghz * 1e9
+    }
+
+    /// Off-chip bandwidth expressed in bytes per core cycle.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.mem.dram.bandwidth_bytes_per_sec / self.freq_hz()
+    }
+
+    /// Convert a core-cycle count to seconds.
+    pub fn cycles_to_secs(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.freq_hz()
+    }
+}
+
+/// One dense (matrix) layer in generalized MNK form: an `M x K` input
+/// times a `K x N` weight (paper §III: "generalized MNK format").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MnkLayer {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// Embedding-operation parameters for the workload.
+#[derive(Debug, Clone)]
+pub struct EmbeddingConfig {
+    /// Number of embedding tables.
+    pub num_tables: usize,
+    /// Rows per table.
+    pub rows_per_table: u64,
+    /// Embedding vector dimension.
+    pub dim: usize,
+    /// Lookups per table per sample (pooling factor).
+    pub pool: usize,
+    /// Element size in bytes (f32 = 4).
+    pub elem_bytes: u64,
+}
+
+impl EmbeddingConfig {
+    /// Bytes of one embedding vector.
+    pub fn vec_bytes(&self) -> u64 {
+        self.dim as u64 * self.elem_bytes
+    }
+
+    /// Total embedding data volume in bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.num_tables as u64 * self.rows_per_table * self.vec_bytes()
+    }
+}
+
+/// Index-trace generation spec (hardware-agnostic, paper §III).
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Distribution: "zipf" or "uniform" or "file".
+    pub kind: String,
+    /// Zipf exponent (skewness); ignored for uniform.
+    pub alpha: f64,
+    /// RNG seed (traces are deterministic given the seed).
+    pub seed: u64,
+    /// Optional trace file path (kind = "file").
+    pub path: Option<String>,
+}
+
+/// Full workload description: hyperparameters + model + trace.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Samples per batch.
+    pub batch_size: usize,
+    /// Number of batches to simulate.
+    pub num_batches: usize,
+    /// Dense-feature input width.
+    pub dense_in: usize,
+    /// Bottom-MLP layer widths (chain from `dense_in`).
+    pub bottom_mlp: Vec<usize>,
+    /// Top-MLP layer widths (chain from `embedding.dim`).
+    pub top_mlp: Vec<usize>,
+    pub embedding: EmbeddingConfig,
+    pub trace: TraceConfig,
+}
+
+impl WorkloadConfig {
+    /// Bottom-MLP layers in MNK form for a given batch size.
+    pub fn bottom_layers(&self) -> Vec<MnkLayer> {
+        chain_layers(self.batch_size, self.dense_in, &self.bottom_mlp)
+    }
+
+    /// Top-MLP layers in MNK form.
+    pub fn top_layers(&self) -> Vec<MnkLayer> {
+        chain_layers(self.batch_size, self.embedding.dim, &self.top_mlp)
+    }
+
+    /// Total embedding lookups per batch.
+    pub fn lookups_per_batch(&self) -> u64 {
+        self.batch_size as u64 * self.embedding.num_tables as u64 * self.embedding.pool as u64
+    }
+}
+
+fn chain_layers(batch: usize, input: usize, widths: &[usize]) -> Vec<MnkLayer> {
+    let mut prev = input;
+    widths
+        .iter()
+        .map(|&w| {
+            let l = MnkLayer { m: batch, n: w, k: prev };
+            prev = w;
+            l
+        })
+        .collect()
+}
+
+/// Top-level simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub hardware: HardwareConfig,
+    pub workload: WorkloadConfig,
+    /// Global simulation seed (forked per component).
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Load from a TOML-subset file (see `configs/*.toml`).
+    pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<SimConfig> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let table = Table::parse(&text)?;
+        Ok(SimConfig::from_table(&table)?)
+    }
+
+    /// Build from a parsed table; unknown keys are ignored, missing keys
+    /// fall back to TPUv6e / DLRM-RMC2-small defaults where sensible.
+    pub fn from_table(t: &Table) -> Result<SimConfig, ConfigError> {
+        let mut cfg = presets::tpuv6e_dlrm_small();
+
+        if t.contains("hardware.name") {
+            cfg.hardware.name = t.str_("hardware.name")?.to_string();
+        }
+        cfg.hardware.freq_ghz = t.float_or("hardware.freq_ghz", cfg.hardware.freq_ghz)?;
+        cfg.hardware.num_cores = t.usize_or("hardware.num_cores", cfg.hardware.num_cores)?;
+
+        let c = &mut cfg.hardware.core;
+        c.sa_rows = t.usize_or("core.sa_rows", c.sa_rows)?;
+        c.sa_cols = t.usize_or("core.sa_cols", c.sa_cols)?;
+        c.vpu_lanes = t.usize_or("core.vpu_lanes", c.vpu_lanes)?;
+        c.vpu_sublanes = t.usize_or("core.vpu_sublanes", c.vpu_sublanes)?;
+        if t.contains("core.dataflow") {
+            c.dataflow = Dataflow::parse(t.str_("core.dataflow")?)?;
+        }
+
+        let m = &mut cfg.hardware.mem;
+        m.onchip_bytes = t.u64_or("mem.onchip_bytes", m.onchip_bytes)?;
+        m.onchip_latency_cycles =
+            t.u64_or("mem.onchip_latency_cycles", m.onchip_latency_cycles)?;
+        m.onchip_bytes_per_cycle =
+            t.float_or("mem.onchip_bytes_per_cycle", m.onchip_bytes_per_cycle)?;
+        m.access_granularity = t.u64_or("mem.access_granularity", m.access_granularity)?;
+        m.cache_assoc = t.usize_or("mem.cache_assoc", m.cache_assoc)?;
+        m.max_outstanding = t.usize_or("mem.max_outstanding", m.max_outstanding)?;
+        m.prefetch_depth = t.usize_or("mem.prefetch_depth", m.prefetch_depth)?;
+        if t.contains("mem.policy") {
+            m.policy = OnchipPolicy::parse(t.str_("mem.policy")?)?;
+        }
+        if t.contains("global.bytes") {
+            m.global = Some(GlobalBufferConfig {
+                bytes: t.u64_("global.bytes")?,
+                assoc: t.usize_or("global.assoc", 16)?,
+                policy: CachePolicyKind::parse(t.str_or("global.policy", "lru")?)?,
+                latency_cycles: t.u64_or("global.latency_cycles", 40)?,
+                bytes_per_cycle: t.float_or("global.bytes_per_cycle", 1024.0)?,
+            });
+        }
+
+        let d = &mut m.dram;
+        d.capacity_bytes = t.u64_or("dram.capacity_bytes", d.capacity_bytes)?;
+        d.bandwidth_bytes_per_sec =
+            t.float_or("dram.bandwidth_bytes_per_sec", d.bandwidth_bytes_per_sec)?;
+        d.channels = t.usize_or("dram.channels", d.channels)?;
+        d.banks_per_channel = t.usize_or("dram.banks_per_channel", d.banks_per_channel)?;
+        d.row_bytes = t.u64_or("dram.row_bytes", d.row_bytes)?;
+        d.flat_latency_cycles = t.u64_or("dram.flat_latency_cycles", d.flat_latency_cycles)?;
+        d.timing.t_rcd = t.u64_or("dram.t_rcd", d.timing.t_rcd)?;
+        d.timing.t_rp = t.u64_or("dram.t_rp", d.timing.t_rp)?;
+        d.timing.t_cas = t.u64_or("dram.t_cas", d.timing.t_cas)?;
+        d.timing.t_ras = t.u64_or("dram.t_ras", d.timing.t_ras)?;
+        d.timing.t_burst = t.u64_or("dram.t_burst", d.timing.t_burst)?;
+        d.timing.t_ccd = t.u64_or("dram.t_ccd", d.timing.t_ccd)?;
+
+        let w = &mut cfg.workload;
+        w.batch_size = t.usize_or("workload.batch_size", w.batch_size)?;
+        w.num_batches = t.usize_or("workload.num_batches", w.num_batches)?;
+        w.dense_in = t.usize_or("workload.dense_in", w.dense_in)?;
+        if t.contains("workload.bottom_mlp") {
+            w.bottom_mlp = to_usizes(t.int_array("workload.bottom_mlp")?);
+        }
+        if t.contains("workload.top_mlp") {
+            w.top_mlp = to_usizes(t.int_array("workload.top_mlp")?);
+        }
+
+        let e = &mut w.embedding;
+        e.num_tables = t.usize_or("embedding.num_tables", e.num_tables)?;
+        e.rows_per_table = t.u64_or("embedding.rows_per_table", e.rows_per_table)?;
+        e.dim = t.usize_or("embedding.dim", e.dim)?;
+        e.pool = t.usize_or("embedding.pool", e.pool)?;
+        e.elem_bytes = t.u64_or("embedding.elem_bytes", e.elem_bytes)?;
+
+        let tr = &mut w.trace;
+        tr.kind = t.str_or("trace.kind", &tr.kind)?.to_string();
+        tr.alpha = t.float_or("trace.alpha", tr.alpha)?;
+        tr.seed = t.u64_or("trace.seed", tr.seed)?;
+        if t.contains("trace.path") {
+            tr.path = Some(t.str_("trace.path")?.to_string());
+        }
+
+        cfg.seed = t.u64_or("seed", cfg.seed)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field sanity checks (better errors than a deep panic later).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let invalid = |key: &str, msg: String| {
+            Err(ConfigError::Invalid { key: key.into(), msg })
+        };
+        let m = &self.hardware.mem;
+        if !m.access_granularity.is_power_of_two() {
+            return invalid(
+                "mem.access_granularity",
+                format!("{} is not a power of two", m.access_granularity),
+            );
+        }
+        if m.onchip_bytes < m.access_granularity {
+            return invalid("mem.onchip_bytes", "smaller than one line".into());
+        }
+        let e = &self.workload.embedding;
+        if e.num_tables == 0 || e.rows_per_table == 0 || e.dim == 0 || e.pool == 0 {
+            return invalid("embedding", "all embedding parameters must be nonzero".into());
+        }
+        if self.workload.batch_size == 0 || self.workload.num_batches == 0 {
+            return invalid("workload", "batch_size and num_batches must be nonzero".into());
+        }
+        if e.total_bytes() > m.dram.capacity_bytes {
+            return invalid(
+                "embedding",
+                format!(
+                    "embedding data ({} B) exceeds off-chip capacity ({} B)",
+                    e.total_bytes(),
+                    m.dram.capacity_bytes
+                ),
+            );
+        }
+        Ok(())
+    }
+}
+
+fn to_usizes(xs: Vec<i64>) -> Vec<usize> {
+    xs.into_iter().map(|x| x.max(0) as usize).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_is_valid() {
+        presets::tpuv6e_dlrm_small().validate().unwrap();
+    }
+
+    #[test]
+    fn from_table_overrides_batch() {
+        let t = Table::parse("[workload]\nbatch_size = 64").unwrap();
+        let cfg = SimConfig::from_table(&t).unwrap();
+        assert_eq!(cfg.workload.batch_size, 64);
+        // defaults intact
+        assert_eq!(cfg.workload.embedding.num_tables, 60);
+    }
+
+    #[test]
+    fn from_table_policy_parse() {
+        for (s, want) in [
+            ("spm", OnchipPolicy::Spm),
+            ("lru", OnchipPolicy::Cache(CachePolicyKind::Lru)),
+            ("srrip", OnchipPolicy::Cache(CachePolicyKind::Srrip)),
+            ("profiling", OnchipPolicy::Pinning),
+        ] {
+            let t = Table::parse(&format!("[mem]\npolicy = \"{s}\"")).unwrap();
+            assert_eq!(SimConfig::from_table(&t).unwrap().hardware.mem.policy, want);
+        }
+    }
+
+    #[test]
+    fn rejects_non_pow2_granularity() {
+        let t = Table::parse("[mem]\naccess_granularity = 48").unwrap();
+        assert!(SimConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_embedding() {
+        let t = Table::parse("[embedding]\nrows_per_table = 10_000_000_000").unwrap();
+        assert!(SimConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn mnk_chains() {
+        let cfg = presets::tpuv6e_dlrm_small();
+        let bottom = cfg.workload.bottom_layers();
+        assert_eq!(bottom[0], MnkLayer { m: cfg.workload.batch_size, n: 128, k: 256 });
+        assert_eq!(bottom[1], MnkLayer { m: cfg.workload.batch_size, n: 128, k: 128 });
+        let top = cfg.workload.top_layers();
+        assert_eq!(top[0].k, 128);
+        assert_eq!(top.last().unwrap().n, 1);
+    }
+
+    #[test]
+    fn lookups_per_batch() {
+        let cfg = presets::tpuv6e_dlrm_small();
+        assert_eq!(
+            cfg.workload.lookups_per_batch(),
+            cfg.workload.batch_size as u64 * 60 * 120
+        );
+    }
+
+    #[test]
+    fn dram_bytes_per_cycle_sane() {
+        let cfg = presets::tpuv6e_dlrm_small();
+        let bpc = cfg.hardware.dram_bytes_per_cycle();
+        // 1600 GB/s at ~1 GHz -> ~1700 B/cycle
+        assert!(bpc > 1000.0 && bpc < 3000.0, "bpc = {bpc}");
+    }
+
+    #[test]
+    fn dataflow_roundtrip() {
+        for s in ["os", "ws", "is"] {
+            assert_eq!(Dataflow::parse(s).unwrap().name(), s);
+        }
+        assert!(Dataflow::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,420 @@
+//! TOML-subset parser (the offline vendor set has no `serde`/`toml`;
+//! DESIGN.md §6).
+//!
+//! Supported grammar — everything EONSim config files need:
+//!
+//! ```toml
+//! # comment
+//! [section]          # and [nested.section]
+//! key = "string"
+//! n = 42             # also hex 0x.., underscores 1_000
+//! x = 3.5            # floats, 1e9 notation
+//! flag = true
+//! xs = [1, 2, 3]     # homogeneous arrays of the scalar types
+//! ```
+//!
+//! Values are exposed through a dotted-path lookup (`mem.onchip.bytes`)
+//! with typed getters that produce precise error messages.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+            Value::Array(_) => "array",
+        }
+    }
+}
+
+/// Parse error with 1-based line information.
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Typed-lookup error.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("missing config key `{0}`")]
+    Missing(String),
+    #[error("config key `{key}`: expected {want}, found {found}")]
+    Type {
+        key: String,
+        want: &'static str,
+        found: &'static str,
+    },
+    #[error("config key `{key}`: {msg}")]
+    Invalid { key: String, msg: String },
+}
+
+/// A flat map of dotted keys to values (section headers are prefixes).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    entries: BTreeMap<String, Value>,
+}
+
+impl fmt::Display for Table {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (k, v) in &self.entries {
+            writeln!(f, "{k} = {v:?}")?;
+        }
+        Ok(())
+    }
+}
+
+impl Table {
+    pub fn parse(text: &str) -> Result<Table, ParseError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: line_no,
+                    msg: format!("unterminated section header `{line}`"),
+                })?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(ParseError {
+                        line: line_no,
+                        msg: "empty section name".into(),
+                    });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError {
+                line: line_no,
+                msg: format!("expected `key = value`, got `{line}`"),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(ParseError {
+                    line: line_no,
+                    msg: "empty key".into(),
+                });
+            }
+            let value = parse_value(line[eq + 1..].trim(), line_no)?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, value);
+        }
+        Ok(Table { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Insert/override a value (used for CLI `--set key=value` overrides).
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.entries.insert(key.to_string(), value);
+    }
+
+    pub fn str_(&self, key: &str) -> Result<&str, ConfigError> {
+        match self.require(key)? {
+            Value::Str(s) => Ok(s),
+            v => Err(self.type_err(key, "string", v)),
+        }
+    }
+
+    pub fn int(&self, key: &str) -> Result<i64, ConfigError> {
+        match self.require(key)? {
+            Value::Int(i) => Ok(*i),
+            v => Err(self.type_err(key, "integer", v)),
+        }
+    }
+
+    pub fn u64_(&self, key: &str) -> Result<u64, ConfigError> {
+        let i = self.int(key)?;
+        u64::try_from(i).map_err(|_| ConfigError::Invalid {
+            key: key.to_string(),
+            msg: format!("negative value {i} for unsigned field"),
+        })
+    }
+
+    pub fn usize_(&self, key: &str) -> Result<usize, ConfigError> {
+        Ok(self.u64_(key)? as usize)
+    }
+
+    /// Float getter; integer literals are accepted and widened.
+    pub fn float(&self, key: &str) -> Result<f64, ConfigError> {
+        match self.require(key)? {
+            Value::Float(x) => Ok(*x),
+            Value::Int(i) => Ok(*i as f64),
+            v => Err(self.type_err(key, "float", v)),
+        }
+    }
+
+    pub fn bool_(&self, key: &str) -> Result<bool, ConfigError> {
+        match self.require(key)? {
+            Value::Bool(b) => Ok(*b),
+            v => Err(self.type_err(key, "boolean", v)),
+        }
+    }
+
+    pub fn int_array(&self, key: &str) -> Result<Vec<i64>, ConfigError> {
+        match self.require(key)? {
+            Value::Array(xs) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Int(i) => Ok(*i),
+                    other => Err(self.type_err(key, "integer element", other)),
+                })
+                .collect(),
+            v => Err(self.type_err(key, "array", v)),
+        }
+    }
+
+    // -- defaulted variants ------------------------------------------------
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, ConfigError> {
+        if self.contains(key) {
+            self.u64_(key)
+        } else {
+            Ok(default)
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, ConfigError> {
+        if self.contains(key) {
+            self.usize_(key)
+        } else {
+            Ok(default)
+        }
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> Result<f64, ConfigError> {
+        if self.contains(key) {
+            self.float(key)
+        } else {
+            Ok(default)
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str, ConfigError> {
+        if self.contains(key) {
+            self.str_(key)
+        } else {
+            Ok(default)
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
+        if self.contains(key) {
+            self.bool_(key)
+        } else {
+            Ok(default)
+        }
+    }
+
+    fn require(&self, key: &str) -> Result<&Value, ConfigError> {
+        self.get(key).ok_or_else(|| ConfigError::Missing(key.to_string()))
+    }
+
+    fn type_err(&self, key: &str, want: &'static str, found: &Value) -> ConfigError {
+        ConfigError::Type {
+            key: key.to_string(),
+            want,
+            found: found.type_name(),
+        }
+    }
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, line: usize) -> Result<Value, ParseError> {
+    let err = |msg: String| ParseError { line, msg };
+    if text.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(format!("unterminated string `{text}`")))?;
+        if inner.contains('"') {
+            return Err(err("embedded quotes are not supported".into()));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(format!("unterminated array `{text}`")))?;
+        let mut out = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for part in inner.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue; // tolerate trailing comma
+                }
+                out.push(parse_value(part, line)?);
+            }
+        }
+        return Ok(Value::Array(out));
+    }
+    let cleaned = text.replace('_', "");
+    if let Some(hex) = cleaned.strip_prefix("0x").or_else(|| cleaned.strip_prefix("0X")) {
+        return i64::from_str_radix(hex, 16)
+            .map(Value::Int)
+            .map_err(|e| err(format!("bad hex literal `{text}`: {e}")));
+    }
+    if !cleaned.contains('.') && !cleaned.contains('e') && !cleaned.contains('E') {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    cleaned
+        .parse::<f64>()
+        .map(Value::Float)
+        .map_err(|e| err(format!("unrecognized value `{text}`: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let t = Table::parse(
+            r#"
+            top = 1
+            [hw]
+            freq_ghz = 1.5        # comment
+            name = "tpuv6e"
+            cache = true
+            [hw.mem]
+            bytes = 0x10_0000
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.int("top").unwrap(), 1);
+        assert_eq!(t.float("hw.freq_ghz").unwrap(), 1.5);
+        assert_eq!(t.str_("hw.name").unwrap(), "tpuv6e");
+        assert!(t.bool_("hw.cache").unwrap());
+        assert_eq!(t.u64_("hw.mem.bytes").unwrap(), 0x10_0000);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let t = Table::parse("xs = [1, 2, 3,]\nys = []").unwrap();
+        assert_eq!(t.int_array("xs").unwrap(), vec![1, 2, 3]);
+        assert_eq!(t.int_array("ys").unwrap(), Vec::<i64>::new());
+    }
+
+    #[test]
+    fn int_widens_to_float() {
+        let t = Table::parse("x = 3").unwrap();
+        assert_eq!(t.float("x").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn scientific_notation_floats() {
+        let t = Table::parse("bw = 1.6e12").unwrap();
+        assert_eq!(t.float("bw").unwrap(), 1.6e12);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let t = Table::parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(t.str_("s").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn missing_key_error_names_key() {
+        let t = Table::parse("").unwrap();
+        let e = t.int("nope").unwrap_err();
+        assert!(e.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn type_error_names_both_types() {
+        let t = Table::parse("x = true").unwrap();
+        let e = t.int("x").unwrap_err();
+        assert!(e.to_string().contains("integer"));
+        assert!(e.to_string().contains("boolean"));
+    }
+
+    #[test]
+    fn negative_rejected_for_unsigned() {
+        let t = Table::parse("x = -4").unwrap();
+        assert!(t.u64_("x").is_err());
+        assert_eq!(t.int("x").unwrap(), -4);
+    }
+
+    #[test]
+    fn defaulted_getters() {
+        let t = Table::parse("a = 7").unwrap();
+        assert_eq!(t.u64_or("a", 0).unwrap(), 7);
+        assert_eq!(t.u64_or("b", 9).unwrap(), 9);
+        assert_eq!(t.str_or("c", "x").unwrap(), "x");
+    }
+
+    #[test]
+    fn parse_error_reports_line() {
+        let e = Table::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut t = Table::parse("a = 1").unwrap();
+        t.set("a", Value::Int(2));
+        assert_eq!(t.int("a").unwrap(), 2);
+    }
+
+    #[test]
+    fn underscored_integers() {
+        let t = Table::parse("n = 1_000_000").unwrap();
+        assert_eq!(t.int("n").unwrap(), 1_000_000);
+    }
+}

@@ -1,0 +1,166 @@
+//! Built-in configuration presets for the paper's evaluated platform
+//! (Table I: TPUv6e hardware + DLRM-RMC2-small model) and the Fig. 4
+//! reuse datasets.
+
+use super::*;
+
+/// TPUv6e hardware parameters (paper Table I + Google Cloud docs [12]):
+/// one NPU core, a 256x256 systolic array, a 128-lane / 8-sublane vector
+/// unit, a 128 MB local buffer, and 32 GB of HBM at 1600 GB/s.
+pub fn tpuv6e_hardware() -> HardwareConfig {
+    HardwareConfig {
+        name: "tpuv6e".to_string(),
+        freq_ghz: 0.94,
+        num_cores: 1,
+        core: CoreConfig {
+            sa_rows: 256,
+            sa_cols: 256,
+            vpu_lanes: 128,
+            vpu_sublanes: 8,
+            dataflow: Dataflow::WeightStationary,
+        },
+        mem: MemoryConfig {
+            onchip_bytes: 128 << 20,
+            onchip_latency_cycles: 12,
+            // Wide SRAM port: serves the VPU + DMA engines.
+            onchip_bytes_per_cycle: 2048.0,
+            access_granularity: 64,
+            cache_assoc: 16,
+            // TPUv6e uses its scratchpad as a staging buffer (paper §IV).
+            policy: OnchipPolicy::Spm,
+            max_outstanding: 64,
+            prefetch_depth: 0,
+            // single-core TPUv6e has no shared global buffer (paper §IV)
+            global: None,
+            dram: DramConfig {
+                capacity_bytes: 32 << 30,
+                bandwidth_bytes_per_sec: 1600e9,
+                channels: 16,
+                banks_per_channel: 32,
+                row_bytes: 1024,
+                timing: DramTiming::default(),
+                flat_latency_cycles: 120,
+            },
+        },
+    }
+}
+
+/// DLRM-RMC2-small (paper Table I): 60 embedding tables, 1M rows each,
+/// 128-dim vectors, 120 lookups per table; bottom MLP 256-128-128, top
+/// MLP 128-64-1.
+pub fn dlrm_rmc2_small(batch_size: usize) -> WorkloadConfig {
+    WorkloadConfig {
+        batch_size,
+        num_batches: 4,
+        dense_in: 256,
+        bottom_mlp: vec![128, 128],
+        top_mlp: vec![64, 1],
+        embedding: EmbeddingConfig {
+            num_tables: 60,
+            rows_per_table: 1_000_000,
+            dim: 128,
+            pool: 120,
+            elem_bytes: 4,
+        },
+        trace: TraceConfig {
+            kind: "zipf".to_string(),
+            alpha: 0.9,
+            seed: 0x0EA5_1DE5,
+            path: None,
+        },
+    }
+}
+
+/// The paper's validation setup: TPUv6e + DLRM-RMC2-small, batch 256.
+pub fn tpuv6e_dlrm_small() -> SimConfig {
+    SimConfig {
+        hardware: tpuv6e_hardware(),
+        workload: dlrm_rmc2_small(256),
+        seed: 0xE05_1337,
+    }
+}
+
+/// Fig. 4 reuse datasets, characterized in the paper by the fraction of
+/// unique vectors that dominates accesses: Reuse High (~4 % of vectors
+/// serve the bulk of accesses), Mid, and Low (~46 % spread). Realized as
+/// Zipf exponents over the index space; see `trace::zipf` tests for the
+/// measured hot-set fractions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReuseDataset {
+    High,
+    Mid,
+    Low,
+}
+
+impl ReuseDataset {
+    pub fn all() -> [ReuseDataset; 3] {
+        [ReuseDataset::High, ReuseDataset::Mid, ReuseDataset::Low]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReuseDataset::High => "reuse_high",
+            ReuseDataset::Mid => "reuse_mid",
+            ReuseDataset::Low => "reuse_low",
+        }
+    }
+
+    /// Zipf exponent realizing the dataset's skew. Tuned at table scale
+    /// (1M rows) so the hot set covering 90 % of accesses matches the
+    /// paper's characterization: High ≈ 4 % of touched vectors dominate,
+    /// Low spreads across ≈ 46 % (measured: 1.22 → ~4.5 %, 1.0 → ~42 %).
+    pub fn alpha(self) -> f64 {
+        match self {
+            ReuseDataset::High => 1.22,
+            ReuseDataset::Mid => 1.1,
+            ReuseDataset::Low => 1.0,
+        }
+    }
+
+    pub fn trace_config(self, seed: u64) -> TraceConfig {
+        TraceConfig {
+            kind: "zipf".to_string(),
+            alpha: self.alpha(),
+            seed,
+            path: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_i_parameters() {
+        let hw = tpuv6e_hardware();
+        assert_eq!(hw.num_cores, 1);
+        assert_eq!((hw.core.sa_rows, hw.core.sa_cols), (256, 256));
+        assert_eq!((hw.core.vpu_lanes, hw.core.vpu_sublanes), (128, 8));
+        assert_eq!(hw.mem.onchip_bytes, 128 << 20);
+        assert_eq!(hw.mem.dram.capacity_bytes, 32 << 30);
+        assert_eq!(hw.mem.dram.bandwidth_bytes_per_sec, 1600e9);
+
+        let w = dlrm_rmc2_small(256);
+        assert_eq!(w.embedding.num_tables, 60);
+        assert_eq!(w.embedding.rows_per_table, 1_000_000);
+        assert_eq!(w.embedding.dim, 128);
+        assert_eq!(w.embedding.pool, 120);
+        assert_eq!(w.dense_in, 256);
+        assert_eq!(w.bottom_mlp, vec![128, 128]);
+        assert_eq!(w.top_mlp, vec![64, 1]);
+    }
+
+    #[test]
+    fn embedding_footprint_is_about_30gb() {
+        let w = dlrm_rmc2_small(32);
+        let gb = w.embedding.total_bytes() as f64 / (1u64 << 30) as f64;
+        assert!((28.0..30.0).contains(&gb), "footprint {gb} GiB");
+    }
+
+    #[test]
+    fn reuse_datasets_ordered_by_skew() {
+        assert!(ReuseDataset::High.alpha() > ReuseDataset::Mid.alpha());
+        assert!(ReuseDataset::Mid.alpha() > ReuseDataset::Low.alpha());
+    }
+}

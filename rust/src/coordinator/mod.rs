@@ -1,0 +1,299 @@
+//! Request-level serving coordinator: queue -> dynamic batcher ->
+//! functional execution (PJRT) with timing simulation attached.
+//!
+//! The paper's system is a simulator, so L3's serving layer is a thin
+//! driver (per the architecture brief): a bounded request queue, a
+//! dynamic batcher that picks the smallest compiled variant covering the
+//! waiting requests, a pluggable executor (the PJRT DLRM model in
+//! production, a mock in tests), and per-request latency accounting in
+//! both wall-clock and *simulated* NPU time (from [`crate::engine`]).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// `(dense_in,)` dense features.
+    pub dense: Vec<f32>,
+    /// `(num_tables * pool,)` embedding indices.
+    pub indices: Vec<i32>,
+}
+
+/// One completed response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub prediction: f32,
+    /// Host wall-clock latency (queue + execute) in seconds.
+    pub wall_latency_secs: f64,
+    /// Simulated NPU latency of the batch this request rode in.
+    pub sim_latency_secs: f64,
+    /// Batch size the request was served in.
+    pub batch_size: usize,
+}
+
+/// Batch execution backend (PJRT in production, mock in tests).
+pub trait BatchExecutor {
+    /// Ascending list of supported batch sizes.
+    fn batch_sizes(&self) -> Vec<usize>;
+    /// Run `n` requests (row-major concatenated inputs), return `n`
+    /// predictions.
+    fn run(&self, dense: &[f32], indices: &[i32], n: usize) -> anyhow::Result<Vec<f32>>;
+}
+
+/// Per-batch simulated-latency provider (None = skip timing simulation).
+pub trait TimingModel {
+    /// Simulated seconds for a batch of `n` requests.
+    fn batch_secs(&mut self, n: usize) -> f64;
+}
+
+/// A no-op timing model.
+pub struct NoTiming;
+
+impl TimingModel for NoTiming {
+    fn batch_secs(&mut self, _n: usize) -> f64 {
+        0.0
+    }
+}
+
+/// Timing via the EONSim engine: one fresh single-batch simulation per
+/// served batch size (memoized — the simulator is deterministic).
+pub struct EngineTiming {
+    cfg: crate::config::SimConfig,
+    cache: std::collections::HashMap<usize, f64>,
+}
+
+impl EngineTiming {
+    pub fn new(cfg: crate::config::SimConfig) -> Self {
+        EngineTiming { cfg, cache: std::collections::HashMap::new() }
+    }
+}
+
+impl TimingModel for EngineTiming {
+    fn batch_secs(&mut self, n: usize) -> f64 {
+        if let Some(&s) = self.cache.get(&n) {
+            return s;
+        }
+        let mut cfg = self.cfg.clone();
+        cfg.workload.batch_size = n;
+        cfg.workload.num_batches = 1;
+        let secs = crate::engine::Simulator::new(cfg)
+            .run()
+            .map(|r| r.exec_time_secs())
+            .unwrap_or(0.0);
+        self.cache.insert(n, secs);
+        secs
+    }
+}
+
+/// Dynamic-batching coordinator.
+pub struct Coordinator<E: BatchExecutor, T: TimingModel> {
+    executor: E,
+    timing: T,
+    queue: VecDeque<(Request, Instant)>,
+    /// Flush threshold: serve as soon as this many requests wait.
+    max_batch: usize,
+    next_id: u64,
+    served_batches: u64,
+    served_requests: u64,
+}
+
+impl<E: BatchExecutor, T: TimingModel> Coordinator<E, T> {
+    pub fn new(executor: E, timing: T) -> Self {
+        let max_batch = executor.batch_sizes().last().copied().unwrap_or(1);
+        Coordinator {
+            executor,
+            timing,
+            queue: VecDeque::new(),
+            max_batch,
+            next_id: 0,
+            served_batches: 0,
+            served_requests: 0,
+        }
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn submit(&mut self, dense: Vec<f32>, indices: Vec<i32>) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((Request { id, dense, indices }, Instant::now()));
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn served_batches(&self) -> u64 {
+        self.served_batches
+    }
+
+    pub fn served_requests(&self) -> u64 {
+        self.served_requests
+    }
+
+    /// Whether enough requests wait to fill the largest variant.
+    pub fn batch_ready(&self) -> bool {
+        self.queue.len() >= self.max_batch
+    }
+
+    /// Serve one batch (up to the largest variant size). Returns the
+    /// responses, empty if the queue is empty.
+    pub fn serve_one(&mut self) -> anyhow::Result<Vec<Response>> {
+        let n = self.queue.len().min(self.max_batch);
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let drained: Vec<(Request, Instant)> = self.queue.drain(..n).collect();
+        let mut dense = Vec::with_capacity(n * drained[0].0.dense.len());
+        let mut indices = Vec::with_capacity(n * drained[0].0.indices.len());
+        for (r, _) in &drained {
+            dense.extend_from_slice(&r.dense);
+            indices.extend_from_slice(&r.indices);
+        }
+        let start = Instant::now();
+        let preds = self.executor.run(&dense, &indices, n)?;
+        anyhow::ensure!(preds.len() == n, "executor returned {} of {n}", preds.len());
+        let sim_secs = self.timing.batch_secs(n);
+        let now = Instant::now();
+        self.served_batches += 1;
+        self.served_requests += n as u64;
+        let _ = start;
+        Ok(drained
+            .into_iter()
+            .zip(preds)
+            .map(|((r, enq), prediction)| Response {
+                id: r.id,
+                prediction,
+                wall_latency_secs: now.duration_since(enq).as_secs_f64(),
+                sim_latency_secs: sim_secs,
+                batch_size: n,
+            })
+            .collect())
+    }
+
+    /// Serve until the queue is empty.
+    pub fn drain(&mut self) -> anyhow::Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            out.extend(self.serve_one()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mock executor: prediction = mean(dense) + 0.001 * first index.
+    struct Mock {
+        sizes: Vec<usize>,
+        dense_in: usize,
+        idx_per: usize,
+    }
+
+    impl BatchExecutor for Mock {
+        fn batch_sizes(&self) -> Vec<usize> {
+            self.sizes.clone()
+        }
+
+        fn run(&self, dense: &[f32], indices: &[i32], n: usize) -> anyhow::Result<Vec<f32>> {
+            Ok((0..n)
+                .map(|i| {
+                    let d = &dense[i * self.dense_in..(i + 1) * self.dense_in];
+                    let mean: f32 = d.iter().sum::<f32>() / self.dense_in as f32;
+                    mean + 0.001 * indices[i * self.idx_per] as f32
+                })
+                .collect())
+        }
+    }
+
+    fn mock() -> Mock {
+        Mock { sizes: vec![1, 8, 32], dense_in: 4, idx_per: 6 }
+    }
+
+    fn coord() -> Coordinator<Mock, NoTiming> {
+        Coordinator::new(mock(), NoTiming)
+    }
+
+    fn submit_n(c: &mut Coordinator<Mock, NoTiming>, n: usize) {
+        for i in 0..n {
+            c.submit(vec![i as f32; 4], vec![i as i32; 6]);
+        }
+    }
+
+    #[test]
+    fn serves_in_fifo_order_with_ids() {
+        let mut c = coord();
+        submit_n(&mut c, 5);
+        let rs = c.serve_one().unwrap();
+        assert_eq!(rs.len(), 5);
+        assert_eq!(rs[0].id, 0);
+        assert_eq!(rs[4].id, 4);
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn batches_cap_at_largest_variant() {
+        let mut c = coord();
+        submit_n(&mut c, 40);
+        assert!(c.batch_ready());
+        let rs = c.serve_one().unwrap();
+        assert_eq!(rs.len(), 32);
+        assert_eq!(c.pending(), 8);
+        let rs2 = c.serve_one().unwrap();
+        assert_eq!(rs2.len(), 8);
+    }
+
+    #[test]
+    fn drain_serves_everything() {
+        let mut c = coord();
+        submit_n(&mut c, 77);
+        let rs = c.drain().unwrap();
+        assert_eq!(rs.len(), 77);
+        assert_eq!(c.served_requests(), 77);
+        assert_eq!(c.served_batches(), 3); // 32 + 32 + 13
+    }
+
+    #[test]
+    fn predictions_match_mock_function() {
+        let mut c = coord();
+        c.submit(vec![1.0, 2.0, 3.0, 4.0], vec![10; 6]);
+        let rs = c.serve_one().unwrap();
+        assert!((rs[0].prediction - (2.5 + 0.01)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_queue_serves_nothing() {
+        let mut c = coord();
+        assert!(c.serve_one().unwrap().is_empty());
+        assert!(!c.batch_ready());
+    }
+
+    #[test]
+    fn engine_timing_memoizes_and_scales() {
+        let mut cfg = crate::config::presets::tpuv6e_dlrm_small();
+        cfg.workload.embedding.num_tables = 4;
+        cfg.workload.embedding.rows_per_table = 10_000;
+        cfg.workload.embedding.pool = 8;
+        let mut t = EngineTiming::new(cfg);
+        let s8 = t.batch_secs(8);
+        let s64 = t.batch_secs(64);
+        assert!(s8 > 0.0);
+        assert!(s64 > s8);
+        assert_eq!(t.batch_secs(8), s8, "memoized");
+    }
+
+    #[test]
+    fn wall_latency_is_positive() {
+        let mut c = coord();
+        submit_n(&mut c, 3);
+        for r in c.serve_one().unwrap() {
+            assert!(r.wall_latency_secs >= 0.0);
+            assert_eq!(r.batch_size, 3);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Accelergy-style energy estimation (paper §III: "We integrate an
+//! Accelergy-based energy estimator into EONSim to estimate energy
+//! consumption according to the hardware configuration and operation
+//! counts").
+//!
+//! Accelergy's methodology is table-driven: each architectural action has
+//! a per-action energy, and total energy is the dot product of action
+//! counts with the table. The default table uses published per-action
+//! estimates for a 7 nm-class accelerator (MAC and SRAM numbers in the
+//! Accelergy/Eyeriss lineage, HBM per-bit transfer energy from public
+//! HBM2e figures), scaled to the configured geometry.
+
+use crate::stats::{MemCounts, OpCounts, SimReport};
+
+/// Per-action energy table in picojoules.
+#[derive(Debug, Clone)]
+pub struct EnergyTable {
+    /// One systolic-array MAC (pJ).
+    pub mac_pj: f64,
+    /// One VPU lane-operation (pJ).
+    pub vpu_op_pj: f64,
+    /// One on-chip SRAM read of one access-granularity line (pJ).
+    pub sram_read_pj: f64,
+    /// One on-chip SRAM write of one line (pJ).
+    pub sram_write_pj: f64,
+    /// One off-chip (HBM) line transfer (pJ).
+    pub dram_access_pj: f64,
+    /// Static leakage + clock power in watts (added as power * time).
+    pub static_watts: f64,
+}
+
+impl Default for EnergyTable {
+    fn default() -> Self {
+        // 64 B line: SRAM ~0.08 pJ/bit read, HBM2e ~3.5 pJ/bit.
+        EnergyTable {
+            mac_pj: 0.56,
+            vpu_op_pj: 0.18,
+            sram_read_pj: 41.0,
+            sram_write_pj: 48.0,
+            dram_access_pj: 1792.0,
+            static_watts: 18.0,
+        }
+    }
+}
+
+/// Energy estimate breakdown in joules.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyReport {
+    pub compute_j: f64,
+    pub onchip_j: f64,
+    pub offchip_j: f64,
+    pub static_j: f64,
+}
+
+impl EnergyReport {
+    pub fn total_j(&self) -> f64 {
+        self.compute_j + self.onchip_j + self.offchip_j + self.static_j
+    }
+}
+
+/// Estimate energy for aggregate counters + execution time.
+pub fn estimate(
+    table: &EnergyTable,
+    mem: &MemCounts,
+    ops: &OpCounts,
+    exec_secs: f64,
+) -> EnergyReport {
+    const PJ: f64 = 1e-12;
+    EnergyReport {
+        compute_j: (ops.macs as f64 * table.mac_pj + ops.vpu_ops as f64 * table.vpu_op_pj) * PJ,
+        onchip_j: (mem.onchip_reads as f64 * table.sram_read_pj
+            + mem.onchip_writes as f64 * table.sram_write_pj)
+            * PJ,
+        offchip_j: (mem.offchip_total() as f64 * table.dram_access_pj) * PJ,
+        static_j: table.static_watts * exec_secs,
+    }
+}
+
+/// Estimate and attach total energy to a report.
+pub fn annotate(report: &mut SimReport, table: &EnergyTable) -> EnergyReport {
+    let e = estimate(
+        table,
+        &report.total_mem(),
+        &report.total_ops(),
+        report.exec_time_secs(),
+    );
+    report.energy_joules = e.total_j();
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_counts_only_static() {
+        let t = EnergyTable::default();
+        let e = estimate(&t, &MemCounts::default(), &OpCounts::default(), 1.0);
+        assert_eq!(e.compute_j, 0.0);
+        assert_eq!(e.onchip_j, 0.0);
+        assert_eq!(e.offchip_j, 0.0);
+        assert!((e.static_j - t.static_watts).abs() < 1e-12);
+    }
+
+    #[test]
+    fn offchip_dominates_per_access() {
+        // The architectural argument for caches: one HBM access costs far
+        // more than one SRAM access.
+        let t = EnergyTable::default();
+        assert!(t.dram_access_pj > 10.0 * t.sram_read_pj);
+    }
+
+    #[test]
+    fn linear_in_counts() {
+        let t = EnergyTable::default();
+        let mem1 = MemCounts { offchip_reads: 100, ..Default::default() };
+        let mem2 = MemCounts { offchip_reads: 200, ..Default::default() };
+        let e1 = estimate(&t, &mem1, &OpCounts::default(), 0.0);
+        let e2 = estimate(&t, &mem2, &OpCounts::default(), 0.0);
+        assert!((e2.offchip_j - 2.0 * e1.offchip_j).abs() < 1e-18);
+    }
+
+    #[test]
+    fn total_is_sum_of_parts() {
+        let e = EnergyReport { compute_j: 1.0, onchip_j: 2.0, offchip_j: 3.0, static_j: 4.0 };
+        assert_eq!(e.total_j(), 10.0);
+    }
+}

@@ -1,0 +1,491 @@
+//! Cycle-level embedding-operation simulation (the paper's key
+//! contribution): streams a batch's line-granular address trace through
+//! the configured on-chip management policy and the FR-FCFS + DRAM
+//! back-end, overlapping the VPU pooling work, and returns the stage's
+//! cycles + memory/operation counters.
+//!
+//! State (cache contents, DRAM row buffers, the global cycle cursor)
+//! persists across batches — cross-request reuse of hot vectors is
+//! exactly what the paper's skewed workloads exploit.
+
+use crate::config::{OnchipPolicy, SimConfig};
+use crate::mem::policy::pinning::{PinSet, Profile};
+use crate::mem::{Cache, MemController, SoftwarePrefetcher};
+use crate::stats::{MemCounts, OpCounts};
+use crate::trace::{AddressMap, BatchTrace};
+
+/// Per-batch result of the embedding stage.
+#[derive(Debug, Clone, Copy)]
+pub struct EmbeddingStageResult {
+    pub cycles: u64,
+    pub mem: MemCounts,
+    pub ops: OpCounts,
+}
+
+/// Persistent embedding-stage simulator.
+///
+/// Multi-core (paper §II: "NPUs typically feature multiple cores ... All
+/// NPU cores share a global on-chip memory"): batch samples are
+/// partitioned round-robin across cores; each core owns a *local* buffer
+/// (its own cache / pin set / SPM stage), all cores share the optional
+/// *global* buffer and the off-chip controller. Hierarchy depth is
+/// therefore configurable: local-only (TPUv6e) or local + global.
+pub struct EmbeddingSim {
+    addr_map: AddressMap,
+    /// Per-core local on-chip state.
+    cores: Vec<Mode>,
+    /// Shared global buffer (hierarchy depth 2), if configured.
+    global: Option<Cache>,
+    global_bytes_per_cycle: f64,
+    controller: MemController,
+    prefetcher: SoftwarePrefetcher,
+    /// Global cycle cursor (start of the next batch).
+    now: u64,
+    /// Line requests each core's gather engine can issue per cycle.
+    issue_per_cycle: u64,
+    /// Fixed per-batch kernel launch/drain overhead in cycles.
+    kernel_overhead: u64,
+    onchip_bytes_per_cycle: f64,
+    line_bytes: u64,
+    lookups_per_sample: usize,
+    pool: usize,
+    dim: usize,
+    vpu_lanes: usize,
+    vpu_sublanes: usize,
+}
+
+enum Mode {
+    Spm,
+    Cache(Cache),
+    Pinning(PinSet),
+}
+
+/// Gather-engine issue width for *off-chip* line fetches (DMA descriptor
+/// rate, lines/cycle). On-chip hits bypass the DMA engines entirely and
+/// are bounded by the SRAM port bandwidth instead.
+pub const ISSUE_PER_CYCLE: u64 = 32;
+/// Per-batch kernel launch + drain overhead (cycles), calibrated once
+/// against the TPUv6e baseline at batch 256 (EXPERIMENTS.md §Calibration).
+pub const KERNEL_OVERHEAD: u64 = 2_000;
+
+impl EmbeddingSim {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let emb = &cfg.workload.embedding;
+        let mem = &cfg.hardware.mem;
+        let num_cores = cfg.hardware.num_cores.max(1);
+        let addr_map = AddressMap::new(emb, mem.access_granularity);
+        let lines_per_vec = addr_map.lines_per_vec() as usize;
+        let make_mode = || match mem.policy {
+            OnchipPolicy::Spm => Mode::Spm,
+            OnchipPolicy::Cache(kind) => Mode::Cache(Cache::new(
+                mem.onchip_bytes,
+                mem.access_granularity,
+                mem.cache_assoc,
+                kind,
+            )),
+            // starts empty; call [`set_pin_set`] after profiling
+            OnchipPolicy::Pinning => Mode::Pinning(PinSet::empty()),
+        };
+        let global = mem.global.as_ref().map(|g| {
+            Cache::new(g.bytes, mem.access_granularity, g.assoc, g.policy)
+        });
+        EmbeddingSim {
+            addr_map,
+            cores: (0..num_cores).map(|_| make_mode()).collect(),
+            global,
+            global_bytes_per_cycle: mem
+                .global
+                .as_ref()
+                .map(|g| g.bytes_per_cycle)
+                .unwrap_or(1.0),
+            // software prefetch deepens the effective off-chip pipeline:
+            // prefetched lines occupy reorder-window slots ahead of use
+            controller: MemController::new(
+                &mem.dram,
+                mem.access_granularity,
+                cfg.hardware.dram_bytes_per_cycle(),
+                mem.max_outstanding + mem.prefetch_depth * lines_per_vec,
+            ),
+            prefetcher: if mem.prefetch_depth > 0 {
+                SoftwarePrefetcher::new(mem.prefetch_depth * lines_per_vec)
+            } else {
+                SoftwarePrefetcher::disabled()
+            },
+            now: 0,
+            issue_per_cycle: ISSUE_PER_CYCLE,
+            kernel_overhead: KERNEL_OVERHEAD,
+            onchip_bytes_per_cycle: mem.onchip_bytes_per_cycle,
+            line_bytes: mem.access_granularity,
+            lookups_per_sample: emb.num_tables * emb.pool,
+            pool: emb.pool,
+            dim: emb.dim,
+            vpu_lanes: cfg.hardware.core.vpu_lanes,
+            vpu_sublanes: cfg.hardware.core.vpu_sublanes,
+        }
+    }
+
+    /// Install the profiling-derived pin set (pinning mode only; every
+    /// core pins the same hot set — the profile is workload-global).
+    pub fn set_pin_set(&mut self, pins: PinSet) {
+        for mode in &mut self.cores {
+            if let Mode::Pinning(p) = mode {
+                *p = pins.clone();
+            }
+        }
+    }
+
+    /// Build a frequency profile from batch traces (the "Profiling"
+    /// policy's offline pass).
+    pub fn profile_batches<'a>(traces: impl Iterator<Item = &'a BatchTrace>) -> Profile {
+        let mut profile = Profile::new();
+        for t in traces {
+            for l in &t.lookups {
+                profile.record(l.table, l.row);
+            }
+        }
+        profile
+    }
+
+    /// Aggregate cache-mode statistics across cores, if in cache mode.
+    pub fn cache_stats(&self) -> Option<(u64, u64)> {
+        let mut out = None;
+        for mode in &self.cores {
+            if let Mode::Cache(c) = mode {
+                let (h, m) = out.unwrap_or((0, 0));
+                out = Some((h + c.hits(), m + c.misses()));
+            }
+        }
+        out
+    }
+
+    /// Simulate one batch's embedding stage.
+    pub fn simulate_batch(&mut self, trace: &BatchTrace) -> EmbeddingStageResult {
+        let base = self.now;
+        let mut mem = MemCounts::default();
+        let lines_per_vec = self.addr_map.lines_per_vec();
+        let ncores = self.cores.len();
+        let mut issued = vec![0u64; ncores]; // per-core DMA line issues
+        let mut busy = vec![0u64; ncores]; // per-core local-buffer bytes
+        let mut global_busy: u64 = 0; // shared global-buffer bytes
+        let mut offchip_done = base;
+
+        for (i, lookup) in trace.lookups.iter().enumerate() {
+            // samples are partitioned round-robin across cores
+            let core = (i / self.lookups_per_sample) % ncores;
+            let vec_onchip = match &self.cores[core] {
+                Mode::Spm => false,
+                Mode::Pinning(pins) => pins.is_pinned(lookup.table, lookup.row),
+                Mode::Cache(_) => true, // decided per line below
+            };
+            match &mut self.cores[core] {
+                Mode::Cache(cache) => {
+                    for line in self.addr_map.lines(lookup.table, lookup.row) {
+                        if cache.access(line).is_hit() {
+                            mem.hits += 1;
+                            mem.onchip_reads += 1;
+                            busy[core] += self.line_bytes;
+                            continue;
+                        }
+                        mem.misses += 1;
+                        mem.onchip_writes += 1; // local fill
+                        mem.onchip_reads += 1; // consume
+                        busy[core] += 2 * self.line_bytes;
+                        // local miss: consult the shared global buffer
+                        if let Some(g) = &mut self.global {
+                            if g.access(line).is_hit() {
+                                mem.global_hits += 1;
+                                mem.onchip_reads += 1; // global read
+                                global_busy += self.line_bytes;
+                                continue;
+                            }
+                            mem.onchip_writes += 1; // global fill
+                            global_busy += self.line_bytes;
+                        }
+                        mem.offchip_reads += 1;
+                        self.prefetcher.issue(1);
+                        self.prefetcher.consume();
+                        let arrival = base + issued[core] / self.issue_per_cycle;
+                        issued[core] += 1;
+                        if let Some(c) = self.controller.enqueue(line, arrival) {
+                            offchip_done = offchip_done.max(c.done_at);
+                        }
+                    }
+                }
+                Mode::Spm | Mode::Pinning(_) => {
+                    if vec_onchip {
+                        // pinned vector: read straight from local memory
+                        mem.hits += lines_per_vec;
+                        mem.onchip_reads += lines_per_vec;
+                        busy[core] += lines_per_vec * self.line_bytes;
+                    } else {
+                        if matches!(self.cores[core], Mode::Pinning(_)) {
+                            mem.misses += lines_per_vec;
+                        }
+                        // per-vector counting hoisted out of the line
+                        // loop (EXPERIMENTS.md §Perf iteration 5)
+                        mem.onchip_writes += lines_per_vec; // stage locally
+                        mem.onchip_reads += lines_per_vec; // VPU consumes
+                        busy[core] += 2 * lines_per_vec * self.line_bytes;
+                        for line in self.addr_map.lines(lookup.table, lookup.row) {
+                            // shared global buffer catches cross-core reuse
+                            if let Some(g) = &mut self.global {
+                                if g.access(line).is_hit() {
+                                    mem.global_hits += 1;
+                                    mem.onchip_reads += 1;
+                                    global_busy += self.line_bytes;
+                                    continue;
+                                }
+                                mem.onchip_writes += 1; // global fill
+                                global_busy += self.line_bytes;
+                            }
+                            mem.offchip_reads += 1;
+                            self.prefetcher.issue(1);
+                            self.prefetcher.consume();
+                            let arrival = base + issued[core] / self.issue_per_cycle;
+                            issued[core] += 1;
+                            if let Some(c) = self.controller.enqueue(line, arrival) {
+                                offchip_done = offchip_done.max(c.done_at);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for c in self.controller.drain() {
+            offchip_done = offchip_done.max(c.done_at);
+        }
+
+        // VPU pooling overlaps the memory stream; bags spread across the
+        // cores' vector units.
+        let bags = trace.lookups.len() as u64 / self.pool.max(1) as u64;
+        let core = crate::config::CoreConfig {
+            sa_rows: 1,
+            sa_cols: 1,
+            vpu_lanes: self.vpu_lanes,
+            vpu_sublanes: self.vpu_sublanes * ncores,
+            dataflow: crate::config::Dataflow::OutputStationary,
+        };
+        let vpu_cycles =
+            crate::compute::pooling_cycles(&core, bags, self.pool as u64, self.dim as u64);
+
+        let issue_cycles = issued.iter().map(|&n| n / self.issue_per_cycle).max().unwrap_or(0);
+        let onchip_cycles = busy
+            .iter()
+            .map(|&b| (b as f64 / self.onchip_bytes_per_cycle).ceil() as u64)
+            .max()
+            .unwrap_or(0);
+        let global_cycles = (global_busy as f64 / self.global_bytes_per_cycle).ceil() as u64;
+        let mem_cycles = (offchip_done - base)
+            .max(onchip_cycles)
+            .max(global_cycles)
+            .max(issue_cycles);
+        let cycles = mem_cycles.max(vpu_cycles) + self.kernel_overhead;
+        self.now = base + cycles;
+
+        let ops = OpCounts {
+            macs: 0,
+            vpu_ops: bags * (self.pool as u64 - 1).max(0),
+            lookups: trace.lookups.len() as u64,
+        };
+        EmbeddingStageResult { cycles, mem, ops }
+    }
+
+    /// Software-prefetch coverage (optional analysis; see `mem::prefetch`).
+    pub fn prefetcher(&self) -> &SoftwarePrefetcher {
+        &self.prefetcher
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, CachePolicyKind};
+    use crate::trace::TraceGenerator;
+
+    fn small_cfg(policy: OnchipPolicy) -> SimConfig {
+        let mut cfg = presets::tpuv6e_dlrm_small();
+        cfg.workload.batch_size = 64;
+        cfg.workload.embedding.num_tables = 8;
+        cfg.workload.embedding.rows_per_table = 20_000;
+        cfg.workload.embedding.pool = 32;
+        cfg.workload.trace.alpha = 1.1;
+        cfg.hardware.mem.policy = policy;
+        // small on-chip so cache effects (and pinning capacity limits)
+        // show at this scale: 1 MiB = 2048 pinned vectors max
+        cfg.hardware.mem.onchip_bytes = 1 << 20;
+        cfg
+    }
+
+    fn run_one(policy: OnchipPolicy) -> (EmbeddingStageResult, SimConfig) {
+        let cfg = small_cfg(policy);
+        let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+        let mut sim = EmbeddingSim::new(&cfg);
+        let trace = gen.next_batch();
+        if matches!(policy, OnchipPolicy::Pinning) {
+            let profile = EmbeddingSim::profile_batches(std::iter::once(&trace));
+            sim.set_pin_set(PinSet::from_profile(
+                &profile,
+                cfg.hardware.mem.onchip_bytes,
+                cfg.workload.embedding.vec_bytes(),
+            ));
+        }
+        (sim.simulate_batch(&trace), cfg)
+    }
+
+    #[test]
+    fn spm_sends_every_line_offchip() {
+        let (r, cfg) = run_one(OnchipPolicy::Spm);
+        let expect_lines = cfg.workload.lookups_per_batch() * 8; // 128-dim f32 / 64 B lines
+        assert_eq!(r.mem.offchip_reads, expect_lines);
+        assert_eq!(r.mem.onchip_writes, expect_lines);
+        assert_eq!(r.mem.onchip_reads, expect_lines);
+        assert_eq!(r.mem.hits, 0);
+    }
+
+    #[test]
+    fn cache_mode_hits_reduce_offchip() {
+        let (r, cfg) = run_one(OnchipPolicy::Cache(CachePolicyKind::Lru));
+        let lines = cfg.workload.lookups_per_batch() * 8;
+        assert_eq!(r.mem.hits + r.mem.misses, lines);
+        assert!(r.mem.hits > 0, "zipf trace must produce reuse hits");
+        assert_eq!(r.mem.offchip_reads, r.mem.misses);
+        assert!(r.mem.offchip_reads < lines);
+    }
+
+    #[test]
+    fn cache_is_faster_than_spm_on_skewed_trace() {
+        let (spm, _) = run_one(OnchipPolicy::Spm);
+        let (lru, _) = run_one(OnchipPolicy::Cache(CachePolicyKind::Lru));
+        assert!(
+            lru.cycles < spm.cycles,
+            "lru {} !< spm {}",
+            lru.cycles,
+            spm.cycles
+        );
+    }
+
+    #[test]
+    fn pinning_hits_only_pinned_vectors() {
+        let (r, _) = run_one(OnchipPolicy::Pinning);
+        assert!(r.mem.hits > 0, "profiled hot vectors must pin");
+        assert!(r.mem.offchip_reads > 0, "cold vectors still stream");
+    }
+
+    #[test]
+    fn lookups_counted() {
+        let (r, cfg) = run_one(OnchipPolicy::Spm);
+        assert_eq!(r.ops.lookups, cfg.workload.lookups_per_batch());
+    }
+
+    #[test]
+    fn state_persists_across_batches() {
+        let cfg = small_cfg(OnchipPolicy::Cache(CachePolicyKind::Lru));
+        let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+        let mut sim = EmbeddingSim::new(&cfg);
+        let r1 = sim.simulate_batch(&gen.next_batch());
+        let r2 = sim.simulate_batch(&gen.next_batch());
+        // warm cache: second batch should hit at least as often
+        let rate1 = r1.mem.hits as f64 / (r1.mem.hits + r1.mem.misses) as f64;
+        let rate2 = r2.mem.hits as f64 / (r2.mem.hits + r2.mem.misses) as f64;
+        assert!(rate2 >= rate1 * 0.9, "rate1={rate1}, rate2={rate2}");
+        assert!(sim.now() >= r1.cycles + r2.cycles);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, _) = run_one(OnchipPolicy::Spm);
+        let (b, _) = run_one(OnchipPolicy::Spm);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.mem, b.mem);
+    }
+
+    #[test]
+    fn software_prefetch_never_hurts_and_deepens_pipeline() {
+        let run = |depth: usize| {
+            let mut cfg = small_cfg(OnchipPolicy::Spm);
+            cfg.hardware.mem.prefetch_depth = depth;
+            let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+            let mut sim = EmbeddingSim::new(&cfg);
+            let r = sim.simulate_batch(&gen.next_batch());
+            (r, sim.prefetcher().coverage())
+        };
+        let (base, cov0) = run(0);
+        let (deep, cov8) = run(8);
+        assert_eq!(cov0, 0.0);
+        assert!(cov8 > 0.9, "deep prefetch should cover the stream, got {cov8}");
+        assert!(deep.cycles <= base.cycles, "prefetch must not slow down");
+        assert_eq!(deep.mem.offchip_reads, base.mem.offchip_reads, "same traffic");
+    }
+
+    #[test]
+    fn multi_core_scales_compute_not_bandwidth() {
+        // 4 cores split the VPU/issue work, but DRAM is shared: cycles
+        // shrink vs 1 core yet stay above the shared-bandwidth floor.
+        let run_cores = |n: usize| {
+            let mut cfg = small_cfg(OnchipPolicy::Spm);
+            cfg.hardware.num_cores = n;
+            let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+            let mut sim = EmbeddingSim::new(&cfg);
+            sim.simulate_batch(&gen.next_batch())
+        };
+        let one = run_cores(1);
+        let four = run_cores(4);
+        assert!(four.cycles <= one.cycles, "4 cores {} vs 1 core {}", four.cycles, one.cycles);
+        // identical traffic either way: the memory counters must agree
+        assert_eq!(one.mem.offchip_reads, four.mem.offchip_reads);
+    }
+
+    #[test]
+    fn global_buffer_reduces_offchip_traffic() {
+        // depth-2 hierarchy: a shared global buffer behind per-core SPM
+        // catches cross-sample reuse that pure SPM sends off-chip.
+        let run = |global: bool| {
+            let mut cfg = small_cfg(OnchipPolicy::Spm);
+            cfg.hardware.num_cores = 2;
+            if global {
+                cfg.hardware.mem.global = Some(crate::config::GlobalBufferConfig {
+                    bytes: 4 << 20,
+                    assoc: 16,
+                    policy: crate::config::CachePolicyKind::Lru,
+                    latency_cycles: 40,
+                    bytes_per_cycle: 1024.0,
+                });
+            }
+            let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+            let mut sim = EmbeddingSim::new(&cfg);
+            sim.simulate_batch(&gen.next_batch())
+        };
+        let flat = run(false);
+        let deep = run(true);
+        assert_eq!(deep.mem.global_hits + deep.mem.offchip_reads, flat.mem.offchip_reads);
+        assert!(deep.mem.global_hits > 0, "skewed trace must hit the global buffer");
+        assert!(deep.mem.offchip_reads < flat.mem.offchip_reads);
+    }
+
+    #[test]
+    fn global_buffer_behind_local_cache() {
+        // local cache + shared global cache: local hits dominate, the
+        // global level only sees local misses.
+        let mut cfg = small_cfg(OnchipPolicy::Cache(CachePolicyKind::Lru));
+        cfg.hardware.num_cores = 2;
+        cfg.hardware.mem.onchip_bytes = 1 << 18; // small locals
+        cfg.hardware.mem.global = Some(crate::config::GlobalBufferConfig {
+            bytes: 8 << 20,
+            assoc: 16,
+            policy: crate::config::CachePolicyKind::Lru,
+            latency_cycles: 40,
+            bytes_per_cycle: 1024.0,
+        });
+        let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+        let mut sim = EmbeddingSim::new(&cfg);
+        let r = sim.simulate_batch(&gen.next_batch());
+        assert!(r.mem.hits > 0);
+        assert!(r.mem.global_hits > 0);
+        // every local miss either hit global or went off-chip
+        assert_eq!(r.mem.misses, r.mem.global_hits + r.mem.offchip_reads);
+    }
+}

@@ -1,0 +1,88 @@
+//! Matrix-operation stage: the analytical model composition for the
+//! MLP layers (paper §III — SCALE-Sim compute cycles + `T = D/B + L`
+//! transfers, double-buffered).
+
+use crate::compute::{matmul_estimate, transfer_cycles};
+use crate::config::{HardwareConfig, MnkLayer};
+use crate::stats::OpCounts;
+
+/// Cycles + op counts for a chain of MNK layers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MatrixStageResult {
+    pub cycles: u64,
+    pub ops: OpCounts,
+    /// Operand/result traffic in bytes (feeds access-count accounting).
+    pub traffic_bytes: u64,
+}
+
+/// Simulate one MLP chain analytically. Each layer's wall time is
+/// `max(compute, transfer) + L` (weights/inputs stream in while the
+/// previous tile computes — the double-buffering every NPU runtime
+/// performs for dense layers), and layers are sequential (layer i+1
+/// consumes layer i's activations).
+pub fn simulate_layers(hw: &HardwareConfig, layers: &[MnkLayer], elem_bytes: u64) -> MatrixStageResult {
+    let bw = hw.dram_bytes_per_cycle();
+    let lat = hw.mem.dram.flat_latency_cycles;
+    let mut total = MatrixStageResult::default();
+    for &layer in layers {
+        let est = matmul_estimate(layer, &hw.core, elem_bytes);
+        let bytes = est.input_bytes + est.weight_bytes + est.output_bytes;
+        let t_mem = transfer_cycles(bytes, bw, lat);
+        total.cycles += est.compute_cycles.max(t_mem);
+        total.ops.macs += est.macs;
+        total.traffic_bytes += bytes;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn paper_mlp_chain_is_cheap_relative_to_embedding() {
+        // Table I MLPs at batch 256: both chains complete in well under a
+        // millisecond of cycles — the paper's premise that embedding
+        // dominates DLRM inference.
+        let hw = presets::tpuv6e_hardware();
+        let w = presets::dlrm_rmc2_small(256);
+        let bottom = simulate_layers(&hw, &w.bottom_layers(), 4);
+        let top = simulate_layers(&hw, &w.top_layers(), 4);
+        let total = bottom.cycles + top.cycles;
+        assert!(total > 0);
+        assert!(total < 100_000, "MLP cycles {total}");
+    }
+
+    #[test]
+    fn cycles_scale_with_batch() {
+        let hw = presets::tpuv6e_hardware();
+        let small = simulate_layers(&hw, &presets::dlrm_rmc2_small(32).bottom_layers(), 4);
+        let large = simulate_layers(&hw, &presets::dlrm_rmc2_small(2048).bottom_layers(), 4);
+        assert!(large.cycles > small.cycles);
+        assert_eq!(large.ops.macs, 64 * small.ops.macs);
+    }
+
+    #[test]
+    fn empty_chain_is_free() {
+        let hw = presets::tpuv6e_hardware();
+        let r = simulate_layers(&hw, &[], 4);
+        assert_eq!(r.cycles, 0);
+        assert_eq!(r.ops.macs, 0);
+    }
+
+    #[test]
+    fn layer_time_is_max_of_compute_and_transfer() {
+        // self-consistency: a single layer's wall time equals
+        // max(compute, transfer) from the underlying models.
+        let hw = presets::tpuv6e_hardware();
+        let layer = MnkLayer { m: 1, n: 8192, k: 8192 };
+        let r = simulate_layers(&hw, &[layer], 4);
+        let est = crate::compute::matmul_estimate(layer, &hw.core, 4);
+        let bytes = est.input_bytes + est.weight_bytes + est.output_bytes;
+        let t_mem = transfer_cycles(bytes, hw.dram_bytes_per_cycle(), hw.mem.dram.flat_latency_cycles);
+        assert_eq!(r.cycles, est.compute_cycles.max(t_mem));
+        // and the transfer term is the floor
+        assert!(r.cycles >= t_mem);
+    }
+}

@@ -1,0 +1,208 @@
+//! The hybrid simulation engine: analytical matrix model + cycle-level
+//! embedding memory simulation, composed per batch (paper §III,
+//! "Simulation flow").
+//!
+//! A DLRM batch runs bottom-MLP -> embedding bags -> feature interaction
+//! -> top-MLP. The engine simulates each stage with the appropriate
+//! model, accumulates memory/op counters, and emits per-batch and overall
+//! results. Profiling-based pinning performs its offline frequency pass
+//! first, like the runtime it models.
+
+pub mod embedding;
+pub mod matrix;
+
+use crate::compute::elementwise_cycles;
+use crate::config::{OnchipPolicy, SimConfig};
+use crate::energy::{annotate, EnergyTable};
+use crate::mem::policy::pinning::PinSet;
+use crate::stats::{BatchResult, CycleBreakdown, MemCounts, SimReport};
+use crate::trace::TraceGenerator;
+use embedding::EmbeddingSim;
+
+/// End-to-end workload simulator.
+pub struct Simulator {
+    cfg: SimConfig,
+    energy_table: EnergyTable,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig) -> Self {
+        Simulator { cfg, energy_table: EnergyTable::default() }
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// Override the per-action energy table.
+    pub fn with_energy_table(mut self, table: EnergyTable) -> Self {
+        self.energy_table = table;
+        self
+    }
+
+    /// Run the configured workload: `num_batches` batches through the
+    /// persistent memory hierarchy. Returns per-batch + overall results.
+    pub fn run(&self) -> anyhow::Result<SimReport> {
+        let cfg = &self.cfg;
+        let w = &cfg.workload;
+        let hw = &cfg.hardware;
+        let elem = w.embedding.elem_bytes;
+
+        let mut gen = TraceGenerator::new(w)?;
+        let mut emb_sim = EmbeddingSim::new(cfg);
+
+        // Profiling pass for the pinning policy: collect frequency over
+        // the whole workload trace (regenerated deterministically), then
+        // pin the hottest vectors up to on-chip capacity.
+        if matches!(hw.mem.policy, OnchipPolicy::Pinning) {
+            let mut pgen = TraceGenerator::new(w)?;
+            let traces: Vec<_> = (0..w.num_batches).map(|_| pgen.next_batch()).collect();
+            let profile = EmbeddingSim::profile_batches(traces.iter());
+            emb_sim.set_pin_set(PinSet::from_profile(
+                &profile,
+                hw.mem.onchip_bytes,
+                w.embedding.vec_bytes(),
+            ));
+        }
+
+        let bottom = w.bottom_layers();
+        let top = w.top_layers();
+        let mut report = SimReport {
+            platform: hw.name.clone(),
+            policy: hw.mem.policy.name().to_string(),
+            batch_size: w.batch_size,
+            freq_ghz: hw.freq_ghz,
+            per_batch: Vec::with_capacity(w.num_batches),
+            energy_joules: 0.0,
+        };
+
+        for batch_index in 0..w.num_batches {
+            let trace = gen.next_batch();
+
+            let bottom_r = matrix::simulate_layers(hw, &bottom, elem);
+            let emb_r = emb_sim.simulate_batch(&trace);
+            // feature interaction: one elementwise combine over
+            // (num_tables + 1) vectors of `dim` per sample
+            let interact_elems =
+                (w.batch_size * w.embedding.dim * (w.embedding.num_tables + 1)) as u64;
+            let interaction = elementwise_cycles(&hw.core, interact_elems);
+            let top_r = matrix::simulate_layers(hw, &top, elem);
+
+            let mut mem = emb_r.mem;
+            // MLP traffic staged through the local buffer: write + read
+            // per line of operand/result traffic.
+            let mlp_lines = (bottom_r.traffic_bytes + top_r.traffic_bytes)
+                / hw.mem.access_granularity;
+            mem.add(&MemCounts {
+                onchip_reads: mlp_lines,
+                onchip_writes: mlp_lines,
+                offchip_reads: mlp_lines,
+                offchip_writes: 0,
+                hits: 0,
+                misses: 0,
+                global_hits: 0,
+            });
+
+            let mut ops = emb_r.ops;
+            ops.macs += bottom_r.ops.macs + top_r.ops.macs;
+            ops.vpu_ops += interact_elems;
+
+            report.per_batch.push(BatchResult {
+                batch_index,
+                cycles: CycleBreakdown {
+                    bottom_mlp: bottom_r.cycles,
+                    embedding: emb_r.cycles,
+                    interaction,
+                    top_mlp: top_r.cycles,
+                },
+                mem,
+                ops,
+            });
+        }
+
+        annotate(&mut report, &self.energy_table);
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, CachePolicyKind};
+
+    fn small_cfg() -> SimConfig {
+        let mut cfg = presets::tpuv6e_dlrm_small();
+        cfg.workload.batch_size = 32;
+        cfg.workload.num_batches = 2;
+        cfg.workload.embedding.num_tables = 8;
+        cfg.workload.embedding.rows_per_table = 20_000;
+        cfg.workload.embedding.pool = 32;
+        cfg.hardware.mem.onchip_bytes = 1 << 20;
+        cfg
+    }
+
+    #[test]
+    fn run_produces_per_batch_results() {
+        let report = Simulator::new(small_cfg()).run().unwrap();
+        assert_eq!(report.per_batch.len(), 2);
+        assert!(report.total_cycles() > 0);
+        assert!(report.energy_joules > 0.0);
+        assert!(report.exec_time_secs() > 0.0);
+    }
+
+    #[test]
+    fn embedding_dominates_dlrm(){
+        // paper §II: embedding ops dominate recommendation inference
+        let report = Simulator::new(small_cfg()).run().unwrap();
+        for b in &report.per_batch {
+            assert!(
+                b.cycles.embedding > b.cycles.bottom_mlp + b.cycles.top_mlp,
+                "embedding {} vs mlp {}",
+                b.cycles.embedding,
+                b.cycles.bottom_mlp + b.cycles.top_mlp
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let a = Simulator::new(small_cfg()).run().unwrap();
+        let b = Simulator::new(small_cfg()).run().unwrap();
+        assert_eq!(a.total_cycles(), b.total_cycles());
+        assert_eq!(a.total_mem(), b.total_mem());
+    }
+
+    #[test]
+    fn policies_rank_as_expected_on_skewed_trace() {
+        // SPM slowest; cache faster; profiling-pinning at least close to
+        // cache (the Fig. 4b ordering at small scale).
+        let run_policy = |policy| {
+            let mut cfg = small_cfg();
+            cfg.workload.trace.alpha = 1.2;
+            cfg.hardware.mem.policy = policy;
+            Simulator::new(cfg).run().unwrap().total_cycles()
+        };
+        let spm = run_policy(OnchipPolicy::Spm);
+        let lru = run_policy(OnchipPolicy::Cache(CachePolicyKind::Lru));
+        let pin = run_policy(OnchipPolicy::Pinning);
+        assert!(lru < spm, "lru {lru} !< spm {spm}");
+        assert!(pin < spm, "pin {pin} !< spm {spm}");
+    }
+
+    #[test]
+    fn batch_size_scales_time() {
+        let mut big = small_cfg();
+        big.workload.batch_size = 128;
+        let small = Simulator::new(small_cfg()).run().unwrap();
+        let large = Simulator::new(big).run().unwrap();
+        assert!(large.total_cycles() > small.total_cycles());
+    }
+
+    #[test]
+    fn report_metadata() {
+        let report = Simulator::new(small_cfg()).run().unwrap();
+        assert_eq!(report.platform, "tpuv6e");
+        assert_eq!(report.policy, "spm");
+        assert_eq!(report.batch_size, 32);
+    }
+}

@@ -1,0 +1,43 @@
+//! # EONSim — an NPU simulator for on-chip memory and embedding vector operations
+//!
+//! Rust reproduction of *EONSim* (Choi & Oh, CS.AR 2025): a hybrid NPU
+//! simulator that combines
+//!
+//! * an **analytical model** for deterministic, tile-based matrix
+//!   operations (SCALE-Sim-style compute cycles + `T = D/B + L` memory
+//!   transfers), and
+//! * a **cycle-level memory simulation** for input-dependent embedding
+//!   vector operations, driven by hardware-agnostic index traces that are
+//!   translated to platform-specific addresses and streamed through a
+//!   detailed on-chip memory hierarchy (SPM double-buffering, LRU/SRRIP
+//!   caches, profiling-based pinning, software prefetch) backed by a
+//!   DRAMSim3-style off-chip model behind an FR-FCFS controller.
+//!
+//! The crate is Layer 3 of a three-layer stack: the DLRM model itself is
+//! authored in JAX (+ Pallas kernels) and AOT-lowered to HLO text which
+//! [`runtime`] loads and executes via PJRT — Python is never on the
+//! request path. [`coordinator`] serves batched inference requests,
+//! executing them functionally while [`engine`] simulates their timing.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod champsim;
+pub mod cli;
+pub mod compute;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod engine;
+pub mod figures;
+pub mod mem;
+pub mod runtime;
+pub mod stats;
+pub mod testutil;
+pub mod tpuv6e;
+pub mod trace;
+pub mod workload;
+
+pub use config::{CoreConfig, HardwareConfig, MemoryConfig, SimConfig, WorkloadConfig};
+
+

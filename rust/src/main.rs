@@ -1,0 +1,358 @@
+//! `eonsim` — CLI launcher for the EONSim NPU simulator.
+//!
+//! Commands:
+//!   run        simulate a workload (presets or a TOML config file)
+//!   validate   EONSim vs the TPUv6e baseline (paper Fig. 3 headline)
+//!   figures    regenerate paper figures 3a/3b/3c/4a/4b/4c
+//!   serve      functional DLRM serving demo through the PJRT artifacts
+//!   trace-gen  write a hardware-agnostic index trace file
+//!   help       this text
+
+use eonsim::cli::Args;
+use eonsim::config::{presets, OnchipPolicy, SimConfig};
+use eonsim::coordinator::{Coordinator, EngineTiming};
+use eonsim::engine::Simulator;
+use eonsim::runtime::dlrm::{random_request, DlrmExecutor};
+use eonsim::runtime::Runtime;
+use eonsim::stats::writer;
+use eonsim::{figures, trace};
+
+const HELP: &str = "eonsim — NPU simulator for on-chip memory and embedding vector operations
+
+USAGE: eonsim <command> [flags]
+
+COMMANDS:
+  run        simulate a DLRM workload
+               --config <file.toml>   load a TOML config (else Table-I preset)
+               --batch <n>            batch size            [256]
+               --batches <n>          number of batches     [4]
+               --tables <n>           embedding tables      [60]
+               --policy <p>           spm|lru|srrip|brrip|drrip|fifo|random|profiling
+               --alpha <x>            trace Zipf exponent   [0.9]
+               --csv <file> / --json <file>   write reports
+  validate   paper Fig. 3 validation vs the TPUv6e baseline
+               --full                 full 32..2048 step-32 batch sweep
+  figures    print paper-figure series
+               --fig <3a|3b|3c|4a|4b|4c|all>  [all]
+               --full                 full sweeps (slower)
+  serve      functional DLRM serving demo (needs `make artifacts`)
+               --requests <n>         requests to submit    [100]
+               --artifacts <dir>      artifact directory    [artifacts]
+  sweep      parameter sweep -> CSV on stdout
+               --param <batch|tables|alpha|onchip_mb|cores>
+               --values <comma-separated>   e.g. 32,64,128
+               --policy <p> [spm]  (plus the `run` flags)
+  trace-gen  write an index trace file
+               --out <file>  --len <n> [100000]  --rows <n> [1000000]
+               --alpha <x> [0.9]  --seed <n>
+  help       print this text
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "validate" => cmd_validate(&args),
+        "figures" => cmd_figures(&args),
+        "serve" => cmd_serve(&args),
+        "sweep" => cmd_sweep(&args),
+        "trace-gen" => cmd_trace_gen(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => SimConfig::from_file(path)?,
+        None => presets::tpuv6e_dlrm_small(),
+    };
+    cfg.workload.batch_size = args.usize_flag("batch", cfg.workload.batch_size)?;
+    cfg.workload.num_batches = args.usize_flag("batches", cfg.workload.num_batches)?;
+    cfg.workload.embedding.num_tables =
+        args.usize_flag("tables", cfg.workload.embedding.num_tables)?;
+    cfg.workload.trace.alpha = args.f64_flag("alpha", cfg.workload.trace.alpha)?;
+    if let Some(p) = args.flag("policy") {
+        cfg.hardware.mem.policy = OnchipPolicy::parse(p)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    println!(
+        "simulating {} x {} batches on {} (policy {}, {} tables, zipf α={})",
+        cfg.workload.batch_size,
+        cfg.workload.num_batches,
+        cfg.hardware.name,
+        cfg.hardware.mem.policy.name(),
+        cfg.workload.embedding.num_tables,
+        cfg.workload.trace.alpha,
+    );
+    let t0 = std::time::Instant::now();
+    let report = Simulator::new(cfg).run()?;
+    let host = t0.elapsed().as_secs_f64();
+
+    let m = report.total_mem();
+    println!("  exec time     : {:.3} ms simulated", report.exec_time_secs() * 1e3);
+    println!("  per batch     : {:.3} ms", report.mean_batch_secs() * 1e3);
+    println!("  total cycles  : {}", report.total_cycles());
+    println!(
+        "  onchip/offchip: {} / {} accesses (ratio {:.3})",
+        m.onchip_total(),
+        m.offchip_total(),
+        m.onchip_ratio()
+    );
+    if m.hits + m.misses > 0 {
+        println!("  hit rate      : {:.3}", m.hit_rate());
+    }
+    println!("  energy        : {:.3} mJ", report.energy_joules * 1e3);
+    println!("  host wall     : {host:.2} s");
+
+    if let Some(path) = args.flag("csv") {
+        std::fs::write(path, writer::to_csv(&report))?;
+        println!("  wrote {path}");
+    }
+    if let Some(path) = args.flag("json") {
+        std::fs::write(path, writer::to_json(&report))?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    println!("== Fig 3a: exec time vs #tables (batch 256) ==");
+    let pts = figures::fig3a(figures::FIG3A_TABLES, 256)?;
+    for p in &pts {
+        println!(
+            "  tables {:3}: eonsim {:8.3} ms  tpuv6e {:8.3} ms  err {:4.1}%",
+            p.x,
+            p.eonsim_secs * 1e3,
+            p.tpuv6e_secs * 1e3,
+            p.err_pct()
+        );
+    }
+    println!("  avg err {:.2}% (paper: 2%)", figures::mean_err_pct(&pts));
+
+    println!("== Fig 3b: exec time vs batch size (60 tables) ==");
+    let batches: Vec<usize> = if args.has("full") {
+        figures::fig3b_full_sweep()
+    } else {
+        figures::FIG3B_BATCHES_SAMPLED.to_vec()
+    };
+    let pts = figures::fig3b(&batches, 60)?;
+    for p in &pts {
+        println!(
+            "  batch {:4}: eonsim {:8.3} ms  tpuv6e {:8.3} ms  err {:4.1}%",
+            p.x,
+            p.eonsim_secs * 1e3,
+            p.tpuv6e_secs * 1e3,
+            p.err_pct()
+        );
+    }
+    println!(
+        "  avg err {:.2}% / max {:.2}% (paper: 1.4% / 4%)",
+        figures::mean_err_pct(&pts),
+        figures::max_err_pct(&pts)
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let which = args.flag("fig").unwrap_or("all");
+    let full = args.has("full");
+    let all = which == "all";
+
+    if all || which == "3a" {
+        println!("== Fig 3a: exec time vs #tables ==");
+        for p in figures::fig3a(figures::FIG3A_TABLES, 256)? {
+            println!(
+                "  {:3} tables, eonsim {:.4} s, tpuv6e {:.4} s, err {:.2}%",
+                p.x, p.eonsim_secs, p.tpuv6e_secs, p.err_pct()
+            );
+        }
+    }
+    if all || which == "3b" {
+        println!("== Fig 3b: exec time vs batch size ==");
+        let batches: Vec<usize> = if full {
+            figures::fig3b_full_sweep()
+        } else {
+            figures::FIG3B_BATCHES_SAMPLED.to_vec()
+        };
+        let pts = figures::fig3b(&batches, 60)?;
+        for p in &pts {
+            println!(
+                "  batch {:4}, eonsim {:.4} s, tpuv6e {:.4} s, err {:.2}%",
+                p.x, p.eonsim_secs, p.tpuv6e_secs, p.err_pct()
+            );
+        }
+        println!(
+            "  avg {:.2}% max {:.2}%",
+            figures::mean_err_pct(&pts),
+            figures::max_err_pct(&pts)
+        );
+    }
+    if all || which == "3c" {
+        println!("== Fig 3c: memory access counts (normalized to TPUv6e) ==");
+        for p in figures::fig3c(figures::FIG3B_BATCHES_SAMPLED, 60)? {
+            println!(
+                "  batch {:4}: onchip {:.3} (err {:.2}%), offchip {:.3} (err {:.2}%)",
+                p.batch,
+                p.onchip_ratio_vs_tpu,
+                p.onchip_err_pct(),
+                p.offchip_ratio_vs_tpu,
+                p.offchip_err_pct()
+            );
+        }
+    }
+    if all || which == "4a" {
+        println!("== Fig 4a: cache hit/miss, EONSim vs ChampSim ==");
+        // smaller cache so the comparison exercises evictions
+        for c in figures::fig4a(8 << 20, 2, 64)? {
+            println!(
+                "  {:10} {:6}: eonsim {}/{}  champsim {}/{}  identical: {}",
+                c.dataset, c.policy, c.eonsim_hits, c.eonsim_misses,
+                c.champsim_hits, c.champsim_misses, c.identical()
+            );
+        }
+    }
+    if all || which == "4b" || which == "4c" {
+        println!("== Fig 4b/4c: on-chip policies across reuse datasets ==");
+        let (batch, nbatch) = if full { (256, 4) } else { (128, 2) };
+        for p in figures::fig4bc(batch, nbatch, 64 << 20)? {
+            println!(
+                "  {:10} {:10}: {:>14} cycles, speedup {:.2}x, onchip ratio {:.3}",
+                p.dataset, p.policy, p.cycles, p.speedup_vs_spm, p.onchip_ratio
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = args.flag("artifacts").unwrap_or("artifacts");
+    let n_requests = args.usize_flag("requests", 100)?;
+    println!("loading artifacts from {dir}/ ...");
+    let runtime = Runtime::load(dir)?;
+    println!("  variants: batch sizes {:?}", runtime.batch_sizes());
+    let executor = DlrmExecutor::new(&runtime, 0xD1_13)?;
+    let meta = runtime.models()[0].meta.clone();
+
+    // timing model scaled to the functional artifact's table size
+    let mut cfg = presets::tpuv6e_dlrm_small();
+    cfg.workload.embedding.num_tables = meta.num_tables;
+    cfg.workload.embedding.rows_per_table = meta.rows as u64;
+    cfg.workload.embedding.pool = meta.pool;
+
+    struct Exec<'a>(DlrmExecutor<'a>);
+    impl eonsim::coordinator::BatchExecutor for Exec<'_> {
+        fn batch_sizes(&self) -> Vec<usize> {
+            self.0.batch_sizes()
+        }
+        fn run(&self, dense: &[f32], indices: &[i32], n: usize) -> anyhow::Result<Vec<f32>> {
+            self.0.infer(dense, indices, n)
+        }
+    }
+
+    let mut coord = Coordinator::new(Exec(executor), EngineTiming::new(cfg));
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        let (dense, indices) = random_request(&meta, 1, 0xABC0 + i as u64);
+        coord.submit(dense, indices);
+        if coord.batch_ready() {
+            report_batch(&coord.serve_one()?);
+        }
+    }
+    report_batch(&coord.drain()?);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {} requests in {} batches, {:.1} req/s host throughput",
+        coord.served_requests(),
+        coord.served_batches(),
+        n_requests as f64 / wall
+    );
+    Ok(())
+}
+
+fn report_batch(responses: &[eonsim::coordinator::Response]) {
+    if let Some(r) = responses.first() {
+        println!(
+            "  batch of {:3}: pred[0] {:.4}, sim latency {:.3} ms, wall {:.2} ms",
+            responses.len(),
+            r.prediction,
+            r.sim_latency_secs * 1e3,
+            r.wall_latency_secs * 1e3
+        );
+    }
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let param = args
+        .flag("param")
+        .ok_or_else(|| anyhow::anyhow!("sweep requires --param"))?;
+    let values: Vec<f64> = args
+        .flag("values")
+        .ok_or_else(|| anyhow::anyhow!("sweep requires --values a,b,c"))?
+        .split(',')
+        .map(|v| v.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("bad value `{v}`: {e}")))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let base = build_config(args)?;
+    println!("{param},policy,exec_ms,cycles,onchip_ratio,hit_rate,energy_mj");
+    for &v in &values {
+        let mut cfg = base.clone();
+        match param {
+            "batch" => cfg.workload.batch_size = v as usize,
+            "tables" => cfg.workload.embedding.num_tables = v as usize,
+            "alpha" => cfg.workload.trace.alpha = v,
+            "onchip_mb" => cfg.hardware.mem.onchip_bytes = (v as u64) << 20,
+            "cores" => cfg.hardware.num_cores = v as usize,
+            other => anyhow::bail!("unknown sweep param `{other}`"),
+        }
+        cfg.validate()?;
+        let report = Simulator::new(cfg).run()?;
+        let m = report.total_mem();
+        println!(
+            "{v},{},{:.4},{},{:.4},{:.4},{:.4}",
+            report.policy,
+            report.exec_time_secs() * 1e3,
+            report.total_cycles(),
+            m.onchip_ratio(),
+            m.hit_rate(),
+            report.energy_joules * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace_gen(args: &Args) -> anyhow::Result<()> {
+    let out = args
+        .flag("out")
+        .ok_or_else(|| anyhow::anyhow!("trace-gen requires --out <file>"))?;
+    let len = args.usize_flag("len", 100_000)?;
+    let rows = args.usize_flag("rows", 1_000_000)? as u64;
+    let alpha = args.f64_flag("alpha", 0.9)?;
+    let seed = args.usize_flag("seed", 0x5EED)? as u64;
+    let sampler = trace::ZipfSampler::new(rows, alpha);
+    let mut rng = eonsim::testutil::SplitMix64::new(seed);
+    let indices: Vec<u64> = (0..len).map(|_| sampler.sample(&mut rng)).collect();
+    trace::io::write_index_trace(out, &indices)?;
+    println!("wrote {len} zipf(α={alpha}) indices over {rows} rows to {out}");
+    Ok(())
+}

@@ -1,0 +1,198 @@
+//! NPU memory controller: bounded in-flight window + FR-FCFS scheduling
+//! in front of the DRAM model (the structure the paper adopts from
+//! mNPUsim's controller + DRAMSim3 backend).
+//!
+//! FR-FCFS ("first-ready, first-come-first-served") prefers requests that
+//! hit an open row over older requests that would need an
+//! activate/precharge, which is exactly what makes skewed embedding
+//! streams faster than uniform ones off-chip.
+
+use crate::config::DramConfig;
+use crate::mem::dram::DramModel;
+
+/// One scheduled request's completion.
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub addr: u64,
+    pub done_at: u64,
+}
+
+/// One pending request with its address mapping precomputed at enqueue —
+/// the FR-FCFS scan must not re-derive (bank, row) per candidate per
+/// issue (that was the simulator's top bottleneck; EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    addr: u64,
+    arrival: u64,
+    bank: u32,
+    row: u64,
+}
+
+/// FR-FCFS memory controller with a bounded reorder window.
+///
+/// The window Vec is kept in age order (push_back; remove-at-index), so
+/// "oldest" is index 0 and the row-hit scan can early-exit at the first
+/// hit — with embedding vectors spanning 8 consecutive lines, the open
+/// row usually matches within the first few entries (§Perf iteration 3).
+pub struct MemController {
+    dram: DramModel,
+    window: Vec<Pending>,
+    window_cap: usize,
+    issued: u64,
+    last_done: u64,
+}
+
+impl MemController {
+    /// `bytes_per_cycle`: aggregate off-chip bandwidth in bytes per core
+    /// cycle (forwarded to [`DramModel`]).
+    pub fn new(cfg: &DramConfig, line_bytes: u64, bytes_per_cycle: f64, window_cap: usize) -> Self {
+        MemController {
+            dram: DramModel::new(cfg, line_bytes, bytes_per_cycle),
+            window: Vec::with_capacity(window_cap),
+            window_cap: window_cap.max(1),
+            issued: 0,
+            last_done: 0,
+        }
+    }
+
+    /// Enqueue a line read arriving at `arrival`. If the window is full,
+    /// the best candidate is issued first. Returns the completion of any
+    /// request this call had to retire to make space.
+    pub fn enqueue(&mut self, addr: u64, arrival: u64) -> Option<Completion> {
+        let mut retired = None;
+        if self.window.len() == self.window_cap {
+            retired = Some(self.issue_best());
+        }
+        let (_, bank, row) = self.dram.map(addr);
+        self.window.push(Pending { addr, arrival, bank: bank as u32, row });
+        retired
+    }
+
+    /// Issue everything still pending, in FR-FCFS order; returns the
+    /// completions in issue order.
+    pub fn drain(&mut self) -> Vec<Completion> {
+        let mut out = Vec::with_capacity(self.window.len());
+        while !self.window.is_empty() {
+            out.push(self.issue_best());
+        }
+        out
+    }
+
+    /// Pick the FR-FCFS winner: oldest row-hit if any, else oldest.
+    /// The window is age-ordered, so the scan early-exits at the first
+    /// row-hit and falls back to index 0 (the oldest) otherwise.
+    fn issue_best(&mut self) -> Completion {
+        debug_assert!(!self.window.is_empty());
+        let mut pick = 0usize;
+        for (i, p) in self.window.iter().enumerate() {
+            if self.dram.is_row_open(p.bank as usize, p.row) {
+                pick = i;
+                break;
+            }
+        }
+        // Vec::remove keeps age order; the memmove is cheap (window is
+        // a few hundred bytes, contiguous) — a VecDeque variant measured
+        // *slower* due to non-contiguous scan (EXPERIMENTS.md §Perf it.4)
+        let p = self.window.remove(pick);
+        let done_at = self.dram.access(p.addr, p.arrival);
+        self.issued += 1;
+        self.last_done = self.last_done.max(done_at);
+        Completion { addr: p.addr, done_at }
+    }
+
+    /// Cycle at which the last issued request completed.
+    pub fn last_done(&self) -> u64 {
+        self.last_done
+    }
+
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+
+    pub fn dram(&self) -> &DramModel {
+        &self.dram
+    }
+
+    pub fn pending(&self) -> usize {
+        self.window.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn ctrl(window: usize) -> MemController {
+        MemController::new(&presets::tpuv6e_hardware().mem.dram, 64, 1700.0, window)
+    }
+
+    #[test]
+    fn drain_completes_everything() {
+        let mut c = ctrl(8);
+        for i in 0..20u64 {
+            c.enqueue(i * 64, 0);
+        }
+        let mut done = c.issued();
+        done += c.drain().len() as u64;
+        assert_eq!(done, 20);
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn window_overflow_retires_oldest_class() {
+        let mut c = ctrl(2);
+        assert!(c.enqueue(0, 0).is_none());
+        assert!(c.enqueue(64, 0).is_none());
+        assert!(c.enqueue(128, 0).is_some(), "third enqueue spills one");
+    }
+
+    #[test]
+    fn fr_fcfs_prefers_row_hits() {
+        // Two requests to bank B (different rows) + one row-hit to the
+        // open row: the row-hit should complete earlier than FIFO order
+        // would allow.
+        let cfg = presets::tpuv6e_hardware().mem.dram;
+        let probe = DramModel::new(&cfg, 64, 1700.0);
+        let (_, bank0, row0) = probe.map(0);
+        // same bank different row
+        let mut conflict = None;
+        let mut samerow = None;
+        for i in 1..1_000_000u64 {
+            let a = i * 64;
+            let (_, b, r) = probe.map(a);
+            if b == bank0 && r != row0 && conflict.is_none() {
+                conflict = Some(a);
+            }
+            if b == bank0 && r == row0 && a != 0 && samerow.is_none() {
+                samerow = Some(a);
+            }
+            if conflict.is_some() && samerow.is_some() {
+                break;
+            }
+        }
+        let (conflict, samerow) = (conflict.unwrap(), samerow.unwrap());
+
+        let mut c = MemController::new(&cfg, 64, 1700.0, 8);
+        c.enqueue(0, 0); // opens row0
+        let first = c.drain(); // row0 now open
+        assert_eq!(first.len(), 1);
+        // enqueue conflict first, then row-hit; FR-FCFS issues row-hit first
+        c.enqueue(conflict, 0);
+        c.enqueue(samerow, 0);
+        let done = c.drain();
+        assert_eq!(done[0].addr, samerow, "row-hit bypasses older conflict");
+        assert_eq!(done[1].addr, conflict);
+    }
+
+    #[test]
+    fn last_done_monotone() {
+        let mut c = ctrl(4);
+        for i in 0..50u64 {
+            c.enqueue(i * 64 * 97, i);
+        }
+        c.drain();
+        assert!(c.last_done() > 0);
+        assert_eq!(c.issued(), 50);
+    }
+}

@@ -1,0 +1,19 @@
+//! Memory hierarchy: on-chip local buffer (SPM / cache / pinning),
+//! replacement policies, software prefetch, the FR-FCFS memory
+//! controller, and the DRAMSim3-lite off-chip model.
+//!
+//! The paper's central claim is that embedding performance is governed by
+//! this hierarchy — everything in this module exists so the engine can
+//! answer "which accesses stay on-chip, and what do the rest cost?"
+
+pub mod controller;
+pub mod dram;
+pub mod onchip;
+pub mod policy;
+pub mod prefetch;
+
+pub use controller::{Completion, MemController};
+pub use dram::DramModel;
+pub use onchip::{AccessOutcome, Cache};
+pub use policy::{PinSet, PolicyImpl, ReplacePolicy};
+pub use prefetch::SoftwarePrefetcher;

@@ -1,0 +1,278 @@
+//! On-chip local-buffer model: a set-associative cache with pluggable
+//! replacement (cache mode), plus the SPM and pinning access paths the
+//! engine composes around it.
+//!
+//! The cache operates at access-granularity lines. Geometry is derived
+//! from capacity / line size / associativity; tags are stored in a flat
+//! `sets x ways` array with `u64::MAX` as the invalid sentinel, and the
+//! replacement policy keeps its own parallel metadata (see
+//! [`crate::mem::policy`]).
+
+use crate::config::CachePolicyKind;
+use crate::mem::policy::{PolicyImpl, ReplacePolicy};
+
+/// Result of one cache access at line granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessOutcome {
+    Hit,
+    /// Miss; `evicted` is the replaced line address, if any.
+    Miss { evicted: Option<u64> },
+}
+
+impl AccessOutcome {
+    #[inline]
+    pub fn is_hit(self) -> bool {
+        matches!(self, AccessOutcome::Hit)
+    }
+}
+
+/// Set-associative cache over line addresses.
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    line_bytes: u64,
+    tags: Vec<u64>,
+    policy: PolicyImpl,
+    hits: u64,
+    misses: u64,
+}
+
+const INVALID: u64 = u64::MAX;
+
+impl Cache {
+    /// `capacity_bytes` / `line_bytes` / `assoc` must produce >= 1 set;
+    /// sets are rounded down to a power of two for cheap indexing.
+    pub fn new(
+        capacity_bytes: u64,
+        line_bytes: u64,
+        assoc: usize,
+        kind: CachePolicyKind,
+    ) -> Self {
+        assert!(line_bytes.is_power_of_two());
+        let lines = (capacity_bytes / line_bytes).max(1) as usize;
+        let sets_raw = (lines / assoc).max(1);
+        let sets = if sets_raw.is_power_of_two() {
+            sets_raw
+        } else {
+            sets_raw.next_power_of_two() / 2
+        };
+        Cache {
+            sets,
+            ways: assoc,
+            line_bytes,
+            tags: vec![INVALID; sets * assoc],
+            policy: PolicyImpl::new(kind, sets, assoc),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Access one line address: lookup, and on miss install (filling an
+    /// invalid way if present, else evicting the policy's victim).
+    pub fn access(&mut self, line_addr: u64) -> AccessOutcome {
+        let line = line_addr / self.line_bytes;
+        let set = (line as usize) & (self.sets - 1);
+        let base = set * self.ways;
+
+        for w in 0..self.ways {
+            if self.tags[base + w] == line {
+                self.hits += 1;
+                self.policy.on_hit(set, w);
+                return AccessOutcome::Hit;
+            }
+        }
+        self.misses += 1;
+
+        // prefer an invalid way
+        for w in 0..self.ways {
+            if self.tags[base + w] == INVALID {
+                self.tags[base + w] = line;
+                self.policy.on_fill(set, w);
+                return AccessOutcome::Miss { evicted: None };
+            }
+        }
+        let victim = self.policy.victim(set);
+        debug_assert!(victim < self.ways);
+        let evicted = self.tags[base + victim] * self.line_bytes;
+        self.tags[base + victim] = line;
+        self.policy.on_fill(set, victim);
+        AccessOutcome::Miss { evicted: Some(evicted) }
+    }
+
+    /// Lookup without state change (for invariant checks in tests).
+    pub fn probe(&self, line_addr: u64) -> bool {
+        let line = line_addr / self.line_bytes;
+        let set = (line as usize) & (self.sets - 1);
+        let base = set * self.ways;
+        (0..self.ways).any(|w| self.tags[base + w] == line)
+    }
+
+    /// Number of valid lines currently resident.
+    pub fn occupancy(&self) -> usize {
+        self.tags.iter().filter(|&&t| t != INVALID).count()
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{forall, SplitMix64};
+
+    fn small(kind: CachePolicyKind) -> Cache {
+        // 4 sets x 2 ways x 64 B lines = 512 B
+        Cache::new(512, 64, 2, kind)
+    }
+
+    #[test]
+    fn geometry() {
+        let c = small(CachePolicyKind::Lru);
+        assert_eq!(c.sets(), 4);
+        assert_eq!(c.ways(), 2);
+    }
+
+    #[test]
+    fn cold_miss_then_hit() {
+        let mut c = small(CachePolicyKind::Lru);
+        assert!(!c.access(0).is_hit());
+        assert!(c.access(0).is_hit());
+        assert!(c.access(63).is_hit(), "same line");
+        assert!(!c.access(64).is_hit(), "next line");
+        assert_eq!(c.hits(), 2);
+        assert_eq!(c.misses(), 2);
+    }
+
+    #[test]
+    fn eviction_reports_victim_address() {
+        let mut c = small(CachePolicyKind::Lru);
+        // set 0 holds lines 0, 4*64=256... set index = line % 4
+        c.access(0); // line 0 -> set 0
+        c.access(256); // line 4 -> set 0
+        let out = c.access(512); // line 8 -> set 0, evicts line 0 (LRU)
+        match out {
+            AccessOutcome::Miss { evicted: Some(addr) } => assert_eq!(addr, 0),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        assert!(!c.probe(0));
+        assert!(c.probe(256));
+    }
+
+    #[test]
+    fn occupancy_bounded_by_capacity() {
+        forall("occupancy bound", 8, |rng: &mut SplitMix64| {
+            let mut c = Cache::new(1024, 64, 4, CachePolicyKind::Srrip);
+            for _ in 0..2000 {
+                c.access(rng.next_below(1 << 20) & !63);
+            }
+            assert!(c.occupancy() <= 16); // 1024/64
+        });
+    }
+
+    #[test]
+    fn hits_plus_misses_equals_accesses() {
+        forall("h+m == n", 8, |rng: &mut SplitMix64| {
+            let mut c = Cache::new(2048, 64, 4, CachePolicyKind::Lru);
+            let n = 5000;
+            for _ in 0..n {
+                c.access(rng.next_below(1 << 16));
+            }
+            assert_eq!(c.hits() + c.misses(), n);
+        });
+    }
+
+    #[test]
+    fn working_set_within_capacity_never_misses_after_warmup() {
+        // fully-associative-equivalent check per set: touch 8 lines that
+        // all fit, loop them; after warmup every access hits (LRU).
+        let mut c = Cache::new(512, 64, 2, CachePolicyKind::Lru);
+        let lines: Vec<u64> = (0..8u64).map(|i| i * 64).collect();
+        for &a in &lines {
+            c.access(a);
+        }
+        c.reset_stats();
+        for _ in 0..10 {
+            for &a in &lines {
+                assert!(c.access(a).is_hit());
+            }
+        }
+    }
+
+    #[test]
+    fn lru_thrashes_cyclic_working_set() {
+        // cyclic working set one larger than a set's ways: LRU misses
+        // every access after the cold fills.
+        let line = 64u64;
+        let stride = 4 * line; // same set every time (4 sets)
+        let addrs: Vec<u64> = (0..3u64).map(|i| i * stride).collect(); // 3 > 2 ways
+        let mut c = small(CachePolicyKind::Lru);
+        for _ in 0..200 {
+            for &a in &addrs {
+                c.access(a);
+            }
+        }
+        assert_eq!(c.hits(), 0, "LRU must thrash a cyclic overflow set");
+    }
+
+    #[test]
+    fn srrip_retains_hot_line_under_scan_where_lru_thrashes() {
+        // Mixed traffic: one hot line re-referenced every round + a
+        // 2-line streaming scan into the same set. With 2 ways, LRU
+        // evicts the hot line each round; SRRIP keeps it at RRPV 0 and
+        // sacrifices scan lines instead (the Fig. 4b mechanism).
+        let line = 64u64;
+        let stride = 4 * line;
+        let hot = 0u64;
+        let run = |kind| {
+            let mut c = small(kind);
+            c.access(hot); // cold fill
+            c.access(hot); // first re-reference marks it hot (RRPV 0)
+            let mut scan = 1u64;
+            let mut hot_hits = 0u64;
+            for _ in 0..100 {
+                if c.access(hot).is_hit() {
+                    hot_hits += 1;
+                }
+                for _ in 0..2 {
+                    c.access(scan * stride);
+                    scan += 1;
+                }
+            }
+            hot_hits
+        };
+        let lru = run(CachePolicyKind::Lru);
+        let srrip = run(CachePolicyKind::Srrip);
+        assert!(lru <= 1, "LRU must lose the hot line to the scan, got {lru}");
+        assert!(srrip > 90, "SRRIP should retain the hot line, got {srrip}");
+    }
+
+    #[test]
+    fn non_pow2_set_count_rounds_down() {
+        // 3 ways, 960 B capacity -> 5 sets raw -> rounds to 4
+        let c = Cache::new(960, 64, 3, CachePolicyKind::Fifo);
+        assert_eq!(c.sets(), 4);
+    }
+}

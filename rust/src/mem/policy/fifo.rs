@@ -1,0 +1,60 @@
+//! FIFO replacement: evict in fill order, ignoring re-reference.
+
+use super::ReplacePolicy;
+
+pub struct Fifo {
+    ways: usize,
+    next: Vec<u32>, // per-set round-robin fill pointer
+}
+
+impl Fifo {
+    pub fn new(sets: usize, ways: usize) -> Self {
+        Fifo { ways, next: vec![0; sets] }
+    }
+}
+
+impl ReplacePolicy for Fifo {
+    #[inline]
+    fn on_hit(&mut self, _set: usize, _way: usize) {}
+
+    #[inline]
+    fn on_fill(&mut self, set: usize, way: usize) {
+        // advance only when the fill used our predicted slot (keeps the
+        // pointer honest under out-of-order fills from warmup)
+        if self.next[set] as usize == way {
+            self.next[set] = ((way + 1) % self.ways) as u32;
+        }
+    }
+
+    #[inline]
+    fn victim(&mut self, set: usize) -> usize {
+        self.next[set] as usize
+    }
+
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_eviction() {
+        let mut p = Fifo::new(1, 3);
+        for expect in [0, 1, 2, 0, 1] {
+            let v = p.victim(0);
+            assert_eq!(v, expect);
+            p.on_fill(0, v);
+        }
+    }
+
+    #[test]
+    fn hits_do_not_change_order() {
+        let mut p = Fifo::new(1, 2);
+        p.on_fill(0, 0);
+        p.on_hit(0, 0);
+        assert_eq!(p.victim(0), 1);
+    }
+}

@@ -1,0 +1,92 @@
+//! Least-recently-used replacement via per-way monotonic timestamps.
+
+use super::ReplacePolicy;
+
+/// Timestamp LRU: each (set, way) stores the global access counter at its
+/// last touch; the victim is the way with the smallest stamp. O(ways)
+/// victim search, O(1) hit/fill — the classic tag-store layout.
+pub struct Lru {
+    ways: usize,
+    stamps: Vec<u64>,
+    clock: u64,
+}
+
+impl Lru {
+    pub fn new(sets: usize, ways: usize) -> Self {
+        Lru { ways, stamps: vec![0; sets * ways], clock: 0 }
+    }
+
+    #[inline]
+    fn touch(&mut self, set: usize, way: usize) {
+        self.clock += 1;
+        self.stamps[set * self.ways + way] = self.clock;
+    }
+}
+
+impl ReplacePolicy for Lru {
+    #[inline]
+    fn on_hit(&mut self, set: usize, way: usize) {
+        self.touch(set, way);
+    }
+
+    #[inline]
+    fn on_fill(&mut self, set: usize, way: usize) {
+        self.touch(set, way);
+    }
+
+    #[inline]
+    fn victim(&mut self, set: usize) -> usize {
+        let base = set * self.ways;
+        let mut best = 0;
+        let mut best_stamp = u64::MAX;
+        for w in 0..self.ways {
+            let s = self.stamps[base + w];
+            if s < best_stamp {
+                best_stamp = s;
+                best = w;
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recent() {
+        let mut p = Lru::new(1, 4);
+        for w in 0..4 {
+            p.on_fill(0, w);
+        }
+        p.on_hit(0, 0); // 0 is now most recent; 1 is least
+        assert_eq!(p.victim(0), 1);
+    }
+
+    #[test]
+    fn hit_refreshes_recency() {
+        let mut p = Lru::new(1, 2);
+        p.on_fill(0, 0);
+        p.on_fill(0, 1);
+        p.on_hit(0, 0);
+        assert_eq!(p.victim(0), 1);
+        p.on_hit(0, 1);
+        assert_eq!(p.victim(0), 0);
+    }
+
+    #[test]
+    fn sets_are_independent() {
+        let mut p = Lru::new(2, 2);
+        p.on_fill(0, 0);
+        p.on_fill(0, 1);
+        p.on_fill(1, 1);
+        p.on_fill(1, 0);
+        assert_eq!(p.victim(0), 0);
+        assert_eq!(p.victim(1), 1);
+    }
+}

@@ -1,0 +1,126 @@
+//! Modular replacement policies for cache-mode on-chip memory
+//! (paper §III: "modularized on-chip memory management policies").
+//!
+//! Each policy owns its per-way metadata and answers three questions:
+//! what happens on a hit, what happens on a fill, and which way to evict.
+//! [`PolicyImpl`] gives static dispatch over the configured policy so the
+//! per-access hot path stays branch-predictable and allocation-free.
+
+pub mod fifo;
+pub mod lru;
+pub mod pinning;
+pub mod random;
+pub mod rrip;
+pub mod srrip;
+
+pub use fifo::Fifo;
+pub use lru::Lru;
+pub use pinning::PinSet;
+pub use random::RandomRepl;
+pub use rrip::{Brrip, Drrip};
+pub use srrip::Srrip;
+
+use crate::config::CachePolicyKind;
+
+/// Replacement-policy interface over a `sets x ways` tag geometry.
+pub trait ReplacePolicy {
+    /// A line in `(set, way)` was re-referenced.
+    fn on_hit(&mut self, set: usize, way: usize);
+    /// A new line was installed into `(set, way)`.
+    fn on_fill(&mut self, set: usize, way: usize);
+    /// Choose the victim way in `set`. Called only when all ways are valid.
+    fn victim(&mut self, set: usize) -> usize;
+    /// Policy name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Statically dispatched policy selection.
+pub enum PolicyImpl {
+    Lru(Lru),
+    Srrip(Srrip),
+    Brrip(Brrip),
+    Drrip(Drrip),
+    Fifo(Fifo),
+    Random(RandomRepl),
+}
+
+impl PolicyImpl {
+    pub fn new(kind: CachePolicyKind, sets: usize, ways: usize) -> Self {
+        match kind {
+            CachePolicyKind::Lru => PolicyImpl::Lru(Lru::new(sets, ways)),
+            CachePolicyKind::Srrip => PolicyImpl::Srrip(Srrip::new(sets, ways)),
+            CachePolicyKind::Brrip => PolicyImpl::Brrip(Brrip::new(sets, ways)),
+            CachePolicyKind::Drrip => PolicyImpl::Drrip(Drrip::new(sets, ways)),
+            CachePolicyKind::Fifo => PolicyImpl::Fifo(Fifo::new(sets, ways)),
+            CachePolicyKind::Random => PolicyImpl::Random(RandomRepl::new(sets, ways)),
+        }
+    }
+}
+
+impl ReplacePolicy for PolicyImpl {
+    #[inline]
+    fn on_hit(&mut self, set: usize, way: usize) {
+        match self {
+            PolicyImpl::Lru(p) => p.on_hit(set, way),
+            PolicyImpl::Srrip(p) => p.on_hit(set, way),
+            PolicyImpl::Brrip(p) => p.on_hit(set, way),
+            PolicyImpl::Drrip(p) => p.on_hit(set, way),
+            PolicyImpl::Fifo(p) => p.on_hit(set, way),
+            PolicyImpl::Random(p) => p.on_hit(set, way),
+        }
+    }
+
+    #[inline]
+    fn on_fill(&mut self, set: usize, way: usize) {
+        match self {
+            PolicyImpl::Lru(p) => p.on_fill(set, way),
+            PolicyImpl::Srrip(p) => p.on_fill(set, way),
+            PolicyImpl::Brrip(p) => p.on_fill(set, way),
+            PolicyImpl::Drrip(p) => p.on_fill(set, way),
+            PolicyImpl::Fifo(p) => p.on_fill(set, way),
+            PolicyImpl::Random(p) => p.on_fill(set, way),
+        }
+    }
+
+    #[inline]
+    fn victim(&mut self, set: usize) -> usize {
+        match self {
+            PolicyImpl::Lru(p) => p.victim(set),
+            PolicyImpl::Srrip(p) => p.victim(set),
+            PolicyImpl::Brrip(p) => p.victim(set),
+            PolicyImpl::Drrip(p) => p.victim(set),
+            PolicyImpl::Fifo(p) => p.victim(set),
+            PolicyImpl::Random(p) => p.victim(set),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            PolicyImpl::Lru(p) => p.name(),
+            PolicyImpl::Srrip(p) => p.name(),
+            PolicyImpl::Brrip(p) => p.name(),
+            PolicyImpl::Drrip(p) => p.name(),
+            PolicyImpl::Fifo(p) => p.name(),
+            PolicyImpl::Random(p) => p.name(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_impl_dispatch_names() {
+        for (kind, name) in [
+            (CachePolicyKind::Lru, "lru"),
+            (CachePolicyKind::Srrip, "srrip"),
+            (CachePolicyKind::Brrip, "brrip"),
+            (CachePolicyKind::Drrip, "drrip"),
+            (CachePolicyKind::Fifo, "fifo"),
+            (CachePolicyKind::Random, "random"),
+        ] {
+            assert_eq!(PolicyImpl::new(kind, 4, 4).name(), name);
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Profiling-based pinning (paper §IV, "Profiling"): track per-vector
+//! access frequency, pin the hottest vectors into on-chip memory up to
+//! capacity, and serve everything else from off-chip as the SPM path
+//! does. Mitigates thrashing under low-skew traffic where LRU/SRRIP
+//! degrade.
+
+use std::collections::{HashMap, HashSet};
+
+/// Frequency profile over `(table, row)` vector ids.
+#[derive(Debug, Default, Clone)]
+pub struct Profile {
+    counts: HashMap<(u32, u64), u64>,
+}
+
+impl Profile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one lookup of `(table, row)`.
+    #[inline]
+    pub fn record(&mut self, table: u32, row: u64) {
+        *self.counts.entry((table, row)).or_insert(0) += 1;
+    }
+
+    pub fn unique_vectors(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// The `k` hottest vectors, ties broken deterministically by id.
+    pub fn top_k(&self, k: usize) -> Vec<(u32, u64)> {
+        let mut entries: Vec<(&(u32, u64), &u64)> = self.counts.iter().collect();
+        entries.sort_unstable_by(|a, b| b.1.cmp(a.1).then(a.0.cmp(b.0)));
+        entries.into_iter().take(k).map(|(id, _)| *id).collect()
+    }
+}
+
+/// The pinned-vector set derived from a [`Profile`] and a capacity.
+#[derive(Debug, Clone)]
+pub struct PinSet {
+    pinned: HashSet<(u32, u64)>,
+    capacity_vectors: usize,
+}
+
+impl PinSet {
+    /// Pin the hottest vectors that fit: `capacity_bytes / vec_bytes`
+    /// slots (the paper pins whole vectors, not lines).
+    pub fn from_profile(profile: &Profile, capacity_bytes: u64, vec_bytes: u64) -> Self {
+        let capacity_vectors = (capacity_bytes / vec_bytes.max(1)) as usize;
+        let pinned = profile
+            .top_k(capacity_vectors)
+            .into_iter()
+            .collect::<HashSet<_>>();
+        PinSet { pinned, capacity_vectors }
+    }
+
+    /// Empty pin set (profiling disabled).
+    pub fn empty() -> Self {
+        PinSet { pinned: HashSet::new(), capacity_vectors: 0 }
+    }
+
+    #[inline]
+    pub fn is_pinned(&self, table: u32, row: u64) -> bool {
+        self.pinned.contains(&(table, row))
+    }
+
+    pub fn len(&self) -> usize {
+        self.pinned.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pinned.is_empty()
+    }
+
+    pub fn capacity_vectors(&self) -> usize {
+        self.capacity_vectors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile_with(counts: &[((u32, u64), u64)]) -> Profile {
+        let mut p = Profile::new();
+        for &((t, r), c) in counts {
+            for _ in 0..c {
+                p.record(t, r);
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn top_k_orders_by_frequency() {
+        let p = profile_with(&[((0, 1), 5), ((0, 2), 10), ((1, 3), 1)]);
+        assert_eq!(p.top_k(2), vec![(0, 2), (0, 1)]);
+    }
+
+    #[test]
+    fn top_k_ties_deterministic() {
+        let p = profile_with(&[((0, 5), 3), ((0, 1), 3), ((0, 9), 3)]);
+        assert_eq!(p.top_k(2), vec![(0, 1), (0, 5)]);
+    }
+
+    #[test]
+    fn pinset_respects_capacity() {
+        let p = profile_with(&[((0, 1), 5), ((0, 2), 4), ((0, 3), 3)]);
+        // room for exactly 2 vectors of 512 B
+        let pins = PinSet::from_profile(&p, 1024, 512);
+        assert_eq!(pins.len(), 2);
+        assert!(pins.is_pinned(0, 1));
+        assert!(pins.is_pinned(0, 2));
+        assert!(!pins.is_pinned(0, 3));
+    }
+
+    #[test]
+    fn pinset_smaller_than_capacity_when_few_vectors() {
+        let p = profile_with(&[((0, 1), 1)]);
+        let pins = PinSet::from_profile(&p, 1 << 20, 512);
+        assert_eq!(pins.len(), 1);
+        assert!(pins.capacity_vectors() > 1);
+    }
+
+    #[test]
+    fn empty_pinset() {
+        let pins = PinSet::empty();
+        assert!(pins.is_empty());
+        assert!(!pins.is_pinned(0, 0));
+    }
+}

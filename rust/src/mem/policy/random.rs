@@ -1,0 +1,49 @@
+//! Random replacement (deterministic PRNG — reproducible runs).
+
+use super::ReplacePolicy;
+use crate::testutil::SplitMix64;
+
+pub struct RandomRepl {
+    ways: usize,
+    rng: SplitMix64,
+}
+
+impl RandomRepl {
+    pub fn new(_sets: usize, ways: usize) -> Self {
+        RandomRepl { ways, rng: SplitMix64::new(0xBADC_0FFE) }
+    }
+}
+
+impl ReplacePolicy for RandomRepl {
+    #[inline]
+    fn on_hit(&mut self, _set: usize, _way: usize) {}
+
+    #[inline]
+    fn on_fill(&mut self, _set: usize, _way: usize) {}
+
+    #[inline]
+    fn victim(&mut self, _set: usize) -> usize {
+        self.rng.next_below(self.ways as u64) as usize
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn victims_in_range_and_varied() {
+        let mut p = RandomRepl::new(1, 8);
+        let mut seen = [false; 8];
+        for _ in 0..256 {
+            let v = p.victim(0);
+            assert!(v < 8);
+            seen[v] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 6);
+    }
+}

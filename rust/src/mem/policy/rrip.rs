@@ -1,0 +1,280 @@
+//! BRRIP and DRRIP — the rest of the RRIP family (Jaleel et al.,
+//! ISCA'10). The paper's config surface says "cache-based replacement
+//! policies (e.g., LRU, SRRIP)"; BRRIP/DRRIP are the canonical next
+//! steps and exercise the simulator's policy modularity.
+//!
+//! * **BRRIP** (Bimodal RRIP): inserts at distant RRPV (3) most of the
+//!   time and at long (2) with low probability — thrash-resistant for
+//!   cyclic working sets. The "probability" here is a deterministic
+//!   1-in-32 counter so simulations stay reproducible.
+//! * **DRRIP**: set-dueling between SRRIP and BRRIP. A few leader sets
+//!   run each policy unconditionally; a saturating counter (PSEL) tracks
+//!   which leader misses less, and follower sets adopt the winner.
+
+use super::ReplacePolicy;
+
+const MAX_RRPV: u8 = 3;
+const LONG_RRPV: u8 = 2;
+/// BRRIP inserts at LONG once per this many fills (deterministic).
+const BRRIP_EPSILON: u32 = 32;
+/// Leader sets per policy: every set with `set % 64 == 0` leads SRRIP,
+/// `set % 64 == 1` leads BRRIP (constituency-based dueling).
+const DUEL_MOD: usize = 64;
+/// 10-bit saturating PSEL, initialized mid-range.
+const PSEL_MAX: i32 = 1023;
+const PSEL_INIT: i32 = 512;
+
+/// Shared RRPV store + victim/aging logic (same as SRRIP's).
+struct Rrpv {
+    ways: usize,
+    rrpv: Vec<u8>,
+}
+
+impl Rrpv {
+    fn new(sets: usize, ways: usize) -> Self {
+        Rrpv { ways, rrpv: vec![MAX_RRPV; sets * ways] }
+    }
+
+    #[inline]
+    fn set(&mut self, set: usize, way: usize, v: u8) {
+        self.rrpv[set * self.ways + way] = v;
+    }
+
+    #[inline]
+    fn victim(&mut self, set: usize) -> usize {
+        let base = set * self.ways;
+        loop {
+            for w in 0..self.ways {
+                if self.rrpv[base + w] == MAX_RRPV {
+                    return w;
+                }
+            }
+            for w in 0..self.ways {
+                self.rrpv[base + w] += 1;
+            }
+        }
+    }
+}
+
+/// Bimodal RRIP.
+pub struct Brrip {
+    rrpv: Rrpv,
+    fill_count: u32,
+}
+
+impl Brrip {
+    pub fn new(sets: usize, ways: usize) -> Self {
+        Brrip { rrpv: Rrpv::new(sets, ways), fill_count: 0 }
+    }
+
+    /// Bimodal insertion value (deterministic 1/32 long insertions).
+    #[inline]
+    fn insert_rrpv(fill_count: &mut u32) -> u8 {
+        *fill_count = (*fill_count + 1) % BRRIP_EPSILON;
+        if *fill_count == 0 {
+            LONG_RRPV
+        } else {
+            MAX_RRPV
+        }
+    }
+}
+
+impl ReplacePolicy for Brrip {
+    #[inline]
+    fn on_hit(&mut self, set: usize, way: usize) {
+        self.rrpv.set(set, way, 0);
+    }
+
+    #[inline]
+    fn on_fill(&mut self, set: usize, way: usize) {
+        let v = Self::insert_rrpv(&mut self.fill_count);
+        self.rrpv.set(set, way, v);
+    }
+
+    #[inline]
+    fn victim(&mut self, set: usize) -> usize {
+        self.rrpv.victim(set)
+    }
+
+    fn name(&self) -> &'static str {
+        "brrip"
+    }
+}
+
+/// Dynamic RRIP with constituency set-dueling.
+pub struct Drrip {
+    rrpv: Rrpv,
+    brrip_fill_count: u32,
+    /// Saturating policy selector: high -> SRRIP misses more -> use BRRIP.
+    psel: i32,
+}
+
+#[derive(PartialEq)]
+enum SetRole {
+    SrripLeader,
+    BrripLeader,
+    Follower,
+}
+
+impl Drrip {
+    pub fn new(sets: usize, ways: usize) -> Self {
+        Drrip { rrpv: Rrpv::new(sets, ways), brrip_fill_count: 0, psel: PSEL_INIT }
+    }
+
+    fn role(set: usize) -> SetRole {
+        match set % DUEL_MOD {
+            0 => SetRole::SrripLeader,
+            1 => SetRole::BrripLeader,
+            _ => SetRole::Follower,
+        }
+    }
+
+    /// Followers use BRRIP when SRRIP's leaders miss more (psel high).
+    fn follower_uses_brrip(&self) -> bool {
+        self.psel > PSEL_INIT
+    }
+}
+
+impl ReplacePolicy for Drrip {
+    #[inline]
+    fn on_hit(&mut self, set: usize, way: usize) {
+        self.rrpv.set(set, way, 0);
+    }
+
+    #[inline]
+    fn on_fill(&mut self, set: usize, way: usize) {
+        // a fill IS a miss: leaders vote via PSEL
+        let use_brrip = match Self::role(set) {
+            SetRole::SrripLeader => {
+                self.psel = (self.psel + 1).min(PSEL_MAX);
+                false
+            }
+            SetRole::BrripLeader => {
+                self.psel = (self.psel - 1).max(0);
+                true
+            }
+            SetRole::Follower => self.follower_uses_brrip(),
+        };
+        let v = if use_brrip {
+            Brrip::insert_rrpv(&mut self.brrip_fill_count)
+        } else {
+            LONG_RRPV
+        };
+        self.rrpv.set(set, way, v);
+    }
+
+    #[inline]
+    fn victim(&mut self, set: usize) -> usize {
+        self.rrpv.victim(set)
+    }
+
+    fn name(&self) -> &'static str {
+        "drrip"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CachePolicyKind;
+    use crate::mem::Cache;
+    use crate::testutil::SplitMix64;
+    use crate::trace::ZipfSampler;
+
+    #[test]
+    fn brrip_inserts_mostly_distant() {
+        let mut p = Brrip::new(1, 4);
+        let mut distant = 0;
+        for i in 0..BRRIP_EPSILON as usize {
+            p.on_fill(0, i % 4);
+            if p.rrpv.rrpv[i % 4] == MAX_RRPV {
+                distant += 1;
+            }
+        }
+        assert_eq!(distant, BRRIP_EPSILON as usize - 1, "exactly one long insertion");
+    }
+
+    #[test]
+    fn brrip_hit_promotes() {
+        let mut p = Brrip::new(1, 2);
+        p.on_fill(0, 0);
+        p.on_hit(0, 0);
+        assert_eq!(p.rrpv.rrpv[0], 0);
+    }
+
+    #[test]
+    fn drrip_psel_moves_with_leader_misses() {
+        let mut p = Drrip::new(DUEL_MOD * 2, 4);
+        let start = p.psel;
+        p.on_fill(0, 0); // SRRIP leader miss
+        assert_eq!(p.psel, start + 1);
+        p.on_fill(1, 0); // BRRIP leader miss
+        p.on_fill(1, 1);
+        assert_eq!(p.psel, start - 1);
+    }
+
+    #[test]
+    fn drrip_followers_adopt_winner() {
+        let mut p = Drrip::new(DUEL_MOD * 2, 4);
+        // hammer the SRRIP leader with misses -> psel rises -> followers BRRIP
+        for i in 0..100 {
+            p.on_fill(0, i % 4);
+        }
+        assert!(p.follower_uses_brrip());
+        // follower fill should now use bimodal (mostly MAX) insertion
+        let mut distant = 0;
+        for i in 0..16 {
+            p.on_fill(2, i % 4);
+            if p.rrpv.rrpv[2 * 4 + i % 4] == MAX_RRPV {
+                distant += 1;
+            }
+        }
+        assert!(distant >= 14, "follower should insert distant, got {distant}");
+    }
+
+    #[test]
+    fn brrip_resists_thrash_where_srrip_does_not() {
+        // cyclic working set 3x a 2-way set: SRRIP thrashes (insert-at-2
+        // ages out), BRRIP's distant insertion keeps a subset resident.
+        let stride = 4 * 64u64;
+        let addrs: Vec<u64> = (0..3u64).map(|i| i * stride).collect();
+        let run = |kind| {
+            let mut c = Cache::new(512, 64, 2, kind);
+            for _ in 0..300 {
+                for &a in &addrs {
+                    c.access(a);
+                }
+            }
+            c.hits()
+        };
+        let srrip = run(CachePolicyKind::Srrip);
+        let brrip = run(CachePolicyKind::Brrip);
+        assert_eq!(srrip, 0, "SRRIP thrashes the cyclic set");
+        assert!(brrip > 100, "BRRIP retains lines, got {brrip}");
+    }
+
+    #[test]
+    fn drrip_tracks_better_policy_on_mixed_traffic() {
+        // skewed reuse traffic: all three RRIP variants complete and
+        // DRRIP lands within the SRRIP/BRRIP envelope (±15 % slack for
+        // dueling overhead on leaders).
+        let z = ZipfSampler::new(1 << 14, 1.1);
+        let run = |kind| {
+            let mut c = Cache::new(64 << 10, 64, 16, kind);
+            let mut rng = SplitMix64::new(11);
+            for _ in 0..200_000 {
+                c.access(z.sample(&mut rng) * 64);
+            }
+            c.hits()
+        };
+        let srrip = run(CachePolicyKind::Srrip);
+        let brrip = run(CachePolicyKind::Brrip);
+        let drrip = run(CachePolicyKind::Drrip);
+        let lo = srrip.min(brrip);
+        let hi = srrip.max(brrip);
+        assert!(
+            drrip as f64 >= lo as f64 * 0.85 && drrip as f64 <= hi as f64 * 1.15,
+            "drrip {drrip} outside [{lo}, {hi}] envelope"
+        );
+    }
+}

@@ -1,0 +1,143 @@
+//! DLRM functional executor: stages model parameters on-device once,
+//! then serves batched inference requests through the compiled HLO.
+//!
+//! Parameter order mirrors `python/compile/model.py::DlrmConfig
+//! ::param_shapes` exactly: tables, (bw_i, bb_i)*, (tw_i, tb_i)*, dense,
+//! indices — the cross-language ABI of this project.
+
+use super::{LoadedModel, Runtime, VariantMeta};
+use crate::testutil::SplitMix64;
+
+/// One staged model variant: device-resident parameters + executable.
+pub struct DlrmExecutor<'rt> {
+    runtime: &'rt Runtime,
+    /// (variant meta, staged weight buffers) per batch variant,
+    /// batch-ascending.
+    staged: Vec<StagedVariant<'rt>>,
+}
+
+struct StagedVariant<'rt> {
+    model: &'rt LoadedModel,
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+/// Deterministic pseudo-random model weights (seed-reproducible; the
+/// simulator validates performance, not accuracy, so weights only need
+/// to be fixed and well-conditioned).
+pub fn random_weights(meta: &VariantMeta, seed: u64) -> Vec<(Vec<f32>, Vec<usize>)> {
+    let mut rng = SplitMix64::new(seed);
+    meta.params
+        .iter()
+        .filter(|p| p.dtype == "f32" && p.name != "dense")
+        .map(|p| {
+            let data: Vec<f32> = (0..p.elems())
+                .map(|_| (rng.next_f64() as f32 - 0.5) * 0.1)
+                .collect();
+            (data, p.shape.clone())
+        })
+        .collect()
+}
+
+impl<'rt> DlrmExecutor<'rt> {
+    /// Stage every variant's parameters on device. All variants share
+    /// the same logical weights (same seed) so predictions agree across
+    /// batch sizes.
+    pub fn new(runtime: &'rt Runtime, seed: u64) -> anyhow::Result<Self> {
+        let mut staged = Vec::new();
+        for model in runtime.models() {
+            let weights = random_weights(&model.meta, seed)
+                .into_iter()
+                .map(|(data, shape)| runtime.upload_f32(&data, &shape))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            staged.push(StagedVariant { model, weights });
+        }
+        Ok(DlrmExecutor { runtime, staged })
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.staged.iter().map(|s| s.model.meta.batch).collect()
+    }
+
+    /// Smallest staged variant with batch >= n (else the largest).
+    fn pick(&self, n: usize) -> &StagedVariant<'rt> {
+        self.staged
+            .iter()
+            .find(|s| s.model.meta.batch >= n)
+            .unwrap_or_else(|| self.staged.last().expect("no variants"))
+    }
+
+    /// Run one batch: `dense` is `(n, dense_in)` row-major, `indices` is
+    /// `(n, num_tables, pool)`. `n` may be smaller than the variant batch
+    /// — inputs are padded and outputs truncated.
+    pub fn infer(&self, dense: &[f32], indices: &[i32], n: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(n > 0, "empty batch");
+        let sv = self.pick(n);
+        let meta = &sv.model.meta;
+        anyhow::ensure!(
+            dense.len() == n * meta.dense_in,
+            "dense len {} != {} * {}",
+            dense.len(),
+            n,
+            meta.dense_in
+        );
+        let idx_per_sample = meta.num_tables * meta.pool;
+        anyhow::ensure!(
+            indices.len() == n * idx_per_sample,
+            "indices len {} != {} * {}",
+            indices.len(),
+            n,
+            idx_per_sample
+        );
+        for &i in indices {
+            anyhow::ensure!(
+                (0..meta.rows as i32).contains(&i),
+                "index {i} out of range (rows = {})",
+                meta.rows
+            );
+        }
+
+        let b = meta.batch;
+        // pad to the variant batch with replicated last sample
+        let mut dense_p = dense.to_vec();
+        let mut idx_p = indices.to_vec();
+        for _ in n..b {
+            dense_p.extend_from_slice(&dense[(n - 1) * meta.dense_in..n * meta.dense_in]);
+            idx_p.extend_from_slice(&indices[(n - 1) * idx_per_sample..n * idx_per_sample]);
+        }
+
+        let dense_buf = self.runtime.upload_f32(&dense_p, &[b, meta.dense_in])?;
+        let idx_buf = self
+            .runtime
+            .upload_i32(&idx_p, &[b, meta.num_tables, meta.pool])?;
+
+        // parameter order: weights..., dense, indices
+        let mut args: Vec<&xla::PjRtBuffer> = sv.weights.iter().collect();
+        args.push(&dense_buf);
+        args.push(&idx_buf);
+        // execute_b wants owned-borrowable values; clone the borrow list
+        let out = sv.model.execute_buffers_ref(&args)?;
+        Ok(out[..n].to_vec())
+    }
+}
+
+impl LoadedModel {
+    /// Borrowed-args variant of [`LoadedModel::execute_buffers`]
+    /// (child module of `runtime`, so the private `exe` is reachable).
+    pub fn execute_buffers_ref(&self, args: &[&xla::PjRtBuffer]) -> anyhow::Result<Vec<f32>> {
+        let result = self.exe.execute_b(args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Deterministic request inputs for examples/tests.
+pub fn random_request(meta: &VariantMeta, n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = SplitMix64::new(seed);
+    let dense: Vec<f32> = (0..n * meta.dense_in)
+        .map(|_| rng.next_f64() as f32)
+        .collect();
+    let indices: Vec<i32> = (0..n * meta.num_tables * meta.pool)
+        .map(|_| rng.next_below(meta.rows as u64) as i32)
+        .collect();
+    (dense, indices)
+}

@@ -1,0 +1,223 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the request path —
+//! Python is never involved at run time.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! `python/compile/aot.py`).
+//!
+//! Model parameters (embedding tables + MLP weights) are uploaded to
+//! device buffers **once** and reused for every request; per-request
+//! uploads are just the dense features + indices.
+
+pub mod dlrm;
+pub mod json;
+
+use json::Json;
+use std::path::{Path, PathBuf};
+
+/// Parameter metadata from `meta.json` (one HLO parameter).
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ParamMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled model variant (fixed batch size).
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    pub file: String,
+    pub batch: usize,
+    pub num_tables: usize,
+    pub rows: usize,
+    pub dim: usize,
+    pub pool: usize,
+    pub dense_in: usize,
+    pub params: Vec<ParamMeta>,
+}
+
+fn parse_variant(v: &Json) -> anyhow::Result<VariantMeta> {
+    let field = |k: &str| -> anyhow::Result<usize> {
+        v.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("meta.json: missing/invalid `{k}`"))
+    };
+    let params = v
+        .get("params")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("meta.json: missing `params`"))?
+        .iter()
+        .map(|p| -> anyhow::Result<ParamMeta> {
+            Ok(ParamMeta {
+                name: p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("param missing name"))?
+                    .to_string(),
+                shape: p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("param missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: p
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("f32")
+                    .to_string(),
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(VariantMeta {
+        file: v
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("meta.json: missing `file`"))?
+            .to_string(),
+        batch: field("batch")?,
+        num_tables: field("num_tables")?,
+        rows: field("rows")?,
+        dim: field("dim")?,
+        pool: field("pool")?,
+        dense_in: field("dense_in")?,
+        params,
+    })
+}
+
+/// All artifact metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub variants: Vec<VariantMeta>,
+    pub pallas: Option<VariantMeta>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<ArtifactMeta> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text)?;
+        let variants = j
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("meta.json: missing `variants`"))?
+            .iter()
+            .map(parse_variant)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let pallas = match j.get("pallas") {
+            Some(Json::Null) | None => None,
+            Some(v) => Some(parse_variant(v)?),
+        };
+        anyhow::ensure!(!variants.is_empty(), "meta.json: no variants");
+        Ok(ArtifactMeta { variants, pallas, dir })
+    }
+}
+
+/// A compiled executable + its metadata.
+pub struct LoadedModel {
+    pub meta: VariantMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute with pre-staged device buffers (parameters) — the hot
+    /// path. Output is the model's `(batch, 1)` prediction vector.
+    pub fn execute_buffers(&self, args: &[xla::PjRtBuffer]) -> anyhow::Result<Vec<f32>> {
+        let result = self.exe.execute_b(args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The PJRT runtime: a CPU client + the compiled model variants.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    models: Vec<LoadedModel>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and compile every artifact variant.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let meta = ArtifactMeta::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut models = Vec::new();
+        for v in &meta.variants {
+            let proto = xla::HloModuleProto::from_text_file(meta.dir.join(&v.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            models.push(LoadedModel { meta: v.clone(), exe });
+        }
+        // batch-ascending order for the batcher's variant selection
+        models.sort_by_key(|m| m.meta.batch);
+        Ok(Runtime { client, models })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn models(&self) -> &[LoadedModel] {
+        &self.models
+    }
+
+    /// Available batch sizes, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.models.iter().map(|m| m.meta.batch).collect()
+    }
+
+    /// The smallest variant whose batch >= `n`, else the largest.
+    pub fn pick_variant(&self, n: usize) -> &LoadedModel {
+        self.models
+            .iter()
+            .find(|m| m.meta.batch >= n)
+            .unwrap_or_else(|| self.models.last().expect("no models"))
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_meta_json_fixture() {
+        let doc = r#"{"variants":[
+            {"file":"dlrm_b8.hlo.txt","batch":8,"num_tables":4,"rows":64,
+             "dim":32,"pool":8,"dense_in":16,
+             "params":[{"name":"tables","shape":[4,64,32],"dtype":"f32"},
+                        {"name":"indices","shape":[8,4,8],"dtype":"i32"}]}],
+            "pallas":null}"#;
+        let v = parse_variant(&Json::parse(doc).unwrap().get("variants").unwrap().as_arr().unwrap()[0]).unwrap();
+        assert_eq!(v.batch, 8);
+        assert_eq!(v.params.len(), 2);
+        assert_eq!(v.params[0].elems(), 4 * 64 * 32);
+        assert_eq!(v.params[1].dtype, "i32");
+    }
+
+    #[test]
+    fn missing_fields_are_reported() {
+        let doc = r#"{"file":"x","batch":1}"#;
+        let err = parse_variant(&Json::parse(doc).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("params"));
+    }
+}

@@ -1,0 +1,231 @@
+//! Simulation metrics: per-batch and overall results (paper §III,
+//! "Simulation output": execution time, the on-chip and off-chip memory
+//! access ratio, and operation counts per memory and vector operation),
+//! plus CSV/JSON writers (no serde in the offline vendor set — both
+//! formats are emitted directly).
+
+pub mod writer;
+
+/// Memory-operation counters, split on-/off-chip (line granularity).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemCounts {
+    /// On-chip (local buffer) reads.
+    pub onchip_reads: u64,
+    /// On-chip writes (fills/stages).
+    pub onchip_writes: u64,
+    /// Off-chip (HBM) reads.
+    pub offchip_reads: u64,
+    /// Off-chip writes.
+    pub offchip_writes: u64,
+    /// Local cache hits (cache/pinning modes; 0 under pure SPM).
+    pub hits: u64,
+    /// Local cache misses.
+    pub misses: u64,
+    /// Shared global-buffer hits (hierarchy depth 2 only).
+    pub global_hits: u64,
+}
+
+impl MemCounts {
+    pub fn onchip_total(&self) -> u64 {
+        self.onchip_reads + self.onchip_writes
+    }
+
+    pub fn offchip_total(&self) -> u64 {
+        self.offchip_reads + self.offchip_writes
+    }
+
+    /// Fraction of all accesses served on-chip (the Fig. 4c metric).
+    pub fn onchip_ratio(&self) -> f64 {
+        let total = self.onchip_total() + self.offchip_total();
+        if total == 0 {
+            0.0
+        } else {
+            self.onchip_total() as f64 / total as f64
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn add(&mut self, other: &MemCounts) {
+        self.onchip_reads += other.onchip_reads;
+        self.onchip_writes += other.onchip_writes;
+        self.offchip_reads += other.offchip_reads;
+        self.offchip_writes += other.offchip_writes;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.global_hits += other.global_hits;
+    }
+}
+
+/// Vector/matrix operation counters (feed the energy model).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    /// Systolic-array multiply-accumulates.
+    pub macs: u64,
+    /// VPU lane-operations (elementwise adds etc.).
+    pub vpu_ops: u64,
+    /// Embedding vector lookups issued.
+    pub lookups: u64,
+}
+
+impl OpCounts {
+    pub fn add(&mut self, other: &OpCounts) {
+        self.macs += other.macs;
+        self.vpu_ops += other.vpu_ops;
+        self.lookups += other.lookups;
+    }
+}
+
+/// Per-stage cycle breakdown of one simulated batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CycleBreakdown {
+    /// Bottom-MLP (matrix analytical model).
+    pub bottom_mlp: u64,
+    /// Embedding gather + pooling (cycle-level memory sim + VPU).
+    pub embedding: u64,
+    /// Feature interaction (VPU).
+    pub interaction: u64,
+    /// Top-MLP.
+    pub top_mlp: u64,
+}
+
+impl CycleBreakdown {
+    pub fn total(&self) -> u64 {
+        self.bottom_mlp + self.embedding + self.interaction + self.top_mlp
+    }
+}
+
+/// Result of one simulated batch.
+#[derive(Debug, Clone, Default)]
+pub struct BatchResult {
+    pub batch_index: usize,
+    pub cycles: CycleBreakdown,
+    pub mem: MemCounts,
+    pub ops: OpCounts,
+}
+
+/// Overall simulation output: per-batch results + aggregates.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    pub platform: String,
+    pub policy: String,
+    pub batch_size: usize,
+    pub freq_ghz: f64,
+    pub per_batch: Vec<BatchResult>,
+    /// Total energy estimate in joules (filled by the energy model).
+    pub energy_joules: f64,
+}
+
+impl SimReport {
+    pub fn total_cycles(&self) -> u64 {
+        self.per_batch.iter().map(|b| b.cycles.total()).sum()
+    }
+
+    pub fn total_mem(&self) -> MemCounts {
+        let mut m = MemCounts::default();
+        for b in &self.per_batch {
+            m.add(&b.mem);
+        }
+        m
+    }
+
+    pub fn total_ops(&self) -> OpCounts {
+        let mut o = OpCounts::default();
+        for b in &self.per_batch {
+            o.add(&b.ops);
+        }
+        o
+    }
+
+    /// Total simulated execution time in seconds.
+    pub fn exec_time_secs(&self) -> f64 {
+        self.total_cycles() as f64 / (self.freq_ghz * 1e9)
+    }
+
+    /// Mean per-batch simulated latency in seconds.
+    pub fn mean_batch_secs(&self) -> f64 {
+        if self.per_batch.is_empty() {
+            0.0
+        } else {
+            self.exec_time_secs() / self.per_batch.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(i: usize, emb: u64, hits: u64, misses: u64) -> BatchResult {
+        BatchResult {
+            batch_index: i,
+            cycles: CycleBreakdown { bottom_mlp: 10, embedding: emb, interaction: 5, top_mlp: 7 },
+            mem: MemCounts {
+                onchip_reads: hits,
+                onchip_writes: misses,
+                offchip_reads: misses,
+                offchip_writes: 0,
+                hits,
+                misses,
+                global_hits: 0,
+            },
+            ops: OpCounts { macs: 100, vpu_ops: 50, lookups: 20 },
+        }
+    }
+
+    #[test]
+    fn breakdown_total() {
+        let b = batch(0, 100, 5, 5);
+        assert_eq!(b.cycles.total(), 122);
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let report = SimReport {
+            platform: "t".into(),
+            policy: "lru".into(),
+            batch_size: 4,
+            freq_ghz: 1.0,
+            per_batch: vec![batch(0, 100, 8, 2), batch(1, 200, 6, 4)],
+            energy_joules: 0.0,
+        };
+        assert_eq!(report.total_cycles(), 122 + 222);
+        let m = report.total_mem();
+        assert_eq!(m.hits, 14);
+        assert_eq!(m.misses, 6);
+        assert_eq!(report.total_ops().macs, 200);
+        // 344 cycles at 1 GHz
+        assert!((report.exec_time_secs() - 344e-9).abs() < 1e-15);
+        assert!((report.mean_batch_secs() - 172e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn ratios() {
+        let m = MemCounts {
+            onchip_reads: 6,
+            onchip_writes: 2,
+            offchip_reads: 2,
+            offchip_writes: 0,
+            hits: 6,
+            misses: 2,
+            global_hits: 0,
+        };
+        assert!((m.onchip_ratio() - 0.8).abs() < 1e-12);
+        assert!((m.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_ratios_are_zero() {
+        let m = MemCounts::default();
+        assert_eq!(m.onchip_ratio(), 0.0);
+        assert_eq!(m.hit_rate(), 0.0);
+        assert_eq!(SimReport::default().mean_batch_secs(), 0.0);
+    }
+}

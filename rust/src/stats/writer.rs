@@ -1,0 +1,136 @@
+//! CSV and JSON emitters for [`SimReport`] (hand-rolled; no serde in the
+//! offline vendor set). JSON output is consumed by plotting scripts and
+//! by downstream tooling; CSV matches one row per batch.
+
+use super::{BatchResult, SimReport};
+use std::fmt::Write as _;
+
+/// One row per batch: index, per-stage cycles, memory counters.
+pub fn to_csv(report: &SimReport) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "batch,bottom_mlp_cycles,embedding_cycles,interaction_cycles,top_mlp_cycles,\
+         total_cycles,onchip_reads,onchip_writes,offchip_reads,offchip_writes,hits,misses,global_hits\n",
+    );
+    for b in &report.per_batch {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            b.batch_index,
+            b.cycles.bottom_mlp,
+            b.cycles.embedding,
+            b.cycles.interaction,
+            b.cycles.top_mlp,
+            b.cycles.total(),
+            b.mem.onchip_reads,
+            b.mem.onchip_writes,
+            b.mem.offchip_reads,
+            b.mem.offchip_writes,
+            b.mem.hits,
+            b.mem.misses,
+            b.mem.global_hits,
+        );
+    }
+    out
+}
+
+fn batch_json(b: &BatchResult) -> String {
+    format!(
+        concat!(
+            "{{\"batch\":{},\"cycles\":{{\"bottom_mlp\":{},\"embedding\":{},",
+            "\"interaction\":{},\"top_mlp\":{},\"total\":{}}},",
+            "\"mem\":{{\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
+            "\"offchip_writes\":{},\"hits\":{},\"misses\":{},\"global_hits\":{}}},",
+            "\"ops\":{{\"macs\":{},\"vpu_ops\":{},\"lookups\":{}}}}}"
+        ),
+        b.batch_index,
+        b.cycles.bottom_mlp,
+        b.cycles.embedding,
+        b.cycles.interaction,
+        b.cycles.top_mlp,
+        b.cycles.total(),
+        b.mem.onchip_reads,
+        b.mem.onchip_writes,
+        b.mem.offchip_reads,
+        b.mem.offchip_writes,
+        b.mem.hits,
+        b.mem.misses,
+        b.mem.global_hits,
+        b.ops.macs,
+        b.ops.vpu_ops,
+        b.ops.lookups,
+    )
+}
+
+/// Full report as a JSON object (overall metrics + per-batch array).
+pub fn to_json(report: &SimReport) -> String {
+    let m = report.total_mem();
+    let batches: Vec<String> = report.per_batch.iter().map(batch_json).collect();
+    format!(
+        concat!(
+            "{{\"platform\":\"{}\",\"policy\":\"{}\",\"batch_size\":{},",
+            "\"freq_ghz\":{},\"total_cycles\":{},\"exec_time_secs\":{:e},",
+            "\"onchip_ratio\":{:.6},\"hit_rate\":{:.6},\"energy_joules\":{:e},",
+            "\"per_batch\":[{}]}}"
+        ),
+        report.platform,
+        report.policy,
+        report.batch_size,
+        report.freq_ghz,
+        report.total_cycles(),
+        report.exec_time_secs(),
+        m.onchip_ratio(),
+        m.hit_rate(),
+        report.energy_joules,
+        batches.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{CycleBreakdown, MemCounts, OpCounts};
+
+    fn report() -> SimReport {
+        SimReport {
+            platform: "tpuv6e".into(),
+            policy: "lru".into(),
+            batch_size: 32,
+            freq_ghz: 1.0,
+            per_batch: vec![BatchResult {
+                batch_index: 0,
+                cycles: CycleBreakdown { bottom_mlp: 1, embedding: 2, interaction: 3, top_mlp: 4 },
+                mem: MemCounts {
+                    onchip_reads: 5,
+                    onchip_writes: 6,
+                    offchip_reads: 7,
+                    offchip_writes: 0,
+                    hits: 5,
+                    misses: 7,
+                    global_hits: 0,
+                },
+                ops: OpCounts { macs: 8, vpu_ops: 9, lookups: 10 },
+            }],
+            energy_joules: 1.5e-3,
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = to_csv(&report());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("batch,"));
+        assert!(lines[1].starts_with("0,1,2,3,4,10,"));
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let json = to_json(&report());
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(json.contains("\"platform\":\"tpuv6e\""));
+        assert!(json.contains("\"total_cycles\":10"));
+        assert!(json.contains("\"per_batch\":[{"));
+    }
+}

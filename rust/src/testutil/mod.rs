@@ -1,0 +1,169 @@
+//! Test support: a deterministic PRNG and a minimal property-testing
+//! harness (the offline vendor set has no `rand`/`proptest`; DESIGN.md §6).
+//!
+//! The PRNG is also used by the simulator itself (trace generation,
+//! measurement jitter) so *all* simulation runs are reproducible from a
+//! seed.
+
+/// SplitMix64 — tiny, high-quality 64-bit PRNG (public-domain algorithm).
+///
+/// Deterministic across platforms; every stochastic component in the
+/// simulator derives its stream from one of these, seeded explicitly.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift reduction.
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive), `lo <= hi`.
+    #[inline]
+    pub fn next_range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next_below(hi - lo + 1)
+    }
+
+    /// Fork an independent stream (for per-table / per-component RNGs).
+    pub fn fork(&mut self, tag: u64) -> SplitMix64 {
+        SplitMix64::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+}
+
+/// Minimal `forall`-style property harness.
+///
+/// Runs `cases` random trials; on failure, reports the failing seed so the
+/// case can be replayed deterministically. No shrinking — failures carry
+/// the generating seed instead, which is enough to reproduce and debug.
+pub fn forall<F: FnMut(&mut SplitMix64)>(name: &str, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xE0_5EEDu64 ^ (case as u64).wrapping_mul(0x2545_F491_4F6C_DD1D);
+        let mut rng = SplitMix64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(err) = result {
+            panic!(
+                "property `{name}` failed at case {case} (replay seed: {seed:#x}): {:?}",
+                err.downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| err.downcast_ref::<&str>().copied())
+                    .unwrap_or("panic")
+            );
+        }
+    }
+}
+
+/// Assert two floats agree within relative tolerance.
+#[track_caller]
+pub fn assert_close(got: f64, want: f64, rtol: f64) {
+    let denom = want.abs().max(1e-12);
+    let rel = (got - want).abs() / denom;
+    assert!(
+        rel <= rtol,
+        "assert_close failed: got {got}, want {want} (rel err {rel:.3e} > rtol {rtol:.1e})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..10_000 {
+            assert!(rng.next_below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_is_roughly_uniform() {
+        let mut rng = SplitMix64::new(3);
+        let mut counts = [0usize; 8];
+        let n = 80_000;
+        for _ in 0..n {
+            counts[rng.next_below(8) as usize] += 1;
+        }
+        for &c in &counts {
+            // each bucket within 10% of expectation
+            assert!((c as f64 - 10_000.0).abs() < 1_000.0, "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn forks_are_independent() {
+        let mut root = SplitMix64::new(9);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 16, |rng| {
+            let x = rng.next_below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `failing`")]
+    fn forall_reports_failures() {
+        forall("failing", 4, |rng| {
+            assert!(rng.next_below(2) > 5, "always false");
+        });
+    }
+
+    #[test]
+    fn assert_close_accepts_within_tolerance() {
+        assert_close(100.0, 100.9, 0.01);
+    }
+
+    #[test]
+    #[should_panic(expected = "assert_close failed")]
+    fn assert_close_rejects_outside_tolerance() {
+        assert_close(100.0, 120.0, 0.01);
+    }
+}

@@ -1,0 +1,207 @@
+//! TPUv6e "measured" baseline — the ground truth EONSim validates against
+//! (DESIGN.md §3 substitution for the paper's real-hardware runs).
+//!
+//! This is an **independent, structurally different** model of the same
+//! microarchitecture, sharing no code with [`crate::engine`]:
+//!
+//! * embedding transfers are modeled **per vector** as DMA descriptors
+//!   (512 B each) distributed over HBM channels by address hash, with
+//!   per-descriptor issue overhead, per-channel byte queues, and a
+//!   per-channel row-switch penalty tracked at DMA granularity — instead
+//!   of EONSim's per-64 B-line FR-FCFS + bank state machine;
+//! * MLP layers use a roofline model (peak MACs derated by array
+//!   occupancy) — instead of EONSim's SCALE-Sim fold formulas;
+//! * deterministic measurement jitter (±0.5 %, hashed from the run
+//!   parameters) models run-to-run variation of real hardware;
+//! * memory access *counts* are estimated the way the paper estimates
+//!   them for TPUv6e — from transfer volume divided by access
+//!   granularity, scaled by a bandwidth-utilization estimate — not
+//!   counted exactly.
+//!
+//! Because the two models capture the same first-order terms through
+//! different formulations, EONSim's single-digit-percent validation
+//! errors are *emergent*, not baked in.
+
+use crate::config::SimConfig;
+use crate::trace::{AddressMap, TraceGenerator};
+
+/// One "hardware measurement" of a DLRM inference workload.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    /// Wall-clock execution time in seconds (all batches).
+    pub exec_secs: f64,
+    /// Estimated on-chip access count (paper §IV method).
+    pub onchip_accesses: u64,
+    /// Estimated off-chip access count.
+    pub offchip_accesses: u64,
+}
+
+/// Per-descriptor DMA issue overhead in cycles.
+const DMA_ISSUE_CYCLES: f64 = 0.25;
+/// Cost of switching DRAM pages within one channel's stream, amortized
+/// per switch (cycles).
+const ROW_SWITCH_CYCLES: f64 = 26.0;
+/// Fixed per-batch runtime overhead (kernel dispatch, sync) in cycles.
+const BATCH_OVERHEAD_CYCLES: f64 = 2_150.0;
+/// Fraction of peak HBM bandwidth a real part sustains on gather traffic.
+const SUSTAINED_BW_FRACTION: f64 = 0.68;
+/// MLP roofline derate for control/pipeline overheads.
+const MLP_EFFICIENCY: f64 = 0.82;
+
+fn hash64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// "Measure" the configured workload on TPUv6e.
+///
+/// TPUv6e always runs its scratchpad as a staging buffer (paper §IV:
+/// "fetching all vectors from off-chip memory regardless of hotness"),
+/// so the measurement ignores `cfg.hardware.mem.policy`.
+pub fn measure(cfg: &SimConfig) -> anyhow::Result<Measurement> {
+    let hw = &cfg.hardware;
+    let w = &cfg.workload;
+    let emb = &w.embedding;
+    let freq = hw.freq_hz();
+    let channels = hw.mem.dram.channels;
+    let chan_bw = hw.dram_bytes_per_cycle() * SUSTAINED_BW_FRACTION / channels as f64;
+
+    let addr_map = AddressMap::new(emb, hw.mem.access_granularity);
+    let mut gen = TraceGenerator::new(w)?;
+
+    let vec_bytes = emb.vec_bytes() as f64;
+    let mut total_cycles = 0.0f64;
+    let mut total_vectors: u64 = 0;
+
+    for _ in 0..w.num_batches {
+        let trace = gen.next_batch();
+        // per-channel byte queues + last-page tracking at DMA granularity
+        let mut chan_bytes = vec![0.0f64; channels];
+        let mut chan_last_page = vec![u64::MAX; channels];
+        let mut chan_switches = vec![0u64; channels];
+        for l in &trace.lookups {
+            let addr = addr_map.vec_addr(l.table, l.row);
+            let ch = (hash64(addr >> 9) % channels as u64) as usize;
+            chan_bytes[ch] += vec_bytes;
+            let page = addr / hw.mem.dram.row_bytes;
+            if chan_last_page[ch] != page {
+                chan_switches[ch] += 1;
+                chan_last_page[ch] = page;
+            }
+        }
+        let mem_cycles = (0..channels)
+            .map(|c| chan_bytes[c] / chan_bw + chan_switches[c] as f64 * ROW_SWITCH_CYCLES / hw.mem.dram.banks_per_channel as f64)
+            .fold(0.0f64, f64::max);
+        let issue_cycles = trace.lookups.len() as f64 * DMA_ISSUE_CYCLES;
+        total_vectors += trace.lookups.len() as u64;
+
+        // VPU pooling: all pooled elements at lanes*sublanes/cycle,
+        // derated for dependency stalls.
+        let pooled_elems = (trace.lookups.len() * emb.dim) as f64;
+        let vpu_cycles =
+            pooled_elems / (hw.core.vpu_lanes * hw.core.vpu_sublanes) as f64 / 0.85;
+
+        // MLP roofline.
+        let peak_macs = (hw.core.sa_rows * hw.core.sa_cols) as f64 * MLP_EFFICIENCY;
+        let mut mlp_cycles = 0.0;
+        for layer in w.bottom_layers().iter().chain(w.top_layers().iter()) {
+            let macs = (layer.m * layer.n * layer.k) as f64;
+            let bytes = ((layer.m * layer.k + layer.k * layer.n + layer.m * layer.n) * 4) as f64;
+            let t_compute = macs / peak_macs;
+            let t_mem = bytes / hw.dram_bytes_per_cycle();
+            mlp_cycles += t_compute.max(t_mem) + hw.mem.dram.flat_latency_cycles as f64;
+        }
+
+        let emb_cycles = (mem_cycles.max(issue_cycles)).max(vpu_cycles);
+        total_cycles += emb_cycles + mlp_cycles + BATCH_OVERHEAD_CYCLES;
+    }
+
+    // deterministic measurement jitter: ±0.5 %
+    let key = hash64(
+        (w.batch_size as u64) ^ ((emb.num_tables as u64) << 20) ^ (w.num_batches as u64) << 44,
+    );
+    let jitter = 1.0 + ((key % 1000) as f64 / 1000.0 - 0.5) * 0.01;
+    let exec_secs = total_cycles * jitter / freq;
+
+    // Access-count estimation, paper §IV method: transfer volume per
+    // memory component / access granularity, from bandwidth utilization
+    // (a measurement-derived estimate, hence its own small error).
+    let lines_per_vec = addr_map.lines_per_vec();
+    let offchip_lines = total_vectors * lines_per_vec;
+    // staging buffer: write + read per line, plus MLP operand staging
+    let mut mlp_bytes = 0u64;
+    for layer in w.bottom_layers().iter().chain(w.top_layers().iter()) {
+        mlp_bytes += ((layer.m * layer.k + layer.k * layer.n + layer.m * layer.n) * 4) as u64
+            * w.num_batches as u64;
+    }
+    let mlp_lines = mlp_bytes / hw.mem.access_granularity;
+    let est_factor = 1.0 + ((hash64(key) % 1000) as f64 / 1000.0 - 0.5) * 0.04;
+    let onchip = ((2 * offchip_lines + 2 * mlp_lines) as f64 * est_factor) as u64;
+    let offchip = ((offchip_lines + mlp_lines) as f64
+        * (1.0 + ((hash64(key ^ 7) % 1000) as f64 / 1000.0 - 0.5) * 0.05)) as u64;
+
+    Ok(Measurement {
+        exec_secs,
+        onchip_accesses: onchip,
+        offchip_accesses: offchip,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn cfg(batch: usize, tables: usize) -> SimConfig {
+        let mut c = presets::tpuv6e_dlrm_small();
+        c.workload.batch_size = batch;
+        c.workload.num_batches = 1;
+        c.workload.embedding.num_tables = tables;
+        c.workload.embedding.rows_per_table = 100_000;
+        c
+    }
+
+    #[test]
+    fn measurement_is_deterministic() {
+        let a = measure(&cfg(32, 10)).unwrap();
+        let b = measure(&cfg(32, 10)).unwrap();
+        assert_eq!(a.exec_secs, b.exec_secs);
+        assert_eq!(a.onchip_accesses, b.onchip_accesses);
+    }
+
+    #[test]
+    fn time_scales_with_batch_size() {
+        let small = measure(&cfg(32, 10)).unwrap();
+        let large = measure(&cfg(256, 10)).unwrap();
+        let ratio = large.exec_secs / small.exec_secs;
+        assert!((4.0..12.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn time_scales_with_tables() {
+        let t10 = measure(&cfg(64, 10)).unwrap();
+        let t20 = measure(&cfg(64, 20)).unwrap();
+        let ratio = t20.exec_secs / t10.exec_secs;
+        assert!((1.5..2.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn bandwidth_bound_floor() {
+        // exec time can't beat total bytes / peak bandwidth
+        let c = cfg(256, 20);
+        let m = measure(&c).unwrap();
+        let bytes = c.workload.lookups_per_batch() as f64
+            * c.workload.embedding.vec_bytes() as f64;
+        let floor = bytes / c.hardware.mem.dram.bandwidth_bytes_per_sec;
+        assert!(m.exec_secs > floor, "exec {} <= floor {}", m.exec_secs, floor);
+        assert!(m.exec_secs < floor * 3.0, "exec {} too far above floor {}", m.exec_secs, floor);
+    }
+
+    #[test]
+    fn access_counts_positive_and_ordered() {
+        let m = measure(&cfg(64, 10)).unwrap();
+        assert!(m.onchip_accesses > m.offchip_accesses);
+        assert!(m.offchip_accesses > 0);
+    }
+}

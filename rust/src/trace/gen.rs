@@ -1,0 +1,241 @@
+//! Index-trace generation and expansion to full per-batch lookup traces.
+//!
+//! A [`TraceGenerator`] owns the per-table samplers/permutations and
+//! yields [`BatchTrace`]s one at a time, so arbitrarily long workloads
+//! stream in bounded memory (a 2048-sample DLRM batch is already ~15 M
+//! lookups). Generation is fully deterministic given the config seed.
+
+use crate::config::{EmbeddingConfig, TraceConfig, WorkloadConfig};
+use crate::testutil::SplitMix64;
+use crate::trace::zipf::{RowPermutation, ZipfSampler};
+
+/// One embedding-vector lookup: which row of which table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lookup {
+    pub table: u32,
+    pub row: u64,
+}
+
+/// All lookups of one batch, in issue order (sample-major, then table,
+/// then pooling slot — the order an embedding-bag kernel walks them).
+#[derive(Debug, Clone)]
+pub struct BatchTrace {
+    pub batch_index: usize,
+    pub lookups: Vec<Lookup>,
+}
+
+impl BatchTrace {
+    pub fn len(&self) -> usize {
+        self.lookups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lookups.is_empty()
+    }
+
+    /// Unique rows touched (used by profiling/pinning and stats).
+    pub fn unique_rows(&self) -> usize {
+        let mut set = std::collections::HashSet::with_capacity(self.lookups.len() / 4);
+        for l in &self.lookups {
+            set.insert((l.table, l.row));
+        }
+        set.len()
+    }
+}
+
+enum Source {
+    Zipf(ZipfSampler),
+    Uniform,
+    /// Replay of a single-table index trace (hardware-agnostic input),
+    /// cycled if shorter than the workload needs.
+    Replay { indices: Vec<u64>, cursor: usize },
+}
+
+/// Streaming generator of per-batch lookup traces.
+pub struct TraceGenerator {
+    emb: EmbeddingConfig,
+    batch_size: usize,
+    source: Source,
+    perms: Vec<RowPermutation>,
+    rng: SplitMix64,
+    next_batch: usize,
+}
+
+impl TraceGenerator {
+    pub fn new(workload: &WorkloadConfig) -> anyhow::Result<Self> {
+        Self::with_trace(&workload.trace, &workload.embedding, workload.batch_size)
+    }
+
+    pub fn with_trace(
+        trace: &TraceConfig,
+        emb: &EmbeddingConfig,
+        batch_size: usize,
+    ) -> anyhow::Result<Self> {
+        let mut rng = SplitMix64::new(trace.seed);
+        let source = match trace.kind.as_str() {
+            "zipf" => Source::Zipf(ZipfSampler::new(emb.rows_per_table, trace.alpha)),
+            "uniform" => Source::Uniform,
+            "file" => {
+                let path = trace
+                    .path
+                    .as_deref()
+                    .ok_or_else(|| anyhow::anyhow!("trace.kind=file requires trace.path"))?;
+                let indices = super::io::read_index_trace(path)?;
+                anyhow::ensure!(!indices.is_empty(), "empty index trace {path}");
+                for &i in &indices {
+                    anyhow::ensure!(
+                        i < emb.rows_per_table,
+                        "trace index {i} out of range (rows_per_table = {})",
+                        emb.rows_per_table
+                    );
+                }
+                Source::Replay { indices, cursor: 0 }
+            }
+            other => anyhow::bail!("unknown trace kind `{other}`"),
+        };
+        // Independent permutation per table: tables don't share hot rows,
+        // matching per-table popularity in real workloads.
+        let perms = (0..emb.num_tables)
+            .map(|t| RowPermutation::new(emb.rows_per_table, rng.fork(t as u64).next_u64()))
+            .collect();
+        Ok(TraceGenerator {
+            emb: emb.clone(),
+            batch_size,
+            source,
+            perms,
+            rng,
+            next_batch: 0,
+        })
+    }
+
+    fn next_rank(&mut self) -> u64 {
+        match &mut self.source {
+            Source::Zipf(z) => z.sample(&mut self.rng),
+            Source::Uniform => self.rng.next_below(self.emb.rows_per_table),
+            Source::Replay { indices, cursor } => {
+                let v = indices[*cursor];
+                *cursor = (*cursor + 1) % indices.len();
+                v
+            }
+        }
+    }
+
+    /// Generate the next batch's lookups.
+    pub fn next_batch(&mut self) -> BatchTrace {
+        let n = self.batch_size * self.emb.num_tables * self.emb.pool;
+        let mut lookups = Vec::with_capacity(n);
+        for _sample in 0..self.batch_size {
+            for table in 0..self.emb.num_tables {
+                for _p in 0..self.emb.pool {
+                    let rank = self.next_rank();
+                    let row = self.perms[table].apply(rank);
+                    lookups.push(Lookup { table: table as u32, row });
+                }
+            }
+        }
+        let bt = BatchTrace { batch_index: self.next_batch, lookups };
+        self.next_batch += 1;
+        bt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn small_workload() -> WorkloadConfig {
+        let mut w = presets::dlrm_rmc2_small(4);
+        w.embedding.num_tables = 3;
+        w.embedding.rows_per_table = 100;
+        w.embedding.pool = 5;
+        w
+    }
+
+    #[test]
+    fn batch_has_expected_size() {
+        let w = small_workload();
+        let mut g = TraceGenerator::new(&w).unwrap();
+        let b = g.next_batch();
+        assert_eq!(b.len(), 4 * 3 * 5);
+        assert_eq!(b.batch_index, 0);
+        assert_eq!(g.next_batch().batch_index, 1);
+    }
+
+    #[test]
+    fn rows_in_range() {
+        let w = small_workload();
+        let mut g = TraceGenerator::new(&w).unwrap();
+        for _ in 0..3 {
+            for l in &g.next_batch().lookups {
+                assert!(l.row < 100);
+                assert!(l.table < 3);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let w = small_workload();
+        let a = TraceGenerator::new(&w).unwrap().next_batch();
+        let b = TraceGenerator::new(&w).unwrap().next_batch();
+        assert_eq!(a.lookups, b.lookups);
+    }
+
+    #[test]
+    fn different_seed_different_trace() {
+        let w = small_workload();
+        let mut w2 = w.clone();
+        w2.trace.seed ^= 0xDEAD;
+        let a = TraceGenerator::new(&w).unwrap().next_batch();
+        let b = TraceGenerator::new(&w2).unwrap().next_batch();
+        assert_ne!(a.lookups, b.lookups);
+    }
+
+    #[test]
+    fn tables_have_different_hot_rows() {
+        let mut w = small_workload();
+        w.trace.alpha = 1.2;
+        w.embedding.rows_per_table = 10_000;
+        let mut g = TraceGenerator::new(&w).unwrap();
+        let b = g.next_batch();
+        // most frequent row per table should differ across tables
+        let mut top = vec![std::collections::HashMap::new(); 3];
+        for l in &b.lookups {
+            *top[l.table as usize].entry(l.row).or_insert(0usize) += 1;
+        }
+        let hottest: Vec<u64> = top
+            .iter()
+            .map(|m| *m.iter().max_by_key(|(_, c)| **c).unwrap().0)
+            .collect();
+        assert!(hottest[0] != hottest[1] || hottest[1] != hottest[2]);
+    }
+
+    #[test]
+    fn uniform_kind_supported() {
+        let mut w = small_workload();
+        w.trace.kind = "uniform".into();
+        let mut g = TraceGenerator::new(&w).unwrap();
+        assert_eq!(g.next_batch().len(), 60);
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let mut w = small_workload();
+        w.trace.kind = "bogus".into();
+        assert!(TraceGenerator::new(&w).is_err());
+    }
+
+    #[test]
+    fn unique_rows_counts() {
+        let bt = BatchTrace {
+            batch_index: 0,
+            lookups: vec![
+                Lookup { table: 0, row: 1 },
+                Lookup { table: 0, row: 1 },
+                Lookup { table: 1, row: 1 },
+            ],
+        };
+        assert_eq!(bt.unique_rows(), 2);
+    }
+}

@@ -1,0 +1,99 @@
+//! Index-trace file I/O.
+//!
+//! Format `EONT` v1 — the hardware-agnostic interchange the paper's
+//! workflow needs ("EONSim takes a sequence of embedding vector indices
+//! for an embedding table"):
+//!
+//! ```text
+//! bytes 0..4   magic  b"EONT"
+//! bytes 4..8   u32 LE version (1)
+//! bytes 8..16  u64 LE count
+//! then         count x u64 LE row indices
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"EONT";
+const VERSION: u32 = 1;
+
+/// Write a single-table index trace.
+pub fn write_index_trace(path: impl AsRef<Path>, indices: &[u64]) -> anyhow::Result<()> {
+    let mut w = BufWriter::new(File::create(path.as_ref())?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(indices.len() as u64).to_le_bytes())?;
+    for &i in indices {
+        w.write_all(&i.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a single-table index trace.
+pub fn read_index_trace(path: impl AsRef<Path>) -> anyhow::Result<Vec<u64>> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "{}: not an EONT trace file", path.display());
+    let mut buf4 = [0u8; 4];
+    r.read_exact(&mut buf4)?;
+    let version = u32::from_le_bytes(buf4);
+    anyhow::ensure!(version == VERSION, "unsupported trace version {version}");
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    let count = u64::from_le_bytes(buf8) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        r.read_exact(&mut buf8)?;
+        out.push(u64::from_le_bytes(buf8));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("eonsim_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmp("roundtrip.eont");
+        let data: Vec<u64> = (0..1000).map(|i| i * 7 % 997).collect();
+        write_index_trace(&path, &data).unwrap();
+        let back = read_index_trace(&path).unwrap();
+        assert_eq!(back, data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_trace_roundtrips() {
+        let path = tmp("empty.eont");
+        write_index_trace(&path, &[]).unwrap();
+        assert!(read_index_trace(&path).unwrap().is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("bad.eont");
+        std::fs::write(&path, b"NOPE0000000000000000").unwrap();
+        assert!(read_index_trace(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_error_mentions_path() {
+        let err = read_index_trace("/nonexistent/xyz.eont").unwrap_err();
+        assert!(err.to_string().contains("xyz.eont"));
+    }
+}

@@ -1,0 +1,130 @@
+//! Hardware-agnostic embedding index traces and their translation to
+//! platform-specific memory addresses (paper §III).
+//!
+//! EONSim's trace pipeline has three steps:
+//!
+//! 1. a **single-table index trace** — either generated (Zipf/uniform)
+//!    or loaded from a file — whose pattern depends only on the workload
+//!    and input data, never on hardware;
+//! 2. **expansion** to a full per-batch lookup trace according to the
+//!    workload configuration (number of tables, batch size, pooling
+//!    factor), with an independent per-table permutation so tables do not
+//!    share hot rows;
+//! 3. **address translation** into granularity-sized line addresses using
+//!    the memory-system configuration (vector dimension, element size,
+//!    access granularity), assuming vectors live at consecutive virtual
+//!    addresses per table.
+//!
+//! The same index trace can therefore be replayed against any hardware
+//! configuration — the paper's trace-reuse property.
+
+pub mod gen;
+pub mod io;
+pub mod zipf;
+
+pub use gen::{BatchTrace, Lookup, TraceGenerator};
+pub use zipf::{RowPermutation, ZipfSampler};
+
+use crate::config::EmbeddingConfig;
+
+/// Translates `(table, row)` lookups into line-granular physical
+/// addresses. Vectors are stored contiguously per table; table regions
+/// are page-aligned and disjoint.
+#[derive(Debug, Clone)]
+pub struct AddressMap {
+    vec_bytes: u64,
+    granularity: u64,
+    table_stride: u64,
+    lines_per_vec: u64,
+}
+
+impl AddressMap {
+    pub fn new(emb: &EmbeddingConfig, granularity: u64) -> Self {
+        assert!(granularity.is_power_of_two());
+        let vec_bytes = emb.vec_bytes();
+        // Table regions aligned up to 4 KiB pages.
+        let raw = emb.rows_per_table * vec_bytes;
+        let table_stride = (raw + 4095) & !4095;
+        // A vector smaller than one line still occupies (at least) one.
+        let lines_per_vec = vec_bytes.div_ceil(granularity).max(1);
+        AddressMap { vec_bytes, granularity, table_stride, lines_per_vec }
+    }
+
+    /// Base byte address of `(table, row)`.
+    #[inline]
+    pub fn vec_addr(&self, table: u32, row: u64) -> u64 {
+        table as u64 * self.table_stride + row * self.vec_bytes
+    }
+
+    /// Number of access-granularity lines per vector (paper: a 128-dim
+    /// f32 vector at 64 B granularity = 8 on-chip accesses).
+    #[inline]
+    pub fn lines_per_vec(&self) -> u64 {
+        self.lines_per_vec
+    }
+
+    #[inline]
+    pub fn granularity(&self) -> u64 {
+        self.granularity
+    }
+
+    /// Iterate the line-aligned addresses touched by one vector lookup.
+    #[inline]
+    pub fn lines(&self, table: u32, row: u64) -> impl Iterator<Item = u64> {
+        let base = self.vec_addr(table, row) & !(self.granularity - 1);
+        let g = self.granularity;
+        (0..self.lines_per_vec).map(move |i| base + i * g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn emb() -> EmbeddingConfig {
+        EmbeddingConfig {
+            num_tables: 4,
+            rows_per_table: 1000,
+            dim: 128,
+            pool: 8,
+            elem_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn vector_spans_eight_lines_at_64b() {
+        let m = AddressMap::new(&emb(), 64);
+        assert_eq!(m.lines_per_vec(), 8); // 128 * 4 / 64
+        let lines: Vec<u64> = m.lines(0, 0).collect();
+        assert_eq!(lines, vec![0, 64, 128, 192, 256, 320, 384, 448]);
+    }
+
+    #[test]
+    fn tables_are_disjoint() {
+        let m = AddressMap::new(&emb(), 64);
+        let end_t0 = m.vec_addr(0, 999) + 512;
+        assert!(m.vec_addr(1, 0) >= end_t0);
+        assert_eq!(m.vec_addr(1, 0) % 4096, 0, "page aligned");
+    }
+
+    #[test]
+    fn rows_are_contiguous() {
+        let m = AddressMap::new(&emb(), 64);
+        assert_eq!(m.vec_addr(0, 1) - m.vec_addr(0, 0), 512);
+    }
+
+    #[test]
+    fn small_vector_still_one_line() {
+        let e = EmbeddingConfig { dim: 4, ..emb() }; // 16 B vector
+        let m = AddressMap::new(&e, 64);
+        assert_eq!(m.lines_per_vec(), 1);
+    }
+
+    #[test]
+    fn line_addresses_are_aligned() {
+        let m = AddressMap::new(&emb(), 64);
+        for line in m.lines(3, 777) {
+            assert_eq!(line % 64, 0);
+        }
+    }
+}

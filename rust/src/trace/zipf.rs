@@ -1,0 +1,274 @@
+//! Zipfian index sampling for skewed embedding access traces.
+//!
+//! Real-world embedding traffic is highly skewed — "certain items or
+//! tokens appear disproportionately due to user behavior or content
+//! popularity" (paper §II). We model that with a Zipf(α) distribution
+//! over the row space, sampled in O(1) per draw with the
+//! rejection-inversion method of Hörmann & Derflinger (the same algorithm
+//! as Apache Commons' `RejectionInversionZipfSampler`), so million-row
+//! tables need no CDF tables.
+//!
+//! Sampled *ranks* are passed through a deterministic bijective
+//! permutation of the row space so that hot rows are scattered across the
+//! address space rather than clustered at low addresses.
+
+use crate::testutil::SplitMix64;
+
+/// O(1) Zipf(α) sampler over `{0, .., n-1}` (rank 0 = hottest).
+#[derive(Debug, Clone)]
+pub struct ZipfSampler {
+    n: u64,
+    alpha: f64,
+    // rejection-inversion precomputed constants
+    h_integral_x1: f64,
+    h_integral_num: f64,
+    s: f64,
+}
+
+impl ZipfSampler {
+    /// `alpha <= 0.005` degenerates to uniform sampling.
+    pub fn new(n: u64, alpha: f64) -> Self {
+        assert!(n > 0, "empty row space");
+        let (h_integral_x1, h_integral_num, s) = if alpha > 0.005 {
+            let h_x1 = h_integral(1.5, alpha) - 1.0;
+            let h_num = h_integral(n as f64 + 0.5, alpha);
+            let s = 2.0 - h_integral_inverse(h_integral(2.5, alpha) - h(2.0, alpha), alpha);
+            (h_x1, h_num, s)
+        } else {
+            (0.0, 0.0, 0.0)
+        };
+        ZipfSampler { n, alpha, h_integral_x1, h_integral_num, s }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Draw one rank in `[0, n)`; rank 0 is the most probable.
+    pub fn sample(&self, rng: &mut SplitMix64) -> u64 {
+        if self.alpha <= 0.005 {
+            return rng.next_below(self.n);
+        }
+        loop {
+            let u = self.h_integral_num
+                + rng.next_f64() * (self.h_integral_x1 - self.h_integral_num);
+            let x = h_integral_inverse(u, self.alpha);
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            if k - x <= self.s
+                || u >= h_integral(k + 0.5, self.alpha) - h(k, self.alpha)
+            {
+                return k as u64 - 1;
+            }
+        }
+    }
+}
+
+/// `H(x) = ((x^(1-α)) - 1) / (1-α)`, with the α→1 limit `ln x`.
+fn h_integral(x: f64, alpha: f64) -> f64 {
+    let log_x = x.ln();
+    helper2((1.0 - alpha) * log_x) * log_x
+}
+
+/// `h(x) = x^-α`.
+fn h(x: f64, alpha: f64) -> f64 {
+    (-alpha * x.ln()).exp()
+}
+
+/// Inverse of `h_integral`.
+fn h_integral_inverse(x: f64, alpha: f64) -> f64 {
+    let mut t = x * (1.0 - alpha);
+    if t < -1.0 {
+        t = -1.0;
+    }
+    (helper1(t) * x).exp()
+}
+
+/// `log1p(x)/x`, stable near 0.
+fn helper1(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.ln_1p() / x
+    } else {
+        1.0 - x * (0.5 - x * (1.0 / 3.0 - 0.25 * x))
+    }
+}
+
+/// `(exp(x)-1)/x`, stable near 0.
+fn helper2(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.exp_m1() / x
+    } else {
+        1.0 + x * 0.5 * (1.0 + x / 3.0 * (1.0 + 0.25 * x))
+    }
+}
+
+/// Deterministic bijective permutation of `[0, n)`: invertible
+/// xorshift-multiply mixing on the next power of two, cycle-walked back
+/// into range. Scatters Zipf ranks across the row space.
+#[derive(Debug, Clone, Copy)]
+pub struct RowPermutation {
+    n: u64,
+    mask: u64,
+    key: u64,
+}
+
+impl RowPermutation {
+    pub fn new(n: u64, key: u64) -> Self {
+        assert!(n > 0);
+        let mask = n.next_power_of_two() - 1;
+        RowPermutation { n, mask, key: key | 1 }
+    }
+
+    /// Identity permutation (for tests / pathological layouts).
+    pub fn identity(n: u64) -> Self {
+        RowPermutation { n, mask: 0, key: 0 }
+    }
+
+    #[inline]
+    pub fn apply(&self, rank: u64) -> u64 {
+        debug_assert!(rank < self.n);
+        if self.key == 0 {
+            return rank;
+        }
+        let mut x = rank;
+        loop {
+            x = self.mix(x);
+            if x < self.n {
+                return x;
+            }
+        }
+    }
+
+    /// Invertible mix on the `mask+1` power-of-two domain.
+    #[inline]
+    fn mix(&self, x: u64) -> u64 {
+        let m = self.mask;
+        let mut x = x ^ self.key & m;
+        x = x.wrapping_mul(0x9E37_79B9_7F4A_7C15) & m;
+        x ^= x >> 13;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9) & m;
+        x ^= x >> 7;
+        x & m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn samples_in_range() {
+        let z = ZipfSampler::new(1000, 1.1);
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 1000);
+        }
+    }
+
+    #[test]
+    fn rank_zero_is_hottest() {
+        let z = ZipfSampler::new(100, 1.0);
+        let mut rng = SplitMix64::new(2);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[99]);
+    }
+
+    #[test]
+    fn zipf_frequency_matches_power_law() {
+        // p(k) ~ k^-α: check count(1)/count(2) ≈ 2^α within 10 %.
+        let alpha = 1.0;
+        let z = ZipfSampler::new(1000, alpha);
+        let mut rng = SplitMix64::new(3);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..400_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        let ratio = counts[0] as f64 / counts[1] as f64;
+        assert!((ratio - 2.0f64.powf(alpha)).abs() < 0.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn uniform_when_alpha_zero() {
+        let z = ZipfSampler::new(64, 0.0);
+        let mut rng = SplitMix64::new(4);
+        let mut counts = vec![0usize; 64];
+        for _ in 0..64_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as i64 - 1000).abs() < 250, "count {c}");
+        }
+    }
+
+    #[test]
+    fn hot_set_fractions_match_reuse_presets() {
+        // DESIGN.md §3: reuse_high ≈ few % of vectors dominate (90 % of
+        // accesses), reuse_low spreads toward ~half the touched set.
+        // (Smaller scale than the preset tuning run, so looser bounds.)
+        let frac = |alpha: f64| {
+            let n = 100_000u64;
+            let z = ZipfSampler::new(n, alpha);
+            let mut rng = SplitMix64::new(5);
+            let draws = 500_000usize;
+            let mut counts = std::collections::HashMap::new();
+            for _ in 0..draws {
+                *counts.entry(z.sample(&mut rng)).or_insert(0usize) += 1;
+            }
+            let mut freq: Vec<usize> = counts.values().copied().collect();
+            freq.sort_unstable_by(|a, b| b.cmp(a));
+            let target = (draws as f64 * 0.9) as usize;
+            let mut acc = 0usize;
+            let mut k = 0usize;
+            for f in &freq {
+                acc += f;
+                k += 1;
+                if acc >= target {
+                    break;
+                }
+            }
+            k as f64 / counts.len() as f64
+        };
+        let high = frac(1.22);
+        let low = frac(1.0);
+        assert!(high < 0.25, "high-reuse hot set {high}");
+        assert!(low > 0.30, "low-reuse spread {low}");
+        assert!(high < low);
+    }
+
+    #[test]
+    fn permutation_is_bijective() {
+        forall("perm bijective", 8, |rng| {
+            let n = 1 + rng.next_below(5000);
+            let perm = RowPermutation::new(n, rng.next_u64());
+            let mut seen = vec![false; n as usize];
+            for i in 0..n {
+                let j = perm.apply(i);
+                assert!(j < n);
+                assert!(!seen[j as usize], "collision at {j}");
+                seen[j as usize] = true;
+            }
+        });
+    }
+
+    #[test]
+    fn identity_permutation() {
+        let p = RowPermutation::identity(10);
+        for i in 0..10 {
+            assert_eq!(p.apply(i), i);
+        }
+    }
+
+    #[test]
+    fn sampler_is_deterministic() {
+        let z = ZipfSampler::new(777, 0.8);
+        let mut a = SplitMix64::new(9);
+        let mut b = SplitMix64::new(9);
+        for _ in 0..1000 {
+            assert_eq!(z.sample(&mut a), z.sample(&mut b));
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Workload descriptions beyond the DLRM preset: the generalized-MNK
+//! model format (compatible with SCALE-Sim-style layer files) and a
+//! RAG-retrieval embedding workload (paper §II motivates both
+//! recommendation inference and RAG retrieval as embedding-dominated).
+
+use crate::config::{EmbeddingConfig, MnkLayer, TraceConfig, WorkloadConfig};
+
+/// Parse a SCALE-Sim-style CSV of MNK layers: `name, M, N, K` per line
+/// (header lines and blanks ignored). This is the "existing DNN model
+/// description file" compatibility path the paper mentions.
+pub fn parse_mnk_csv(text: &str) -> anyhow::Result<Vec<(String, MnkLayer)>> {
+    let mut out = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+        // header row: explicitly named M,N,K columns (anything else
+        // non-numeric is an error, not a header)
+        if idx == 0
+            && cols.len() >= 4
+            && cols[1].eq_ignore_ascii_case("m")
+            && cols[2].eq_ignore_ascii_case("n")
+            && cols[3].eq_ignore_ascii_case("k")
+        {
+            continue;
+        }
+        anyhow::ensure!(
+            cols.len() >= 4,
+            "line {}: want `name,M,N,K`, got `{line}`",
+            idx + 1
+        );
+        let parse = |s: &str, what: &str| -> anyhow::Result<usize> {
+            s.parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad {what} `{s}`: {e}", idx + 1))
+        };
+        out.push((
+            cols[0].to_string(),
+            MnkLayer {
+                m: parse(cols[1], "M")?,
+                n: parse(cols[2], "N")?,
+                k: parse(cols[3], "K")?,
+            },
+        ));
+    }
+    Ok(out)
+}
+
+/// RAG retrieval workload: a vector database of `num_docs` embeddings is
+/// probed with `top_k`-style scans — modeled as an embedding workload
+/// with one giant table, pool = probes per query, and a skewed trace
+/// (popular documents are re-retrieved; paper §II: "the retrieval stage
+/// ... often becomes a performance bottleneck of RAG-based inference").
+pub fn rag_retrieval(
+    num_docs: u64,
+    dim: usize,
+    probes_per_query: usize,
+    queries_per_batch: usize,
+    alpha: f64,
+    seed: u64,
+) -> WorkloadConfig {
+    WorkloadConfig {
+        batch_size: queries_per_batch,
+        num_batches: 4,
+        dense_in: dim,
+        // query encoder projection + score head stand in for the paper's
+        // MLP stages; retrieval itself is the embedding stage.
+        bottom_mlp: vec![dim, dim],
+        top_mlp: vec![64, 1],
+        embedding: EmbeddingConfig {
+            num_tables: 1,
+            rows_per_table: num_docs,
+            dim,
+            pool: probes_per_query,
+            elem_bytes: 4,
+        },
+        trace: TraceConfig { kind: "zipf".into(), alpha, seed, path: None },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mnk_csv_with_header() {
+        let csv = "layer,M,N,K\nfc1,256,128,256\nfc2, 256, 128, 128\n";
+        let layers = parse_mnk_csv(csv).unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].0, "fc1");
+        assert_eq!(layers[0].1, MnkLayer { m: 256, n: 128, k: 256 });
+        assert_eq!(layers[1].1.k, 128);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let csv = "# comment\n\nfc1,1,2,3\n";
+        assert_eq!(parse_mnk_csv(csv).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        assert!(parse_mnk_csv("fc1,1,2").is_err());
+        assert!(parse_mnk_csv("fc1,a,b,c").is_err());
+    }
+
+    #[test]
+    fn rag_workload_shape() {
+        let w = rag_retrieval(1_000_000, 128, 32, 16, 1.1, 7);
+        assert_eq!(w.embedding.num_tables, 1);
+        assert_eq!(w.embedding.rows_per_table, 1_000_000);
+        assert_eq!(w.lookups_per_batch(), 16 * 32);
+        assert_eq!(w.bottom_layers()[0].k, 128);
+    }
+}

@@ -1,0 +1,344 @@
+//! Integration tests across modules: config files -> engine -> reports,
+//! the PJRT runtime loading real AOT artifacts, the coordinator serving
+//! through the compiled DLRM, and cross-variant numerical consistency.
+//!
+//! Artifact-dependent tests skip (with a message) when `artifacts/` is
+//! missing; `make test` builds artifacts first so CI always runs them.
+
+use eonsim::config::{presets, CachePolicyKind, OnchipPolicy, SimConfig};
+use eonsim::coordinator::{BatchExecutor, Coordinator, EngineTiming};
+use eonsim::engine::Simulator;
+use eonsim::runtime::dlrm::{random_request, DlrmExecutor};
+use eonsim::runtime::{ArtifactMeta, Runtime};
+use eonsim::stats::writer;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn small_cfg() -> SimConfig {
+    let mut cfg = presets::tpuv6e_dlrm_small();
+    cfg.workload.batch_size = 16;
+    cfg.workload.num_batches = 2;
+    cfg.workload.embedding.num_tables = 6;
+    cfg.workload.embedding.rows_per_table = 50_000;
+    cfg.workload.embedding.pool = 24;
+    cfg
+}
+
+// ---------------------------------------------------------------- engine
+
+#[test]
+fn full_run_report_is_consistent() {
+    let report = Simulator::new(small_cfg()).run().unwrap();
+    assert_eq!(report.per_batch.len(), 2);
+    let m = report.total_mem();
+    // SPM: every embedding line staged (write) and consumed (read)
+    assert!(m.onchip_writes >= m.offchip_reads);
+    // CSV/JSON writers agree with the report
+    let csv = writer::to_csv(&report);
+    assert_eq!(csv.lines().count(), 3);
+    let json = writer::to_json(&report);
+    assert!(json.contains(&format!("\"total_cycles\":{}", report.total_cycles())));
+}
+
+#[test]
+fn config_file_roundtrip_drives_engine() {
+    let toml = r#"
+        [workload]
+        batch_size = 8
+        num_batches = 1
+        [embedding]
+        num_tables = 4
+        rows_per_table = 10000
+        pool = 8
+        [mem]
+        policy = "srrip"
+        onchip_bytes = 1048576
+        [trace]
+        alpha = 1.2
+        seed = 99
+    "#;
+    let path = std::env::temp_dir().join(format!("eonsim_it_{}.toml", std::process::id()));
+    std::fs::write(&path, toml).unwrap();
+    let cfg = SimConfig::from_file(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(cfg.hardware.mem.policy, OnchipPolicy::Cache(CachePolicyKind::Srrip));
+    let report = Simulator::new(cfg).run().unwrap();
+    assert_eq!(report.policy, "srrip");
+    assert!(report.total_mem().hits > 0);
+}
+
+#[test]
+fn all_policies_complete_and_order_sanely() {
+    let mut cycles = std::collections::HashMap::new();
+    for policy in [
+        OnchipPolicy::Spm,
+        OnchipPolicy::Cache(CachePolicyKind::Lru),
+        OnchipPolicy::Cache(CachePolicyKind::Srrip),
+        OnchipPolicy::Cache(CachePolicyKind::Fifo),
+        OnchipPolicy::Cache(CachePolicyKind::Random),
+        OnchipPolicy::Pinning,
+    ] {
+        let mut cfg = small_cfg();
+        cfg.workload.trace.alpha = 1.2;
+        cfg.hardware.mem.policy = policy;
+        cfg.hardware.mem.onchip_bytes = 1 << 20;
+        let report = Simulator::new(cfg).run().unwrap();
+        cycles.insert(policy.name(), report.total_cycles());
+    }
+    // every cache policy beats SPM on a skewed trace at this scale
+    for p in ["lru", "srrip", "fifo", "random", "profiling"] {
+        assert!(
+            cycles[p] < cycles["spm"],
+            "{p} ({}) should beat spm ({})",
+            cycles[p],
+            cycles["spm"]
+        );
+    }
+}
+
+#[test]
+fn engine_matches_champsim_through_full_stack() {
+    // run the engine in LRU cache mode and replay the same trace through
+    // the ChampSim comparator: identical hit/miss counts end to end.
+    let mut cfg = small_cfg();
+    cfg.hardware.mem.policy = OnchipPolicy::Cache(CachePolicyKind::Lru);
+    cfg.hardware.mem.onchip_bytes = 1 << 20;
+    cfg.workload.num_batches = 1;
+    let report = Simulator::new(cfg.clone()).run().unwrap();
+
+    let emb = &cfg.workload.embedding;
+    let map = eonsim::trace::AddressMap::new(emb, cfg.hardware.mem.access_granularity);
+    let mut champ = eonsim::champsim::ChampCache::new(
+        cfg.hardware.mem.onchip_bytes,
+        cfg.hardware.mem.access_granularity,
+        cfg.hardware.mem.cache_assoc,
+        eonsim::champsim::ChampPolicy::Lru,
+    );
+    let mut gen = eonsim::trace::TraceGenerator::new(&cfg.workload).unwrap();
+    for l in &gen.next_batch().lookups {
+        for line in map.lines(l.table, l.row) {
+            champ.access(line);
+        }
+    }
+    let m = report.total_mem();
+    assert_eq!(m.hits, champ.hits());
+    assert_eq!(m.misses, champ.misses());
+}
+
+// --------------------------------------------------------------- runtime
+
+#[test]
+fn runtime_loads_and_executes_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::load(&dir).unwrap();
+    assert_eq!(runtime.batch_sizes(), vec![1, 8, 32]);
+    let exec = DlrmExecutor::new(&runtime, 7).unwrap();
+    let meta = runtime.models()[0].meta.clone();
+    let (dense, idx) = random_request(&meta, 4, 11);
+    let out = exec.infer(&dense, &idx, 4).unwrap();
+    assert_eq!(out.len(), 4);
+    for p in &out {
+        assert!((0.0..=1.0).contains(p), "sigmoid output, got {p}");
+    }
+}
+
+#[test]
+fn runtime_is_deterministic_and_batch_invariant() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::load(&dir).unwrap();
+    let exec = DlrmExecutor::new(&runtime, 7).unwrap();
+    let meta = runtime.models()[0].meta.clone();
+    let (dense, idx) = random_request(&meta, 1, 23);
+
+    let single = exec.infer(&dense, &idx, 1).unwrap();
+    let again = exec.infer(&dense, &idx, 1).unwrap();
+    assert_eq!(single, again, "deterministic execution");
+
+    // same sample padded through a larger variant must agree: the b1 and
+    // b8 artifacts share weights (same seed), so prediction 0 matches.
+    let mut dense8 = Vec::new();
+    let mut idx8 = Vec::new();
+    for _ in 0..8 {
+        dense8.extend_from_slice(&dense);
+        idx8.extend_from_slice(&idx);
+    }
+    let batched = exec.infer(&dense8, &idx8, 8).unwrap();
+    for p in &batched {
+        assert!(
+            (p - single[0]).abs() < 1e-4,
+            "cross-variant mismatch: {} vs {}",
+            p,
+            single[0]
+        );
+    }
+}
+
+#[test]
+fn runtime_rejects_bad_inputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::load(&dir).unwrap();
+    let exec = DlrmExecutor::new(&runtime, 7).unwrap();
+    let meta = runtime.models()[0].meta.clone();
+    let (dense, mut idx) = random_request(&meta, 1, 3);
+    assert!(exec.infer(&dense[1..], &idx, 1).is_err(), "short dense");
+    idx[0] = meta.rows as i32; // out of range
+    assert!(exec.infer(&dense, &idx, 1).is_err(), "oob index");
+}
+
+#[test]
+fn pallas_artifact_composes() {
+    // The L1 composition proof at the rust layer: the Pallas-routed HLO
+    // loads, compiles, and runs on PJRT (numerics vs the plain model are
+    // pytest's job; python/tests/test_model.py::test_pallas_matches_plain).
+    let Some(dir) = artifacts_dir() else { return };
+    let meta = ArtifactMeta::load(&dir).unwrap();
+    let Some(pallas) = meta.pallas else {
+        panic!("meta.json missing pallas variant")
+    };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file(meta.dir.join(&pallas.file)).unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).unwrap();
+
+    // build literals in meta order
+    let mut rng = eonsim::testutil::SplitMix64::new(5);
+    let mut args = Vec::new();
+    for p in &pallas.params {
+        let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+        let lit = if p.dtype == "i32" {
+            let data: Vec<i32> = (0..p.elems())
+                .map(|_| rng.next_below(pallas.rows as u64) as i32)
+                .collect();
+            xla::Literal::vec1(&data).reshape(&dims).unwrap()
+        } else {
+            let data: Vec<f32> = (0..p.elems())
+                .map(|_| (rng.next_f64() as f32 - 0.5) * 0.1)
+                .collect();
+            xla::Literal::vec1(&data).reshape(&dims).unwrap()
+        };
+        args.push(lit);
+    }
+    let result = exe.execute::<xla::Literal>(&args).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let out = result.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+    assert_eq!(out.len(), pallas.batch);
+    for p in &out {
+        assert!((0.0..=1.0).contains(p), "pallas model output {p}");
+    }
+}
+
+// ------------------------------------------------------------ coordinator
+
+#[test]
+fn coordinator_serves_through_real_runtime() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::load(&dir).unwrap();
+    let exec = DlrmExecutor::new(&runtime, 7).unwrap();
+    let meta = runtime.models()[0].meta.clone();
+
+    struct Exec<'a>(DlrmExecutor<'a>);
+    impl BatchExecutor for Exec<'_> {
+        fn batch_sizes(&self) -> Vec<usize> {
+            self.0.batch_sizes()
+        }
+        fn run(&self, dense: &[f32], indices: &[i32], n: usize) -> anyhow::Result<Vec<f32>> {
+            self.0.infer(dense, indices, n)
+        }
+    }
+
+    let mut sim_cfg = presets::tpuv6e_dlrm_small();
+    sim_cfg.workload.embedding.num_tables = meta.num_tables;
+    sim_cfg.workload.embedding.rows_per_table = meta.rows as u64;
+    sim_cfg.workload.embedding.pool = meta.pool;
+
+    let mut coord = Coordinator::new(Exec(exec), EngineTiming::new(sim_cfg));
+    for i in 0..40u64 {
+        let (dense, idx) = random_request(&meta, 1, 100 + i);
+        coord.submit(dense, idx);
+    }
+    let responses = coord.drain().unwrap();
+    assert_eq!(responses.len(), 40);
+    assert_eq!(coord.served_batches(), 2); // 32 + 8
+    for r in &responses {
+        assert!((0.0..=1.0).contains(&r.prediction));
+        assert!(r.sim_latency_secs > 0.0, "engine timing attached");
+    }
+}
+
+// ----------------------------------------------------------- trace files
+
+#[test]
+fn trace_file_replays_through_engine() {
+    // write a hardware-agnostic index trace, replay it via trace.kind=file
+    // (the paper's trace-reuse workflow), and check determinism + range.
+    let path = std::env::temp_dir().join(format!("eonsim_replay_{}.eont", std::process::id()));
+    let sampler = eonsim::trace::ZipfSampler::new(5_000, 1.1);
+    let mut rng = eonsim::testutil::SplitMix64::new(3);
+    let indices: Vec<u64> = (0..20_000).map(|_| sampler.sample(&mut rng)).collect();
+    eonsim::trace::io::write_index_trace(&path, &indices).unwrap();
+
+    let mut cfg = small_cfg();
+    cfg.workload.embedding.rows_per_table = 5_000;
+    cfg.workload.trace.kind = "file".into();
+    cfg.workload.trace.path = Some(path.to_string_lossy().into_owned());
+    let a = Simulator::new(cfg.clone()).run().unwrap();
+    let b = Simulator::new(cfg.clone()).run().unwrap();
+    assert_eq!(a.total_cycles(), b.total_cycles());
+    assert!(a.total_mem().offchip_reads > 0);
+
+    // same trace on different hardware: replay works across configs
+    cfg.hardware.mem.policy = OnchipPolicy::Cache(CachePolicyKind::Srrip);
+    cfg.hardware.mem.onchip_bytes = 1 << 20;
+    let c = Simulator::new(cfg).run().unwrap();
+    assert!(c.total_mem().hits > 0);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn all_shipped_configs_parse_and_run() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut count = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "toml") != Some(true) {
+            continue;
+        }
+        count += 1;
+        let mut cfg = SimConfig::from_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        // shrink for test speed, keep the config's structure
+        cfg.workload.batch_size = 8;
+        cfg.workload.num_batches = 1;
+        cfg.workload.embedding.num_tables = cfg.workload.embedding.num_tables.min(4);
+        cfg.workload.embedding.rows_per_table = cfg.workload.embedding.rows_per_table.min(10_000);
+        cfg.workload.embedding.pool = cfg.workload.embedding.pool.min(16);
+        let report = Simulator::new(cfg).run()
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(report.total_cycles() > 0, "{}", path.display());
+    }
+    assert!(count >= 3, "expected the shipped config files, found {count}");
+}
+
+#[test]
+fn multicore_global_config_reports_global_hits() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut cfg = SimConfig::from_file(dir.join("multicore_global.toml")).unwrap();
+    cfg.workload.batch_size = 16;
+    cfg.workload.num_batches = 1;
+    cfg.workload.embedding.num_tables = 4;
+    cfg.workload.embedding.rows_per_table = 20_000;
+    cfg.workload.embedding.pool = 16;
+    assert_eq!(cfg.hardware.num_cores, 4);
+    assert!(cfg.hardware.mem.global.is_some());
+    let report = Simulator::new(cfg).run().unwrap();
+    assert!(report.total_mem().global_hits > 0, "global buffer must see hits");
+}

@@ -1,0 +1,219 @@
+//! Property-based tests over the simulator's invariants, using the
+//! in-repo `forall` harness (DESIGN.md §6; no proptest crate offline).
+//! Each property runs across randomized configs/traces with replayable
+//! seeds.
+
+use eonsim::champsim::{ChampCache, ChampPolicy};
+use eonsim::config::{presets, CachePolicyKind, OnchipPolicy, SimConfig};
+use eonsim::engine::Simulator;
+use eonsim::mem::{Cache, MemController};
+use eonsim::testutil::{forall, SplitMix64};
+use eonsim::trace::{AddressMap, RowPermutation, TraceGenerator, ZipfSampler};
+
+fn random_small_cfg(rng: &mut SplitMix64) -> SimConfig {
+    let mut cfg = presets::tpuv6e_dlrm_small();
+    cfg.workload.batch_size = 1 + rng.next_below(24) as usize;
+    cfg.workload.num_batches = 1 + rng.next_below(2) as usize;
+    cfg.workload.embedding.num_tables = 1 + rng.next_below(8) as usize;
+    cfg.workload.embedding.rows_per_table = 1000 + rng.next_below(50_000);
+    cfg.workload.embedding.pool = 1 + rng.next_below(32) as usize;
+    cfg.workload.embedding.dim = [16usize, 32, 64, 128][rng.next_below(4) as usize];
+    cfg.workload.trace.alpha = rng.next_f64() * 1.3;
+    cfg.workload.trace.seed = rng.next_u64();
+    cfg.hardware.mem.onchip_bytes = 1 << (16 + rng.next_below(8)); // 64KB..8MB
+    cfg
+}
+
+/// hits + misses == total line accesses, for every cache policy.
+#[test]
+fn prop_cache_count_conservation() {
+    forall("cache count conservation", 12, |rng| {
+        let mut cfg = random_small_cfg(rng);
+        let kind = [
+            CachePolicyKind::Lru,
+            CachePolicyKind::Srrip,
+            CachePolicyKind::Fifo,
+            CachePolicyKind::Random,
+        ][rng.next_below(4) as usize];
+        cfg.hardware.mem.policy = OnchipPolicy::Cache(kind);
+        let report = Simulator::new(cfg.clone()).run().unwrap();
+        let m = report.total_mem();
+        let lines = cfg.workload.lookups_per_batch()
+            * cfg.workload.num_batches as u64
+            * AddressMap::new(&cfg.workload.embedding, 64).lines_per_vec();
+        assert_eq!(m.hits + m.misses, lines, "policy {}", kind.name());
+        assert_eq!(m.offchip_reads, m.misses + mlp_lines(&cfg));
+    });
+}
+
+fn mlp_lines(cfg: &SimConfig) -> u64 {
+    // the engine adds MLP staging traffic to offchip_reads; recompute it
+    let mut bytes = 0u64;
+    for l in cfg
+        .workload
+        .bottom_layers()
+        .iter()
+        .chain(cfg.workload.top_layers().iter())
+    {
+        bytes += ((l.m * l.k + l.k * l.n + l.m * l.n) * 4) as u64;
+    }
+    (bytes / cfg.hardware.mem.access_granularity) * cfg.workload.num_batches as u64
+}
+
+/// SPM sends exactly every embedding line off-chip, regardless of trace.
+#[test]
+fn prop_spm_offchip_exactness() {
+    forall("spm offchip exactness", 12, |rng| {
+        let mut cfg = random_small_cfg(rng);
+        cfg.hardware.mem.policy = OnchipPolicy::Spm;
+        let report = Simulator::new(cfg.clone()).run().unwrap();
+        let lines = cfg.workload.lookups_per_batch()
+            * cfg.workload.num_batches as u64
+            * AddressMap::new(&cfg.workload.embedding, 64).lines_per_vec();
+        assert_eq!(report.total_mem().offchip_reads, lines + mlp_lines(&cfg));
+        assert_eq!(report.total_mem().hits, 0);
+    });
+}
+
+/// The two independent cache implementations agree on arbitrary traces
+/// (the Fig. 4a property, generalized).
+#[test]
+fn prop_champsim_equivalence() {
+    forall("champsim equivalence", 10, |rng| {
+        let capacity = 1u64 << (12 + rng.next_below(6)); // 4KB..128KB
+        let ways = [2usize, 4, 8, 16][rng.next_below(4) as usize];
+        let (mut eon_l, mut champ_l) = (
+            Cache::new(capacity, 64, ways, CachePolicyKind::Lru),
+            ChampCache::new(capacity, 64, ways, ChampPolicy::Lru),
+        );
+        let (mut eon_s, mut champ_s) = (
+            Cache::new(capacity, 64, ways, CachePolicyKind::Srrip),
+            ChampCache::new(capacity, 64, ways, ChampPolicy::Srrip),
+        );
+        let z = ZipfSampler::new(1 << 14, rng.next_f64() * 1.3);
+        let mut trng = rng.fork(1);
+        for _ in 0..30_000 {
+            let addr = z.sample(&mut trng) * 64;
+            eon_l.access(addr);
+            champ_l.access(addr);
+            eon_s.access(addr);
+            champ_s.access(addr);
+        }
+        assert_eq!(eon_l.hits(), champ_l.hits(), "lru hits");
+        assert_eq!(eon_l.misses(), champ_l.misses(), "lru misses");
+        assert_eq!(eon_s.hits(), champ_s.hits(), "srrip hits");
+        assert_eq!(eon_s.misses(), champ_s.misses(), "srrip misses");
+    });
+}
+
+/// Simulated time is monotone in batch size (same everything else).
+#[test]
+fn prop_time_monotone_in_batch() {
+    forall("time monotone in batch", 8, |rng| {
+        let mut cfg = random_small_cfg(rng);
+        cfg.hardware.mem.policy = OnchipPolicy::Spm;
+        cfg.workload.batch_size = 4 + rng.next_below(16) as usize;
+        let small = Simulator::new(cfg.clone()).run().unwrap().total_cycles();
+        cfg.workload.batch_size *= 4;
+        let large = Simulator::new(cfg).run().unwrap().total_cycles();
+        assert!(large > small, "large {large} !> small {small}");
+    });
+}
+
+/// Controller completions: every request completes, at or after arrival
+/// plus the minimum device latency.
+#[test]
+fn prop_controller_completion_bounds() {
+    forall("controller completion bounds", 10, |rng| {
+        let hw = presets::tpuv6e_hardware();
+        let window = 1 + rng.next_below(64) as usize;
+        let mut ctrl = MemController::new(&hw.mem.dram, 64, hw.dram_bytes_per_cycle(), window);
+        let n = 2000;
+        let mut completions = Vec::new();
+        for i in 0..n {
+            let addr = rng.next_below(1 << 30) & !63;
+            let arrival = i as u64 / 4;
+            if let Some(c) = ctrl.enqueue(addr, arrival) {
+                completions.push(c);
+            }
+        }
+        completions.extend(ctrl.drain());
+        assert_eq!(completions.len(), n);
+        let min_latency = hw.mem.dram.timing.t_cas; // row-hit floor
+        for c in &completions {
+            assert!(c.done_at >= min_latency, "done {} too early", c.done_at);
+        }
+    });
+}
+
+/// Row permutations are bijective for arbitrary (non-pow2) sizes.
+#[test]
+fn prop_row_permutation_bijective() {
+    forall("row permutation bijective", 10, |rng| {
+        let n = 1 + rng.next_below(20_000);
+        let perm = RowPermutation::new(n, rng.next_u64());
+        let mut seen = vec![false; n as usize];
+        for i in 0..n {
+            let j = perm.apply(i) as usize;
+            assert!(!seen[j]);
+            seen[j] = true;
+        }
+    });
+}
+
+/// Trace generation is deterministic and within-range for random configs.
+#[test]
+fn prop_trace_determinism_and_range() {
+    forall("trace determinism", 10, |rng| {
+        let cfg = random_small_cfg(rng);
+        let a = TraceGenerator::new(&cfg.workload).unwrap().next_batch();
+        let b = TraceGenerator::new(&cfg.workload).unwrap().next_batch();
+        assert_eq!(a.lookups, b.lookups);
+        for l in &a.lookups {
+            assert!(l.row < cfg.workload.embedding.rows_per_table);
+            assert!((l.table as usize) < cfg.workload.embedding.num_tables);
+        }
+    });
+}
+
+/// Energy is monotone in work: more batches -> strictly more energy.
+#[test]
+fn prop_energy_monotone() {
+    forall("energy monotone", 6, |rng| {
+        let mut cfg = random_small_cfg(rng);
+        cfg.workload.num_batches = 1;
+        let e1 = Simulator::new(cfg.clone()).run().unwrap().energy_joules;
+        cfg.workload.num_batches = 3;
+        let e3 = Simulator::new(cfg).run().unwrap().energy_joules;
+        assert!(e3 > e1 * 2.0, "e1 {e1}, e3 {e3}");
+    });
+}
+
+/// Pinning never exceeds capacity and only ever improves on SPM.
+#[test]
+fn prop_pinning_bounded_and_beneficial() {
+    forall("pinning bounded", 8, |rng| {
+        let mut cfg = random_small_cfg(rng);
+        cfg.workload.trace.alpha = 0.9 + rng.next_f64() * 0.4;
+        cfg.hardware.mem.policy = OnchipPolicy::Pinning;
+        let pin = Simulator::new(cfg.clone()).run().unwrap();
+        cfg.hardware.mem.policy = OnchipPolicy::Spm;
+        let spm = Simulator::new(cfg.clone()).run().unwrap();
+        assert!(pin.total_cycles() <= spm.total_cycles());
+        // pinned hits are bounded by capacity * accesses-per-vector
+        let m = pin.total_mem();
+        assert_eq!(m.hits + m.misses, spm.total_mem().offchip_reads - mlp_lines(&cfg));
+    });
+}
+
+/// The engine's exec time equals cycles / frequency exactly.
+#[test]
+fn prop_time_cycle_consistency() {
+    forall("time==cycles/freq", 6, |rng| {
+        let cfg = random_small_cfg(rng);
+        let freq = cfg.hardware.freq_ghz;
+        let report = Simulator::new(cfg).run().unwrap();
+        let want = report.total_cycles() as f64 / (freq * 1e9);
+        assert!((report.exec_time_secs() - want).abs() < 1e-12);
+    });
+}

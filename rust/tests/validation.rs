@@ -1,0 +1,136 @@
+//! Paper-validation regression tests: fast, reduced-scale versions of
+//! every figure's claim, so `cargo test` guards the reproduction shape
+//! (full-scale numbers live in EXPERIMENTS.md and the benches).
+
+use eonsim::config::presets::ReuseDataset;
+use eonsim::engine::Simulator;
+use eonsim::figures;
+use eonsim::tpuv6e;
+
+/// Fig. 3a shape: exec-time error vs the TPUv6e baseline stays
+/// single-digit-percent while sweeping tables (paper: avg 2 %).
+#[test]
+fn fig3a_error_band() {
+    let pts = figures::fig3a(&[30, 60], 64).unwrap();
+    for p in &pts {
+        assert!(
+            p.err_pct() < 8.0,
+            "tables {}: err {:.2}% out of band",
+            p.x,
+            p.err_pct()
+        );
+    }
+    // time grows with tables
+    assert!(pts[1].eonsim_secs > pts[0].eonsim_secs);
+    assert!(pts[1].tpuv6e_secs > pts[0].tpuv6e_secs);
+}
+
+/// Fig. 3b shape: error band holds across batch sizes (paper: 1.4 % avg,
+/// 4 % max).
+#[test]
+fn fig3b_error_band() {
+    let pts = figures::fig3b(&[32, 128], 60).unwrap();
+    for p in &pts {
+        assert!(
+            p.err_pct() < 8.0,
+            "batch {}: err {:.2}% out of band",
+            p.x,
+            p.err_pct()
+        );
+    }
+    assert!(figures::mean_err_pct(&pts) < 5.0);
+}
+
+/// Fig. 3c shape: access-count estimates track the baseline within a few
+/// percent (paper: 2.2 % / 2.8 %).
+#[test]
+fn fig3c_access_count_band() {
+    for p in figures::fig3c(&[64], 60).unwrap() {
+        assert!(p.onchip_err_pct() < 6.0, "onchip err {:.2}%", p.onchip_err_pct());
+        assert!(p.offchip_err_pct() < 6.0, "offchip err {:.2}%", p.offchip_err_pct());
+    }
+}
+
+/// Fig. 4a: EONSim's cache and the ChampSim-style comparator are
+/// *identical* under LRU and SRRIP (paper: identical).
+#[test]
+fn fig4a_champsim_identical() {
+    for c in figures::fig4a(4 << 20, 1, 32).unwrap() {
+        assert!(
+            c.identical(),
+            "{} {} diverged: {}/{} vs {}/{}",
+            c.dataset,
+            c.policy,
+            c.eonsim_hits,
+            c.eonsim_misses,
+            c.champsim_hits,
+            c.champsim_misses
+        );
+    }
+}
+
+/// Fig. 4b shape: cache policies speed up skewed workloads; profiling
+/// pinning wins; low-reuse gains least.
+#[test]
+fn fig4b_speedup_shape() {
+    let rows = figures::fig4bc(64, 1, 32 << 20).unwrap();
+    let get = |d: &str, p: &str| {
+        rows.iter()
+            .find(|r| r.dataset == d && r.policy == p)
+            .unwrap()
+            .speedup_vs_spm
+    };
+    assert!(get("reuse_high", "lru") > 1.3, "lru high {}", get("reuse_high", "lru"));
+    assert!(get("reuse_high", "srrip") > 1.3);
+    assert!(get("reuse_low", "lru") < get("reuse_high", "lru"));
+    for d in ["reuse_high", "reuse_mid", "reuse_low"] {
+        assert!(get(d, "profiling") >= get(d, "lru") - 1e-9, "profiling on {d}");
+    }
+}
+
+/// Fig. 4c shape: on-chip ratio ordering (profiling > srrip >= lru > spm)
+/// and degradation with low skew.
+#[test]
+fn fig4c_ratio_shape() {
+    let rows = figures::fig4bc(64, 1, 32 << 20).unwrap();
+    let get = |d: &str, p: &str| {
+        rows.iter()
+            .find(|r| r.dataset == d && r.policy == p)
+            .unwrap()
+            .onchip_ratio
+    };
+    for d in ["reuse_high", "reuse_mid", "reuse_low"] {
+        assert!(get(d, "srrip") >= get(d, "lru") - 1e-9, "srrip vs lru on {d}");
+        assert!(get(d, "lru") > get(d, "spm"), "cache vs spm on {d}");
+        assert!(get(d, "profiling") > get(d, "spm"));
+    }
+    assert!(get("reuse_high", "lru") > get("reuse_low", "lru"), "skew governs ratio");
+}
+
+/// The reuse presets produce materially different workloads.
+#[test]
+fn reuse_datasets_are_distinguishable() {
+    let mut ratios = Vec::new();
+    for ds in ReuseDataset::all() {
+        let mut cfg = figures::validation_config(64, 20);
+        cfg.workload.trace = ds.trace_config(7);
+        cfg.hardware.mem.policy =
+            eonsim::config::OnchipPolicy::Cache(eonsim::config::CachePolicyKind::Lru);
+        cfg.hardware.mem.onchip_bytes = 32 << 20;
+        let report = Simulator::new(cfg).run().unwrap();
+        ratios.push(report.total_mem().hit_rate());
+    }
+    assert!(ratios[0] > ratios[1], "high > mid hit rate: {ratios:?}");
+    assert!(ratios[1] > ratios[2], "mid > low hit rate: {ratios:?}");
+}
+
+/// Headline: the full validation config's error at batch 256 (the
+/// calibration point must not drift).
+#[test]
+fn headline_validation_error() {
+    let cfg = figures::validation_config(256, 60);
+    let report = Simulator::new(cfg.clone()).run().unwrap();
+    let measured = tpuv6e::measure(&cfg).unwrap();
+    let err = (report.exec_time_secs() - measured.exec_secs).abs() / measured.exec_secs;
+    assert!(err < 0.05, "headline error {:.2}% >= 5%", err * 100.0);
+}
