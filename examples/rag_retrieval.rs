@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = SimConfig {
             hardware: presets::tpuv6e_hardware(),
             workload: wl.clone(),
+            sharding: eonsim::config::ShardingConfig::default(),
             seed: 7,
         };
         cfg.hardware.mem.policy = policy;

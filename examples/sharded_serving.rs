@@ -1,0 +1,66 @@
+//! Multi-device table-sharded serving: sweep the DLRM workload across
+//! 1/2/4/8 NPU devices under both shard strategies and print the
+//! embedding-stage scaling curve — gather/pool cycles, the all-to-all
+//! exchange cost, per-device load balance, and end-to-end speedup.
+//!
+//! This is the production-serving scenario TensorDIMM-style systems
+//! target: tables too hot (and, at scale, too large) for one device,
+//! split across an interconnect whose exchange phase is the price of
+//! parallel gathers.
+//!
+//! Run: `cargo run --release --example sharded_serving`
+
+use eonsim::config::{presets, ShardStrategy};
+use eonsim::engine::Simulator;
+
+fn main() -> anyhow::Result<()> {
+    let mut base = presets::tpuv6e_dlrm_small();
+    base.workload.batch_size = 128;
+    base.workload.num_batches = 2;
+    base.workload.embedding.num_tables = 24;
+    base.workload.embedding.rows_per_table = 100_000;
+    base.workload.embedding.pool = 32;
+    base.workload.trace.alpha = 1.1; // skewed serving traffic
+
+    println!("== table-sharded embedding scaling (batch 128, 24 tables, zipf 1.1) ==\n");
+    for strategy in [ShardStrategy::TableWise, ShardStrategy::RowHashed] {
+        println!("-- strategy: {} --", strategy.name());
+        println!(
+            "{:>8} {:>14} {:>12} {:>12} {:>10} {:>10}",
+            "devices", "emb cycles", "exchange", "total", "speedup", "imbalance"
+        );
+        let mut single_total = 0u64;
+        for devices in [1usize, 2, 4, 8] {
+            let mut cfg = base.clone();
+            cfg.sharding.devices = devices;
+            cfg.sharding.strategy = strategy;
+            let report = Simulator::new(cfg).run()?;
+            let emb: u64 = report.per_batch.iter().map(|b| b.cycles.embedding).sum();
+            let exchange: u64 = report.per_batch.iter().map(|b| b.cycles.exchange).sum();
+            let total = report.total_cycles();
+            if devices == 1 {
+                single_total = total;
+            }
+            // load imbalance: busiest / mean device embedding cycles
+            let per_dev = report.total_per_device();
+            let max_c = per_dev.iter().map(|d| d.cycles).max().unwrap_or(0);
+            let mean_c = per_dev.iter().map(|d| d.cycles).sum::<u64>() as f64
+                / per_dev.len().max(1) as f64;
+            println!(
+                "{:>8} {:>14} {:>12} {:>12} {:>9.2}x {:>9.3}",
+                devices,
+                emb,
+                exchange,
+                total,
+                single_total as f64 / total as f64,
+                max_c as f64 / mean_c.max(1.0)
+            );
+        }
+        println!();
+    }
+    println!("takeaways: table-wise sharding scales the gather stage with");
+    println!("device count at a modest all-to-all cost; row-hashing balances");
+    println!("hot tables but pays a larger exchange (every device holds");
+    println!("partials for nearly every bag) — the TensorDIMM trade-off.");
+    Ok(())
+}

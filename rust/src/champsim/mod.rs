@@ -44,6 +44,10 @@ impl ChampCache {
     pub fn new(capacity_bytes: u64, block_bytes: u64, ways: usize, policy: ChampPolicy) -> Self {
         assert!(block_bytes.is_power_of_two());
         let blocks_total = (capacity_bytes / block_bytes).max(1) as usize;
+        // same geometry contract as eonsim's cache (independently
+        // implemented): ways clamp to the block count so the modeled
+        // storage never exceeds the configured capacity
+        let ways = ways.clamp(1, blocks_total);
         let sets_raw = (blocks_total / ways).max(1);
         // ChampSim requires power-of-two set counts as well
         let sets = if sets_raw.is_power_of_two() {

@@ -117,6 +117,68 @@ impl OnchipPolicy {
     }
 }
 
+/// How embedding tables are partitioned across devices in a multi-NPU
+/// deployment (TensorDIMM-style table-wise placement, or row-hashed
+/// scattering for load balance under per-table skew).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Whole tables assigned round-robin to devices. Pooling completes
+    /// locally; the all-to-all exchanges one pooled vector per bag.
+    TableWise,
+    /// Rows hashed to devices irrespective of table. Balances hot rows
+    /// but every device holds partial sums for (almost) every bag, so
+    /// the exchange phase carries more traffic.
+    RowHashed,
+}
+
+impl ShardStrategy {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "table" | "table_wise" | "tablewise" => Ok(Self::TableWise),
+            "row" | "row_hashed" | "rowhashed" => Ok(Self::RowHashed),
+            other => Err(ConfigError::Invalid {
+                key: "sharding.strategy".into(),
+                msg: format!("unknown shard strategy `{other}` (want table|row)"),
+            }),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::TableWise => "table",
+            Self::RowHashed => "row",
+        }
+    }
+}
+
+/// Multi-device sharding configuration. The preset default of one
+/// device keeps every existing single-NPU result bit-identical; more
+/// devices split the embedding stage across per-device memory systems
+/// joined by an all-to-all interconnect.
+#[derive(Debug, Clone)]
+pub struct ShardingConfig {
+    /// Number of NPU devices the embedding tables are sharded across.
+    pub devices: usize,
+    /// Table partitioning strategy.
+    pub strategy: ShardStrategy,
+    /// Per-device all-to-all link bandwidth in bytes per core cycle
+    /// (ICI/NVLink-class serdes; TPU ICI ≈ 100 GB/s/link ≈ 100 B/cycle).
+    pub link_bytes_per_cycle: f64,
+    /// Fixed per-exchange latency in core cycles (launch + network hop).
+    pub hop_latency_cycles: u64,
+}
+
+impl Default for ShardingConfig {
+    fn default() -> Self {
+        ShardingConfig {
+            devices: 1,
+            strategy: ShardStrategy::TableWise,
+            link_bytes_per_cycle: 100.0,
+            hop_latency_cycles: 700,
+        }
+    }
+}
+
 /// Vector + matrix unit configuration for one NPU core.
 #[derive(Debug, Clone)]
 pub struct CoreConfig {
@@ -357,6 +419,8 @@ fn chain_layers(batch: usize, input: usize, widths: &[usize]) -> Vec<MnkLayer> {
 pub struct SimConfig {
     pub hardware: HardwareConfig,
     pub workload: WorkloadConfig,
+    /// Multi-device sharding (1 device = the classic single-NPU path).
+    pub sharding: ShardingConfig,
     /// Global simulation seed (forked per component).
     pub seed: u64,
 }
@@ -453,6 +517,16 @@ impl SimConfig {
             tr.path = Some(t.str_("trace.path")?.to_string());
         }
 
+        let s = &mut cfg.sharding;
+        s.devices = t.usize_or("sharding.devices", s.devices)?;
+        if t.contains("sharding.strategy") {
+            s.strategy = ShardStrategy::parse(t.str_("sharding.strategy")?)?;
+        }
+        s.link_bytes_per_cycle =
+            t.float_or("sharding.link_bytes_per_cycle", s.link_bytes_per_cycle)?;
+        s.hop_latency_cycles =
+            t.u64_or("sharding.hop_latency_cycles", s.hop_latency_cycles)?;
+
         cfg.seed = t.u64_or("seed", cfg.seed)?;
         cfg.validate()?;
         Ok(cfg)
@@ -480,12 +554,37 @@ impl SimConfig {
         if self.workload.batch_size == 0 || self.workload.num_batches == 0 {
             return invalid("workload", "batch_size and num_batches must be nonzero".into());
         }
-        if e.total_bytes() > m.dram.capacity_bytes {
+        let s = &self.sharding;
+        if s.devices == 0 {
+            return invalid("sharding.devices", "at least one device required".into());
+        }
+        if !(s.link_bytes_per_cycle > 0.0) {
+            return invalid(
+                "sharding.link_bytes_per_cycle",
+                format!("must be positive, got {}", s.link_bytes_per_cycle),
+            );
+        }
+        // each device holds its shard in its own off-chip memory, so the
+        // capacity check applies to the *busiest* shard: table-wise
+        // round-robin gives one device ceil(tables / devices) whole
+        // tables (lumpy when devices does not divide tables), while
+        // row-hashing spreads rows evenly
+        let shard_bytes = match s.strategy {
+            ShardStrategy::TableWise => {
+                (e.num_tables as u64).div_ceil(s.devices as u64)
+                    * e.rows_per_table
+                    * e.vec_bytes()
+            }
+            ShardStrategy::RowHashed => e.total_bytes().div_ceil(s.devices as u64),
+        };
+        if shard_bytes > m.dram.capacity_bytes {
             return invalid(
                 "embedding",
                 format!(
-                    "embedding data ({} B) exceeds off-chip capacity ({} B)",
-                    e.total_bytes(),
+                    "largest embedding shard ({shard_bytes} B on {} devices, {} sharding) \
+                     exceeds off-chip capacity ({} B)",
+                    s.devices,
+                    s.strategy.name(),
                     m.dram.capacity_bytes
                 ),
             );
@@ -530,6 +629,37 @@ mod tests {
     }
 
     #[test]
+    fn sharding_defaults_to_one_device() {
+        let cfg = SimConfig::from_table(&Table::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.sharding.devices, 1);
+        assert_eq!(cfg.sharding.strategy, ShardStrategy::TableWise);
+    }
+
+    #[test]
+    fn sharding_section_parses() {
+        let t = Table::parse(
+            "[sharding]\ndevices = 4\nstrategy = \"row\"\n\
+             link_bytes_per_cycle = 64\nhop_latency_cycles = 900",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_table(&t).unwrap();
+        assert_eq!(cfg.sharding.devices, 4);
+        assert_eq!(cfg.sharding.strategy, ShardStrategy::RowHashed);
+        assert_eq!(cfg.sharding.link_bytes_per_cycle, 64.0);
+        assert_eq!(cfg.sharding.hop_latency_cycles, 900);
+    }
+
+    #[test]
+    fn shard_strategy_roundtrip_and_rejects() {
+        for s in ["table", "row"] {
+            assert_eq!(ShardStrategy::parse(s).unwrap().name(), s);
+        }
+        assert!(ShardStrategy::parse("diagonal").is_err());
+        let t = Table::parse("[sharding]\ndevices = 0").unwrap();
+        assert!(SimConfig::from_table(&t).is_err());
+    }
+
+    #[test]
     fn rejects_non_pow2_granularity() {
         let t = Table::parse("[mem]\naccess_granularity = 48").unwrap();
         assert!(SimConfig::from_table(&t).is_err());
@@ -539,6 +669,22 @@ mod tests {
     fn rejects_oversized_embedding() {
         let t = Table::parse("[embedding]\nrows_per_table = 10_000_000_000").unwrap();
         assert!(SimConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn shard_capacity_check_uses_busiest_shard() {
+        // one 40 GB table over 4 devices: table-wise cannot split it
+        // (busiest shard = the whole table > 32 GB HBM), row-hashing can
+        let doc = |strategy: &str| {
+            format!(
+                "[embedding]\nnum_tables = 1\nrows_per_table = 80_000_000\n\
+                 [sharding]\ndevices = 4\nstrategy = \"{strategy}\""
+            )
+        };
+        let table = SimConfig::from_table(&Table::parse(&doc("table")).unwrap());
+        assert!(table.is_err(), "lumpy table-wise shard must be rejected");
+        let row = SimConfig::from_table(&Table::parse(&doc("row")).unwrap());
+        assert!(row.is_ok(), "row-hashed split fits per-device capacity");
     }
 
     #[test]

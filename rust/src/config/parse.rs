@@ -42,27 +42,45 @@ impl Value {
 }
 
 /// Parse error with 1-based line information.
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
 
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
 /// Typed-lookup error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("missing config key `{0}`")]
     Missing(String),
-    #[error("config key `{key}`: expected {want}, found {found}")]
     Type {
         key: String,
         want: &'static str,
         found: &'static str,
     },
-    #[error("config key `{key}`: {msg}")]
     Invalid { key: String, msg: String },
 }
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Missing(key) => write!(f, "missing config key `{key}`"),
+            ConfigError::Type { key, want, found } => {
+                write!(f, "config key `{key}`: expected {want}, found {found}")
+            }
+            ConfigError::Invalid { key, msg } => write!(f, "config key `{key}`: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// A flat map of dotted keys to values (section headers are prefixes).
 #[derive(Debug, Clone, Default)]

@@ -71,11 +71,13 @@ pub fn dlrm_rmc2_small(batch_size: usize) -> WorkloadConfig {
     }
 }
 
-/// The paper's validation setup: TPUv6e + DLRM-RMC2-small, batch 256.
+/// The paper's validation setup: TPUv6e + DLRM-RMC2-small, batch 256,
+/// single device (sharding disabled so all paper numbers are exact).
 pub fn tpuv6e_dlrm_small() -> SimConfig {
     SimConfig {
         hardware: tpuv6e_hardware(),
         workload: dlrm_rmc2_small(256),
+        sharding: ShardingConfig::default(),
         seed: 0xE05_1337,
     }
 }

@@ -116,12 +116,23 @@ impl EmbeddingSim {
             kernel_overhead: KERNEL_OVERHEAD,
             onchip_bytes_per_cycle: mem.onchip_bytes_per_cycle,
             line_bytes: mem.access_granularity,
-            lookups_per_sample: emb.num_tables * emb.pool,
+            // guard the round-robin core assignment against pool = 0
+            // (division by zero in simulate_batch)
+            lookups_per_sample: (emb.num_tables * emb.pool).max(1),
             pool: emb.pool,
             dim: emb.dim,
             vpu_lanes: cfg.hardware.core.vpu_lanes,
             vpu_sublanes: cfg.hardware.core.vpu_sublanes,
         }
+    }
+
+    /// Override the per-sample lookup stride used for round-robin core
+    /// assignment. The sharded engine passes each device's sub-trace
+    /// stride (a device sees only its shard's lookups per sample, so the
+    /// full-workload `tables * pool` stride would misalign sample and
+    /// core boundaries). No effect when `num_cores == 1`.
+    pub fn set_lookups_per_sample(&mut self, n: usize) {
+        self.lookups_per_sample = n.max(1);
     }
 
     /// Install the profiling-derived pin set (pinning mode only; every
@@ -284,7 +295,10 @@ impl EmbeddingSim {
 
         let ops = OpCounts {
             macs: 0,
-            vpu_ops: bags * (self.pool as u64 - 1).max(0),
+            // pooling a bag of `pool` vectors takes `pool - 1` adds;
+            // saturate so a degenerate pool = 0 workload counts zero
+            // instead of wrapping (u64 underflow)
+            vpu_ops: bags * (self.pool as u64).saturating_sub(1),
             lookups: trace.lookups.len() as u64,
         };
         EmbeddingStageResult { cycles, mem, ops }
@@ -419,6 +433,20 @@ mod tests {
         assert!(cov8 > 0.9, "deep prefetch should cover the stream, got {cov8}");
         assert!(deep.cycles <= base.cycles, "prefetch must not slow down");
         assert_eq!(deep.mem.offchip_reads, base.mem.offchip_reads, "same traffic");
+    }
+
+    #[test]
+    fn pool_zero_does_not_underflow_op_count() {
+        // regression: `pool as u64 - 1` wrapped (release) / panicked
+        // (debug) when a degenerate workload had pool = 0
+        let mut cfg = small_cfg(OnchipPolicy::Spm);
+        cfg.workload.embedding.pool = 0;
+        let mut sim = EmbeddingSim::new(&cfg);
+        let trace = crate::trace::BatchTrace { batch_index: 0, lookups: Vec::new() };
+        let r = sim.simulate_batch(&trace);
+        assert_eq!(r.ops.vpu_ops, 0);
+        assert_eq!(r.ops.lookups, 0);
+        assert_eq!(r.mem.offchip_reads, 0);
     }
 
     #[test]

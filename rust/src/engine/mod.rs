@@ -15,6 +15,7 @@ use crate::compute::elementwise_cycles;
 use crate::config::{OnchipPolicy, SimConfig};
 use crate::energy::{annotate, EnergyTable};
 use crate::mem::policy::pinning::PinSet;
+use crate::sharding::ShardedEmbeddingSim;
 use crate::stats::{BatchResult, CycleBreakdown, MemCounts, SimReport};
 use crate::trace::TraceGenerator;
 use embedding::EmbeddingSim;
@@ -49,7 +50,9 @@ impl Simulator {
         let elem = w.embedding.elem_bytes;
 
         let mut gen = TraceGenerator::new(w)?;
-        let mut emb_sim = EmbeddingSim::new(cfg);
+        // one embedding simulator per device (1 device = the classic
+        // single-NPU path, bit-identical)
+        let mut emb_sim = ShardedEmbeddingSim::new(cfg);
 
         // Profiling pass for the pinning policy: collect frequency over
         // the whole workload trace (regenerated deterministically), then
@@ -71,6 +74,7 @@ impl Simulator {
             platform: hw.name.clone(),
             policy: hw.mem.policy.name().to_string(),
             batch_size: w.batch_size,
+            num_devices: emb_sim.num_devices(),
             freq_ghz: hw.freq_ghz,
             per_batch: Vec::with_capacity(w.num_batches),
             energy_joules: 0.0,
@@ -112,11 +116,13 @@ impl Simulator {
                 cycles: CycleBreakdown {
                     bottom_mlp: bottom_r.cycles,
                     embedding: emb_r.cycles,
+                    exchange: emb_r.exchange_cycles,
                     interaction,
                     top_mlp: top_r.cycles,
                 },
                 mem,
                 ops,
+                per_device: emb_r.per_device,
             });
         }
 
@@ -204,5 +210,46 @@ mod tests {
         assert_eq!(report.platform, "tpuv6e");
         assert_eq!(report.policy, "spm");
         assert_eq!(report.batch_size, 32);
+        assert_eq!(report.num_devices, 1);
+    }
+
+    #[test]
+    fn single_device_has_no_exchange() {
+        let report = Simulator::new(small_cfg()).run().unwrap();
+        for b in &report.per_batch {
+            assert_eq!(b.cycles.exchange, 0);
+            assert_eq!(b.per_device.len(), 1);
+            assert_eq!(b.per_device[0].exchange_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn sharded_run_reports_per_device_split() {
+        let mut cfg = small_cfg();
+        cfg.workload.trace.alpha = 1.1;
+        cfg.sharding.devices = 4;
+        let mlp_lines: u64 = {
+            let mut bytes = 0u64;
+            for l in cfg
+                .workload
+                .bottom_layers()
+                .iter()
+                .chain(cfg.workload.top_layers().iter())
+            {
+                bytes += ((l.m * l.k + l.k * l.n + l.m * l.n) * 4) as u64;
+            }
+            bytes / cfg.hardware.mem.access_granularity
+        };
+        let report = Simulator::new(cfg).run().unwrap();
+        assert_eq!(report.num_devices, 4);
+        for b in &report.per_batch {
+            assert_eq!(b.per_device.len(), 4);
+            assert!(b.cycles.exchange > 0, "multi-device batch must pay the all-to-all");
+            // batch counters = embedding device sum + MLP staging lines
+            let offchip: u64 = b.per_device.iter().map(|d| d.mem.offchip_reads).sum();
+            assert_eq!(offchip + mlp_lines, b.mem.offchip_reads);
+            let lookups: u64 = b.per_device.iter().map(|d| d.ops.lookups).sum();
+            assert_eq!(lookups, b.ops.lookups);
+        }
     }
 }

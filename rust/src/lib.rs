@@ -32,12 +32,15 @@ pub mod engine;
 pub mod figures;
 pub mod mem;
 pub mod runtime;
+pub mod sharding;
 pub mod stats;
 pub mod testutil;
 pub mod tpuv6e;
 pub mod trace;
 pub mod workload;
 
-pub use config::{CoreConfig, HardwareConfig, MemoryConfig, SimConfig, WorkloadConfig};
+pub use config::{
+    CoreConfig, HardwareConfig, MemoryConfig, ShardingConfig, SimConfig, WorkloadConfig,
+};
 
 

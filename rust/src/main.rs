@@ -9,7 +9,7 @@
 //!   help       this text
 
 use eonsim::cli::Args;
-use eonsim::config::{presets, OnchipPolicy, SimConfig};
+use eonsim::config::{presets, OnchipPolicy, ShardStrategy, SimConfig};
 use eonsim::coordinator::{Coordinator, EngineTiming};
 use eonsim::engine::Simulator;
 use eonsim::runtime::dlrm::{random_request, DlrmExecutor};
@@ -29,6 +29,8 @@ COMMANDS:
                --tables <n>           embedding tables      [60]
                --policy <p>           spm|lru|srrip|brrip|drrip|fifo|random|profiling
                --alpha <x>            trace Zipf exponent   [0.9]
+               --devices <n>          shard tables across n devices [1]
+               --shard-strategy <s>   table|row             [table]
                --csv <file> / --json <file>   write reports
   validate   paper Fig. 3 validation vs the TPUv6e baseline
                --full                 full 32..2048 step-32 batch sweep
@@ -39,7 +41,7 @@ COMMANDS:
                --requests <n>         requests to submit    [100]
                --artifacts <dir>      artifact directory    [artifacts]
   sweep      parameter sweep -> CSV on stdout
-               --param <batch|tables|alpha|onchip_mb|cores>
+               --param <batch|tables|alpha|onchip_mb|cores|devices>
                --values <comma-separated>   e.g. 32,64,128
                --policy <p> [spm]  (plus the `run` flags)
   trace-gen  write an index trace file
@@ -91,6 +93,10 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
     if let Some(p) = args.flag("policy") {
         cfg.hardware.mem.policy = OnchipPolicy::parse(p)?;
     }
+    cfg.sharding.devices = args.usize_flag("devices", cfg.sharding.devices)?;
+    if let Some(s) = args.flag("shard-strategy") {
+        cfg.sharding.strategy = ShardStrategy::parse(s)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -98,13 +104,15 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let cfg = build_config(args)?;
     println!(
-        "simulating {} x {} batches on {} (policy {}, {} tables, zipf α={})",
+        "simulating {} x {} batches on {} (policy {}, {} tables, zipf α={}, {} device(s), {} sharding)",
         cfg.workload.batch_size,
         cfg.workload.num_batches,
         cfg.hardware.name,
         cfg.hardware.mem.policy.name(),
         cfg.workload.embedding.num_tables,
         cfg.workload.trace.alpha,
+        cfg.sharding.devices,
+        cfg.sharding.strategy.name(),
     );
     let t0 = std::time::Instant::now();
     let report = Simulator::new(cfg).run()?;
@@ -125,6 +133,16 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     }
     println!("  energy        : {:.3} mJ", report.energy_joules * 1e3);
     println!("  host wall     : {host:.2} s");
+    if report.num_devices > 1 {
+        let exchange: u64 = report.per_batch.iter().map(|b| b.cycles.exchange).sum();
+        println!("  exchange      : {exchange} cycles (all-to-all)");
+        for d in report.total_per_device() {
+            println!(
+                "    device {}: {:>12} cycles, {:>10} offchip reads, {:>10} exchange B",
+                d.device, d.cycles, d.mem.offchip_reads, d.exchange_bytes
+            );
+        }
+    }
 
     if let Some(path) = args.flag("csv") {
         std::fs::write(path, writer::to_csv(&report))?;
@@ -323,6 +341,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             "alpha" => cfg.workload.trace.alpha = v,
             "onchip_mb" => cfg.hardware.mem.onchip_bytes = (v as u64) << 20,
             "cores" => cfg.hardware.num_cores = v as usize,
+            "devices" => cfg.sharding.devices = v as usize,
             other => anyhow::bail!("unknown sweep param `{other}`"),
         }
         cfg.validate()?;

@@ -41,7 +41,10 @@ const INVALID: u64 = u64::MAX;
 
 impl Cache {
     /// `capacity_bytes` / `line_bytes` / `assoc` must produce >= 1 set;
-    /// sets are rounded down to a power of two for cheap indexing.
+    /// sets are rounded down to a power of two for cheap indexing, and
+    /// ways are clamped to the line count so `sets * ways * line_bytes`
+    /// never exceeds the configured capacity (a tiny capacity with a
+    /// large associativity degenerates to fewer ways, not more storage).
     pub fn new(
         capacity_bytes: u64,
         line_bytes: u64,
@@ -50,7 +53,8 @@ impl Cache {
     ) -> Self {
         assert!(line_bytes.is_power_of_two());
         let lines = (capacity_bytes / line_bytes).max(1) as usize;
-        let sets_raw = (lines / assoc).max(1);
+        let ways = assoc.clamp(1, lines);
+        let sets_raw = (lines / ways).max(1);
         let sets = if sets_raw.is_power_of_two() {
             sets_raw
         } else {
@@ -58,10 +62,10 @@ impl Cache {
         };
         Cache {
             sets,
-            ways: assoc,
+            ways,
             line_bytes,
-            tags: vec![INVALID; sets * assoc],
-            policy: PolicyImpl::new(kind, sets, assoc),
+            tags: vec![INVALID; sets * ways],
+            policy: PolicyImpl::new(kind, sets, ways),
             hits: 0,
             misses: 0,
         }
@@ -183,13 +187,39 @@ mod tests {
 
     #[test]
     fn occupancy_bounded_by_capacity() {
-        forall("occupancy bound", 8, |rng: &mut SplitMix64| {
-            let mut c = Cache::new(1024, 64, 4, CachePolicyKind::Srrip);
+        // randomized over capacity and associativity, including tiny
+        // capacities with assoc > capacity/line (regression: ways used
+        // to stay at `assoc`, letting occupancy exceed capacity)
+        forall("occupancy bound", 16, |rng: &mut SplitMix64| {
+            let capacity = 64u64 << rng.next_below(6); // 64 B .. 2 KiB
+            let assoc = 1usize << rng.next_below(6); // 1 .. 32 ways
+            let kind = [CachePolicyKind::Srrip, CachePolicyKind::Lru]
+                [rng.next_below(2) as usize];
+            let mut c = Cache::new(capacity, 64, assoc, kind);
             for _ in 0..2000 {
                 c.access(rng.next_below(1 << 20) & !63);
             }
-            assert!(c.occupancy() <= 16); // 1024/64
+            assert!(
+                c.occupancy() as u64 * 64 <= capacity,
+                "occupancy {} lines exceeds capacity {capacity} B \
+                 (assoc {assoc}, sets {}, ways {})",
+                c.occupancy(),
+                c.sets(),
+                c.ways()
+            );
         });
+    }
+
+    #[test]
+    fn oversized_assoc_clamps_to_line_count() {
+        // 128 B / 64 B lines = 2 lines, requested 16-way: geometry must
+        // clamp so modeled storage fits the capacity
+        let mut c = Cache::new(128, 64, 16, CachePolicyKind::Lru);
+        assert!(c.sets() * c.ways() <= 2, "{}x{}", c.sets(), c.ways());
+        for i in 0..64u64 {
+            c.access(i * 64);
+        }
+        assert!(c.occupancy() <= 2);
     }
 
     #[test]

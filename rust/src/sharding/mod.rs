@@ -1,0 +1,413 @@
+//! Multi-device table-sharded embedding simulation.
+//!
+//! Production DLRM serving shards its embedding tables across many NPU
+//! devices (TensorDIMM-style placement): each device owns a shard in its
+//! *own* memory system (local buffers + controller + HBM), gathers and
+//! pools its share of every batch, and an all-to-all exchange
+//! redistributes the pooled vectors to each sample's home device before
+//! feature interaction. This module models exactly that:
+//!
+//! * [`TablePartitioner`] splits a [`BatchTrace`] across `N` devices —
+//!   table-wise (whole tables round-robin) or row-hashed (rows scattered
+//!   by hash for load balance under per-table skew);
+//! * [`ShardedEmbeddingSim`] drives one persistent
+//!   [`EmbeddingSim`] per device over its sub-trace, so cross-batch
+//!   on-chip reuse is preserved per shard;
+//! * an interconnect model charges the embedding-exchange phase from the
+//!   busiest device's send volume over a configurable link bandwidth
+//!   plus a fixed hop latency.
+//!
+//! With one device (the preset default) the partitioner is the identity,
+//! the exchange is free, and every result is bit-identical to the
+//! classic single-NPU path.
+
+use crate::config::{ShardStrategy, SimConfig};
+use crate::engine::embedding::EmbeddingSim;
+use crate::mem::policy::pinning::PinSet;
+use crate::stats::{DeviceCounters, MemCounts, OpCounts};
+use crate::testutil::mix64;
+use crate::trace::{BatchTrace, Lookup};
+
+/// One device's share of a batch: its lookups (in original issue order)
+/// and the number of distinct bags it contributes pooled vectors to.
+#[derive(Debug, Clone)]
+pub struct DeviceTrace {
+    pub trace: BatchTrace,
+    /// Distinct `(sample, table)` bags this device holds (partial or
+    /// complete) pooled results for — the unit of exchange traffic.
+    pub bags: u64,
+}
+
+/// Splits batch traces across devices according to a [`ShardStrategy`].
+#[derive(Debug, Clone)]
+pub struct TablePartitioner {
+    devices: usize,
+    strategy: ShardStrategy,
+    /// Lookups per sample (tables * pool), for bag identification.
+    lookups_per_sample: usize,
+}
+
+impl TablePartitioner {
+    pub fn new(devices: usize, strategy: ShardStrategy, lookups_per_sample: usize) -> Self {
+        TablePartitioner {
+            devices: devices.max(1),
+            strategy,
+            lookups_per_sample: lookups_per_sample.max(1),
+        }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Which device serves one lookup.
+    #[inline]
+    pub fn device_of(&self, lookup: &Lookup) -> usize {
+        match self.strategy {
+            ShardStrategy::TableWise => lookup.table as usize % self.devices,
+            ShardStrategy::RowHashed => {
+                (mix64(((lookup.table as u64) << 48) ^ lookup.row) % self.devices as u64) as usize
+            }
+        }
+    }
+
+    /// Split one batch into per-device sub-traces, preserving the
+    /// original issue order within each device. Every lookup lands on
+    /// exactly one device, so all per-lookup counters conserve.
+    pub fn split(&self, trace: &BatchTrace) -> Vec<DeviceTrace> {
+        let mut out: Vec<DeviceTrace> = (0..self.devices)
+            .map(|_| DeviceTrace {
+                trace: BatchTrace {
+                    batch_index: trace.batch_index,
+                    lookups: Vec::with_capacity(trace.lookups.len() / self.devices + 1),
+                },
+                bags: 0,
+            })
+            .collect();
+        // lookups are sample-major then table then pooling slot, so one
+        // bag's lookups are contiguous: a device contributes to a bag
+        // iff its last-seen bag id changes
+        let mut last_bag: Vec<Option<(usize, u32)>> = vec![None; self.devices];
+        for (i, l) in trace.lookups.iter().enumerate() {
+            let d = self.device_of(l);
+            let bag = (i / self.lookups_per_sample, l.table);
+            if last_bag[d] != Some(bag) {
+                last_bag[d] = Some(bag);
+                out[d].bags += 1;
+            }
+            out[d].trace.lookups.push(*l);
+        }
+        out
+    }
+}
+
+/// Result of one batch's sharded embedding stage.
+#[derive(Debug, Clone)]
+pub struct ShardedStageResult {
+    /// Embedding-stage wall cycles: the slowest device's gather+pool.
+    pub cycles: u64,
+    /// All-to-all exchange cycles charged after pooling (0 on 1 device).
+    pub exchange_cycles: u64,
+    /// Memory counters summed over devices.
+    pub mem: MemCounts,
+    /// Operation counters summed over devices.
+    pub ops: OpCounts,
+    /// Per-device split of the same.
+    pub per_device: Vec<DeviceCounters>,
+}
+
+/// Persistent multi-device embedding simulator: one [`EmbeddingSim`]
+/// (local buffers, controller, DRAM state) per device plus the
+/// partitioner and interconnect model.
+pub struct ShardedEmbeddingSim {
+    devices: Vec<EmbeddingSim>,
+    partitioner: TablePartitioner,
+    link_bytes_per_cycle: f64,
+    hop_latency_cycles: u64,
+    /// Bytes of one pooled embedding vector (dim * elem).
+    vec_bytes: u64,
+}
+
+impl ShardedEmbeddingSim {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let n = cfg.sharding.devices.max(1);
+        let emb = &cfg.workload.embedding;
+        let devices = (0..n)
+            .map(|d| {
+                let mut sim = EmbeddingSim::new(cfg);
+                // a device's sub-trace carries only its shard's lookups
+                // per sample: exactly `owned_tables * pool` table-wise
+                // (tables are assigned round-robin, so device d owns one
+                // extra table when d < tables % n), ~`tables * pool / n`
+                // row-hashed — align the per-core sample stride to that
+                let owned_tables =
+                    emb.num_tables / n + usize::from(d < emb.num_tables % n);
+                let per_sample = match cfg.sharding.strategy {
+                    ShardStrategy::TableWise => owned_tables * emb.pool,
+                    ShardStrategy::RowHashed => emb.num_tables * emb.pool / n,
+                };
+                sim.set_lookups_per_sample(per_sample);
+                sim
+            })
+            .collect();
+        ShardedEmbeddingSim {
+            devices,
+            partitioner: TablePartitioner::new(
+                n,
+                cfg.sharding.strategy,
+                emb.num_tables * emb.pool,
+            ),
+            link_bytes_per_cycle: cfg.sharding.link_bytes_per_cycle.max(f64::MIN_POSITIVE),
+            hop_latency_cycles: cfg.sharding.hop_latency_cycles,
+            vec_bytes: emb.vec_bytes(),
+        }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Install the profiling-derived pin set on every device (the
+    /// profile is workload-global; each shard pins its hot vectors).
+    pub fn set_pin_set(&mut self, pins: PinSet) {
+        for dev in &mut self.devices {
+            dev.set_pin_set(pins.clone());
+        }
+    }
+
+    /// All-to-all cycles for per-device send volumes: the busiest
+    /// device's outbound bytes over one link, plus a fixed hop latency.
+    /// Each device keeps `1/N` of its pooled output local, so `N - 1` of
+    /// `N` parts travel.
+    fn exchange_cycles(&self, send_bytes: &[u64]) -> u64 {
+        let max_bytes = send_bytes.iter().copied().max().unwrap_or(0);
+        if max_bytes == 0 {
+            return 0;
+        }
+        self.hop_latency_cycles + (max_bytes as f64 / self.link_bytes_per_cycle).ceil() as u64
+    }
+
+    /// Simulate one batch across all devices.
+    pub fn simulate_batch(&mut self, trace: &BatchTrace) -> ShardedStageResult {
+        let n = self.devices.len();
+        if n == 1 {
+            // single-device fast path: bit-identical to the classic
+            // EmbeddingSim on the unsplit trace, exchange-free
+            let r = self.devices[0].simulate_batch(trace);
+            return ShardedStageResult {
+                cycles: r.cycles,
+                exchange_cycles: 0,
+                mem: r.mem,
+                ops: r.ops,
+                per_device: vec![DeviceCounters {
+                    device: 0,
+                    cycles: r.cycles,
+                    exchange_bytes: 0,
+                    mem: r.mem,
+                    ops: r.ops,
+                }],
+            };
+        }
+
+        let split = self.partitioner.split(trace);
+        let mut mem = MemCounts::default();
+        let mut ops = OpCounts::default();
+        let mut per_device = Vec::with_capacity(n);
+        let mut send_bytes = Vec::with_capacity(n);
+        let mut wall = 0u64;
+        for (device, (sim, part)) in self.devices.iter_mut().zip(&split).enumerate() {
+            let r = sim.simulate_batch(&part.trace);
+            wall = wall.max(r.cycles);
+            mem.add(&r.mem);
+            ops.add(&r.ops);
+            // pooled output for `bags` bags; (n-1)/n of it is remote
+            let bytes = part.bags * self.vec_bytes * (n as u64 - 1) / n as u64;
+            send_bytes.push(bytes);
+            per_device.push(DeviceCounters {
+                device,
+                cycles: r.cycles,
+                exchange_bytes: bytes,
+                mem: r.mem,
+                ops: r.ops,
+            });
+        }
+        ShardedStageResult {
+            cycles: wall,
+            exchange_cycles: self.exchange_cycles(&send_bytes),
+            mem,
+            ops,
+            per_device,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, OnchipPolicy};
+    use crate::trace::TraceGenerator;
+
+    fn small_cfg(devices: usize, strategy: ShardStrategy) -> SimConfig {
+        let mut cfg = presets::tpuv6e_dlrm_small();
+        cfg.workload.batch_size = 32;
+        cfg.workload.embedding.num_tables = 8;
+        cfg.workload.embedding.rows_per_table = 20_000;
+        cfg.workload.embedding.pool = 16;
+        cfg.workload.trace.alpha = 1.1;
+        cfg.hardware.mem.policy = OnchipPolicy::Spm;
+        cfg.sharding.devices = devices;
+        cfg.sharding.strategy = strategy;
+        cfg
+    }
+
+    fn one_batch(cfg: &SimConfig) -> BatchTrace {
+        TraceGenerator::new(&cfg.workload).unwrap().next_batch()
+    }
+
+    #[test]
+    fn table_wise_assigns_whole_tables() {
+        let p = TablePartitioner::new(4, ShardStrategy::TableWise, 128);
+        for table in 0..16u32 {
+            let d = p.device_of(&Lookup { table, row: 0 });
+            assert_eq!(d, table as usize % 4);
+            // rows never move a table-wise lookup
+            assert_eq!(d, p.device_of(&Lookup { table, row: 12345 }));
+        }
+    }
+
+    #[test]
+    fn row_hashed_spreads_rows_of_one_table() {
+        let p = TablePartitioner::new(4, ShardStrategy::RowHashed, 128);
+        let mut seen = [false; 4];
+        for row in 0..64 {
+            seen[p.device_of(&Lookup { table: 0, row })] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "64 rows must touch all 4 devices");
+    }
+
+    #[test]
+    fn split_conserves_and_preserves_order() {
+        let cfg = small_cfg(4, ShardStrategy::RowHashed);
+        let trace = one_batch(&cfg);
+        let p = TablePartitioner::new(
+            4,
+            ShardStrategy::RowHashed,
+            cfg.workload.embedding.num_tables * cfg.workload.embedding.pool,
+        );
+        let split = p.split(&trace);
+        let total: usize = split.iter().map(|d| d.trace.lookups.len()).sum();
+        assert_eq!(total, trace.lookups.len());
+        // each sub-trace is a subsequence of the original
+        for d in &split {
+            let mut cursor = trace.lookups.iter();
+            for l in &d.trace.lookups {
+                assert!(cursor.any(|x| x == l), "order violated for {l:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn table_wise_bag_count_is_owned_tables_times_batch() {
+        let cfg = small_cfg(4, ShardStrategy::TableWise);
+        let trace = one_batch(&cfg);
+        let p = TablePartitioner::new(
+            4,
+            ShardStrategy::TableWise,
+            cfg.workload.embedding.num_tables * cfg.workload.embedding.pool,
+        );
+        let split = p.split(&trace);
+        // 8 tables over 4 devices = 2 tables each; every (sample, table)
+        // bag is complete on its owner
+        for d in &split {
+            assert_eq!(d.bags, 2 * cfg.workload.batch_size as u64);
+        }
+    }
+
+    #[test]
+    fn single_device_is_bit_identical_to_embedding_sim() {
+        let cfg = small_cfg(1, ShardStrategy::TableWise);
+        let trace = one_batch(&cfg);
+        let mut plain = EmbeddingSim::new(&cfg);
+        let mut sharded = ShardedEmbeddingSim::new(&cfg);
+        let a = plain.simulate_batch(&trace);
+        let b = sharded.simulate_batch(&trace);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.mem, b.mem);
+        assert_eq!(b.exchange_cycles, 0);
+        assert_eq!(b.per_device.len(), 1);
+    }
+
+    #[test]
+    fn counters_conserve_across_devices_under_spm() {
+        // SPM streams every line off-chip, so per-device sums must equal
+        // the 1-device run exactly, for both strategies
+        for strategy in [ShardStrategy::TableWise, ShardStrategy::RowHashed] {
+            let cfg1 = small_cfg(1, strategy);
+            let trace = one_batch(&cfg1);
+            let one = ShardedEmbeddingSim::new(&cfg1).simulate_batch(&trace);
+            let cfg4 = small_cfg(4, strategy);
+            let mut sim4 = ShardedEmbeddingSim::new(&cfg4);
+            let four = sim4.simulate_batch(&trace);
+            assert_eq!(four.mem.offchip_reads, one.mem.offchip_reads, "{strategy:?}");
+            assert_eq!(four.mem.hits, one.mem.hits, "{strategy:?}");
+            assert_eq!(four.ops.lookups, one.ops.lookups, "{strategy:?}");
+            let dev_sum: u64 = four.per_device.iter().map(|d| d.mem.offchip_reads).sum();
+            assert_eq!(dev_sum, one.mem.offchip_reads, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn sharding_is_deterministic() {
+        let cfg = small_cfg(4, ShardStrategy::RowHashed);
+        let trace = one_batch(&cfg);
+        let a = ShardedEmbeddingSim::new(&cfg).simulate_batch(&trace);
+        let b = ShardedEmbeddingSim::new(&cfg).simulate_batch(&trace);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.exchange_cycles, b.exchange_cycles);
+        assert_eq!(a.mem, b.mem);
+    }
+
+    #[test]
+    fn more_devices_never_slow_the_embedding_stage() {
+        let mut prev = u64::MAX;
+        for devices in [1usize, 2, 4] {
+            let cfg = small_cfg(devices, ShardStrategy::TableWise);
+            let trace = one_batch(&cfg);
+            let r = ShardedEmbeddingSim::new(&cfg).simulate_batch(&trace);
+            assert!(
+                r.cycles <= prev,
+                "{devices} devices: {} cycles > previous {prev}",
+                r.cycles
+            );
+            prev = r.cycles;
+        }
+    }
+
+    #[test]
+    fn exchange_positive_on_multi_device_and_scales_with_links() {
+        let cfg = small_cfg(4, ShardStrategy::TableWise);
+        let trace = one_batch(&cfg);
+        let r = ShardedEmbeddingSim::new(&cfg).simulate_batch(&trace);
+        assert!(r.exchange_cycles > cfg.sharding.hop_latency_cycles);
+
+        let mut fast = cfg.clone();
+        fast.sharding.link_bytes_per_cycle *= 8.0;
+        let rf = ShardedEmbeddingSim::new(&fast).simulate_batch(&trace);
+        assert!(rf.exchange_cycles < r.exchange_cycles, "faster links must shrink exchange");
+    }
+
+    #[test]
+    fn row_hashed_exchanges_more_than_table_wise() {
+        // row-hashing leaves nearly every device with partials for
+        // nearly every bag — the classic row-wise reduce cost
+        let cfg_t = small_cfg(4, ShardStrategy::TableWise);
+        let trace = one_batch(&cfg_t);
+        let t = ShardedEmbeddingSim::new(&cfg_t).simulate_batch(&trace);
+        let cfg_r = small_cfg(4, ShardStrategy::RowHashed);
+        let r = ShardedEmbeddingSim::new(&cfg_r).simulate_batch(&trace);
+        let sum = |x: &ShardedStageResult| -> u64 {
+            x.per_device.iter().map(|d| d.exchange_bytes).sum()
+        };
+        assert!(sum(&r) > sum(&t), "row {} !> table {}", sum(&r), sum(&t));
+    }
+}

@@ -90,6 +90,8 @@ pub struct CycleBreakdown {
     pub bottom_mlp: u64,
     /// Embedding gather + pooling (cycle-level memory sim + VPU).
     pub embedding: u64,
+    /// All-to-all embedding exchange between devices (0 on one device).
+    pub exchange: u64,
     /// Feature interaction (VPU).
     pub interaction: u64,
     /// Top-MLP.
@@ -98,8 +100,21 @@ pub struct CycleBreakdown {
 
 impl CycleBreakdown {
     pub fn total(&self) -> u64 {
-        self.bottom_mlp + self.embedding + self.interaction + self.top_mlp
+        self.bottom_mlp + self.embedding + self.exchange + self.interaction + self.top_mlp
     }
+}
+
+/// Per-device embedding-stage counters for one batch (multi-device
+/// sharded runs; a single-device run reports one entry).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeviceCounters {
+    pub device: usize,
+    /// Embedding-stage cycles this device spent on its shard.
+    pub cycles: u64,
+    /// Bytes this device contributed to the all-to-all exchange.
+    pub exchange_bytes: u64,
+    pub mem: MemCounts,
+    pub ops: OpCounts,
 }
 
 /// Result of one simulated batch.
@@ -109,6 +124,8 @@ pub struct BatchResult {
     pub cycles: CycleBreakdown,
     pub mem: MemCounts,
     pub ops: OpCounts,
+    /// Per-device embedding-stage split (one entry per device).
+    pub per_device: Vec<DeviceCounters>,
 }
 
 /// Overall simulation output: per-batch results + aggregates.
@@ -117,6 +134,8 @@ pub struct SimReport {
     pub platform: String,
     pub policy: String,
     pub batch_size: usize,
+    /// Devices the embedding stage was sharded across.
+    pub num_devices: usize,
     pub freq_ghz: f64,
     pub per_batch: Vec<BatchResult>,
     /// Total energy estimate in joules (filled by the energy model).
@@ -157,6 +176,30 @@ impl SimReport {
             self.exec_time_secs() / self.per_batch.len() as f64
         }
     }
+
+    /// Aggregate per-device counters over all batches, indexed by
+    /// device id (empty when no batch recorded a device split).
+    pub fn total_per_device(&self) -> Vec<DeviceCounters> {
+        let n = self
+            .per_batch
+            .iter()
+            .map(|b| b.per_device.len())
+            .max()
+            .unwrap_or(0);
+        let mut out: Vec<DeviceCounters> = (0..n)
+            .map(|device| DeviceCounters { device, ..Default::default() })
+            .collect();
+        for b in &self.per_batch {
+            for d in &b.per_device {
+                let slot = &mut out[d.device];
+                slot.cycles += d.cycles;
+                slot.exchange_bytes += d.exchange_bytes;
+                slot.mem.add(&d.mem);
+                slot.ops.add(&d.ops);
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -166,7 +209,13 @@ mod tests {
     fn batch(i: usize, emb: u64, hits: u64, misses: u64) -> BatchResult {
         BatchResult {
             batch_index: i,
-            cycles: CycleBreakdown { bottom_mlp: 10, embedding: emb, interaction: 5, top_mlp: 7 },
+            cycles: CycleBreakdown {
+                bottom_mlp: 10,
+                embedding: emb,
+                exchange: 0,
+                interaction: 5,
+                top_mlp: 7,
+            },
             mem: MemCounts {
                 onchip_reads: hits,
                 onchip_writes: misses,
@@ -177,6 +226,7 @@ mod tests {
                 global_hits: 0,
             },
             ops: OpCounts { macs: 100, vpu_ops: 50, lookups: 20 },
+            per_device: Vec::new(),
         }
     }
 
@@ -192,6 +242,7 @@ mod tests {
             platform: "t".into(),
             policy: "lru".into(),
             batch_size: 4,
+            num_devices: 1,
             freq_ghz: 1.0,
             per_batch: vec![batch(0, 100, 8, 2), batch(1, 200, 6, 4)],
             energy_joules: 0.0,
@@ -227,5 +278,50 @@ mod tests {
         assert_eq!(m.onchip_ratio(), 0.0);
         assert_eq!(m.hit_rate(), 0.0);
         assert_eq!(SimReport::default().mean_batch_secs(), 0.0);
+        assert!(SimReport::default().total_per_device().is_empty());
+    }
+
+    #[test]
+    fn exchange_counts_toward_total() {
+        let c = CycleBreakdown {
+            bottom_mlp: 1,
+            embedding: 2,
+            exchange: 40,
+            interaction: 3,
+            top_mlp: 4,
+        };
+        assert_eq!(c.total(), 50);
+    }
+
+    #[test]
+    fn per_device_aggregation_sums_by_device() {
+        let dev = |device, cycles, offchip| DeviceCounters {
+            device,
+            cycles,
+            exchange_bytes: 10,
+            mem: MemCounts { offchip_reads: offchip, ..Default::default() },
+            ops: OpCounts { lookups: 5, ..Default::default() },
+        };
+        let mut b0 = batch(0, 100, 0, 0);
+        b0.per_device = vec![dev(0, 10, 7), dev(1, 20, 9)];
+        let mut b1 = batch(1, 100, 0, 0);
+        b1.per_device = vec![dev(0, 30, 1), dev(1, 40, 2)];
+        let report = SimReport {
+            platform: "t".into(),
+            policy: "spm".into(),
+            batch_size: 4,
+            num_devices: 2,
+            freq_ghz: 1.0,
+            per_batch: vec![b0, b1],
+            energy_joules: 0.0,
+        };
+        let totals = report.total_per_device();
+        assert_eq!(totals.len(), 2);
+        assert_eq!(totals[0].cycles, 40);
+        assert_eq!(totals[1].cycles, 60);
+        assert_eq!(totals[0].mem.offchip_reads, 8);
+        assert_eq!(totals[1].mem.offchip_reads, 11);
+        assert_eq!(totals[1].exchange_bytes, 20);
+        assert_eq!(totals[0].ops.lookups, 10);
     }
 }

@@ -9,16 +9,17 @@ use std::fmt::Write as _;
 pub fn to_csv(report: &SimReport) -> String {
     let mut out = String::new();
     out.push_str(
-        "batch,bottom_mlp_cycles,embedding_cycles,interaction_cycles,top_mlp_cycles,\
+        "batch,bottom_mlp_cycles,embedding_cycles,exchange_cycles,interaction_cycles,top_mlp_cycles,\
          total_cycles,onchip_reads,onchip_writes,offchip_reads,offchip_writes,hits,misses,global_hits\n",
     );
     for b in &report.per_batch {
         let _ = writeln!(
             out,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             b.batch_index,
             b.cycles.bottom_mlp,
             b.cycles.embedding,
+            b.cycles.exchange,
             b.cycles.interaction,
             b.cycles.top_mlp,
             b.cycles.total(),
@@ -34,18 +35,40 @@ pub fn to_csv(report: &SimReport) -> String {
     out
 }
 
+fn device_json(d: &crate::stats::DeviceCounters) -> String {
+    format!(
+        concat!(
+            "{{\"device\":{},\"cycles\":{},\"exchange_bytes\":{},",
+            "\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
+            "\"hits\":{},\"misses\":{},\"lookups\":{}}}"
+        ),
+        d.device,
+        d.cycles,
+        d.exchange_bytes,
+        d.mem.onchip_reads,
+        d.mem.onchip_writes,
+        d.mem.offchip_reads,
+        d.mem.hits,
+        d.mem.misses,
+        d.ops.lookups,
+    )
+}
+
 fn batch_json(b: &BatchResult) -> String {
+    let per_device: Vec<String> = b.per_device.iter().map(device_json).collect();
     format!(
         concat!(
             "{{\"batch\":{},\"cycles\":{{\"bottom_mlp\":{},\"embedding\":{},",
-            "\"interaction\":{},\"top_mlp\":{},\"total\":{}}},",
+            "\"exchange\":{},\"interaction\":{},\"top_mlp\":{},\"total\":{}}},",
             "\"mem\":{{\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
             "\"offchip_writes\":{},\"hits\":{},\"misses\":{},\"global_hits\":{}}},",
-            "\"ops\":{{\"macs\":{},\"vpu_ops\":{},\"lookups\":{}}}}}"
+            "\"ops\":{{\"macs\":{},\"vpu_ops\":{},\"lookups\":{}}},",
+            "\"per_device\":[{}]}}"
         ),
         b.batch_index,
         b.cycles.bottom_mlp,
         b.cycles.embedding,
+        b.cycles.exchange,
         b.cycles.interaction,
         b.cycles.top_mlp,
         b.cycles.total(),
@@ -59,6 +82,7 @@ fn batch_json(b: &BatchResult) -> String {
         b.ops.macs,
         b.ops.vpu_ops,
         b.ops.lookups,
+        per_device.join(","),
     )
 }
 
@@ -69,6 +93,7 @@ pub fn to_json(report: &SimReport) -> String {
     format!(
         concat!(
             "{{\"platform\":\"{}\",\"policy\":\"{}\",\"batch_size\":{},",
+            "\"num_devices\":{},",
             "\"freq_ghz\":{},\"total_cycles\":{},\"exec_time_secs\":{:e},",
             "\"onchip_ratio\":{:.6},\"hit_rate\":{:.6},\"energy_joules\":{:e},",
             "\"per_batch\":[{}]}}"
@@ -76,6 +101,7 @@ pub fn to_json(report: &SimReport) -> String {
         report.platform,
         report.policy,
         report.batch_size,
+        report.num_devices,
         report.freq_ghz,
         report.total_cycles(),
         report.exec_time_secs(),
@@ -96,10 +122,17 @@ mod tests {
             platform: "tpuv6e".into(),
             policy: "lru".into(),
             batch_size: 32,
+            num_devices: 1,
             freq_ghz: 1.0,
             per_batch: vec![BatchResult {
                 batch_index: 0,
-                cycles: CycleBreakdown { bottom_mlp: 1, embedding: 2, interaction: 3, top_mlp: 4 },
+                cycles: CycleBreakdown {
+                    bottom_mlp: 1,
+                    embedding: 2,
+                    exchange: 0,
+                    interaction: 3,
+                    top_mlp: 4,
+                },
                 mem: MemCounts {
                     onchip_reads: 5,
                     onchip_writes: 6,
@@ -110,6 +143,7 @@ mod tests {
                     global_hits: 0,
                 },
                 ops: OpCounts { macs: 8, vpu_ops: 9, lookups: 10 },
+                per_device: Vec::new(),
             }],
             energy_joules: 1.5e-3,
         }
@@ -121,7 +155,8 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("batch,"));
-        assert!(lines[1].starts_with("0,1,2,3,4,10,"));
+        assert!(lines[0].contains("exchange_cycles"));
+        assert!(lines[1].starts_with("0,1,2,0,3,4,10,"));
     }
 
     #[test]
@@ -130,7 +165,30 @@ mod tests {
         assert!(json.starts_with('{') && json.ends_with('}'));
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert!(json.contains("\"platform\":\"tpuv6e\""));
+        assert!(json.contains("\"num_devices\":1"));
         assert!(json.contains("\"total_cycles\":10"));
         assert!(json.contains("\"per_batch\":[{"));
+        assert!(json.contains("\"per_device\":[]"));
+    }
+
+    #[test]
+    fn json_includes_per_device_counters() {
+        let mut r = report();
+        r.num_devices = 2;
+        r.per_batch[0].per_device = vec![
+            crate::stats::DeviceCounters {
+                device: 0,
+                cycles: 11,
+                exchange_bytes: 22,
+                mem: MemCounts { offchip_reads: 3, ..Default::default() },
+                ops: OpCounts { lookups: 4, ..Default::default() },
+            },
+            crate::stats::DeviceCounters { device: 1, ..Default::default() },
+        ];
+        let json = to_json(&r);
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(json.contains("\"num_devices\":2"));
+        assert!(json.contains("\"per_device\":[{\"device\":0,\"cycles\":11,\"exchange_bytes\":22,"));
+        assert!(json.contains("{\"device\":1,"));
     }
 }

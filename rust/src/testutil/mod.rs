@@ -5,6 +5,18 @@
 //! measurement jitter) so *all* simulation runs are reproducible from a
 //! seed.
 
+/// SplitMix64 finalizer: the stateless 64-bit avalanche mix
+/// [`SplitMix64::next_u64`] applies to its counter. Also usable on its
+/// own as a deterministic hash for placement decisions (row→device
+/// scattering, channel hashing) — one definition so every user scatters
+/// identically.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// SplitMix64 — tiny, high-quality 64-bit PRNG (public-domain algorithm).
 ///
 /// Deterministic across platforms; every stochastic component in the
@@ -22,10 +34,7 @@ impl SplitMix64 {
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        z ^ (z >> 31)
+        mix64(self.state)
     }
 
     /// Uniform in `[0, n)` via Lemire's multiply-shift reduction.

@@ -48,11 +48,9 @@ const SUSTAINED_BW_FRACTION: f64 = 0.68;
 /// MLP roofline derate for control/pipeline overheads.
 const MLP_EFFICIENCY: f64 = 0.82;
 
-fn hash64(mut x: u64) -> u64 {
-    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    x ^ (x >> 31)
-}
+// the shared SplitMix64 finalizer (testutil) — a utility hash, not part
+// of the timing/memory model this module keeps independent of `engine`
+use crate::testutil::mix64 as hash64;
 
 /// "Measure" the configured workload on TPUv6e.
 ///

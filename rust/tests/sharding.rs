@@ -1,0 +1,161 @@
+//! Integration tests for the multi-device sharding subsystem: counter
+//! conservation against the single-device path, determinism, scaling
+//! shape, and config/CLI plumbing through the full engine.
+
+use eonsim::config::{presets, ShardStrategy, SimConfig};
+use eonsim::engine::Simulator;
+use eonsim::sharding::{ShardedEmbeddingSim, TablePartitioner};
+use eonsim::trace::TraceGenerator;
+
+fn base_cfg() -> SimConfig {
+    let mut cfg = presets::tpuv6e_dlrm_small();
+    cfg.workload.batch_size = 32;
+    cfg.workload.num_batches = 2;
+    cfg.workload.embedding.num_tables = 12;
+    cfg.workload.embedding.rows_per_table = 50_000;
+    cfg.workload.embedding.pool = 24;
+    cfg.workload.trace.alpha = 1.1; // skewed serving traffic
+    cfg
+}
+
+fn with_devices(devices: usize, strategy: ShardStrategy) -> SimConfig {
+    let mut cfg = base_cfg();
+    cfg.sharding.devices = devices;
+    cfg.sharding.strategy = strategy;
+    cfg
+}
+
+/// Acceptance: per-device offchip reads sum to the 1-device total on the
+/// same trace (SPM streams every line, so conservation is exact), for
+/// both strategies, through the full engine.
+#[test]
+fn offchip_reads_conserve_across_device_counts() {
+    for strategy in [ShardStrategy::TableWise, ShardStrategy::RowHashed] {
+        let one = Simulator::new(with_devices(1, strategy)).run().unwrap();
+        let four = Simulator::new(with_devices(4, strategy)).run().unwrap();
+        // full-report counters (embedding + identical MLP staging) agree
+        assert_eq!(
+            one.total_mem().offchip_reads,
+            four.total_mem().offchip_reads,
+            "{strategy:?}"
+        );
+        assert_eq!(one.total_mem().hits, four.total_mem().hits, "{strategy:?}");
+        assert_eq!(one.total_ops().lookups, four.total_ops().lookups, "{strategy:?}");
+        // and the per-device split sums to the batch embedding counters
+        for (b1, b4) in one.per_batch.iter().zip(&four.per_batch) {
+            let sum1: u64 = b1.per_device.iter().map(|d| d.mem.offchip_reads).sum();
+            let sum4: u64 = b4.per_device.iter().map(|d| d.mem.offchip_reads).sum();
+            assert_eq!(sum1, sum4, "{strategy:?}");
+        }
+    }
+}
+
+/// Acceptance: devices = 1 (the preset default) is bit-identical to the
+/// classic single-device path in cycles and every memory counter.
+#[test]
+fn one_device_matches_default_config_exactly() {
+    let default_run = Simulator::new(base_cfg()).run().unwrap();
+    let explicit = Simulator::new(with_devices(1, ShardStrategy::TableWise))
+        .run()
+        .unwrap();
+    assert_eq!(default_run.total_cycles(), explicit.total_cycles());
+    assert_eq!(default_run.total_mem(), explicit.total_mem());
+    for b in &default_run.per_batch {
+        assert_eq!(b.cycles.exchange, 0);
+    }
+}
+
+/// Determinism: identical configs produce identical sharded reports.
+#[test]
+fn sharded_runs_are_deterministic() {
+    for strategy in [ShardStrategy::TableWise, ShardStrategy::RowHashed] {
+        let a = Simulator::new(with_devices(4, strategy)).run().unwrap();
+        let b = Simulator::new(with_devices(4, strategy)).run().unwrap();
+        assert_eq!(a.total_cycles(), b.total_cycles());
+        assert_eq!(a.total_mem(), b.total_mem());
+        for (ba, bb) in a.per_batch.iter().zip(&b.per_batch) {
+            assert_eq!(ba.per_device, bb.per_device);
+        }
+    }
+}
+
+/// Acceptance: embedding-stage cycles are monotone non-increasing from
+/// 1 to 4 devices on a skewed trace, strictly lower at 4, and the new
+/// exchange component is positive whenever devices > 1.
+#[test]
+fn embedding_cycles_shrink_with_devices() {
+    let emb_cycles = |devices: usize| -> (u64, u64) {
+        let report = Simulator::new(with_devices(devices, ShardStrategy::TableWise))
+            .run()
+            .unwrap();
+        (
+            report.per_batch.iter().map(|b| b.cycles.embedding).sum(),
+            report.per_batch.iter().map(|b| b.cycles.exchange).sum(),
+        )
+    };
+    let (one, ex1) = emb_cycles(1);
+    let (two, ex2) = emb_cycles(2);
+    let (four, ex4) = emb_cycles(4);
+    assert_eq!(ex1, 0);
+    assert!(ex2 > 0 && ex4 > 0);
+    assert!(two <= one, "2 devices: {two} !<= {one}");
+    assert!(four <= two, "4 devices: {four} !<= {two}");
+    assert!(four < one, "4 devices must beat 1: {four} !< {one}");
+}
+
+/// The partitioner sends every lookup to exactly one device and the
+/// table-wise strategy keeps tables whole.
+#[test]
+fn partitioner_covers_every_lookup_exactly_once() {
+    let cfg = base_cfg();
+    let trace = TraceGenerator::new(&cfg.workload).unwrap().next_batch();
+    let lps = cfg.workload.embedding.num_tables * cfg.workload.embedding.pool;
+    for strategy in [ShardStrategy::TableWise, ShardStrategy::RowHashed] {
+        let p = TablePartitioner::new(4, strategy, lps);
+        let split = p.split(&trace);
+        assert_eq!(split.len(), 4);
+        let total: usize = split.iter().map(|d| d.trace.lookups.len()).sum();
+        assert_eq!(total, trace.lookups.len(), "{strategy:?}");
+    }
+    let p = TablePartitioner::new(4, ShardStrategy::TableWise, lps);
+    for d in p.split(&trace) {
+        let mut tables: Vec<u32> = d.trace.lookups.iter().map(|l| l.table).collect();
+        tables.sort_unstable();
+        tables.dedup();
+        for pair in tables.windows(2) {
+            assert_eq!(pair[0] % 4, pair[1] % 4, "table-wise split leaked a table");
+        }
+    }
+}
+
+/// Sharding config loads from a TOML file and drives the engine.
+#[test]
+fn sharded_config_file_drives_engine() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut cfg = SimConfig::from_file(dir.join("sharded_4dev.toml")).unwrap();
+    assert_eq!(cfg.sharding.devices, 4);
+    assert_eq!(cfg.sharding.strategy, ShardStrategy::TableWise);
+    cfg.workload.batch_size = 16;
+    cfg.workload.num_batches = 1;
+    cfg.workload.embedding.num_tables = 8;
+    cfg.workload.embedding.rows_per_table = 20_000;
+    cfg.workload.embedding.pool = 16;
+    let report = Simulator::new(cfg).run().unwrap();
+    assert_eq!(report.num_devices, 4);
+    assert!(report.per_batch[0].cycles.exchange > 0);
+}
+
+/// Warm-state persistence: a second batch through the sharded simulator
+/// continues each device's cycle cursor (state is per-device, like the
+/// single-device engine's persistent hierarchy).
+#[test]
+fn sharded_state_persists_across_batches() {
+    let cfg = with_devices(4, ShardStrategy::TableWise);
+    let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+    let mut sim = ShardedEmbeddingSim::new(&cfg);
+    let r1 = sim.simulate_batch(&gen.next_batch());
+    let r2 = sim.simulate_batch(&gen.next_batch());
+    assert!(r1.cycles > 0 && r2.cycles > 0);
+    assert_eq!(r1.per_device.len(), 4);
+    assert_eq!(r2.per_device.len(), 4);
+}

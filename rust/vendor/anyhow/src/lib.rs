@@ -1,0 +1,166 @@
+//! Vendored offline subset of `anyhow` (DESIGN.md §6: the build
+//! environment has no crates.io access, so external dependencies are
+//! vendored as minimal path crates).
+//!
+//! Provides the surface EONSim uses: [`Error`], [`Result`], and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Any `std::error::Error +
+//! Send + Sync` converts into [`Error`] via `?`, exactly like the real
+//! crate. Context chaining, backtraces, and downcasting are omitted.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Boxed dynamic error, the `anyhow::Error` work-alike.
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+/// `anyhow::Result<T>`: a `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Ad-hoc message error produced by the `anyhow!` macro family.
+struct Message(String);
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for Message {}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(Box::new(Message(message.to_string())))
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error(Box::new(error))
+    }
+
+    /// The underlying dynamic error.
+    pub fn as_dyn(&self) -> &(dyn StdError + Send + Sync + 'static) {
+        &*self.0
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:?}` (and `{:#}` via Display) both render the message plus
+        // the source chain, mirroring anyhow's report formatting.
+        write!(f, "{}", self.0)?;
+        let mut source = self.0.source();
+        while let Some(cause) = source {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error` —
+// that would conflict with the blanket `From` below (via the identity
+// `From<T> for T`), the same reason the real anyhow doesn't.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error(Box::new(error))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let x = 42;
+        let e = anyhow!("value {x} and {}", "more");
+        assert_eq!(e.to_string(), "value 42 and more");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f() -> Result<()> {
+            bail!("stop {}", 7);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop 7");
+    }
+
+    #[test]
+    fn ensure_checks_condition() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "not ok");
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(f(false).unwrap_err().to_string(), "not ok");
+    }
+
+    #[test]
+    fn alternate_format_works() {
+        let e = anyhow!("top");
+        assert_eq!(format!("{e:#}"), "top");
+    }
+}
