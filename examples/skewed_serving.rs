@@ -1,0 +1,97 @@
+//! Skew-aware sharding under Zipfian serving traffic: sweep hot-row
+//! replication K ∈ {0, 64, 1024} against Zipf α ∈ {0.6, 0.9, 1.2} on a
+//! deliberately lumpy 4-device table-sharded deployment (6 tables, so
+//! two devices own two tables and two own one), with exchange/compute
+//! overlap enabled.
+//!
+//! What to look for:
+//!
+//! * at α = 1.2, K = 1024 pulls the load-imbalance factor from the
+//!   structural 4/3 toward 1.0 *and* cuts total cycles — the Zipf head
+//!   is served on-chip at each sample's home device instead of hammering
+//!   the hot tables' owners;
+//! * `exposed ≤ exchange` everywhere: the overlap model only charges the
+//!   remainder the interaction + top-MLP compute cannot hide;
+//! * column-wise (dim-split) sharding reaches imbalance 1.0 without any
+//!   replication, trading it for partial-vector exchange traffic.
+//!
+//! Run: `cargo run --release --example skewed_serving`
+
+use eonsim::config::{presets, ShardStrategy};
+use eonsim::engine::Simulator;
+use eonsim::stats::SimReport;
+
+fn sums(report: &SimReport) -> (u64, u64) {
+    (
+        report.per_batch.iter().map(|b| b.cycles.exchange).sum(),
+        report.per_batch.iter().map(|b| b.cycles.exchange_exposed).sum(),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut base = presets::tpuv6e_dlrm_small();
+    base.workload.batch_size = 64;
+    base.workload.num_batches = 2;
+    base.workload.embedding.num_tables = 6; // lumpy on 4 devices: 2/2/1/1
+    base.workload.embedding.rows_per_table = 100_000;
+    base.workload.embedding.pool = 16;
+    base.sharding.devices = 4;
+    base.sharding.strategy = ShardStrategy::TableWise;
+    base.sharding.overlap_exchange = true;
+
+    println!("== skew-aware serving: 4 devices, 6 tables, table-wise + replication ==\n");
+    println!(
+        "{:>6} {:>6} {:>10} {:>12} {:>10} {:>10} {:>14}",
+        "alpha", "K", "imbalance", "replica-hit%", "exchange", "exposed", "total cycles"
+    );
+    for alpha in [0.6, 0.9, 1.2] {
+        for k in [0usize, 64, 1024] {
+            let mut cfg = base.clone();
+            cfg.workload.trace.alpha = alpha;
+            cfg.sharding.replicate_top_k = k;
+            let report = Simulator::new(cfg).run()?;
+            let (exchange, exposed) = sums(&report);
+            let ops = report.total_ops();
+            println!(
+                "{:>6} {:>6} {:>10.3} {:>11.1}% {:>10} {:>10} {:>14}",
+                alpha,
+                k,
+                report.imbalance_factor(),
+                100.0 * ops.replicated_hits as f64 / ops.lookups.max(1) as f64,
+                exchange,
+                exposed,
+                report.total_cycles()
+            );
+        }
+        println!();
+    }
+
+    println!("-- column-wise (dim-split) for comparison: balanced by construction --");
+    println!(
+        "{:>6} {:>10} {:>10} {:>10} {:>14}",
+        "alpha", "imbalance", "exchange", "exposed", "total cycles"
+    );
+    for alpha in [0.6, 1.2] {
+        let mut cfg = base.clone();
+        cfg.workload.trace.alpha = alpha;
+        cfg.sharding.strategy = ShardStrategy::ColumnWise;
+        let report = Simulator::new(cfg).run()?;
+        let (exchange, exposed) = sums(&report);
+        println!(
+            "{:>6} {:>10.3} {:>10} {:>10} {:>14}",
+            alpha,
+            report.imbalance_factor(),
+            exchange,
+            exposed,
+            report.total_cycles()
+        );
+    }
+
+    println!();
+    println!("takeaways: replication converts the Zipf head into on-chip home-device");
+    println!("hits — balancing load, shedding DRAM traffic, and shrinking the");
+    println!("all-to-all — at the cost of K * vec_bytes pinned per device. Column");
+    println!("splitting balances perfectly without replicas but exchanges a slice of");
+    println!("every bag; overlap hides whatever the top-MLP can cover either way.");
+    Ok(())
+}

@@ -118,8 +118,9 @@ impl OnchipPolicy {
 }
 
 /// How embedding tables are partitioned across devices in a multi-NPU
-/// deployment (TensorDIMM-style table-wise placement, or row-hashed
-/// scattering for load balance under per-table skew).
+/// deployment (TensorDIMM-style table-wise placement, row-hashed
+/// scattering for load balance under per-table skew, or a column-wise
+/// dim-split that keeps every device's load identical by construction).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardStrategy {
     /// Whole tables assigned round-robin to devices. Pooling completes
@@ -129,6 +130,11 @@ pub enum ShardStrategy {
     /// but every device holds partial sums for (almost) every bag, so
     /// the exchange phase carries more traffic.
     RowHashed,
+    /// Each table dim-split across devices: every device gathers its
+    /// `dim / devices` slice of *every* lookup, so load balance is
+    /// perfect and the exchange carries partial vectors (`dim / devices`
+    /// elements per bag per device) that concatenate at the home device.
+    ColumnWise,
 }
 
 impl ShardStrategy {
@@ -136,9 +142,10 @@ impl ShardStrategy {
         match s {
             "table" | "table_wise" | "tablewise" => Ok(Self::TableWise),
             "row" | "row_hashed" | "rowhashed" => Ok(Self::RowHashed),
+            "column" | "column_wise" | "columnwise" | "col" => Ok(Self::ColumnWise),
             other => Err(ConfigError::Invalid {
                 key: "sharding.strategy".into(),
-                msg: format!("unknown shard strategy `{other}` (want table|row)"),
+                msg: format!("unknown shard strategy `{other}` (want table|row|column)"),
             }),
         }
     }
@@ -147,6 +154,7 @@ impl ShardStrategy {
         match self {
             Self::TableWise => "table",
             Self::RowHashed => "row",
+            Self::ColumnWise => "column",
         }
     }
 }
@@ -166,6 +174,16 @@ pub struct ShardingConfig {
     pub link_bytes_per_cycle: f64,
     /// Fixed per-exchange latency in core cycles (launch + network hop).
     pub hop_latency_cycles: u64,
+    /// Replicate the workload's top-K hottest rows on every device
+    /// (0 = off). Replicated lookups are served on-chip at their
+    /// sample's home device — no exchange, no off-chip read — at the
+    /// cost of `K * vec_bytes` of on-chip capacity pinned per device.
+    pub replicate_top_k: usize,
+    /// Overlap the all-to-all exchange with downstream (interaction +
+    /// top-MLP) compute: only the non-hidden remainder is exposed in the
+    /// batch's cycle total (`CycleBreakdown::exchange_exposed`). Off by
+    /// default, which reproduces the serial-exchange timing exactly.
+    pub overlap_exchange: bool,
 }
 
 impl Default for ShardingConfig {
@@ -175,6 +193,8 @@ impl Default for ShardingConfig {
             strategy: ShardStrategy::TableWise,
             link_bytes_per_cycle: 100.0,
             hop_latency_cycles: 700,
+            replicate_top_k: 0,
+            overlap_exchange: false,
         }
     }
 }
@@ -526,6 +546,8 @@ impl SimConfig {
             t.float_or("sharding.link_bytes_per_cycle", s.link_bytes_per_cycle)?;
         s.hop_latency_cycles =
             t.u64_or("sharding.hop_latency_cycles", s.hop_latency_cycles)?;
+        s.replicate_top_k = t.usize_or("sharding.replicate_top_k", s.replicate_top_k)?;
+        s.overlap_exchange = t.bool_or("sharding.overlap_exchange", s.overlap_exchange)?;
 
         cfg.seed = t.u64_or("seed", cfg.seed)?;
         cfg.validate()?;
@@ -556,12 +578,47 @@ impl SimConfig {
         }
         let s = &self.sharding;
         if s.devices == 0 {
-            return invalid("sharding.devices", "at least one device required".into());
+            return invalid(
+                "sharding.devices",
+                "at least one device required (devices = 0 would leave every \
+                 lookup unassigned)"
+                    .into(),
+            );
         }
         if !(s.link_bytes_per_cycle > 0.0) {
             return invalid(
                 "sharding.link_bytes_per_cycle",
                 format!("must be positive, got {}", s.link_bytes_per_cycle),
+            );
+        }
+        if s.replicate_top_k as u64 > e.rows_per_table {
+            return invalid(
+                "sharding.replicate_top_k",
+                format!(
+                    "cannot replicate {} rows: tables only have rows_per_table = {}",
+                    s.replicate_top_k, e.rows_per_table
+                ),
+            );
+        }
+        let replica_bytes = s.replicate_top_k as u64 * e.vec_bytes();
+        if replica_bytes >= m.onchip_bytes {
+            return invalid(
+                "sharding.replicate_top_k",
+                format!(
+                    "replicas would pin {replica_bytes} B on every device, at least \
+                     the entire on-chip buffer ({} B)",
+                    m.onchip_bytes
+                ),
+            );
+        }
+        if matches!(s.strategy, ShardStrategy::ColumnWise) && e.dim < s.devices {
+            return invalid(
+                "sharding.strategy",
+                format!(
+                    "column-wise sharding splits dim = {} across {} devices; \
+                     need dim >= devices",
+                    e.dim, s.devices
+                ),
             );
         }
         // each device holds its shard in its own off-chip memory, so the
@@ -575,7 +632,11 @@ impl SimConfig {
                     * e.rows_per_table
                     * e.vec_bytes()
             }
-            ShardStrategy::RowHashed => e.total_bytes().div_ceil(s.devices as u64),
+            // both split the footprint evenly: row-hashing by rows,
+            // column-wise by dim-slices of every table
+            ShardStrategy::RowHashed | ShardStrategy::ColumnWise => {
+                e.total_bytes().div_ceil(s.devices as u64)
+            }
         };
         if shard_bytes > m.dram.capacity_bytes {
             return invalid(
@@ -651,12 +712,59 @@ mod tests {
 
     #[test]
     fn shard_strategy_roundtrip_and_rejects() {
-        for s in ["table", "row"] {
+        for s in ["table", "row", "column"] {
             assert_eq!(ShardStrategy::parse(s).unwrap().name(), s);
         }
         assert!(ShardStrategy::parse("diagonal").is_err());
         let t = Table::parse("[sharding]\ndevices = 0").unwrap();
         assert!(SimConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn sharding_v2_keys_parse() {
+        let t = Table::parse(
+            "[sharding]\ndevices = 4\nstrategy = \"column\"\n\
+             replicate_top_k = 256\noverlap_exchange = true",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_table(&t).unwrap();
+        assert_eq!(cfg.sharding.strategy, ShardStrategy::ColumnWise);
+        assert_eq!(cfg.sharding.replicate_top_k, 256);
+        assert!(cfg.sharding.overlap_exchange);
+        // defaults: replication off, serial exchange
+        let plain = SimConfig::from_table(&Table::parse("").unwrap()).unwrap();
+        assert_eq!(plain.sharding.replicate_top_k, 0);
+        assert!(!plain.sharding.overlap_exchange);
+    }
+
+    #[test]
+    fn rejects_replication_beyond_table_rows() {
+        let t = Table::parse(
+            "[embedding]\nrows_per_table = 1000\n\
+             [sharding]\ndevices = 2\nreplicate_top_k = 2000",
+        )
+        .unwrap();
+        let err = SimConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("replicate_top_k"), "{err}");
+        assert!(err.contains("rows_per_table"), "{err}");
+    }
+
+    #[test]
+    fn rejects_replicas_that_pin_entire_onchip_buffer() {
+        // 300k replicas x 512 B ≈ 154 MB > the 128 MB local buffer
+        let t = Table::parse("[sharding]\ndevices = 2\nreplicate_top_k = 300_000").unwrap();
+        let err = SimConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("on-chip"), "{err}");
+    }
+
+    #[test]
+    fn rejects_column_split_narrower_than_devices() {
+        let t = Table::parse(
+            "[embedding]\ndim = 4\n[sharding]\ndevices = 8\nstrategy = \"column\"",
+        )
+        .unwrap();
+        let err = SimConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("column-wise"), "{err}");
     }
 
     #[test]

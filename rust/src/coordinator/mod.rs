@@ -28,9 +28,12 @@ pub struct Response {
     pub prediction: f32,
     /// Host wall-clock latency (queue + execute) in seconds.
     pub wall_latency_secs: f64,
-    /// Simulated NPU latency of the batch this request rode in.
+    /// Simulated NPU latency of the batch this request rode in (the
+    /// padded variant's latency — what the NPU actually executes).
     pub sim_latency_secs: f64,
-    /// Batch size the request was served in.
+    /// Compiled variant size the request's batch ran as: the smallest
+    /// supported batch size covering the served requests (equal to the
+    /// request count only when it is itself a variant).
     pub batch_size: usize,
 }
 
@@ -93,6 +96,8 @@ pub struct Coordinator<E: BatchExecutor, T: TimingModel> {
     executor: E,
     timing: T,
     queue: VecDeque<(Request, Instant)>,
+    /// Compiled variant batch sizes, ascending.
+    variants: Vec<usize>,
     /// Flush threshold: serve as soon as this many requests wait.
     max_batch: usize,
     next_id: u64,
@@ -102,16 +107,27 @@ pub struct Coordinator<E: BatchExecutor, T: TimingModel> {
 
 impl<E: BatchExecutor, T: TimingModel> Coordinator<E, T> {
     pub fn new(executor: E, timing: T) -> Self {
-        let max_batch = executor.batch_sizes().last().copied().unwrap_or(1);
+        let mut variants = executor.batch_sizes();
+        variants.sort_unstable();
+        variants.dedup();
+        let max_batch = variants.last().copied().unwrap_or(1);
         Coordinator {
             executor,
             timing,
             queue: VecDeque::new(),
+            variants,
             max_batch,
             next_id: 0,
             served_batches: 0,
             served_requests: 0,
         }
+    }
+
+    /// The smallest compiled variant covering `n` requests — the one the
+    /// dynamic batcher pads a partial batch up to. Falls back to `n`
+    /// itself when the executor advertises no covering variant.
+    fn variant_for(&self, n: usize) -> usize {
+        self.variants.iter().copied().find(|&v| v >= n).unwrap_or(n)
     }
 
     /// Enqueue a request; returns its id.
@@ -156,7 +172,10 @@ impl<E: BatchExecutor, T: TimingModel> Coordinator<E, T> {
         let start = Instant::now();
         let preds = self.executor.run(&dense, &indices, n)?;
         anyhow::ensure!(preds.len() == n, "executor returned {} of {n}", preds.len());
-        let sim_secs = self.timing.batch_secs(n);
+        // the NPU runs the padded variant, so its latency is what the
+        // requests actually experience
+        let variant = self.variant_for(n);
+        let sim_secs = self.timing.batch_secs(variant);
         let now = Instant::now();
         self.served_batches += 1;
         self.served_requests += n as u64;
@@ -169,7 +188,7 @@ impl<E: BatchExecutor, T: TimingModel> Coordinator<E, T> {
                 prediction,
                 wall_latency_secs: now.duration_since(enq).as_secs_f64(),
                 sim_latency_secs: sim_secs,
-                batch_size: n,
+                batch_size: variant,
             })
             .collect())
     }
@@ -219,7 +238,7 @@ mod tests {
         Coordinator::new(mock(), NoTiming)
     }
 
-    fn submit_n(c: &mut Coordinator<Mock, NoTiming>, n: usize) {
+    fn submit_n<T: TimingModel>(c: &mut Coordinator<Mock, T>, n: usize) {
         for i in 0..n {
             c.submit(vec![i as f32; 4], vec![i as i32; 6]);
         }
@@ -293,7 +312,69 @@ mod tests {
         submit_n(&mut c, 3);
         for r in c.serve_one().unwrap() {
             assert!(r.wall_latency_secs >= 0.0);
-            assert_eq!(r.batch_size, 3);
+            // 3 requests pad up to the 8-wide compiled variant
+            assert_eq!(r.batch_size, 8);
         }
+    }
+
+    /// Timing stub that reports the batch size it was asked about, so
+    /// tests can observe which variant the batcher selected.
+    struct EchoTiming;
+
+    impl TimingModel for EchoTiming {
+        fn batch_secs(&mut self, n: usize) -> f64 {
+            n as f64
+        }
+    }
+
+    #[test]
+    fn dynamic_batcher_selects_smallest_covering_variant() {
+        // variants [1, 8, 32]: 5 waiting requests ride the 8-variant,
+        // 9 ride the 32-variant, and a full 32 runs exactly
+        let mut c = Coordinator::new(mock(), EchoTiming);
+        for (submit, want_variant) in [(5usize, 8usize), (9, 32), (32, 32)] {
+            submit_n(&mut c, submit);
+            let rs = c.serve_one().unwrap();
+            assert_eq!(rs.len(), submit, "every waiting request is served");
+            for r in &rs {
+                assert_eq!(r.batch_size, want_variant, "{submit} requests");
+                // the timing model was consulted for the padded variant,
+                // not the raw request count
+                assert_eq!(r.sim_latency_secs, want_variant as f64);
+            }
+        }
+        // exactly one variant per served batch
+        assert_eq!(c.served_batches(), 3);
+        assert_eq!(c.served_requests(), 5 + 9 + 32);
+    }
+
+    #[test]
+    fn engine_timing_reflects_sharded_engine_when_devices_gt_1() {
+        let mut cfg = crate::config::presets::tpuv6e_dlrm_small();
+        cfg.workload.embedding.num_tables = 8;
+        cfg.workload.embedding.rows_per_table = 20_000;
+        cfg.workload.embedding.pool = 8;
+        cfg.workload.trace.alpha = 1.1;
+        cfg.sharding.devices = 4;
+
+        let mut sharded = EngineTiming::new(cfg.clone());
+        let secs = sharded.batch_secs(16);
+        assert!(secs > 0.0);
+
+        // must equal a direct run of the 4-device sharded engine ...
+        let mut direct = cfg.clone();
+        direct.workload.batch_size = 16;
+        direct.workload.num_batches = 1;
+        let want = crate::engine::Simulator::new(direct)
+            .run()
+            .unwrap()
+            .exec_time_secs();
+        assert_eq!(secs, want, "timing must come from the sharded engine");
+
+        // ... and differ from the single-device engine's latency
+        let mut single_cfg = cfg.clone();
+        single_cfg.sharding.devices = 1;
+        let mut single = EngineTiming::new(single_cfg);
+        assert_ne!(single.batch_secs(16), secs);
     }
 }

@@ -11,6 +11,7 @@
 use crate::config::{OnchipPolicy, SimConfig};
 use crate::mem::policy::pinning::{PinSet, Profile};
 use crate::mem::{Cache, MemController, SoftwarePrefetcher};
+use crate::sharding::replicate::HotRowReplicator;
 use crate::stats::{MemCounts, OpCounts};
 use crate::trace::{AddressMap, BatchTrace};
 
@@ -39,6 +40,15 @@ pub struct EmbeddingSim {
     global_bytes_per_cycle: f64,
     controller: MemController,
     prefetcher: SoftwarePrefetcher,
+    /// Rows replicated on this device by skew-aware sharding: served
+    /// straight from on-chip memory ahead of the policy, like pinned
+    /// vectors. Empty unless the sharded engine installs a set.
+    replicas: HotRowReplicator,
+    /// Lines charged per replica hit. Usually this device's
+    /// `lines_per_vec`, but under column-wise sharding the home device
+    /// stores *whole* replicas while simulating only a dim-slice, so the
+    /// sharded engine installs the full vector's line count.
+    replica_lines: u64,
     /// Global cycle cursor (start of the next batch).
     now: u64,
     /// Line requests each core's gather engine can issue per cycle.
@@ -111,6 +121,10 @@ impl EmbeddingSim {
             } else {
                 SoftwarePrefetcher::disabled()
             },
+            replicas: HotRowReplicator::empty(),
+            // `addr_map` is moved into the struct above; the line count
+            // was captured before
+            replica_lines: lines_per_vec as u64,
             now: 0,
             issue_per_cycle: ISSUE_PER_CYCLE,
             kernel_overhead: KERNEL_OVERHEAD,
@@ -133,6 +147,17 @@ impl EmbeddingSim {
     /// core boundaries). No effect when `num_cores == 1`.
     pub fn set_lookups_per_sample(&mut self, n: usize) {
         self.lookups_per_sample = n.max(1);
+    }
+
+    /// Install the hot-row replica set: lookups to these rows are served
+    /// from on-chip memory regardless of the configured policy (the rows
+    /// are pinned on every device by the skew-aware sharding layer).
+    /// `lines_per_hit` is the line count charged per replica hit — pass
+    /// the *full* vector's lines even when this device simulates only a
+    /// dim-slice, since replicas are stored whole at the home device.
+    pub fn set_replicas(&mut self, replicas: HotRowReplicator, lines_per_hit: u64) {
+        self.replicas = replicas;
+        self.replica_lines = lines_per_hit.max(1);
     }
 
     /// Install the profiling-derived pin set (pinning mode only; every
@@ -169,8 +194,24 @@ impl EmbeddingSim {
         out
     }
 
-    /// Simulate one batch's embedding stage.
+    /// Simulate one batch's embedding stage. The trace is assumed
+    /// pool-aligned (`bags = lookups / pool`, the single-device and
+    /// table-wise case); sharded sub-traces with rerouted lookups should
+    /// use [`simulate_batch_with_bags`](Self::simulate_batch_with_bags).
     pub fn simulate_batch(&mut self, trace: &BatchTrace) -> EmbeddingStageResult {
+        let bags = trace.lookups.len() as u64 / self.pool.max(1) as u64;
+        self.simulate_batch_with_bags(trace, bags)
+    }
+
+    /// Like [`simulate_batch`](Self::simulate_batch) but with the exact
+    /// number of distinct bags the trace's lookups belong to — needed
+    /// for sharded sub-traces whose lengths are not pool-aligned
+    /// (row-hashing and hot-row replication split bags across devices).
+    pub fn simulate_batch_with_bags(
+        &mut self,
+        trace: &BatchTrace,
+        bags: u64,
+    ) -> EmbeddingStageResult {
         let base = self.now;
         let mut mem = MemCounts::default();
         let lines_per_vec = self.addr_map.lines_per_vec();
@@ -180,9 +221,22 @@ impl EmbeddingSim {
         let mut global_busy: u64 = 0; // shared global-buffer bytes
         let mut offchip_done = base;
 
+        let mut replicated_hits = 0u64;
         for (i, lookup) in trace.lookups.iter().enumerate() {
             // samples are partitioned round-robin across cores
             let core = (i / self.lookups_per_sample) % ncores;
+            if !self.replicas.is_empty()
+                && self.replicas.is_replicated(lookup.table, lookup.row)
+            {
+                // replicated hot row: read the whole replica straight
+                // from on-chip memory, no policy consultation, no
+                // off-chip traffic
+                replicated_hits += 1;
+                mem.hits += self.replica_lines;
+                mem.onchip_reads += self.replica_lines;
+                busy[core] += self.replica_lines * self.line_bytes;
+                continue;
+            }
             let vec_onchip = match &self.cores[core] {
                 Mode::Spm => false,
                 Mode::Pinning(pins) => pins.is_pinned(lookup.table, lookup.row),
@@ -267,8 +321,10 @@ impl EmbeddingSim {
         }
 
         // VPU pooling overlaps the memory stream; bags spread across the
-        // cores' vector units.
-        let bags = trace.lookups.len() as u64 / self.pool.max(1) as u64;
+        // cores' vector units. The per-bag reduction depth is the mean
+        // vectors per local bag — exactly `pool` for pool-aligned traces.
+        let lookups = trace.lookups.len() as u64;
+        let per_bag = if bags == 0 { 0 } else { lookups.div_ceil(bags) };
         let core = crate::config::CoreConfig {
             sa_rows: 1,
             sa_cols: 1,
@@ -277,7 +333,7 @@ impl EmbeddingSim {
             dataflow: crate::config::Dataflow::OutputStationary,
         };
         let vpu_cycles =
-            crate::compute::pooling_cycles(&core, bags, self.pool as u64, self.dim as u64);
+            crate::compute::pooling_cycles(&core, bags, per_bag, self.dim as u64);
 
         let issue_cycles = issued.iter().map(|&n| n / self.issue_per_cycle).max().unwrap_or(0);
         let onchip_cycles = busy
@@ -295,11 +351,13 @@ impl EmbeddingSim {
 
         let ops = OpCounts {
             macs: 0,
-            // pooling a bag of `pool` vectors takes `pool - 1` adds;
-            // saturate so a degenerate pool = 0 workload counts zero
-            // instead of wrapping (u64 underflow)
-            vpu_ops: bags * (self.pool as u64).saturating_sub(1),
-            lookups: trace.lookups.len() as u64,
+            // summing a bag of k vectors takes k - 1 adds, so the exact
+            // total is lookups - bags — equal to bags * (pool - 1) for
+            // pool-aligned traces, and saturating covers the degenerate
+            // pool = 0 workload (bags = lookups there)
+            vpu_ops: lookups.saturating_sub(bags),
+            lookups,
+            replicated_hits,
         };
         EmbeddingStageResult { cycles, mem, ops }
     }

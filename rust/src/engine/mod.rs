@@ -14,11 +14,11 @@ pub mod matrix;
 use crate::compute::elementwise_cycles;
 use crate::config::{OnchipPolicy, SimConfig};
 use crate::energy::{annotate, EnergyTable};
-use crate::mem::policy::pinning::PinSet;
+use crate::mem::policy::pinning::{PinSet, Profile};
+use crate::sharding::replicate::HotRowReplicator;
 use crate::sharding::ShardedEmbeddingSim;
 use crate::stats::{BatchResult, CycleBreakdown, MemCounts, SimReport};
 use crate::trace::TraceGenerator;
-use embedding::EmbeddingSim;
 
 /// End-to-end workload simulator.
 pub struct Simulator {
@@ -54,18 +54,42 @@ impl Simulator {
         // single-NPU path, bit-identical)
         let mut emb_sim = ShardedEmbeddingSim::new(cfg);
 
-        // Profiling pass for the pinning policy: collect frequency over
-        // the whole workload trace (regenerated deterministically), then
-        // pin the hottest vectors up to on-chip capacity.
-        if matches!(hw.mem.policy, OnchipPolicy::Pinning) {
-            let mut pgen = TraceGenerator::new(w)?;
-            let traces: Vec<_> = (0..w.num_batches).map(|_| pgen.next_batch()).collect();
-            let profile = EmbeddingSim::profile_batches(traces.iter());
-            emb_sim.set_pin_set(PinSet::from_profile(
-                &profile,
-                hw.mem.onchip_bytes,
-                w.embedding.vec_bytes(),
-            ));
+        // Offline profiling pass, shared by the pinning policy and
+        // hot-row replication: collect per-row frequency over the whole
+        // workload trace (regenerated deterministically), then pin the
+        // hottest vectors up to capacity and/or replicate the top-K rows
+        // on every device.
+        let replicate = cfg.sharding.replicate_top_k > 0 && emb_sim.num_devices() > 1;
+        let reserve = if replicate {
+            cfg.sharding.replicate_top_k as u64 * w.embedding.vec_bytes()
+        } else {
+            0
+        };
+        if replicate || matches!(hw.mem.policy, OnchipPolicy::Pinning) {
+            let profile = Profile::from_workload(w)?;
+            let replicas = if replicate {
+                HotRowReplicator::from_profile(&profile, cfg.sharding.replicate_top_k)
+            } else {
+                HotRowReplicator::empty()
+            };
+            if replicate {
+                emb_sim.set_replicas(replicas.clone());
+            }
+            if matches!(hw.mem.policy, OnchipPolicy::Pinning) {
+                // replicas pin capacity (and the hottest rows) first; the
+                // remaining budget pins the next-hottest non-replicated
+                // rows rather than duplicating the replica set
+                let pin_profile = if replicate {
+                    profile.without(|t, r| replicas.is_replicated(t, r))
+                } else {
+                    profile
+                };
+                emb_sim.set_pin_set(PinSet::from_profile(
+                    &pin_profile,
+                    hw.mem.onchip_bytes.saturating_sub(reserve),
+                    w.embedding.vec_bytes(),
+                ));
+            }
         }
 
         let bottom = w.bottom_layers();
@@ -111,12 +135,24 @@ impl Simulator {
             ops.macs += bottom_r.ops.macs + top_r.ops.macs;
             ops.vpu_ops += interact_elems;
 
+            // overlap model: the exchange streams pooled vectors home
+            // sample-by-sample, so downstream interaction + top-MLP
+            // compute on arrived samples hides in-flight transfers; only
+            // the non-hidden remainder stays on the critical path.
+            let exchange = emb_r.exchange_cycles;
+            let exchange_exposed = if cfg.sharding.overlap_exchange {
+                exchange.saturating_sub(interaction + top_r.cycles)
+            } else {
+                exchange
+            };
+
             report.per_batch.push(BatchResult {
                 batch_index,
                 cycles: CycleBreakdown {
                     bottom_mlp: bottom_r.cycles,
                     embedding: emb_r.cycles,
-                    exchange: emb_r.exchange_cycles,
+                    exchange,
+                    exchange_exposed,
                     interaction,
                     top_mlp: top_r.cycles,
                 },

@@ -30,7 +30,9 @@ COMMANDS:
                --policy <p>           spm|lru|srrip|brrip|drrip|fifo|random|profiling
                --alpha <x>            trace Zipf exponent   [0.9]
                --devices <n>          shard tables across n devices [1]
-               --shard-strategy <s>   table|row             [table]
+               --shard-strategy <s>   table|row|column      [table]
+               --replicate-top-k <n>  replicate the K hottest rows on every device [0]
+               --overlap-exchange     overlap the all-to-all with top-MLP compute
                --csv <file> / --json <file>   write reports
   validate   paper Fig. 3 validation vs the TPUv6e baseline
                --full                 full 32..2048 step-32 batch sweep
@@ -41,7 +43,7 @@ COMMANDS:
                --requests <n>         requests to submit    [100]
                --artifacts <dir>      artifact directory    [artifacts]
   sweep      parameter sweep -> CSV on stdout
-               --param <batch|tables|alpha|onchip_mb|cores|devices>
+               --param <batch|tables|alpha|onchip_mb|cores|devices|replicate_top_k>
                --values <comma-separated>   e.g. 32,64,128
                --policy <p> [spm]  (plus the `run` flags)
   trace-gen  write an index trace file
@@ -97,6 +99,11 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
     if let Some(s) = args.flag("shard-strategy") {
         cfg.sharding.strategy = ShardStrategy::parse(s)?;
     }
+    cfg.sharding.replicate_top_k =
+        args.usize_flag("replicate-top-k", cfg.sharding.replicate_top_k)?;
+    if args.has("overlap-exchange") {
+        cfg.sharding.overlap_exchange = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -135,7 +142,19 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     println!("  host wall     : {host:.2} s");
     if report.num_devices > 1 {
         let exchange: u64 = report.per_batch.iter().map(|b| b.cycles.exchange).sum();
-        println!("  exchange      : {exchange} cycles (all-to-all)");
+        let exposed: u64 = report.per_batch.iter().map(|b| b.cycles.exchange_exposed).sum();
+        println!("  exchange      : {exchange} cycles all-to-all ({exposed} exposed)");
+        println!(
+            "  imbalance     : {:.3} (busiest / mean device lookups)",
+            report.imbalance_factor()
+        );
+        let replicated = report.total_ops().replicated_hits;
+        if replicated > 0 {
+            println!(
+                "  replica hits  : {replicated} ({:.1}% of lookups served on-chip at home)",
+                100.0 * replicated as f64 / report.total_ops().lookups.max(1) as f64
+            );
+        }
         for d in report.total_per_device() {
             println!(
                 "    device {}: {:>12} cycles, {:>10} offchip reads, {:>10} exchange B",
@@ -332,7 +351,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         .map(|v| v.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("bad value `{v}`: {e}")))
         .collect::<anyhow::Result<Vec<_>>>()?;
     let base = build_config(args)?;
-    println!("{param},policy,exec_ms,cycles,onchip_ratio,hit_rate,energy_mj");
+    println!("{param},policy,exec_ms,cycles,onchip_ratio,hit_rate,energy_mj,imbalance");
     for &v in &values {
         let mut cfg = base.clone();
         match param {
@@ -342,19 +361,21 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             "onchip_mb" => cfg.hardware.mem.onchip_bytes = (v as u64) << 20,
             "cores" => cfg.hardware.num_cores = v as usize,
             "devices" => cfg.sharding.devices = v as usize,
+            "replicate_top_k" => cfg.sharding.replicate_top_k = v as usize,
             other => anyhow::bail!("unknown sweep param `{other}`"),
         }
         cfg.validate()?;
         let report = Simulator::new(cfg).run()?;
         let m = report.total_mem();
         println!(
-            "{v},{},{:.4},{},{:.4},{:.4},{:.4}",
+            "{v},{},{:.4},{},{:.4},{:.4},{:.4},{:.4}",
             report.policy,
             report.exec_time_secs() * 1e3,
             report.total_cycles(),
             m.onchip_ratio(),
             m.hit_rate(),
-            report.energy_joules * 1e3
+            report.energy_joules * 1e3,
+            report.imbalance_factor()
         );
     }
     Ok(())

@@ -17,10 +17,41 @@ impl Profile {
         Self::default()
     }
 
+    /// Profile the workload's full (deterministically regenerated)
+    /// index trace — the offline pass shared by profiling-based pinning
+    /// and hot-row replication.
+    pub fn from_workload(
+        workload: &crate::config::WorkloadConfig,
+    ) -> anyhow::Result<Profile> {
+        let mut gen = crate::trace::TraceGenerator::new(workload)?;
+        let mut profile = Profile::new();
+        for _ in 0..workload.num_batches {
+            for l in &gen.next_batch().lookups {
+                profile.record(l.table, l.row);
+            }
+        }
+        Ok(profile)
+    }
+
     /// Record one lookup of `(table, row)`.
     #[inline]
     pub fn record(&mut self, table: u32, row: u64) {
         *self.counts.entry((table, row)).or_insert(0) += 1;
+    }
+
+    /// Copy of this profile without the rows `excluded` matches. Used
+    /// when hot-row replication already pins the top-K rows on-chip:
+    /// the pinning policy's budget then goes to the *next* hottest rows
+    /// instead of duplicating the replicas.
+    pub fn without<F: Fn(u32, u64) -> bool>(&self, excluded: F) -> Profile {
+        Profile {
+            counts: self
+                .counts
+                .iter()
+                .filter(|((t, r), _)| !excluded(*t, *r))
+                .map(|(k, v)| (*k, *v))
+                .collect(),
+        }
     }
 
     pub fn unique_vectors(&self) -> usize {
@@ -127,5 +158,32 @@ mod tests {
         let pins = PinSet::empty();
         assert!(pins.is_empty());
         assert!(!pins.is_pinned(0, 0));
+    }
+
+    #[test]
+    fn without_excludes_rows_and_promotes_next_hottest() {
+        let p = profile_with(&[((0, 1), 5), ((0, 2), 4), ((0, 3), 3)]);
+        let filtered = p.without(|t, r| (t, r) == (0, 1));
+        assert_eq!(filtered.unique_vectors(), 2);
+        // the pin budget now goes to the next-hottest rows
+        assert_eq!(filtered.top_k(1), vec![(0, 2)]);
+        // a no-op filter leaves the ordering untouched
+        let same = p.without(|_, _| false);
+        assert_eq!(same.top_k(3), p.top_k(3));
+    }
+
+    #[test]
+    fn from_workload_is_deterministic() {
+        let mut w = crate::config::presets::dlrm_rmc2_small(4);
+        w.embedding.num_tables = 2;
+        w.embedding.rows_per_table = 1000;
+        w.embedding.pool = 4;
+        w.num_batches = 2;
+        let a = Profile::from_workload(&w).unwrap();
+        let b = Profile::from_workload(&w).unwrap();
+        assert_eq!(a.unique_vectors(), b.unique_vectors());
+        assert_eq!(a.top_k(10), b.top_k(10));
+        // 2 batches x 4 samples x 2 tables x 4 pool lookups recorded
+        assert!(a.unique_vectors() > 0);
     }
 }

@@ -1,4 +1,4 @@
-//! Multi-device table-sharded embedding simulation.
+//! Multi-device sharded embedding simulation (skew-aware v2).
 //!
 //! Production DLRM serving shards its embedding tables across many NPU
 //! devices (TensorDIMM-style placement): each device owns a shard in its
@@ -8,18 +8,30 @@
 //! feature interaction. This module models exactly that:
 //!
 //! * [`TablePartitioner`] splits a [`BatchTrace`] across `N` devices —
-//!   table-wise (whole tables round-robin) or row-hashed (rows scattered
-//!   by hash for load balance under per-table skew);
+//!   table-wise (whole tables round-robin), row-hashed (rows scattered
+//!   by hash for load balance under per-table skew), or column-wise
+//!   (every device gathers its `dim / N` slice of every lookup, so load
+//!   balance is perfect and the exchange carries partial vectors);
+//! * [`replicate::HotRowReplicator`] (installed via
+//!   [`ShardedEmbeddingSim::set_replicas`]) pins the trace's top-K
+//!   hottest rows on every device: lookups to them are rerouted to the
+//!   sample's home device and served on-chip, costing no exchange and no
+//!   off-chip read but pinning `K * vec_bytes` of each device's buffer;
 //! * [`ShardedEmbeddingSim`] drives one persistent
 //!   [`EmbeddingSim`] per device over its sub-trace, so cross-batch
 //!   on-chip reuse is preserved per shard;
 //! * an interconnect model charges the embedding-exchange phase from the
 //!   busiest device's send volume over a configurable link bandwidth
-//!   plus a fixed hop latency.
+//!   plus a fixed hop latency. Replica-served bags are produced at their
+//!   home device and charge nothing.
 //!
 //! With one device (the preset default) the partitioner is the identity,
-//! the exchange is free, and every result is bit-identical to the
-//! classic single-NPU path.
+//! the exchange is free, replication is inert, and every result is
+//! bit-identical to the classic single-NPU path. With replication off
+//! and the serial exchange (the defaults), results are bit-identical to
+//! the original table-sharded model.
+
+pub mod replicate;
 
 use crate::config::{ShardStrategy, SimConfig};
 use crate::engine::embedding::EmbeddingSim;
@@ -27,6 +39,7 @@ use crate::mem::policy::pinning::PinSet;
 use crate::stats::{DeviceCounters, MemCounts, OpCounts};
 use crate::testutil::mix64;
 use crate::trace::{BatchTrace, Lookup};
+use replicate::HotRowReplicator;
 
 /// One device's share of a batch: its lookups (in original issue order)
 /// and the number of distinct bags it contributes pooled vectors to.
@@ -34,17 +47,26 @@ use crate::trace::{BatchTrace, Lookup};
 pub struct DeviceTrace {
     pub trace: BatchTrace,
     /// Distinct `(sample, table)` bags this device holds (partial or
-    /// complete) pooled results for — the unit of exchange traffic.
+    /// complete) pooled results for — including replica-served bags.
     pub bags: u64,
+    /// The subset of `bags` that must travel the all-to-all. Bag entries
+    /// created only by replica-routed lookups live at the sample's home
+    /// device already and are excluded. Equal to `bags` when no replica
+    /// set is installed.
+    pub exchange_bags: u64,
+    /// Lookups routed here because their row is replicated on-device.
+    pub replicated: u64,
 }
 
-/// Splits batch traces across devices according to a [`ShardStrategy`].
+/// Splits batch traces across devices according to a [`ShardStrategy`],
+/// rerouting replicated hot rows to their sample's home device.
 #[derive(Debug, Clone)]
 pub struct TablePartitioner {
     devices: usize,
     strategy: ShardStrategy,
-    /// Lookups per sample (tables * pool), for bag identification.
+    /// Lookups per sample (tables * pool), for bag/home identification.
     lookups_per_sample: usize,
+    replicas: HotRowReplicator,
 }
 
 impl TablePartitioner {
@@ -53,14 +75,23 @@ impl TablePartitioner {
             devices: devices.max(1),
             strategy,
             lookups_per_sample: lookups_per_sample.max(1),
+            replicas: HotRowReplicator::empty(),
         }
+    }
+
+    /// Install the hot-row replica set used to reroute lookups.
+    pub fn set_replicas(&mut self, replicas: HotRowReplicator) {
+        self.replicas = replicas;
     }
 
     pub fn devices(&self) -> usize {
         self.devices
     }
 
-    /// Which device serves one lookup.
+    /// Which device owns one (non-replicated) lookup. Column-wise
+    /// sharding has no single owner — every device gathers a dim-slice —
+    /// so [`split`](Self::split) places such lookups on all devices and
+    /// this returns 0 only as a nominal anchor.
     #[inline]
     pub fn device_of(&self, lookup: &Lookup) -> usize {
         match self.strategy {
@@ -68,34 +99,101 @@ impl TablePartitioner {
             ShardStrategy::RowHashed => {
                 (mix64(((lookup.table as u64) << 48) ^ lookup.row) % self.devices as u64) as usize
             }
+            ShardStrategy::ColumnWise => 0,
         }
     }
 
+    /// The device a sample's pooled bags are consumed on (feature
+    /// interaction + top-MLP): samples round-robin across devices.
+    #[inline]
+    fn home_of(&self, lookup_index: usize) -> usize {
+        (lookup_index / self.lookups_per_sample) % self.devices
+    }
+
     /// Split one batch into per-device sub-traces, preserving the
-    /// original issue order within each device. Every lookup lands on
-    /// exactly one device, so all per-lookup counters conserve.
+    /// original issue order within each device. Under table/row sharding
+    /// every lookup lands on exactly one device; under column-wise every
+    /// non-replicated lookup lands on every device (each gathers its
+    /// dim-slice). Replicated lookups always land only on the sample's
+    /// home device.
     pub fn split(&self, trace: &BatchTrace) -> Vec<DeviceTrace> {
-        let mut out: Vec<DeviceTrace> = (0..self.devices)
+        match self.strategy {
+            ShardStrategy::ColumnWise => self.split_column(trace),
+            _ => self.split_owner(trace),
+        }
+    }
+
+    fn empty_split(&self, trace: &BatchTrace, cap_hint: usize) -> Vec<DeviceTrace> {
+        (0..self.devices)
             .map(|_| DeviceTrace {
                 trace: BatchTrace {
                     batch_index: trace.batch_index,
-                    lookups: Vec::with_capacity(trace.lookups.len() / self.devices + 1),
+                    lookups: Vec::with_capacity(cap_hint),
                 },
                 bags: 0,
+                exchange_bags: 0,
+                replicated: 0,
             })
-            .collect();
+            .collect()
+    }
+
+    fn split_owner(&self, trace: &BatchTrace) -> Vec<DeviceTrace> {
+        let mut out = self.empty_split(trace, trace.lookups.len() / self.devices + 1);
         // lookups are sample-major then table then pooling slot, so one
         // bag's lookups are contiguous: a device contributes to a bag
         // iff its last-seen bag id changes
         let mut last_bag: Vec<Option<(usize, u32)>> = vec![None; self.devices];
+        let mut last_remote: Vec<Option<(usize, u32)>> = vec![None; self.devices];
         for (i, l) in trace.lookups.iter().enumerate() {
-            let d = self.device_of(l);
+            let replicated = !self.replicas.is_empty()
+                && self.replicas.is_replicated(l.table, l.row);
+            let d = if replicated { self.home_of(i) } else { self.device_of(l) };
             let bag = (i / self.lookups_per_sample, l.table);
             if last_bag[d] != Some(bag) {
                 last_bag[d] = Some(bag);
                 out[d].bags += 1;
             }
+            if replicated {
+                out[d].replicated += 1;
+            } else if last_remote[d] != Some(bag) {
+                // only non-replicated contributions travel the all-to-all
+                last_remote[d] = Some(bag);
+                out[d].exchange_bags += 1;
+            }
             out[d].trace.lookups.push(*l);
+        }
+        out
+    }
+
+    fn split_column(&self, trace: &BatchTrace) -> Vec<DeviceTrace> {
+        let mut out = self.empty_split(trace, trace.lookups.len());
+        let mut last_bag: Vec<Option<(usize, u32)>> = vec![None; self.devices];
+        let mut last_remote: Vec<Option<(usize, u32)>> = vec![None; self.devices];
+        for (i, l) in trace.lookups.iter().enumerate() {
+            let bag = (i / self.lookups_per_sample, l.table);
+            if !self.replicas.is_empty() && self.replicas.is_replicated(l.table, l.row) {
+                // the home device holds the full replica: serve the whole
+                // vector there, other devices skip this lookup entirely
+                let d = self.home_of(i);
+                if last_bag[d] != Some(bag) {
+                    last_bag[d] = Some(bag);
+                    out[d].bags += 1;
+                }
+                out[d].replicated += 1;
+                out[d].trace.lookups.push(*l);
+            } else {
+                for d in 0..self.devices {
+                    if last_bag[d] != Some(bag) {
+                        last_bag[d] = Some(bag);
+                        out[d].bags += 1;
+                    }
+                    if last_remote[d] != Some(bag) {
+                        last_remote[d] = Some(bag);
+                        out[d].exchange_bags += 1;
+                    }
+                    out[d].trace.lookups.push(*l);
+                }
+            }
         }
         out
     }
@@ -110,9 +208,12 @@ pub struct ShardedStageResult {
     pub exchange_cycles: u64,
     /// Memory counters summed over devices.
     pub mem: MemCounts,
-    /// Operation counters summed over devices.
+    /// Operation counters. Table/row sharding sums over devices; under
+    /// column-wise the logical counts are reported (each lookup once,
+    /// not once per dim-slice), so totals conserve against a 1-device
+    /// run. `replicated_hits` is always the cross-device sum.
     pub ops: OpCounts,
-    /// Per-device split of the same.
+    /// Per-device split of the same (physical per-device counts).
     pub per_device: Vec<DeviceCounters>,
 }
 
@@ -122,44 +223,80 @@ pub struct ShardedStageResult {
 pub struct ShardedEmbeddingSim {
     devices: Vec<EmbeddingSim>,
     partitioner: TablePartitioner,
+    strategy: ShardStrategy,
     link_bytes_per_cycle: f64,
     hop_latency_cycles: u64,
-    /// Bytes of one pooled embedding vector (dim * elem).
-    vec_bytes: u64,
+    /// Bytes one device contributes per exchanged bag: the full pooled
+    /// vector under table/row sharding, the device's dim-slice under
+    /// column-wise (indexed by device).
+    slice_bytes: Vec<u64>,
+    /// Lines of one *full* embedding vector — what a replica hit costs
+    /// on-chip, even on a device simulating only a dim-slice.
+    full_vec_lines: u64,
+    pool: usize,
 }
 
 impl ShardedEmbeddingSim {
     pub fn new(cfg: &SimConfig) -> Self {
         let n = cfg.sharding.devices.max(1);
         let emb = &cfg.workload.embedding;
+        let strategy = cfg.sharding.strategy;
+        // replicas pin on-chip capacity on every device (full vectors,
+        // even under column-wise). Single-device runs stay untouched so
+        // the classic path is bit-identical regardless of knobs.
+        let reserve = if n > 1 {
+            cfg.sharding.replicate_top_k as u64 * emb.vec_bytes()
+        } else {
+            0
+        };
+        let mut slice_bytes = Vec::with_capacity(n);
         let devices = (0..n)
             .map(|d| {
-                let mut sim = EmbeddingSim::new(cfg);
+                let mut dev_cfg = cfg.clone();
+                if reserve > 0 {
+                    let m = &mut dev_cfg.hardware.mem;
+                    m.onchip_bytes =
+                        m.onchip_bytes.saturating_sub(reserve).max(m.access_granularity);
+                }
                 // a device's sub-trace carries only its shard's lookups
-                // per sample: exactly `owned_tables * pool` table-wise
-                // (tables are assigned round-robin, so device d owns one
-                // extra table when d < tables % n), ~`tables * pool / n`
-                // row-hashed — align the per-core sample stride to that
-                let owned_tables =
-                    emb.num_tables / n + usize::from(d < emb.num_tables % n);
-                let per_sample = match cfg.sharding.strategy {
-                    ShardStrategy::TableWise => owned_tables * emb.pool,
+                // per sample — align the per-core sample stride to that:
+                // exactly `owned_tables * pool` table-wise (tables are
+                // assigned round-robin, so device d owns one extra table
+                // when d < tables % n), ~`tables * pool / n` row-hashed,
+                // and the full `tables * pool` column-wise (every device
+                // sees every lookup, just a narrower slice of it)
+                let per_sample = match strategy {
+                    ShardStrategy::TableWise => {
+                        let owned =
+                            emb.num_tables / n + usize::from(d < emb.num_tables % n);
+                        owned * emb.pool
+                    }
                     ShardStrategy::RowHashed => emb.num_tables * emb.pool / n,
+                    ShardStrategy::ColumnWise => {
+                        let slice_dim =
+                            (emb.dim / n + usize::from(d < emb.dim % n)).max(1);
+                        dev_cfg.workload.embedding.dim = slice_dim;
+                        emb.num_tables * emb.pool
+                    }
                 };
-                sim.set_lookups_per_sample(per_sample);
+                slice_bytes.push(dev_cfg.workload.embedding.vec_bytes());
+                let mut sim = EmbeddingSim::new(&dev_cfg);
+                sim.set_lookups_per_sample(per_sample.max(1));
                 sim
             })
             .collect();
         ShardedEmbeddingSim {
             devices,
-            partitioner: TablePartitioner::new(
-                n,
-                cfg.sharding.strategy,
-                emb.num_tables * emb.pool,
-            ),
+            partitioner: TablePartitioner::new(n, strategy, emb.num_tables * emb.pool),
+            strategy,
             link_bytes_per_cycle: cfg.sharding.link_bytes_per_cycle.max(f64::MIN_POSITIVE),
             hop_latency_cycles: cfg.sharding.hop_latency_cycles,
-            vec_bytes: emb.vec_bytes(),
+            slice_bytes,
+            full_vec_lines: emb
+                .vec_bytes()
+                .div_ceil(cfg.hardware.mem.access_granularity)
+                .max(1),
+            pool: emb.pool,
         }
     }
 
@@ -172,6 +309,21 @@ impl ShardedEmbeddingSim {
     pub fn set_pin_set(&mut self, pins: PinSet) {
         for dev in &mut self.devices {
             dev.set_pin_set(pins.clone());
+        }
+    }
+
+    /// Install the hot-row replica set on the partitioner (routing) and
+    /// every device (on-chip service). No-op on a single device, which
+    /// stays bit-identical to the classic path.
+    pub fn set_replicas(&mut self, replicas: HotRowReplicator) {
+        if self.devices.len() == 1 {
+            return;
+        }
+        self.partitioner.set_replicas(replicas.clone());
+        for dev in &mut self.devices {
+            // replicas are stored whole, so a hit costs the full
+            // vector's lines even on a dim-slice device
+            dev.set_replicas(replicas.clone(), self.full_vec_lines);
         }
     }
 
@@ -216,12 +368,16 @@ impl ShardedEmbeddingSim {
         let mut send_bytes = Vec::with_capacity(n);
         let mut wall = 0u64;
         for (device, (sim, part)) in self.devices.iter_mut().zip(&split).enumerate() {
-            let r = sim.simulate_batch(&part.trace);
+            // the partitioner knows the exact distinct-bag count of each
+            // sub-trace (rerouted hot rows break pool alignment)
+            let r = sim.simulate_batch_with_bags(&part.trace, part.bags);
             wall = wall.max(r.cycles);
             mem.add(&r.mem);
             ops.add(&r.ops);
-            // pooled output for `bags` bags; (n-1)/n of it is remote
-            let bytes = part.bags * self.vec_bytes * (n as u64 - 1) / n as u64;
+            // pooled output for the exchange-charged bags; (n-1)/n of it
+            // is remote. Replica-served bags live at home: free.
+            let bytes = part.exchange_bags * self.slice_bytes[device] * (n as u64 - 1)
+                / n as u64;
             send_bytes.push(bytes);
             per_device.push(DeviceCounters {
                 device,
@@ -230,6 +386,23 @@ impl ShardedEmbeddingSim {
                 mem: r.mem,
                 ops: r.ops,
             });
+        }
+        if matches!(self.strategy, ShardStrategy::ColumnWise) {
+            // every device walked (its slice of) every lookup: report
+            // logical op counts so totals conserve against one device,
+            // keeping only the cross-device replica-hit sum
+            let lookups = trace.lookups.len() as u64;
+            let bags = lookups / self.pool.max(1) as u64;
+            ops = OpCounts {
+                macs: 0,
+                // summing a bag of k vectors takes k - 1 adds
+                vpu_ops: lookups.saturating_sub(bags),
+                lookups,
+                replicated_hits: per_device
+                    .iter()
+                    .map(|d| d.ops.replicated_hits)
+                    .sum(),
+            };
         }
         ShardedStageResult {
             cycles: wall,
@@ -245,6 +418,7 @@ impl ShardedEmbeddingSim {
 mod tests {
     use super::*;
     use crate::config::{presets, OnchipPolicy};
+    use crate::mem::policy::pinning::Profile;
     use crate::trace::TraceGenerator;
 
     fn small_cfg(devices: usize, strategy: ShardStrategy) -> SimConfig {
@@ -317,9 +491,70 @@ mod tests {
         );
         let split = p.split(&trace);
         // 8 tables over 4 devices = 2 tables each; every (sample, table)
-        // bag is complete on its owner
+        // bag is complete on its owner — and without replication every
+        // bag travels the exchange
         for d in &split {
             assert_eq!(d.bags, 2 * cfg.workload.batch_size as u64);
+            assert_eq!(d.exchange_bags, d.bags);
+            assert_eq!(d.replicated, 0);
+        }
+    }
+
+    #[test]
+    fn column_split_places_every_lookup_on_every_device() {
+        let cfg = small_cfg(4, ShardStrategy::ColumnWise);
+        let trace = one_batch(&cfg);
+        let p = TablePartitioner::new(
+            4,
+            ShardStrategy::ColumnWise,
+            cfg.workload.embedding.num_tables * cfg.workload.embedding.pool,
+        );
+        let split = p.split(&trace);
+        let bags = trace.lookups.len() as u64 / cfg.workload.embedding.pool as u64;
+        for d in &split {
+            assert_eq!(d.trace.lookups, trace.lookups, "full trace on each device");
+            assert_eq!(d.bags, bags, "a slice of every bag on each device");
+            assert_eq!(d.exchange_bags, bags);
+        }
+    }
+
+    #[test]
+    fn replicated_lookups_route_to_sample_home_device() {
+        let cfg = small_cfg(4, ShardStrategy::TableWise);
+        let trace = one_batch(&cfg);
+        let lps = cfg.workload.embedding.num_tables * cfg.workload.embedding.pool;
+        // replicate this trace's own hottest rows
+        let mut profile = Profile::new();
+        for l in &trace.lookups {
+            profile.record(l.table, l.row);
+        }
+        let replicas = replicate::HotRowReplicator::from_profile(&profile, 64);
+        let mut p = TablePartitioner::new(4, ShardStrategy::TableWise, lps);
+        p.set_replicas(replicas.clone());
+        let split = p.split(&trace);
+        // conservation: every lookup still lands exactly once
+        let total: usize = split.iter().map(|d| d.trace.lookups.len()).sum();
+        assert_eq!(total, trace.lookups.len());
+        let replicated: u64 = split.iter().map(|d| d.replicated).sum();
+        assert!(replicated > 0, "hot rows must reroute under a skewed trace");
+        // a replicated lookup sits on its sample's home device, not its
+        // table's owner; non-replicated lookups stay with their owner
+        let mut expected: Vec<Vec<Lookup>> = vec![Vec::new(); 4];
+        for (i, l) in trace.lookups.iter().enumerate() {
+            let d = if replicas.is_replicated(l.table, l.row) {
+                (i / lps) % 4 // sample's home device
+            } else {
+                l.table as usize % 4 // table-wise owner
+            };
+            expected[d].push(*l);
+        }
+        for (d, dt) in split.iter().enumerate() {
+            assert_eq!(dt.trace.lookups, expected[d], "device {d} placement");
+        }
+        // exchange never grows under replication
+        let plain = TablePartitioner::new(4, ShardStrategy::TableWise, lps).split(&trace);
+        for (with, without) in split.iter().zip(&plain) {
+            assert!(with.exchange_bags <= without.exchange_bags);
         }
     }
 
@@ -340,7 +575,7 @@ mod tests {
     #[test]
     fn counters_conserve_across_devices_under_spm() {
         // SPM streams every line off-chip, so per-device sums must equal
-        // the 1-device run exactly, for both strategies
+        // the 1-device run exactly, for both owner strategies
         for strategy in [ShardStrategy::TableWise, ShardStrategy::RowHashed] {
             let cfg1 = small_cfg(1, strategy);
             let trace = one_batch(&cfg1);
@@ -353,6 +588,25 @@ mod tests {
             assert_eq!(four.ops.lookups, one.ops.lookups, "{strategy:?}");
             let dev_sum: u64 = four.per_device.iter().map(|d| d.mem.offchip_reads).sum();
             assert_eq!(dev_sum, one.mem.offchip_reads, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn column_wise_conserves_logical_counters() {
+        // dim 128 over 4 devices = 32-dim slices of 2 lines each: line
+        // traffic and logical op counts match the 1-device run exactly
+        let cfg1 = small_cfg(1, ShardStrategy::TableWise);
+        let trace = one_batch(&cfg1);
+        let one = ShardedEmbeddingSim::new(&cfg1).simulate_batch(&trace);
+        let cfg4 = small_cfg(4, ShardStrategy::ColumnWise);
+        let four = ShardedEmbeddingSim::new(&cfg4).simulate_batch(&trace);
+        assert_eq!(four.mem.offchip_reads, one.mem.offchip_reads);
+        assert_eq!(four.ops.lookups, one.ops.lookups);
+        assert_eq!(four.ops.vpu_ops, one.ops.vpu_ops);
+        // per-device: every device walked every lookup at a quarter dim
+        for d in &four.per_device {
+            assert_eq!(d.ops.lookups, one.ops.lookups);
+            assert_eq!(d.mem.offchip_reads, one.mem.offchip_reads / 4);
         }
     }
 
@@ -409,5 +663,29 @@ mod tests {
             x.per_device.iter().map(|d| d.exchange_bytes).sum()
         };
         assert!(sum(&r) > sum(&t), "row {} !> table {}", sum(&r), sum(&t));
+    }
+
+    #[test]
+    fn replication_serves_hot_rows_on_chip_and_shrinks_exchange() {
+        let cfg = small_cfg(4, ShardStrategy::TableWise);
+        let trace = one_batch(&cfg);
+        let plain = ShardedEmbeddingSim::new(&cfg).simulate_batch(&trace);
+
+        let mut rcfg = cfg.clone();
+        rcfg.sharding.replicate_top_k = 256;
+        let mut sim = ShardedEmbeddingSim::new(&rcfg);
+        sim.set_replicas(
+            replicate::HotRowReplicator::from_workload(&rcfg.workload, 256).unwrap(),
+        );
+        let rep = sim.simulate_batch(&trace);
+        assert!(rep.ops.replicated_hits > 0);
+        assert_eq!(rep.ops.lookups, plain.ops.lookups, "lookups conserve");
+        // replica hits convert off-chip lines to on-chip hits, 8 lines
+        // per 128-dim vector
+        assert_eq!(
+            rep.mem.offchip_reads + rep.ops.replicated_hits * 8,
+            plain.mem.offchip_reads
+        );
+        assert!(rep.exchange_cycles <= plain.exchange_cycles);
     }
 }

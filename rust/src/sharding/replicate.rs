@@ -1,0 +1,144 @@
+//! Hot-row replication for skew-aware sharding.
+//!
+//! Embedding traffic is Zipfian (paper §II): a small set of rows absorbs
+//! a disproportionate share of lookups, and under table-wise sharding
+//! those rows concentrate on whichever devices own the hot tables. The
+//! classic production remedy (Neo/FBGEMM-style hierarchical placement)
+//! is to *replicate* the hottest rows on every device: a lookup to a
+//! replicated row is served at its sample's home device straight from
+//! on-chip memory, which
+//!
+//! * spreads the Zipf head uniformly across devices (load balance),
+//! * removes those rows' contribution to the all-to-all exchange, and
+//! * costs on-chip capacity — the replicas are pinned on *every* device,
+//!   shrinking the buffer available to caching/pinning policies.
+//!
+//! The replica set is derived from the trace's own empirical row
+//! frequencies (the same deterministic regeneration the profiling-based
+//! pinning policy uses), so it adapts to whatever skew the workload's
+//! [`crate::trace::zipf::ZipfSampler`] (or a replayed trace file)
+//! actually produces.
+
+use crate::config::WorkloadConfig;
+use crate::mem::policy::pinning::Profile;
+use std::collections::HashSet;
+
+/// The set of `(table, row)` pairs replicated on every device.
+#[derive(Debug, Clone, Default)]
+pub struct HotRowReplicator {
+    rows: HashSet<(u32, u64)>,
+    k: usize,
+}
+
+impl HotRowReplicator {
+    /// No replication (the default: `replicate_top_k = 0`).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Replicate the `k` globally hottest rows of a frequency profile
+    /// (ties broken deterministically by `(table, row)` id).
+    pub fn from_profile(profile: &Profile, k: usize) -> Self {
+        HotRowReplicator {
+            rows: profile.top_k(k).into_iter().collect(),
+            k,
+        }
+    }
+
+    /// Profile the workload's own (deterministically regenerated) trace
+    /// and replicate its `k` hottest rows.
+    pub fn from_workload(workload: &WorkloadConfig, k: usize) -> anyhow::Result<Self> {
+        if k == 0 {
+            return Ok(Self::empty());
+        }
+        Ok(Self::from_profile(&Profile::from_workload(workload)?, k))
+    }
+
+    #[inline]
+    pub fn is_replicated(&self, table: u32, row: u64) -> bool {
+        self.rows.contains(&(table, row))
+    }
+
+    /// Rows actually replicated (≤ `k` when the trace touches fewer).
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// The configured top-K budget.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// On-chip bytes the replica set pins on *each* device.
+    pub fn pinned_bytes(&self, vec_bytes: u64) -> u64 {
+        self.rows.len() as u64 * vec_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn profile_with(counts: &[((u32, u64), u64)]) -> Profile {
+        let mut p = Profile::new();
+        for &((t, r), c) in counts {
+            for _ in 0..c {
+                p.record(t, r);
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn replicates_hottest_rows_only() {
+        let p = profile_with(&[((0, 1), 9), ((0, 2), 5), ((1, 7), 3)]);
+        let r = HotRowReplicator::from_profile(&p, 2);
+        assert!(r.is_replicated(0, 1));
+        assert!(r.is_replicated(0, 2));
+        assert!(!r.is_replicated(1, 7));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.k(), 2);
+    }
+
+    #[test]
+    fn footprint_bounded_by_touched_rows() {
+        let p = profile_with(&[((0, 1), 1)]);
+        let r = HotRowReplicator::from_profile(&p, 100);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.pinned_bytes(512), 512);
+    }
+
+    #[test]
+    fn empty_replicator_matches_k_zero() {
+        let w = presets::dlrm_rmc2_small(4);
+        let r = HotRowReplicator::from_workload(&w, 0).unwrap();
+        assert!(r.is_empty());
+        assert!(!r.is_replicated(0, 0));
+        assert_eq!(r.pinned_bytes(512), 0);
+    }
+
+    #[test]
+    fn from_workload_is_deterministic() {
+        let mut w = presets::dlrm_rmc2_small(8);
+        w.embedding.num_tables = 3;
+        w.embedding.rows_per_table = 10_000;
+        w.embedding.pool = 8;
+        w.num_batches = 1;
+        w.trace.alpha = 1.2;
+        let a = HotRowReplicator::from_workload(&w, 32).unwrap();
+        let b = HotRowReplicator::from_workload(&w, 32).unwrap();
+        assert_eq!(a.len(), b.len());
+        assert!(a.len() <= 32);
+        assert!(!a.is_empty(), "a skewed trace must surface hot rows");
+        for t in 0..3u32 {
+            for row in 0..10_000u64 {
+                assert_eq!(a.is_replicated(t, row), b.is_replicated(t, row));
+            }
+        }
+    }
+}

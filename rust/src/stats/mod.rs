@@ -73,6 +73,9 @@ pub struct OpCounts {
     pub vpu_ops: u64,
     /// Embedding vector lookups issued.
     pub lookups: u64,
+    /// Lookups served from a hot-row replica pinned on-chip (skew-aware
+    /// sharding; 0 when `sharding.replicate_top_k = 0`).
+    pub replicated_hits: u64,
 }
 
 impl OpCounts {
@@ -80,6 +83,7 @@ impl OpCounts {
         self.macs += other.macs;
         self.vpu_ops += other.vpu_ops;
         self.lookups += other.lookups;
+        self.replicated_hits += other.replicated_hits;
     }
 }
 
@@ -91,7 +95,14 @@ pub struct CycleBreakdown {
     /// Embedding gather + pooling (cycle-level memory sim + VPU).
     pub embedding: u64,
     /// All-to-all embedding exchange between devices (0 on one device).
+    /// Reported in full even when overlap hides part of it.
     pub exchange: u64,
+    /// The exchange cycles actually exposed on the critical path: equal
+    /// to `exchange` under serial execution, the non-hidden remainder
+    /// when `sharding.overlap_exchange` pipelines the exchange behind
+    /// interaction + top-MLP compute. This — not `exchange` — is what
+    /// [`CycleBreakdown::total`] counts.
+    pub exchange_exposed: u64,
     /// Feature interaction (VPU).
     pub interaction: u64,
     /// Top-MLP.
@@ -100,7 +111,8 @@ pub struct CycleBreakdown {
 
 impl CycleBreakdown {
     pub fn total(&self) -> u64 {
-        self.bottom_mlp + self.embedding + self.exchange + self.interaction + self.top_mlp
+        self.bottom_mlp + self.embedding + self.exchange_exposed + self.interaction
+            + self.top_mlp
     }
 }
 
@@ -177,6 +189,27 @@ impl SimReport {
         }
     }
 
+    /// Load-imbalance factor: busiest device's served lookups over the
+    /// per-device mean, across all batches. 1.0 means perfect balance
+    /// (and is returned for single-device or empty reports). Table-wise
+    /// sharding under skewed or lumpy table counts drives this above
+    /// 1.0; hot-row replication and column-wise sharding pull it back
+    /// toward 1.0.
+    pub fn imbalance_factor(&self) -> f64 {
+        let per_dev = self.total_per_device();
+        if per_dev.len() <= 1 {
+            return 1.0;
+        }
+        let max = per_dev.iter().map(|d| d.ops.lookups).max().unwrap_or(0);
+        let mean =
+            per_dev.iter().map(|d| d.ops.lookups).sum::<u64>() as f64 / per_dev.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max as f64 / mean
+        }
+    }
+
     /// Aggregate per-device counters over all batches, indexed by
     /// device id (empty when no batch recorded a device split).
     pub fn total_per_device(&self) -> Vec<DeviceCounters> {
@@ -213,6 +246,7 @@ mod tests {
                 bottom_mlp: 10,
                 embedding: emb,
                 exchange: 0,
+                exchange_exposed: 0,
                 interaction: 5,
                 top_mlp: 7,
             },
@@ -225,7 +259,7 @@ mod tests {
                 misses,
                 global_hits: 0,
             },
-            ops: OpCounts { macs: 100, vpu_ops: 50, lookups: 20 },
+            ops: OpCounts { macs: 100, vpu_ops: 50, lookups: 20, replicated_hits: 0 },
             per_device: Vec::new(),
         }
     }
@@ -282,15 +316,46 @@ mod tests {
     }
 
     #[test]
-    fn exchange_counts_toward_total() {
+    fn exposed_exchange_counts_toward_total() {
         let c = CycleBreakdown {
             bottom_mlp: 1,
             embedding: 2,
             exchange: 40,
+            exchange_exposed: 40,
             interaction: 3,
             top_mlp: 4,
         };
+        // serial execution: the full exchange sits on the critical path
         assert_eq!(c.total(), 50);
+        // overlap hides 35 of the 40 cycles: only the remainder counts,
+        // while `exchange` still reports the full phase
+        let hidden = CycleBreakdown { exchange_exposed: 5, ..c };
+        assert_eq!(hidden.total(), 15);
+        assert_eq!(hidden.exchange, 40);
+    }
+
+    #[test]
+    fn imbalance_factor_from_per_device_lookups() {
+        let dev = |device, lookups| DeviceCounters {
+            device,
+            ops: OpCounts { lookups, ..Default::default() },
+            ..Default::default()
+        };
+        let mut b = batch(0, 100, 0, 0);
+        b.per_device = vec![dev(0, 30), dev(1, 10)];
+        let report = SimReport {
+            platform: "t".into(),
+            policy: "spm".into(),
+            batch_size: 4,
+            num_devices: 2,
+            freq_ghz: 1.0,
+            per_batch: vec![b],
+            energy_joules: 0.0,
+        };
+        // max 30 over mean 20
+        assert!((report.imbalance_factor() - 1.5).abs() < 1e-12);
+        // single-device (and empty) reports are balanced by definition
+        assert_eq!(SimReport::default().imbalance_factor(), 1.0);
     }
 
     #[test]

@@ -9,17 +9,20 @@ use std::fmt::Write as _;
 pub fn to_csv(report: &SimReport) -> String {
     let mut out = String::new();
     out.push_str(
-        "batch,bottom_mlp_cycles,embedding_cycles,exchange_cycles,interaction_cycles,top_mlp_cycles,\
-         total_cycles,onchip_reads,onchip_writes,offchip_reads,offchip_writes,hits,misses,global_hits\n",
+        "batch,bottom_mlp_cycles,embedding_cycles,exchange_cycles,exchange_exposed_cycles,\
+         interaction_cycles,top_mlp_cycles,\
+         total_cycles,onchip_reads,onchip_writes,offchip_reads,offchip_writes,hits,misses,\
+         global_hits,replicated_hits\n",
     );
     for b in &report.per_batch {
         let _ = writeln!(
             out,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             b.batch_index,
             b.cycles.bottom_mlp,
             b.cycles.embedding,
             b.cycles.exchange,
+            b.cycles.exchange_exposed,
             b.cycles.interaction,
             b.cycles.top_mlp,
             b.cycles.total(),
@@ -30,6 +33,7 @@ pub fn to_csv(report: &SimReport) -> String {
             b.mem.hits,
             b.mem.misses,
             b.mem.global_hits,
+            b.ops.replicated_hits,
         );
     }
     out
@@ -40,7 +44,7 @@ fn device_json(d: &crate::stats::DeviceCounters) -> String {
         concat!(
             "{{\"device\":{},\"cycles\":{},\"exchange_bytes\":{},",
             "\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
-            "\"hits\":{},\"misses\":{},\"lookups\":{}}}"
+            "\"hits\":{},\"misses\":{},\"lookups\":{},\"replicated_hits\":{}}}"
         ),
         d.device,
         d.cycles,
@@ -51,6 +55,7 @@ fn device_json(d: &crate::stats::DeviceCounters) -> String {
         d.mem.hits,
         d.mem.misses,
         d.ops.lookups,
+        d.ops.replicated_hits,
     )
 }
 
@@ -59,16 +64,18 @@ fn batch_json(b: &BatchResult) -> String {
     format!(
         concat!(
             "{{\"batch\":{},\"cycles\":{{\"bottom_mlp\":{},\"embedding\":{},",
-            "\"exchange\":{},\"interaction\":{},\"top_mlp\":{},\"total\":{}}},",
+            "\"exchange\":{},\"exchange_exposed\":{},\"interaction\":{},",
+            "\"top_mlp\":{},\"total\":{}}},",
             "\"mem\":{{\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
             "\"offchip_writes\":{},\"hits\":{},\"misses\":{},\"global_hits\":{}}},",
-            "\"ops\":{{\"macs\":{},\"vpu_ops\":{},\"lookups\":{}}},",
+            "\"ops\":{{\"macs\":{},\"vpu_ops\":{},\"lookups\":{},\"replicated_hits\":{}}},",
             "\"per_device\":[{}]}}"
         ),
         b.batch_index,
         b.cycles.bottom_mlp,
         b.cycles.embedding,
         b.cycles.exchange,
+        b.cycles.exchange_exposed,
         b.cycles.interaction,
         b.cycles.top_mlp,
         b.cycles.total(),
@@ -82,6 +89,7 @@ fn batch_json(b: &BatchResult) -> String {
         b.ops.macs,
         b.ops.vpu_ops,
         b.ops.lookups,
+        b.ops.replicated_hits,
         per_device.join(","),
     )
 }
@@ -96,6 +104,7 @@ pub fn to_json(report: &SimReport) -> String {
             "\"num_devices\":{},",
             "\"freq_ghz\":{},\"total_cycles\":{},\"exec_time_secs\":{:e},",
             "\"onchip_ratio\":{:.6},\"hit_rate\":{:.6},\"energy_joules\":{:e},",
+            "\"imbalance_factor\":{:.6},\"replicated_hits\":{},",
             "\"per_batch\":[{}]}}"
         ),
         report.platform,
@@ -108,6 +117,8 @@ pub fn to_json(report: &SimReport) -> String {
         m.onchip_ratio(),
         m.hit_rate(),
         report.energy_joules,
+        report.imbalance_factor(),
+        report.total_ops().replicated_hits,
         batches.join(",")
     )
 }
@@ -130,6 +141,7 @@ mod tests {
                     bottom_mlp: 1,
                     embedding: 2,
                     exchange: 0,
+                    exchange_exposed: 0,
                     interaction: 3,
                     top_mlp: 4,
                 },
@@ -142,7 +154,7 @@ mod tests {
                     misses: 7,
                     global_hits: 0,
                 },
-                ops: OpCounts { macs: 8, vpu_ops: 9, lookups: 10 },
+                ops: OpCounts { macs: 8, vpu_ops: 9, lookups: 10, replicated_hits: 0 },
                 per_device: Vec::new(),
             }],
             energy_joules: 1.5e-3,
@@ -156,7 +168,16 @@ mod tests {
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("batch,"));
         assert!(lines[0].contains("exchange_cycles"));
-        assert!(lines[1].starts_with("0,1,2,0,3,4,10,"));
+        assert!(lines[0].contains("exchange_exposed_cycles"));
+        assert!(lines[0].ends_with("replicated_hits"));
+        // batch 0: bottom 1, emb 2, exchange 0/0, interact 3, top 4 = 10
+        assert!(lines[1].starts_with("0,1,2,0,0,3,4,10,"));
+        assert!(lines[1].ends_with(",0"), "replicated_hits column closes the row");
+        assert_eq!(
+            lines[0].split(',').count(),
+            lines[1].split(',').count(),
+            "header and row column counts agree"
+        );
     }
 
     #[test]
@@ -167,6 +188,9 @@ mod tests {
         assert!(json.contains("\"platform\":\"tpuv6e\""));
         assert!(json.contains("\"num_devices\":1"));
         assert!(json.contains("\"total_cycles\":10"));
+        assert!(json.contains("\"exchange_exposed\":0"));
+        assert!(json.contains("\"imbalance_factor\":1.000000"));
+        assert!(json.contains("\"replicated_hits\":0"));
         assert!(json.contains("\"per_batch\":[{"));
         assert!(json.contains("\"per_device\":[]"));
     }

@@ -328,6 +328,49 @@ fn all_shipped_configs_parse_and_run() {
     assert!(count >= 3, "expected the shipped config files, found {count}");
 }
 
+// ------------------------------------------------- config-parse guards
+
+#[test]
+fn config_rejects_zero_devices_with_clear_error() {
+    let t = eonsim::config::parse::Table::parse("[sharding]\ndevices = 0").unwrap();
+    let err = SimConfig::from_table(&t).unwrap_err().to_string();
+    assert!(err.contains("sharding.devices"), "error names the key: {err}");
+    assert!(err.contains("at least one device"), "error explains the bound: {err}");
+}
+
+#[test]
+fn config_rejects_replicate_top_k_exceeding_rows_with_clear_error() {
+    let t = eonsim::config::parse::Table::parse(
+        "[embedding]\nrows_per_table = 1000\n\
+         [sharding]\ndevices = 4\nreplicate_top_k = 4096",
+    )
+    .unwrap();
+    let err = SimConfig::from_table(&t).unwrap_err().to_string();
+    assert!(err.contains("sharding.replicate_top_k"), "error names the key: {err}");
+    assert!(err.contains("rows_per_table"), "error names the violated bound: {err}");
+    // the same bound holds at the in-range edge
+    let ok = eonsim::config::parse::Table::parse(
+        "[embedding]\nrows_per_table = 1000\n\
+         [sharding]\ndevices = 4\nreplicate_top_k = 1000",
+    )
+    .unwrap();
+    assert!(SimConfig::from_table(&ok).is_ok(), "K == rows_per_table is legal");
+}
+
+#[test]
+fn cli_flags_reach_sharding_validation() {
+    // the CLI path funnels through the same validate(): a bad
+    // replicate_top_k arriving via config file must fail loudly, not
+    // deep in the simulator
+    let toml = "[embedding]\nrows_per_table = 500\n[sharding]\ndevices = 2\nreplicate_top_k = 501";
+    let path = std::env::temp_dir().join(format!("eonsim_badk_{}.toml", std::process::id()));
+    std::fs::write(&path, toml).unwrap();
+    let result = SimConfig::from_file(&path);
+    std::fs::remove_file(&path).ok();
+    let err = result.unwrap_err().to_string();
+    assert!(err.contains("replicate_top_k"), "{err}");
+}
+
 #[test]
 fn multicore_global_config_reports_global_hits() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");

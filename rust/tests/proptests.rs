@@ -4,9 +4,12 @@
 //! seeds.
 
 use eonsim::champsim::{ChampCache, ChampPolicy};
-use eonsim::config::{presets, CachePolicyKind, OnchipPolicy, SimConfig};
+use eonsim::config::{presets, CachePolicyKind, OnchipPolicy, ShardStrategy, SimConfig};
 use eonsim::engine::Simulator;
+use eonsim::mem::policy::pinning::Profile;
 use eonsim::mem::{Cache, MemController};
+use eonsim::sharding::replicate::HotRowReplicator;
+use eonsim::sharding::TablePartitioner;
 use eonsim::testutil::{forall, SplitMix64};
 use eonsim::trace::{AddressMap, RowPermutation, TraceGenerator, ZipfSampler};
 
@@ -203,6 +206,97 @@ fn prop_pinning_bounded_and_beneficial() {
         // pinned hits are bounded by capacity * accesses-per-vector
         let m = pin.total_mem();
         assert_eq!(m.hits + m.misses, spm.total_mem().offchip_reads - mlp_lines(&cfg));
+    });
+}
+
+/// For random traces, any strategy, any device count, and any hot-row
+/// replica set, `TablePartitioner::split` never drops or duplicates a
+/// non-replicated lookup: table/row sharding places each exactly once
+/// overall, column-wise places each exactly once *per device* (every
+/// device gathers its dim-slice), and replicated lookups always land
+/// exactly once overall (at their sample's home device).
+#[test]
+fn prop_partitioner_never_drops_or_duplicates_lookups() {
+    forall("partitioner conservation", 12, |rng| {
+        let cfg = random_small_cfg(rng);
+        let devices = 1 + rng.next_below(8) as usize;
+        let strategy = [
+            ShardStrategy::TableWise,
+            ShardStrategy::RowHashed,
+            ShardStrategy::ColumnWise,
+        ][rng.next_below(3) as usize];
+        let trace = TraceGenerator::new(&cfg.workload).unwrap().next_batch();
+        let lps = cfg.workload.embedding.num_tables * cfg.workload.embedding.pool;
+
+        // replicate the trace's own top-k rows (possibly zero)
+        let k = rng.next_below(64) as usize;
+        let mut profile = Profile::new();
+        for l in &trace.lookups {
+            profile.record(l.table, l.row);
+        }
+        let replicas = HotRowReplicator::from_profile(&profile, k);
+
+        let mut p = TablePartitioner::new(devices, strategy, lps);
+        p.set_replicas(replicas.clone());
+        let split = p.split(&trace);
+        assert_eq!(split.len(), devices);
+
+        // multiset of (table, row) occurrences in the original ...
+        let mut want: std::collections::HashMap<(u32, u64), usize> =
+            std::collections::HashMap::new();
+        for l in &trace.lookups {
+            *want.entry((l.table, l.row)).or_insert(0) += 1;
+        }
+        // ... and across all device sub-traces
+        let mut got: std::collections::HashMap<(u32, u64), usize> =
+            std::collections::HashMap::new();
+        for d in &split {
+            for l in &d.trace.lookups {
+                *got.entry((l.table, l.row)).or_insert(0) += 1;
+            }
+        }
+        for (&key, &count) in &want {
+            let expect = if replicas.is_replicated(key.0, key.1) {
+                count // replicas serve whole at home, once overall
+            } else if matches!(strategy, ShardStrategy::ColumnWise) {
+                count * devices // one dim-slice per device
+            } else {
+                count // exactly one owner
+            };
+            assert_eq!(
+                got.get(&key).copied().unwrap_or(0),
+                expect,
+                "{strategy:?} x{devices} lookup {key:?}"
+            );
+        }
+        assert_eq!(
+            got.values().sum::<usize>(),
+            split.iter().map(|d| d.trace.lookups.len()).sum::<usize>()
+        );
+    });
+}
+
+/// Under a uniform trace with the table count divisible by the device
+/// count, table-wise sharding is perfectly balanced: the reported
+/// per-device load-imbalance factor is exactly 1.0 (each device serves
+/// `owned_tables * pool` lookups of every sample, trace-independent).
+#[test]
+fn prop_uniform_divisible_table_wise_imbalance_is_one() {
+    forall("uniform table-wise balance", 8, |rng| {
+        let mut cfg = random_small_cfg(rng);
+        let devices = 2 + rng.next_below(3) as usize; // 2..4
+        cfg.workload.trace.kind = "uniform".into();
+        cfg.workload.embedding.num_tables = devices * (1 + rng.next_below(4) as usize);
+        cfg.sharding.devices = devices;
+        cfg.sharding.strategy = ShardStrategy::TableWise;
+        let report = Simulator::new(cfg).run().unwrap();
+        let f = report.imbalance_factor();
+        assert!((f - 1.0).abs() < 1e-12, "imbalance {f} != 1.0 on {devices} devices");
+        // and every device really served the same lookup count
+        let per_dev = report.total_per_device();
+        assert_eq!(per_dev.len(), devices);
+        let first = per_dev[0].ops.lookups;
+        assert!(per_dev.iter().all(|d| d.ops.lookups == first));
     });
 }
 

@@ -1,10 +1,14 @@
 //! Integration tests for the multi-device sharding subsystem: counter
 //! conservation against the single-device path, determinism, scaling
-//! shape, and config/CLI plumbing through the full engine.
+//! shape, config/CLI plumbing through the full engine, and the
+//! skew-aware v2 features — column-wise (dim-split) sharding, hot-row
+//! replication, and exchange/compute overlap.
 
 use eonsim::config::{presets, ShardStrategy, SimConfig};
 use eonsim::engine::Simulator;
+use eonsim::sharding::replicate::HotRowReplicator;
 use eonsim::sharding::{ShardedEmbeddingSim, TablePartitioner};
+use eonsim::stats::SimReport;
 use eonsim::trace::TraceGenerator;
 
 fn base_cfg() -> SimConfig {
@@ -158,4 +162,203 @@ fn sharded_state_persists_across_batches() {
     assert!(r1.cycles > 0 && r2.cycles > 0);
     assert_eq!(r1.per_device.len(), 4);
     assert_eq!(r2.per_device.len(), 4);
+}
+
+// ------------------------------------------------- skew-aware v2 suite
+
+/// A deliberately lumpy deployment — 6 tables on 4 devices, so two
+/// devices own two tables and two own one (lookup imbalance 4/3) — the
+/// configuration the skewed-serving example sweeps.
+fn skewed_cfg(alpha: f64, replicate_top_k: usize) -> SimConfig {
+    let mut cfg = presets::tpuv6e_dlrm_small();
+    cfg.workload.batch_size = 32;
+    cfg.workload.num_batches = 2;
+    cfg.workload.embedding.num_tables = 6;
+    cfg.workload.embedding.rows_per_table = 100_000;
+    cfg.workload.embedding.pool = 16;
+    cfg.workload.trace.alpha = alpha;
+    cfg.sharding.devices = 4;
+    cfg.sharding.strategy = ShardStrategy::TableWise;
+    cfg.sharding.replicate_top_k = replicate_top_k;
+    cfg
+}
+
+/// Acceptance: column-wise sharding conserves the logical counters
+/// against the 1-device baseline exactly — every lookup is counted once,
+/// and the dim-slices (128/4 = 32 dims = 2 of 8 lines each) sum to the
+/// same off-chip line traffic under SPM.
+#[test]
+fn column_wise_counters_match_single_device_baseline() {
+    let one = Simulator::new(with_devices(1, ShardStrategy::TableWise)).run().unwrap();
+    let four = Simulator::new(with_devices(4, ShardStrategy::ColumnWise)).run().unwrap();
+    assert_eq!(one.total_ops().lookups, four.total_ops().lookups);
+    assert_eq!(one.total_ops().vpu_ops, four.total_ops().vpu_ops);
+    assert_eq!(one.total_mem().offchip_reads, four.total_mem().offchip_reads);
+    // and the exchange phase exists: partial vectors still travel
+    assert!(four.per_batch.iter().all(|b| b.cycles.exchange > 0));
+}
+
+/// Column-wise load balance is perfect by construction: every device
+/// serves (a slice of) every lookup.
+#[test]
+fn column_wise_is_perfectly_balanced() {
+    let four = Simulator::new(with_devices(4, ShardStrategy::ColumnWise)).run().unwrap();
+    for b in &four.per_batch {
+        assert_eq!(b.per_device.len(), 4);
+        for d in &b.per_device {
+            assert_eq!(d.ops.lookups, b.ops.lookups, "device {} share", d.device);
+        }
+    }
+    assert!((four.imbalance_factor() - 1.0).abs() < 1e-12);
+}
+
+/// Replication conservation: lookups are never dropped, and under SPM
+/// every replica hit converts exactly `lines_per_vec` off-chip reads
+/// into on-chip hits — nothing else moves.
+#[test]
+fn replication_conserves_lookups_and_converts_dram_to_replica_hits() {
+    let base = Simulator::new(skewed_cfg(1.2, 0)).run().unwrap();
+    let rep = Simulator::new(skewed_cfg(1.2, 1024)).run().unwrap();
+    assert_eq!(base.total_ops().replicated_hits, 0);
+    assert_eq!(base.total_ops().lookups, rep.total_ops().lookups);
+    let hits = rep.total_ops().replicated_hits;
+    assert!(hits > 0, "alpha 1.2 must produce replica traffic");
+    let lines_per_vec = 8; // 128-dim f32 vectors over 64 B lines
+    assert_eq!(
+        rep.total_mem().offchip_reads + hits * lines_per_vec,
+        base.total_mem().offchip_reads,
+        "replica hits must account for every skipped off-chip line"
+    );
+}
+
+/// Replicated hits never exceed the top-K footprint's traffic: they
+/// equal, exactly, the number of trace lookups that target the K
+/// replicated rows (computed independently from the regenerated trace).
+#[test]
+fn replicated_hits_match_top_k_footprint() {
+    let k = 256;
+    let cfg = skewed_cfg(1.2, k);
+    let replicas = HotRowReplicator::from_workload(&cfg.workload, k).unwrap();
+    assert!(replicas.len() <= k, "footprint bounded by K");
+    let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+    let mut expected = 0u64;
+    for _ in 0..cfg.workload.num_batches {
+        for l in &gen.next_batch().lookups {
+            if replicas.is_replicated(l.table, l.row) {
+                expected += 1;
+            }
+        }
+    }
+    let report = Simulator::new(cfg).run().unwrap();
+    assert_eq!(report.total_ops().replicated_hits, expected);
+    assert!(expected <= report.total_ops().lookups);
+}
+
+/// Acceptance (issue criterion): with Zipf α = 1.2 on 4 table-sharded
+/// devices, replicating the top 1024 rows reduces both the reported
+/// load-imbalance factor and total simulated cycles vs K = 0, and never
+/// grows the exchange.
+#[test]
+fn replication_reduces_imbalance_and_cycles_at_alpha_1_2() {
+    let k0 = Simulator::new(skewed_cfg(1.2, 0)).run().unwrap();
+    let k1024 = Simulator::new(skewed_cfg(1.2, 1024)).run().unwrap();
+    assert!(
+        k1024.imbalance_factor() < k0.imbalance_factor(),
+        "imbalance {} !< {}",
+        k1024.imbalance_factor(),
+        k0.imbalance_factor()
+    );
+    assert!(
+        k1024.total_cycles() < k0.total_cycles(),
+        "cycles {} !< {}",
+        k1024.total_cycles(),
+        k0.total_cycles()
+    );
+    let exchange = |r: &SimReport| -> u64 {
+        r.per_batch.iter().map(|b| b.cycles.exchange).sum()
+    };
+    assert!(exchange(&k1024) <= exchange(&k0));
+}
+
+/// Acceptance (issue criterion): `overlap_exchange = false` (the
+/// default) reproduces the serial-exchange cycle accounting
+/// bit-identically — `exchange_exposed == exchange` and the batch total
+/// is exactly the PR-1 five-component sum.
+#[test]
+fn serial_exchange_reproduces_pre_overlap_cycles_bit_identically() {
+    let serial = Simulator::new(with_devices(4, ShardStrategy::TableWise)).run().unwrap();
+    for b in &serial.per_batch {
+        assert_eq!(b.cycles.exchange_exposed, b.cycles.exchange);
+        assert_eq!(
+            b.cycles.total(),
+            b.cycles.bottom_mlp
+                + b.cycles.embedding
+                + b.cycles.exchange
+                + b.cycles.interaction
+                + b.cycles.top_mlp,
+            "serial total must be the original five-component sum"
+        );
+    }
+}
+
+/// Overlap hides exchange behind interaction + top-MLP compute: the
+/// exposed remainder never exceeds the full exchange, everything else is
+/// untouched, and totals never grow.
+#[test]
+fn overlap_reports_exposed_remainder_only() {
+    let mut ocfg = with_devices(4, ShardStrategy::TableWise);
+    ocfg.sharding.overlap_exchange = true;
+    let overlapped = Simulator::new(ocfg).run().unwrap();
+    let serial = Simulator::new(with_devices(4, ShardStrategy::TableWise)).run().unwrap();
+    for (bo, bs) in overlapped.per_batch.iter().zip(&serial.per_batch) {
+        assert!(bo.cycles.exchange_exposed <= bo.cycles.exchange);
+        assert_eq!(bo.cycles.exchange, bs.cycles.exchange, "overlap only changes exposure");
+        assert_eq!(bo.cycles.embedding, bs.cycles.embedding);
+        assert_eq!(bo.cycles.top_mlp, bs.cycles.top_mlp);
+        assert_eq!(
+            bo.cycles.exchange_exposed,
+            bo.cycles.exchange.saturating_sub(bo.cycles.interaction + bo.cycles.top_mlp)
+        );
+    }
+    assert!(overlapped.total_cycles() <= serial.total_cycles());
+}
+
+/// Acceptance (issue criterion): across the example's full K × α sweep
+/// with overlap enabled, `exchange_exposed <= exchange` in every batch
+/// of every configuration.
+#[test]
+fn overlap_exposed_never_exceeds_exchange_across_sweep() {
+    for alpha in [0.6, 0.9, 1.2] {
+        for k in [0usize, 64, 1024] {
+            let mut cfg = skewed_cfg(alpha, k);
+            cfg.workload.num_batches = 1;
+            cfg.sharding.overlap_exchange = true;
+            let report = Simulator::new(cfg).run().unwrap();
+            for b in &report.per_batch {
+                assert!(
+                    b.cycles.exchange_exposed <= b.cycles.exchange,
+                    "alpha {alpha}, K {k}: exposed {} > exchange {}",
+                    b.cycles.exchange_exposed,
+                    b.cycles.exchange
+                );
+            }
+        }
+    }
+}
+
+/// Column-wise and replicated runs are exactly reproducible.
+#[test]
+fn column_wise_and_replicated_runs_are_deterministic() {
+    let col = || Simulator::new(with_devices(4, ShardStrategy::ColumnWise)).run().unwrap();
+    let (a, b) = (col(), col());
+    assert_eq!(a.total_cycles(), b.total_cycles());
+    assert_eq!(a.total_mem(), b.total_mem());
+
+    let rep = || Simulator::new(skewed_cfg(1.2, 512)).run().unwrap();
+    let (c, d) = (rep(), rep());
+    assert_eq!(c.total_cycles(), d.total_cycles());
+    assert_eq!(c.total_ops().replicated_hits, d.total_ops().replicated_hits);
+    for (bc, bd) in c.per_batch.iter().zip(&d.per_batch) {
+        assert_eq!(bc.per_device, bd.per_device);
+    }
 }
