@@ -2,97 +2,19 @@
 //! This is the profile the performance pass iterates against
 //! (EXPERIMENTS.md §Perf): cache access throughput, DRAM model
 //! throughput, controller throughput, Zipf sampling, trace generation,
-//! and the end-to-end embedding simulation rate in simulated
-//! accesses/second.
+//! the end-to-end embedding simulation rate in simulated
+//! accesses/second, and the sharded serial-vs-parallel fan-out speedup.
+//!
+//! The measurements live in `eonsim::bench` so the `eonsim bench`
+//! subcommand can emit the same numbers as machine-readable
+//! `BENCH_hotpath.json`; this target is the human-readable wrapper.
 //!
 //! Run: `cargo bench --bench hotpath`
 
-mod common;
-
-use eonsim::config::{presets, CachePolicyKind, OnchipPolicy};
-use eonsim::engine::Simulator;
-use eonsim::mem::{Cache, MemController};
-use eonsim::testutil::SplitMix64;
-use eonsim::trace::{TraceGenerator, ZipfSampler};
+use eonsim::bench::{render_text, run_hotpath, BenchOptions};
 
 fn main() -> anyhow::Result<()> {
-    common::section("hot path microbenchmarks");
-
-    // 1) Zipf sampling
-    let n_samples = 4_000_000u64;
-    let z = ZipfSampler::new(1_000_000, 1.1);
-    let mut sink = 0u64;
-    let secs = common::bench("zipf sample (1M rows, a=1.1)", 3, || {
-        let mut rng = SplitMix64::new(1);
-        for _ in 0..n_samples {
-            sink ^= z.sample(&mut rng);
-        }
-    });
-    common::throughput("zipf samples", n_samples, secs);
-
-    // 2) cache access throughput (128 MB, 16-way, skewed stream)
-    let n_acc = 8_000_000u64;
-    let addrs: Vec<u64> = {
-        let z = ZipfSampler::new(2_000_000, 1.1);
-        let mut rng = SplitMix64::new(2);
-        (0..n_acc).map(|_| z.sample(&mut rng) * 512).collect()
-    };
-    let mut cache = Cache::new(128 << 20, 64, 16, CachePolicyKind::Lru);
-    let secs = common::bench("cache access (lru, 128MB)", 3, || {
-        for &a in &addrs {
-            cache.access(a);
-        }
-    });
-    common::throughput("cache accesses", n_acc, secs);
-
-    let mut cache = Cache::new(128 << 20, 64, 16, CachePolicyKind::Srrip);
-    let secs = common::bench("cache access (srrip, 128MB)", 3, || {
-        for &a in &addrs {
-            cache.access(a);
-        }
-    });
-    common::throughput("cache accesses", n_acc, secs);
-
-    // 3) DRAM + controller throughput
-    let hw = presets::tpuv6e_hardware();
-    let n_dram = 2_000_000u64;
-    let secs = common::bench("controller+dram (fr-fcfs w=64)", 3, || {
-        let mut ctrl = MemController::new(&hw.mem.dram, 64, hw.dram_bytes_per_cycle(), 64);
-        for (i, &a) in addrs[..n_dram as usize].iter().enumerate() {
-            ctrl.enqueue(a, i as u64 / 32);
-        }
-        ctrl.drain();
-    });
-    common::throughput("dram accesses", n_dram, secs);
-
-    // 4) trace generation
-    let mut w = presets::dlrm_rmc2_small(256);
-    w.num_batches = 1;
-    let lookups = w.lookups_per_batch();
-    let secs = common::bench("trace gen (batch 256, 60 tables)", 3, || {
-        let mut g = TraceGenerator::new(&w).unwrap();
-        let b = g.next_batch();
-        std::hint::black_box(&b);
-    });
-    common::throughput("lookups generated", lookups, secs);
-
-    // 5) end-to-end embedding sim rate (the headline §Perf metric)
-    for (name, policy) in [
-        ("spm", OnchipPolicy::Spm),
-        ("lru", OnchipPolicy::Cache(CachePolicyKind::Lru)),
-    ] {
-        let mut cfg = presets::tpuv6e_dlrm_small();
-        cfg.workload.batch_size = 256;
-        cfg.workload.num_batches = 1;
-        cfg.hardware.mem.policy = policy;
-        let line_accesses = cfg.workload.lookups_per_batch() * 8;
-        let secs = common::bench(&format!("end-to-end sim ({name}, batch 256)"), 3, || {
-            let r = Simulator::new(cfg.clone()).run().unwrap();
-            std::hint::black_box(r.total_cycles());
-        });
-        common::throughput("simulated line accesses", line_accesses, secs);
-    }
-
-    std::hint::black_box(sink);
+    let report = run_hotpath(&BenchOptions::default())?;
+    print!("{}", render_text(&report));
     Ok(())
 }

@@ -1,0 +1,476 @@
+//! Host-performance benchmark harness (EXPERIMENTS.md §Perf): the hot
+//! paths `benches/hotpath.rs` has always timed, packaged as a library so
+//! the `eonsim bench` subcommand can emit a machine-readable
+//! `BENCH_hotpath.json` and CI can record the perf trajectory PR over
+//! PR. No criterion in the offline vendor set — wall-clock timing with
+//! one warmup plus `reps` repetitions per section.
+//!
+//! The headline section is the **sharded end-to-end comparison**: the
+//! same 4-device profiled run at `threads = 1` and `threads = N`, whose
+//! ratio is the host speedup the threaded device fan-out buys (and the
+//! regression canary if it ever decays).
+
+use crate::config::{presets, CachePolicyKind, OnchipPolicy, ShardStrategy, SimConfig};
+use crate::engine::Simulator;
+use crate::mem::{Cache, MemController};
+use crate::testutil::SplitMix64;
+use crate::trace::{TraceGenerator, ZipfSampler};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Bumped only when the JSON layout changes incompatibly, so downstream
+/// trajectory tooling can compare artifacts across PRs.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Knobs for one benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Reduced item counts and a single repetition — CI smoke scale.
+    pub smoke: bool,
+    /// Repetitions per section (after one warmup). Forced to 1 by smoke.
+    pub reps: usize,
+    /// Worker threads for the parallel leg of the sharded comparison.
+    pub threads: usize,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions {
+            smoke: false,
+            reps: 3,
+            threads: crate::parallel::available_threads(),
+        }
+    }
+}
+
+impl BenchOptions {
+    fn reps(&self) -> usize {
+        if self.smoke {
+            1
+        } else {
+            self.reps.max(1)
+        }
+    }
+
+    /// Scale an item count down for smoke runs.
+    fn scaled(&self, full: u64) -> u64 {
+        if self.smoke {
+            (full / 20).max(1)
+        } else {
+            full
+        }
+    }
+}
+
+/// One timed section.
+#[derive(Debug, Clone)]
+pub struct SectionResult {
+    /// Schema-stable section id (`zipf_sample`, `cache_lru`, ...).
+    pub id: &'static str,
+    /// Human-readable description of what was measured.
+    pub label: String,
+    /// Items processed per repetition (samples, line accesses, ...).
+    pub items: u64,
+    pub reps: usize,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl SectionResult {
+    pub fn items_per_sec(&self) -> f64 {
+        if self.mean_secs > 0.0 {
+            self.items as f64 / self.mean_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The sharded end-to-end serial-vs-parallel comparison.
+#[derive(Debug, Clone)]
+pub struct ShardedComparison {
+    pub devices: usize,
+    /// Worker threads used for the parallel leg.
+    pub threads: usize,
+    pub batches: usize,
+    pub serial_secs: f64,
+    pub parallel_secs: f64,
+}
+
+impl ShardedComparison {
+    /// Wall-clock speedup of the threaded fan-out over `threads = 1`.
+    pub fn speedup(&self) -> f64 {
+        if self.parallel_secs > 0.0 {
+            self.serial_secs / self.parallel_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Everything one `eonsim bench` invocation measured.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub smoke: bool,
+    pub reps: usize,
+    pub threads: usize,
+    pub sections: Vec<SectionResult>,
+    pub sharded: ShardedComparison,
+}
+
+/// Time `f` over `reps` repetitions after one warmup.
+fn time<F: FnMut()>(reps: usize, mut f: F) -> (f64, f64, f64) {
+    f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    (mean, min, max)
+}
+
+fn section<F: FnMut()>(
+    id: &'static str,
+    label: impl Into<String>,
+    items: u64,
+    reps: usize,
+    f: F,
+) -> SectionResult {
+    let (mean_secs, min_secs, max_secs) = time(reps, f);
+    SectionResult { id, label: label.into(), items, reps, mean_secs, min_secs, max_secs }
+}
+
+/// The 4-device profiled serving workload the sharded comparison runs:
+/// table-sharded LRU devices with hot-row replication, so one timed run
+/// exercises trace generation (once, via the shared `WorkloadTrace`),
+/// the profiling pass, the replicator, and the per-device fan-out.
+fn sharded_cfg(opts: &BenchOptions, threads: usize) -> SimConfig {
+    let mut cfg = presets::tpuv6e_dlrm_small();
+    cfg.workload.batch_size = if opts.smoke { 32 } else { 128 };
+    cfg.workload.num_batches = if opts.smoke { 1 } else { 2 };
+    cfg.workload.embedding.num_tables = 8;
+    cfg.workload.embedding.rows_per_table = 100_000;
+    cfg.workload.embedding.pool = 32;
+    cfg.workload.trace.alpha = 1.1;
+    cfg.hardware.mem.policy = OnchipPolicy::Cache(CachePolicyKind::Lru);
+    cfg.hardware.mem.onchip_bytes = 8 << 20;
+    cfg.sharding.devices = 4;
+    cfg.sharding.strategy = ShardStrategy::TableWise;
+    cfg.sharding.replicate_top_k = 256;
+    cfg.threads = threads;
+    cfg
+}
+
+/// Run every hot-path section plus the sharded serial-vs-parallel
+/// end-to-end comparison.
+pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
+    let reps = opts.reps();
+    let mut sections = Vec::new();
+
+    // 1) Zipf sampling
+    let n_samples = opts.scaled(4_000_000);
+    let z = ZipfSampler::new(1_000_000, 1.1);
+    let mut sink = 0u64;
+    sections.push(section(
+        "zipf_sample",
+        "zipf sample (1M rows, a=1.1)",
+        n_samples,
+        reps,
+        || {
+            let mut rng = SplitMix64::new(1);
+            for _ in 0..n_samples {
+                sink ^= z.sample(&mut rng);
+            }
+        },
+    ));
+
+    // 2) cache access throughput (128 MB, 16-way, skewed stream)
+    let n_acc = opts.scaled(8_000_000);
+    let addrs: Vec<u64> = {
+        let z = ZipfSampler::new(2_000_000, 1.1);
+        let mut rng = SplitMix64::new(2);
+        (0..n_acc).map(|_| z.sample(&mut rng) * 512).collect()
+    };
+    for (id, label, kind) in [
+        ("cache_lru", "cache access (lru, 128MB)", CachePolicyKind::Lru),
+        ("cache_srrip", "cache access (srrip, 128MB)", CachePolicyKind::Srrip),
+    ] {
+        let mut cache = Cache::new(128 << 20, 64, 16, kind);
+        sections.push(section(id, label, n_acc, reps, || {
+            for &a in &addrs {
+                cache.access(a);
+            }
+        }));
+    }
+
+    // 3) DRAM + controller throughput
+    let hw = presets::tpuv6e_hardware();
+    let n_dram = opts.scaled(2_000_000).min(n_acc);
+    sections.push(section(
+        "dram_controller",
+        "controller+dram (fr-fcfs w=64)",
+        n_dram,
+        reps,
+        || {
+            let mut ctrl = MemController::new(&hw.mem.dram, 64, hw.dram_bytes_per_cycle(), 64);
+            for (i, &a) in addrs[..n_dram as usize].iter().enumerate() {
+                ctrl.enqueue(a, i as u64 / 32);
+            }
+            ctrl.drain();
+        },
+    ));
+
+    // 4) trace generation
+    let mut w = presets::dlrm_rmc2_small(if opts.smoke { 64 } else { 256 });
+    w.num_batches = 1;
+    let lookups = w.lookups_per_batch();
+    sections.push(section(
+        "trace_gen",
+        format!("trace gen (batch {}, 60 tables)", w.batch_size),
+        lookups,
+        reps,
+        || {
+            let mut g = TraceGenerator::new(&w).unwrap();
+            let b = g.next_batch();
+            std::hint::black_box(&b);
+        },
+    ));
+
+    // 5) end-to-end single-device sim rate (the classic §Perf metric)
+    for (id, name, policy) in [
+        ("e2e_spm", "spm", OnchipPolicy::Spm),
+        ("e2e_lru", "lru", OnchipPolicy::Cache(CachePolicyKind::Lru)),
+    ] {
+        let mut cfg = presets::tpuv6e_dlrm_small();
+        cfg.workload.batch_size = if opts.smoke { 32 } else { 256 };
+        cfg.workload.num_batches = 1;
+        cfg.hardware.mem.policy = policy;
+        let line_accesses = cfg.workload.lookups_per_batch() * 8;
+        sections.push(section(
+            id,
+            format!("end-to-end sim ({name}, batch {})", cfg.workload.batch_size),
+            line_accesses,
+            reps,
+            || {
+                let r = Simulator::new(cfg.clone()).run().unwrap();
+                std::hint::black_box(r.total_cycles());
+            },
+        ));
+    }
+
+    // 6) sharded end-to-end: identical profiled 4-device run at
+    // threads = 1 vs threads = N (results are bit-identical; only the
+    // host wall clock moves)
+    let serial_cfg = sharded_cfg(opts, 1);
+    let parallel_cfg = sharded_cfg(opts, opts.threads.max(1));
+    let batches = serial_cfg.workload.num_batches;
+    let line_accesses =
+        serial_cfg.workload.lookups_per_batch() * batches as u64 * 8;
+    let (serial_secs, serial_min, serial_max) = time(reps, || {
+        let r = Simulator::new(serial_cfg.clone()).run().unwrap();
+        std::hint::black_box(r.total_cycles());
+    });
+    let (parallel_secs, parallel_min, parallel_max) = time(reps, || {
+        let r = Simulator::new(parallel_cfg.clone()).run().unwrap();
+        std::hint::black_box(r.total_cycles());
+    });
+    sections.push(SectionResult {
+        id: "sharded_e2e_serial",
+        label: format!("sharded e2e (4 dev, threads 1, batch {})", serial_cfg.workload.batch_size),
+        items: line_accesses,
+        reps,
+        mean_secs: serial_secs,
+        min_secs: serial_min,
+        max_secs: serial_max,
+    });
+    sections.push(SectionResult {
+        id: "sharded_e2e_parallel",
+        label: format!(
+            "sharded e2e (4 dev, threads {}, batch {})",
+            parallel_cfg.threads, parallel_cfg.workload.batch_size
+        ),
+        items: line_accesses,
+        reps,
+        mean_secs: parallel_secs,
+        min_secs: parallel_min,
+        max_secs: parallel_max,
+    });
+
+    std::hint::black_box(sink);
+    Ok(BenchReport {
+        smoke: opts.smoke,
+        reps,
+        threads: opts.threads.max(1),
+        sections,
+        sharded: ShardedComparison {
+            devices: 4,
+            threads: opts.threads.max(1),
+            batches,
+            serial_secs,
+            parallel_secs,
+        },
+    })
+}
+
+/// Schema-stable JSON (`BENCH_hotpath.json`): per-section throughput
+/// plus the sharded serial/parallel comparison and its speedup.
+pub fn to_json(report: &BenchReport) -> String {
+    let sections: Vec<String> = report
+        .sections
+        .iter()
+        .map(|s| {
+            format!(
+                concat!(
+                    "{{\"id\":\"{}\",\"label\":\"{}\",\"items\":{},\"reps\":{},",
+                    "\"mean_secs\":{:e},\"min_secs\":{:e},\"max_secs\":{:e},",
+                    "\"items_per_sec\":{:e}}}"
+                ),
+                s.id,
+                s.label,
+                s.items,
+                s.reps,
+                s.mean_secs,
+                s.min_secs,
+                s.max_secs,
+                s.items_per_sec(),
+            )
+        })
+        .collect();
+    format!(
+        concat!(
+            "{{\"schema_version\":{},\"smoke\":{},\"reps\":{},\"threads\":{},",
+            "\"sections\":[{}],",
+            "\"sharded\":{{\"devices\":{},\"threads\":{},\"batches\":{},",
+            "\"serial_secs\":{:e},\"parallel_secs\":{:e},\"speedup\":{:.4}}}}}"
+        ),
+        SCHEMA_VERSION,
+        report.smoke,
+        report.reps,
+        report.threads,
+        sections.join(","),
+        report.sharded.devices,
+        report.sharded.threads,
+        report.sharded.batches,
+        report.sharded.serial_secs,
+        report.sharded.parallel_secs,
+        report.sharded.speedup(),
+    )
+}
+
+/// Human-readable rendering for the terminal (and `cargo bench`).
+pub fn render_text(report: &BenchReport) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "=== hot path microbenchmarks ===");
+    for s in &report.sections {
+        let _ = writeln!(
+            out,
+            "bench {:<44} mean {:>9.4}s  min {:>9.4}s  max {:>9.4}s  \
+             {:>10.2} M items/s  (n={})",
+            s.label,
+            s.mean_secs,
+            s.min_secs,
+            s.max_secs,
+            s.items_per_sec() / 1e6,
+            s.reps,
+        );
+    }
+    let sh = &report.sharded;
+    let _ = writeln!(
+        out,
+        "sharded fan-out: {} devices, threads 1 -> {}: {:.4}s -> {:.4}s \
+         ({:.2}x speedup)",
+        sh.devices,
+        sh.threads,
+        sh.serial_secs,
+        sh.parallel_secs,
+        sh.speedup(),
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic() -> BenchReport {
+        BenchReport {
+            smoke: true,
+            reps: 1,
+            threads: 8,
+            sections: vec![SectionResult {
+                id: "zipf_sample",
+                label: "zipf sample (1M rows, a=1.1)".into(),
+                items: 1000,
+                reps: 1,
+                mean_secs: 0.5,
+                min_secs: 0.4,
+                max_secs: 0.6,
+            }],
+            sharded: ShardedComparison {
+                devices: 4,
+                threads: 8,
+                batches: 2,
+                serial_secs: 2.0,
+                parallel_secs: 0.5,
+            },
+        }
+    }
+
+    #[test]
+    fn json_is_schema_stable_and_balanced() {
+        let json = to_json(&synthetic());
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        for key in [
+            "\"schema_version\":1",
+            "\"smoke\":true",
+            "\"threads\":8",
+            "\"sections\":[{",
+            "\"id\":\"zipf_sample\"",
+            "\"items_per_sec\":",
+            "\"sharded\":{",
+            "\"serial_secs\":",
+            "\"speedup\":4.0000",
+        ] {
+            assert!(json.contains(key), "missing `{key}` in {json}");
+        }
+    }
+
+    #[test]
+    fn speedup_and_throughput_math() {
+        let r = synthetic();
+        assert!((r.sharded.speedup() - 4.0).abs() < 1e-12);
+        assert!((r.sections[0].items_per_sec() - 2000.0).abs() < 1e-9);
+        let degenerate = ShardedComparison {
+            devices: 4,
+            threads: 1,
+            batches: 1,
+            serial_secs: 1.0,
+            parallel_secs: 0.0,
+        };
+        assert_eq!(degenerate.speedup(), 0.0);
+    }
+
+    #[test]
+    fn text_render_mentions_speedup() {
+        let text = render_text(&synthetic());
+        assert!(text.contains("4.00x speedup"), "{text}");
+        assert!(text.contains("zipf sample"));
+    }
+
+    #[test]
+    fn smoke_options_scale_down() {
+        let opts = BenchOptions { smoke: true, ..Default::default() };
+        assert_eq!(opts.reps(), 1);
+        assert_eq!(opts.scaled(4_000_000), 200_000);
+        assert_eq!(opts.scaled(10), 1, "scaling never reaches zero items");
+        let full = BenchOptions::default();
+        assert_eq!(full.scaled(4_000_000), 4_000_000);
+        assert!(full.reps() >= 1);
+    }
+}

@@ -434,6 +434,13 @@ fn chain_layers(batch: usize, input: usize, widths: &[usize]) -> Vec<MnkLayer> {
         .collect()
 }
 
+/// Host worker threads the simulator defaults to: the machine's
+/// available parallelism (1 when it cannot be queried). A host-side
+/// knob only — simulated results are bit-identical for any value.
+pub fn default_threads() -> usize {
+    crate::parallel::available_threads()
+}
+
 /// Top-level simulation configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -441,6 +448,11 @@ pub struct SimConfig {
     pub workload: WorkloadConfig,
     /// Multi-device sharding (1 device = the classic single-NPU path).
     pub sharding: ShardingConfig,
+    /// Host worker threads for the per-device fan-out and driver sweeps
+    /// (`[sim] threads` / `--threads`; default = available parallelism).
+    /// Purely a host-performance knob: any value produces byte-identical
+    /// reports, and `1` forces fully serial execution.
+    pub threads: usize,
     /// Global simulation seed (forked per component).
     pub seed: u64,
 }
@@ -549,6 +561,7 @@ impl SimConfig {
         s.replicate_top_k = t.usize_or("sharding.replicate_top_k", s.replicate_top_k)?;
         s.overlap_exchange = t.bool_or("sharding.overlap_exchange", s.overlap_exchange)?;
 
+        cfg.threads = t.usize_or("sim.threads", cfg.threads)?;
         cfg.seed = t.u64_or("seed", cfg.seed)?;
         cfg.validate()?;
         Ok(cfg)
@@ -575,6 +588,14 @@ impl SimConfig {
         }
         if self.workload.batch_size == 0 || self.workload.num_batches == 0 {
             return invalid("workload", "batch_size and num_batches must be nonzero".into());
+        }
+        if self.threads == 0 {
+            return invalid(
+                "sim.threads",
+                "at least one worker thread required (threads = 0 would run \
+                 nothing; use threads = 1 for fully serial execution)"
+                    .into(),
+            );
         }
         let s = &self.sharding;
         if s.devices == 0 {
@@ -735,6 +756,23 @@ mod tests {
         let plain = SimConfig::from_table(&Table::parse("").unwrap()).unwrap();
         assert_eq!(plain.sharding.replicate_top_k, 0);
         assert!(!plain.sharding.overlap_exchange);
+    }
+
+    #[test]
+    fn sim_threads_parses_and_defaults_to_host_parallelism() {
+        let t = Table::parse("[sim]\nthreads = 3").unwrap();
+        assert_eq!(SimConfig::from_table(&t).unwrap().threads, 3);
+        let plain = SimConfig::from_table(&Table::parse("").unwrap()).unwrap();
+        assert_eq!(plain.threads, default_threads());
+        assert!(plain.threads >= 1, "default must always be runnable");
+    }
+
+    #[test]
+    fn rejects_zero_threads_with_clear_error() {
+        let t = Table::parse("[sim]\nthreads = 0").unwrap();
+        let err = SimConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("sim.threads"), "error names the key: {err}");
+        assert!(err.contains("threads = 1"), "error suggests the serial setting: {err}");
     }
 
     #[test]

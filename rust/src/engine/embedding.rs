@@ -173,13 +173,7 @@ impl EmbeddingSim {
     /// Build a frequency profile from batch traces (the "Profiling"
     /// policy's offline pass).
     pub fn profile_batches<'a>(traces: impl Iterator<Item = &'a BatchTrace>) -> Profile {
-        let mut profile = Profile::new();
-        for t in traces {
-            for l in &t.lookups {
-                profile.record(l.table, l.row);
-            }
-        }
-        profile
+        Profile::from_batches(traces)
     }
 
     /// Aggregate cache-mode statistics across cores, if in cache mode.

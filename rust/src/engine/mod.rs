@@ -18,7 +18,7 @@ use crate::mem::policy::pinning::{PinSet, Profile};
 use crate::sharding::replicate::HotRowReplicator;
 use crate::sharding::ShardedEmbeddingSim;
 use crate::stats::{BatchResult, CycleBreakdown, MemCounts, SimReport};
-use crate::trace::TraceGenerator;
+use crate::trace::{BatchTrace, TraceGenerator, WorkloadTrace};
 
 /// End-to-end workload simulator.
 pub struct Simulator {
@@ -49,24 +49,35 @@ impl Simulator {
         let hw = &cfg.hardware;
         let elem = w.embedding.elem_bytes;
 
-        let mut gen = TraceGenerator::new(w)?;
         // one embedding simulator per device (1 device = the classic
         // single-NPU path, bit-identical)
         let mut emb_sim = ShardedEmbeddingSim::new(cfg);
 
         // Offline profiling pass, shared by the pinning policy and
         // hot-row replication: collect per-row frequency over the whole
-        // workload trace (regenerated deterministically), then pin the
-        // hottest vectors up to capacity and/or replicate the top-K rows
-        // on every device.
+        // workload trace, then pin the hottest vectors up to capacity
+        // and/or replicate the top-K rows on every device.
         let replicate = cfg.sharding.replicate_top_k > 0 && emb_sim.num_devices() > 1;
         let reserve = if replicate {
             cfg.sharding.replicate_top_k as u64 * w.embedding.vec_bytes()
         } else {
             0
         };
-        if replicate || matches!(hw.mem.policy, OnchipPolicy::Pinning) {
-            let profile = Profile::from_workload(w)?;
+        // Generate each workload trace exactly once. A profiled run
+        // needs the whole trace up front, so it is materialized and then
+        // shared with the batch loop below (previously the identical
+        // deterministic trace was regenerated per consumer); an
+        // unprofiled run streams batch-by-batch in bounded memory as
+        // before. Either path feeds the batch loop the same lookups.
+        let needs_profile = replicate || matches!(hw.mem.policy, OnchipPolicy::Pinning);
+        let (cached, mut gen): (Option<WorkloadTrace>, Option<TraceGenerator>) =
+            if needs_profile {
+                (Some(WorkloadTrace::generate(w)?), None)
+            } else {
+                (None, Some(TraceGenerator::new(w)?))
+            };
+        if let Some(shared) = &cached {
+            let profile = Profile::from_batches(shared.batches());
             let replicas = if replicate {
                 HotRowReplicator::from_profile(&profile, cfg.sharding.replicate_top_k)
             } else {
@@ -105,10 +116,16 @@ impl Simulator {
         };
 
         for batch_index in 0..w.num_batches {
-            let trace = gen.next_batch();
+            let streamed;
+            let trace: &BatchTrace = if let Some(shared) = &cached {
+                &shared.batches()[batch_index]
+            } else {
+                streamed = gen.as_mut().expect("streaming generator").next_batch();
+                &streamed
+            };
 
             let bottom_r = matrix::simulate_layers(hw, &bottom, elem);
-            let emb_r = emb_sim.simulate_batch(&trace);
+            let emb_r = emb_sim.simulate_batch(trace);
             // feature interaction: one elementwise combine over
             // (num_tables + 1) vectors of `dim` per sample
             let interact_elems =

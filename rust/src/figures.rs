@@ -11,39 +11,9 @@ use crate::champsim::{ChampCache, ChampPolicy};
 use crate::config::{presets, CachePolicyKind, OnchipPolicy, SimConfig};
 use crate::engine::Simulator;
 use crate::mem::Cache;
+use crate::parallel::parallel_map;
 use crate::tpuv6e;
 use crate::trace::{AddressMap, TraceGenerator};
-
-/// Run `f` over `items` on up to `available_parallelism` threads,
-/// preserving order (EXPERIMENTS.md §Perf iteration 2: sweep points are
-/// independent simulations, so figure generation parallelizes linearly).
-fn parallel_map<T, R, F>(items: &[T], f: F) -> anyhow::Result<Vec<R>>
-where
-    T: Sync,
-    R: Send,
-    F: Fn(&T) -> anyhow::Result<R> + Sync,
-{
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(items.len().max(1));
-    if threads <= 1 {
-        return items.iter().map(&f).collect();
-    }
-    let chunk = items.len().div_ceil(threads);
-    let results: Vec<anyhow::Result<Vec<R>>> = std::thread::scope(|s| {
-        let handles: Vec<_> = items
-            .chunks(chunk)
-            .map(|part| s.spawn(|| part.iter().map(&f).collect::<anyhow::Result<Vec<R>>>()))
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
-    });
-    let mut out = Vec::with_capacity(items.len());
-    for r in results {
-        out.extend(r?);
-    }
-    Ok(out)
-}
 
 /// One point of Fig. 3a/3b: simulated vs measured execution time.
 #[derive(Debug, Clone, Copy)]

@@ -22,6 +22,7 @@
 //! See `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod bench;
 pub mod champsim;
 pub mod cli;
 pub mod compute;
@@ -31,6 +32,7 @@ pub mod energy;
 pub mod engine;
 pub mod figures;
 pub mod mem;
+pub mod parallel;
 pub mod runtime;
 pub mod sharding;
 pub mod stats;

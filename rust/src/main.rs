@@ -5,6 +5,7 @@
 //!   validate   EONSim vs the TPUv6e baseline (paper Fig. 3 headline)
 //!   figures    regenerate paper figures 3a/3b/3c/4a/4b/4c
 //!   serve      functional DLRM serving demo through the PJRT artifacts
+//!   bench      host-performance microbenchmarks -> BENCH_hotpath.json
 //!   trace-gen  write a hardware-agnostic index trace file
 //!   help       this text
 
@@ -33,6 +34,9 @@ COMMANDS:
                --shard-strategy <s>   table|row|column      [table]
                --replicate-top-k <n>  replicate the K hottest rows on every device [0]
                --overlap-exchange     overlap the all-to-all with top-MLP compute
+               --threads <n>          host worker threads for the per-device fan-out
+                                      [available parallelism; 1 = fully serial;
+                                       results are byte-identical for any n]
                --csv <file> / --json <file>   write reports
   validate   paper Fig. 3 validation vs the TPUv6e baseline
                --full                 full 32..2048 step-32 batch sweep
@@ -46,6 +50,13 @@ COMMANDS:
                --param <batch|tables|alpha|onchip_mb|cores|devices|replicate_top_k>
                --values <comma-separated>   e.g. 32,64,128
                --policy <p> [spm]  (plus the `run` flags)
+               points fan out across a --threads-bounded worker pool; rows
+               print in sweep order either way
+  bench      host-performance microbenchmarks (hot paths + sharded fan-out)
+               --smoke              reduced sizes for CI smoke runs
+               --reps <n>           repetitions per section [3]
+               --json <file>        write machine-readable BENCH_hotpath.json
+               --threads <n>        workers for the parallel leg [host parallelism]
   trace-gen  write an index trace file
                --out <file>  --len <n> [100000]  --rows <n> [1000000]
                --alpha <x> [0.9]  --seed <n>
@@ -66,6 +77,7 @@ fn main() {
         "figures" => cmd_figures(&args),
         "serve" => cmd_serve(&args),
         "sweep" => cmd_sweep(&args),
+        "bench" => cmd_bench(&args),
         "trace-gen" => cmd_trace_gen(&args),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
@@ -104,6 +116,7 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
     if args.has("overlap-exchange") {
         cfg.sharding.overlap_exchange = true;
     }
+    cfg.threads = args.usize_flag("threads", cfg.threads)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -351,7 +364,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         .map(|v| v.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("bad value `{v}`: {e}")))
         .collect::<anyhow::Result<Vec<_>>>()?;
     let base = build_config(args)?;
-    println!("{param},policy,exec_ms,cycles,onchip_ratio,hit_rate,energy_mj,imbalance");
+    // build (and validate) every sweep point up front so a bad value
+    // fails before any simulation runs
+    let mut points = Vec::with_capacity(values.len());
     for &v in &values {
         let mut cfg = base.clone();
         match param {
@@ -364,10 +379,21 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             "replicate_top_k" => cfg.sharding.replicate_top_k = v as usize,
             other => anyhow::bail!("unknown sweep param `{other}`"),
         }
+        // sweep points are themselves pool workers: keep each point's
+        // device fan-out serial so the pool is the only parallelism
+        // (results are bit-identical either way)
+        if values.len() > 1 {
+            cfg.threads = 1;
+        }
         cfg.validate()?;
-        let report = Simulator::new(cfg).run()?;
+        points.push((v, cfg));
+    }
+    // fan the independent points out across a bounded worker pool;
+    // output rows come back in sweep order
+    let rows = eonsim::parallel::parallel_map_with(base.threads, &points, |(v, cfg)| {
+        let report = Simulator::new(cfg.clone()).run()?;
         let m = report.total_mem();
-        println!(
+        Ok(format!(
             "{v},{},{:.4},{},{:.4},{:.4},{:.4},{:.4}",
             report.policy,
             report.exec_time_secs() * 1e3,
@@ -376,7 +402,33 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             m.hit_rate(),
             report.energy_joules * 1e3,
             report.imbalance_factor()
-        );
+        ))
+    })?;
+    println!("{param},policy,exec_ms,cycles,onchip_ratio,hit_rate,energy_mj,imbalance");
+    for row in rows {
+        println!("{row}");
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let opts = eonsim::bench::BenchOptions {
+        smoke: args.has("smoke"),
+        reps: args.usize_flag("reps", 3)?,
+        threads: args.usize_flag("threads", eonsim::parallel::available_threads())?,
+    };
+    anyhow::ensure!(opts.threads > 0, "--threads: at least one worker thread required");
+    println!(
+        "benchmarking hot paths ({} scale, {} rep(s), {} thread(s))...",
+        if opts.smoke { "smoke" } else { "full" },
+        if opts.smoke { 1 } else { opts.reps },
+        opts.threads,
+    );
+    let report = eonsim::bench::run_hotpath(&opts)?;
+    print!("{}", eonsim::bench::render_text(&report));
+    if let Some(path) = args.flag("json") {
+        std::fs::write(path, eonsim::bench::to_json(&report))?;
+        println!("wrote {path}");
     }
     Ok(())
 }

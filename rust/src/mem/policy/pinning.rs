@@ -17,20 +17,31 @@ impl Profile {
         Self::default()
     }
 
-    /// Profile the workload's full (deterministically regenerated)
-    /// index trace — the offline pass shared by profiling-based pinning
-    /// and hot-row replication.
-    pub fn from_workload(
-        workload: &crate::config::WorkloadConfig,
-    ) -> anyhow::Result<Profile> {
-        let mut gen = crate::trace::TraceGenerator::new(workload)?;
+    /// Profile already-generated batch traces — the offline pass shared
+    /// by profiling-based pinning and hot-row replication. Feed this the
+    /// engine's shared [`crate::trace::WorkloadTrace`] so the trace is
+    /// generated once, not once per consumer.
+    pub fn from_batches<'a>(
+        batches: impl IntoIterator<Item = &'a crate::trace::BatchTrace>,
+    ) -> Profile {
         let mut profile = Profile::new();
-        for _ in 0..workload.num_batches {
-            for l in &gen.next_batch().lookups {
+        for b in batches {
+            for l in &b.lookups {
                 profile.record(l.table, l.row);
             }
         }
-        Ok(profile)
+        profile
+    }
+
+    /// Profile the workload's full index trace, generating it in the
+    /// process. Standalone consumers only — inside a simulation run,
+    /// share the engine's [`crate::trace::WorkloadTrace`] via
+    /// [`from_batches`](Self::from_batches) instead of regenerating.
+    pub fn from_workload(
+        workload: &crate::config::WorkloadConfig,
+    ) -> anyhow::Result<Profile> {
+        let trace = crate::trace::WorkloadTrace::generate(workload)?;
+        Ok(Profile::from_batches(trace.batches()))
     }
 
     /// Record one lookup of `(table, row)`.

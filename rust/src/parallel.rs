@@ -1,0 +1,93 @@
+//! Bounded worker pools for the host-performance layer (EXPERIMENTS.md
+//! §Perf): ordered fan-out of independent simulations across OS threads.
+//!
+//! Everything here is scoped (`std::thread::scope`, no new deps) and
+//! order-preserving — results come back in input order regardless of
+//! which worker ran which item, so parallel sweeps print and aggregate
+//! byte-identically to their serial equivalents. The pool is *bounded*:
+//! at most `threads` workers exist at once, each owning a contiguous
+//! chunk of the input.
+
+/// The host's available parallelism (1 when it cannot be queried).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` over `items` on up to `threads` workers, preserving input
+/// order in the output. `threads <= 1` (or a single item) runs inline
+/// on the caller's thread — no pool, identical results.
+pub fn parallel_map_with<T, R, F>(threads: usize, items: &[T], f: F) -> anyhow::Result<Vec<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> anyhow::Result<R> + Sync,
+{
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let results: Vec<anyhow::Result<Vec<R>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|part| s.spawn(|| part.iter().map(&f).collect::<anyhow::Result<Vec<R>>>()))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
+    });
+    let mut out = Vec::with_capacity(items.len());
+    for r in results {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
+/// [`parallel_map_with`] at the host's available parallelism — the
+/// default for figure/validation sweeps whose point count is the only
+/// bound the caller cares about.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> anyhow::Result<Vec<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> anyhow::Result<R> + Sync,
+{
+    parallel_map_with(available_threads(), items, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_at_any_width() {
+        let items: Vec<u64> = (0..37).collect();
+        for threads in [1usize, 2, 3, 8, 64] {
+            let out = parallel_map_with(threads, &items, |&x| Ok(x * x)).unwrap();
+            let want: Vec<u64> = items.iter().map(|&x| x * x).collect();
+            assert_eq!(out, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        let out = parallel_map_with::<u64, u64, _>(4, &[], |&x| Ok(x)).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let items = [1u64, 2, 3];
+        let err = parallel_map_with(2, &items, |&x| {
+            if x == 2 {
+                Err(anyhow::anyhow!("boom at {x}"))
+            } else {
+                Ok(x)
+            }
+        });
+        assert!(err.unwrap_err().to_string().contains("boom at 2"));
+    }
+
+    #[test]
+    fn available_threads_is_positive() {
+        assert!(available_threads() >= 1);
+    }
+}

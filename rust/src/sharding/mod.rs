@@ -117,15 +117,33 @@ impl TablePartitioner {
     /// dim-slice). Replicated lookups always land only on the sample's
     /// home device.
     pub fn split(&self, trace: &BatchTrace) -> Vec<DeviceTrace> {
+        let mut out = Vec::new();
+        self.split_into(trace, &mut out);
+        out
+    }
+
+    /// [`split`](Self::split) into a caller-owned buffer, reusing each
+    /// device's `Vec<Lookup>` allocation across batches (the per-batch
+    /// per-device allocations were a measurable share of sharded-run
+    /// host time; the sharded engine feeds the same buffer every batch).
+    pub fn split_into(&self, trace: &BatchTrace, out: &mut Vec<DeviceTrace>) {
+        let cap_hint = match self.strategy {
+            ShardStrategy::ColumnWise => trace.lookups.len(),
+            _ => trace.lookups.len() / self.devices + 1,
+        };
+        self.reset_split(trace, out, cap_hint);
         match self.strategy {
-            ShardStrategy::ColumnWise => self.split_column(trace),
-            _ => self.split_owner(trace),
+            ShardStrategy::ColumnWise => self.split_column(trace, out),
+            _ => self.split_owner(trace, out),
         }
     }
 
-    fn empty_split(&self, trace: &BatchTrace, cap_hint: usize) -> Vec<DeviceTrace> {
-        (0..self.devices)
-            .map(|_| DeviceTrace {
+    /// Size `out` to `devices` entries with cleared counters and cleared
+    /// (capacity-retaining) lookup buffers.
+    fn reset_split(&self, trace: &BatchTrace, out: &mut Vec<DeviceTrace>, cap_hint: usize) {
+        out.truncate(self.devices);
+        while out.len() < self.devices {
+            out.push(DeviceTrace {
                 trace: BatchTrace {
                     batch_index: trace.batch_index,
                     lookups: Vec::with_capacity(cap_hint),
@@ -133,12 +151,18 @@ impl TablePartitioner {
                 bags: 0,
                 exchange_bags: 0,
                 replicated: 0,
-            })
-            .collect()
+            });
+        }
+        for d in out.iter_mut() {
+            d.trace.batch_index = trace.batch_index;
+            d.trace.lookups.clear();
+            d.bags = 0;
+            d.exchange_bags = 0;
+            d.replicated = 0;
+        }
     }
 
-    fn split_owner(&self, trace: &BatchTrace) -> Vec<DeviceTrace> {
-        let mut out = self.empty_split(trace, trace.lookups.len() / self.devices + 1);
+    fn split_owner(&self, trace: &BatchTrace, out: &mut [DeviceTrace]) {
         // lookups are sample-major then table then pooling slot, so one
         // bag's lookups are contiguous: a device contributes to a bag
         // iff its last-seen bag id changes
@@ -162,11 +186,9 @@ impl TablePartitioner {
             }
             out[d].trace.lookups.push(*l);
         }
-        out
     }
 
-    fn split_column(&self, trace: &BatchTrace) -> Vec<DeviceTrace> {
-        let mut out = self.empty_split(trace, trace.lookups.len());
+    fn split_column(&self, trace: &BatchTrace, out: &mut [DeviceTrace]) {
         let mut last_bag: Vec<Option<(usize, u32)>> = vec![None; self.devices];
         let mut last_remote: Vec<Option<(usize, u32)>> = vec![None; self.devices];
         for (i, l) in trace.lookups.iter().enumerate() {
@@ -195,7 +217,6 @@ impl TablePartitioner {
                 }
             }
         }
-        out
     }
 }
 
@@ -234,6 +255,13 @@ pub struct ShardedEmbeddingSim {
     /// on-chip, even on a device simulating only a dim-slice.
     full_vec_lines: u64,
     pool: usize,
+    /// Host worker threads for the per-device fan-out (`[sim] threads`).
+    /// The devices are fully independent state machines, so any value
+    /// yields bit-identical results; `1` runs them serially in-line.
+    threads: usize,
+    /// Reused per-batch split buffer (device `Vec<Lookup>`s keep their
+    /// capacity across batches instead of reallocating).
+    split_buf: Vec<DeviceTrace>,
 }
 
 impl ShardedEmbeddingSim {
@@ -297,6 +325,8 @@ impl ShardedEmbeddingSim {
                 .div_ceil(cfg.hardware.mem.access_granularity)
                 .max(1),
             pool: emb.pool,
+            threads: cfg.threads.max(1),
+            split_buf: Vec::new(),
         }
     }
 
@@ -361,16 +391,57 @@ impl ShardedEmbeddingSim {
             };
         }
 
-        let split = self.partitioner.split(trace);
+        // reuse the split buffer across batches (taken to keep the
+        // borrow checker happy alongside `self.devices` below)
+        let mut split = std::mem::take(&mut self.split_buf);
+        self.partitioner.split_into(trace, &mut split);
+
+        // Per-device fan-out: each device is a fully self-contained
+        // state machine (its own buffers, controller, DRAM rows, cycle
+        // cursor), so the N simulations are embarrassingly parallel.
+        // Workers own contiguous device chunks and results come back in
+        // device order, so the accumulation below is bit-identical to
+        // the serial loop for any thread count.
+        let workers = self.threads.min(n);
+        let results: Vec<crate::engine::embedding::EmbeddingStageResult> = if workers > 1 {
+            let chunk = n.div_ceil(workers);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .devices
+                    .chunks_mut(chunk)
+                    .zip(split.chunks(chunk))
+                    .map(|(sims, parts)| {
+                        s.spawn(move || {
+                            sims.iter_mut()
+                                .zip(parts)
+                                .map(|(sim, part)| {
+                                    sim.simulate_batch_with_bags(&part.trace, part.bags)
+                                })
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("device worker panicked"))
+                    .collect()
+            })
+        } else {
+            self.devices
+                .iter_mut()
+                .zip(&split)
+                .map(|(sim, part)| sim.simulate_batch_with_bags(&part.trace, part.bags))
+                .collect()
+        };
+
         let mut mem = MemCounts::default();
         let mut ops = OpCounts::default();
         let mut per_device = Vec::with_capacity(n);
         let mut send_bytes = Vec::with_capacity(n);
         let mut wall = 0u64;
-        for (device, (sim, part)) in self.devices.iter_mut().zip(&split).enumerate() {
+        for (device, (r, part)) in results.iter().zip(&split).enumerate() {
             // the partitioner knows the exact distinct-bag count of each
             // sub-trace (rerouted hot rows break pool alignment)
-            let r = sim.simulate_batch_with_bags(&part.trace, part.bags);
             wall = wall.max(r.cycles);
             mem.add(&r.mem);
             ops.add(&r.ops);
@@ -404,6 +475,7 @@ impl ShardedEmbeddingSim {
                     .sum(),
             };
         }
+        self.split_buf = split;
         ShardedStageResult {
             cycles: wall,
             exchange_cycles: self.exchange_cycles(&send_bytes),
@@ -471,12 +543,23 @@ mod tests {
         let split = p.split(&trace);
         let total: usize = split.iter().map(|d| d.trace.lookups.len()).sum();
         assert_eq!(total, trace.lookups.len());
-        // each sub-trace is a subsequence of the original
-        for d in &split {
-            let mut cursor = trace.lookups.iter();
-            for l in &d.trace.lookups {
-                assert!(cursor.any(|x| x == l), "order violated for {l:?}");
-            }
+        // single linear merge walk: without replication each lookup's
+        // device is a pure function of its value, so walking the original
+        // trace once and advancing that device's cursor verifies both
+        // placement and order (the old per-device `cursor.any` subsequence
+        // scan was O(n²) and dominated the release suite's wall time)
+        let mut cursors = vec![0usize; split.len()];
+        for l in &trace.lookups {
+            let d = p.device_of(l);
+            assert_eq!(
+                split[d].trace.lookups.get(cursors[d]),
+                Some(l),
+                "order violated for {l:?} on device {d}"
+            );
+            cursors[d] += 1;
+        }
+        for (d, dt) in split.iter().enumerate() {
+            assert_eq!(cursors[d], dt.trace.lookups.len(), "device {d} fully consumed");
         }
     }
 
@@ -607,6 +690,67 @@ mod tests {
         for d in &four.per_device {
             assert_eq!(d.ops.lookups, one.ops.lookups);
             assert_eq!(d.mem.offchip_reads, one.mem.offchip_reads / 4);
+        }
+    }
+
+    #[test]
+    fn split_into_reuses_buffers_and_matches_split() {
+        let cfg = small_cfg(4, ShardStrategy::RowHashed);
+        let lps = cfg.workload.embedding.num_tables * cfg.workload.embedding.pool;
+        let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+        let (t1, t2) = (gen.next_batch(), gen.next_batch());
+        let p = TablePartitioner::new(4, ShardStrategy::RowHashed, lps);
+        let mut buf = Vec::new();
+        for t in [&t1, &t2] {
+            // the reused buffer must match a fresh split exactly, with
+            // stale counters/lookups from the previous batch cleared
+            p.split_into(t, &mut buf);
+            let fresh = p.split(t);
+            assert_eq!(buf.len(), fresh.len());
+            for (a, b) in buf.iter().zip(&fresh) {
+                assert_eq!(a.trace.batch_index, t.batch_index);
+                assert_eq!(a.trace.lookups, b.trace.lookups);
+                assert_eq!(a.bags, b.bags);
+                assert_eq!(a.exchange_bags, b.exchange_bags);
+                assert_eq!(a.replicated, b.replicated);
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_fanout_is_bit_identical_to_serial() {
+        // worker count is a pure host knob: every counter, per-device
+        // split, and cycle total must be unchanged — including uneven
+        // device/worker chunkings (4 devices over 3 workers)
+        for strategy in [
+            ShardStrategy::TableWise,
+            ShardStrategy::RowHashed,
+            ShardStrategy::ColumnWise,
+        ] {
+            let trace = one_batch(&small_cfg(4, strategy));
+            let run = |threads: usize| {
+                let mut cfg = small_cfg(4, strategy);
+                cfg.threads = threads;
+                let mut sim = ShardedEmbeddingSim::new(&cfg);
+                // two batches so persistent per-device state is exercised
+                let a = sim.simulate_batch(&trace);
+                let b = sim.simulate_batch(&trace);
+                (a, b)
+            };
+            let serial = run(1);
+            for threads in [2usize, 3, 4, 16] {
+                let parallel = run(threads);
+                for ((s, p), which) in [(&serial.0, &parallel.0), (&serial.1, &parallel.1)]
+                    .into_iter()
+                    .zip(["first", "second"])
+                {
+                    assert_eq!(s.cycles, p.cycles, "{strategy:?} x{threads} {which}");
+                    assert_eq!(s.exchange_cycles, p.exchange_cycles, "{strategy:?} x{threads}");
+                    assert_eq!(s.mem, p.mem, "{strategy:?} x{threads} {which}");
+                    assert_eq!(s.ops, p.ops, "{strategy:?} x{threads} {which}");
+                    assert_eq!(s.per_device, p.per_device, "{strategy:?} x{threads} {which}");
+                }
+            }
         }
     }
 

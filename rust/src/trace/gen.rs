@@ -43,6 +43,43 @@ impl BatchTrace {
     }
 }
 
+/// A whole workload's lookup trace, generated **once** and shared by
+/// every consumer. The engine previously regenerated the identical
+/// deterministic trace per pass — once for the pinning/replication
+/// profiling sweep and again batch-by-batch in the run loop — so
+/// profiled runs paid trace generation twice (and three times with both
+/// consumers live before they shared a profile). Materializing the
+/// batches here makes generation a one-time cost; the memory is bounded
+/// by `num_batches * lookups_per_batch * sizeof(Lookup)`, which the
+/// engine only accepts when an offline profiling pass needs the whole
+/// trace up front anyway.
+#[derive(Debug, Clone)]
+pub struct WorkloadTrace {
+    batches: Vec<BatchTrace>,
+}
+
+impl WorkloadTrace {
+    /// Generate every batch of `workload`'s trace exactly once.
+    pub fn generate(workload: &WorkloadConfig) -> anyhow::Result<Self> {
+        let mut gen = TraceGenerator::new(workload)?;
+        let batches = (0..workload.num_batches).map(|_| gen.next_batch()).collect();
+        Ok(WorkloadTrace { batches })
+    }
+
+    pub fn batches(&self) -> &[BatchTrace] {
+        &self.batches
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Total lookups across all batches.
+    pub fn total_lookups(&self) -> u64 {
+        self.batches.iter().map(|b| b.lookups.len() as u64).sum()
+    }
+}
+
 enum Source {
     Zipf(ZipfSampler),
     Uniform,
@@ -224,6 +261,62 @@ mod tests {
         let mut w = small_workload();
         w.trace.kind = "bogus".into();
         assert!(TraceGenerator::new(&w).is_err());
+    }
+
+    #[test]
+    fn empty_replay_trace_rejected_with_config_error() {
+        // regression: a zero-length replay file must be rejected at
+        // construction (a clean error naming the file), never reach
+        // `Source::Replay` and panic on `indices[cursor]` at the first
+        // sample
+        let path = std::env::temp_dir()
+            .join(format!("eonsim_empty_replay_{}.eont", std::process::id()));
+        crate::trace::io::write_index_trace(&path, &[]).unwrap();
+        let mut w = small_workload();
+        w.trace.kind = "file".into();
+        w.trace.path = Some(path.to_string_lossy().into_owned());
+        let err = TraceGenerator::new(&w).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("empty index trace"), "clear rejection: {err}");
+        assert!(
+            err.contains("eonsim_empty_replay"),
+            "error names the offending file: {err}"
+        );
+    }
+
+    #[test]
+    fn missing_replay_path_rejected() {
+        let mut w = small_workload();
+        w.trace.kind = "file".into();
+        w.trace.path = None;
+        let err = TraceGenerator::new(&w).unwrap_err().to_string();
+        assert!(err.contains("trace.path"), "{err}");
+    }
+
+    #[test]
+    fn workload_trace_matches_streaming_generator() {
+        // the cached whole-workload trace must be lookup-for-lookup what
+        // the streaming generator yields — the engine relies on this to
+        // keep profiled (cached) and unprofiled (streamed) runs
+        // bit-identical
+        let mut w = small_workload();
+        w.num_batches = 3;
+        let cached = WorkloadTrace::generate(&w).unwrap();
+        assert_eq!(cached.num_batches(), 3);
+        let mut g = TraceGenerator::new(&w).unwrap();
+        for (i, b) in cached.batches().iter().enumerate() {
+            let streamed = g.next_batch();
+            assert_eq!(b.batch_index, i);
+            assert_eq!(b.lookups, streamed.lookups, "batch {i}");
+        }
+        assert_eq!(cached.total_lookups(), 3 * 4 * 3 * 5);
+    }
+
+    #[test]
+    fn workload_trace_rejects_bad_trace_kind() {
+        let mut w = small_workload();
+        w.trace.kind = "bogus".into();
+        assert!(WorkloadTrace::generate(&w).is_err());
     }
 
     #[test]

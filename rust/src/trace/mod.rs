@@ -22,7 +22,7 @@ pub mod gen;
 pub mod io;
 pub mod zipf;
 
-pub use gen::{BatchTrace, Lookup, TraceGenerator};
+pub use gen::{BatchTrace, Lookup, TraceGenerator, WorkloadTrace};
 pub use zipf::{RowPermutation, ZipfSampler};
 
 use crate::config::EmbeddingConfig;

@@ -304,6 +304,21 @@ fn trace_file_replays_through_engine() {
 }
 
 #[test]
+fn empty_replay_trace_fails_cleanly_through_engine() {
+    // regression: a zero-length replay file must surface as a clean
+    // error from Simulator::run (it used to panic indexing the empty
+    // index vector on the first sample)
+    let path = std::env::temp_dir().join(format!("eonsim_empty_{}.eont", std::process::id()));
+    eonsim::trace::io::write_index_trace(&path, &[]).unwrap();
+    let mut cfg = small_cfg();
+    cfg.workload.trace.kind = "file".into();
+    cfg.workload.trace.path = Some(path.to_string_lossy().into_owned());
+    let err = Simulator::new(cfg).run().unwrap_err().to_string();
+    std::fs::remove_file(&path).ok();
+    assert!(err.contains("empty index trace"), "{err}");
+}
+
+#[test]
 fn all_shipped_configs_parse_and_run() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
     let mut count = 0;
@@ -369,6 +384,67 @@ fn cli_flags_reach_sharding_validation() {
     std::fs::remove_file(&path).ok();
     let err = result.unwrap_err().to_string();
     assert!(err.contains("replicate_top_k"), "{err}");
+}
+
+#[test]
+fn config_rejects_zero_threads_with_clear_error() {
+    // `--threads 0` funnels through the same validate() as `[sim]
+    // threads = 0`: a clear config error, not a panic or a silent
+    // serialization
+    let t = eonsim::config::parse::Table::parse("[sim]\nthreads = 0").unwrap();
+    let err = SimConfig::from_table(&t).unwrap_err().to_string();
+    assert!(err.contains("sim.threads"), "error names the key: {err}");
+    assert!(err.contains("worker thread"), "error explains the bound: {err}");
+    // the CLI path (build_config -> validate) hits the same check
+    let toml = "[sim]\nthreads = 0";
+    let path = std::env::temp_dir().join(format!("eonsim_t0_{}.toml", std::process::id()));
+    std::fs::write(&path, toml).unwrap();
+    let result = SimConfig::from_file(&path);
+    std::fs::remove_file(&path).ok();
+    assert!(result.unwrap_err().to_string().contains("sim.threads"));
+}
+
+/// Acceptance (issue criterion): on every shipped config, `--threads N`
+/// produces byte-identical JSON to `--threads 1` (workloads shrunk for
+/// test speed; the config's structure — policy, sharding, replication —
+/// is what matters).
+#[test]
+fn shipped_configs_are_byte_identical_across_thread_counts() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut count = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "toml") != Some(true) {
+            continue;
+        }
+        count += 1;
+        let run = |threads: usize| {
+            let mut cfg = SimConfig::from_file(&path)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            cfg.workload.batch_size = 8;
+            cfg.workload.num_batches = 2;
+            cfg.workload.embedding.num_tables = cfg.workload.embedding.num_tables.min(4);
+            cfg.workload.embedding.rows_per_table =
+                cfg.workload.embedding.rows_per_table.min(10_000);
+            cfg.workload.embedding.pool = cfg.workload.embedding.pool.min(16);
+            cfg.sharding.replicate_top_k = cfg.sharding.replicate_top_k.min(64);
+            cfg.threads = threads;
+            let report = Simulator::new(cfg)
+                .run()
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            writer::to_json(&report)
+        };
+        let serial = run(1);
+        for threads in [2usize, 8] {
+            assert_eq!(
+                serial,
+                run(threads),
+                "{}: JSON bytes diverged at threads = {threads}",
+                path.display()
+            );
+        }
+    }
+    assert!(count >= 3, "expected the shipped config files, found {count}");
 }
 
 #[test]

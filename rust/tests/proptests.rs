@@ -300,6 +300,112 @@ fn prop_uniform_divisible_table_wise_imbalance_is_one() {
     });
 }
 
+/// A parallel run (`threads > 1`) is bit-identical to the serial run —
+/// cycles, every memory/op counter, the per-device split, and the
+/// rendered CSV/JSON bytes — across all three shard strategies and the
+/// SPM / LRU-cache / profiling-pinning policies, with and without
+/// hot-row replication. The worker count is a pure host knob.
+#[test]
+fn prop_parallel_run_bit_identical_to_serial() {
+    forall("parallel==serial", 6, |rng| {
+        let mut cfg = random_small_cfg(rng);
+        let devices = 2 + rng.next_below(3) as usize; // 2..4
+        let strategy = [
+            ShardStrategy::TableWise,
+            ShardStrategy::RowHashed,
+            ShardStrategy::ColumnWise,
+        ][rng.next_below(3) as usize];
+        cfg.hardware.mem.policy = [
+            OnchipPolicy::Spm,
+            OnchipPolicy::Cache(CachePolicyKind::Lru),
+            OnchipPolicy::Pinning,
+        ][rng.next_below(3) as usize];
+        cfg.sharding.devices = devices;
+        cfg.sharding.strategy = strategy;
+        if rng.next_below(2) == 1 {
+            cfg.sharding.replicate_top_k = 32;
+        }
+        let run = |threads: usize| {
+            let mut c = cfg.clone();
+            c.threads = threads;
+            Simulator::new(c).run().unwrap()
+        };
+        let serial = run(1);
+        for threads in [2usize, 5] {
+            let parallel = run(threads);
+            let tag = format!("{strategy:?} x{devices}d t{threads}");
+            assert_eq!(serial.total_cycles(), parallel.total_cycles(), "{tag}");
+            assert_eq!(serial.total_mem(), parallel.total_mem(), "{tag}");
+            assert_eq!(serial.total_ops(), parallel.total_ops(), "{tag}");
+            for (a, b) in serial.per_batch.iter().zip(&parallel.per_batch) {
+                assert_eq!(a.cycles, b.cycles, "{tag}");
+                assert_eq!(a.per_device, b.per_device, "{tag}");
+            }
+            assert_eq!(
+                eonsim::stats::writer::to_json(&serial),
+                eonsim::stats::writer::to_json(&parallel),
+                "JSON must be byte-identical ({tag})"
+            );
+            assert_eq!(
+                eonsim::stats::writer::to_csv(&serial),
+                eonsim::stats::writer::to_csv(&parallel),
+                "CSV must be byte-identical ({tag})"
+            );
+        }
+    });
+}
+
+/// The single-generation trace pipeline reproduces the regeneration
+/// path exactly: a profile built from the shared `WorkloadTrace` equals
+/// `Profile::from_workload`'s, and the `PinSet` / `HotRowReplicator`
+/// derived from it are membership-identical.
+#[test]
+fn prop_shared_trace_pipeline_matches_regeneration() {
+    forall("shared trace == regeneration", 8, |rng| {
+        let cfg = random_small_cfg(rng);
+        let w = &cfg.workload;
+        let shared = eonsim::trace::WorkloadTrace::generate(w).unwrap();
+        let from_shared = Profile::from_batches(shared.batches());
+        let regenerated = Profile::from_workload(w).unwrap();
+        assert_eq!(from_shared.unique_vectors(), regenerated.unique_vectors());
+        let k = 1 + rng.next_below(256) as usize;
+        let hot = from_shared.top_k(k);
+        assert_eq!(hot, regenerated.top_k(k), "top-{k} ranking");
+
+        // the replica set the engine installs is membership-identical
+        let a = HotRowReplicator::from_profile(&from_shared, k);
+        let b = HotRowReplicator::from_workload(w, k).unwrap();
+        assert_eq!(a.len(), b.len());
+        for &(t, r) in &hot {
+            assert_eq!(a.is_replicated(t, r), b.is_replicated(t, r));
+            assert!(a.is_replicated(t, r), "top-{k} rows are all replicated");
+        }
+
+        // ... and so is the profiling-derived pin set
+        let capacity = 1u64 << (12 + rng.next_below(8));
+        let vec_bytes = w.embedding.vec_bytes();
+        let pins_a = eonsim::mem::policy::pinning::PinSet::from_profile(
+            &from_shared,
+            capacity,
+            vec_bytes,
+        );
+        let pins_b = eonsim::mem::policy::pinning::PinSet::from_profile(
+            &regenerated,
+            capacity,
+            vec_bytes,
+        );
+        assert_eq!(pins_a.len(), pins_b.len());
+        for &(t, r) in &from_shared.top_k(pins_a.len() + 8) {
+            assert_eq!(pins_a.is_pinned(t, r), pins_b.is_pinned(t, r), "({t},{r})");
+        }
+        // total lookups recorded match the workload's arithmetic size
+        assert_eq!(
+            shared.total_lookups(),
+            w.lookups_per_batch() * w.num_batches as u64
+        );
+    });
+}
+
 /// The engine's exec time equals cycles / frequency exactly.
 #[test]
 fn prop_time_cycle_consistency() {

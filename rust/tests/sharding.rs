@@ -346,6 +346,77 @@ fn overlap_exposed_never_exceeds_exchange_across_sweep() {
     }
 }
 
+// ------------------------------------------- parallel engine (PR 3)
+
+/// Acceptance (issue criterion): `--threads N` produces *byte-identical*
+/// JSON and CSV reports to `--threads 1` through the full engine, for
+/// every shard strategy and for SPM / LRU / profiling policies.
+#[test]
+fn threaded_engine_reports_are_byte_identical() {
+    use eonsim::config::{CachePolicyKind, OnchipPolicy};
+    for strategy in [
+        ShardStrategy::TableWise,
+        ShardStrategy::RowHashed,
+        ShardStrategy::ColumnWise,
+    ] {
+        for policy in [
+            OnchipPolicy::Spm,
+            OnchipPolicy::Cache(CachePolicyKind::Lru),
+            OnchipPolicy::Pinning,
+        ] {
+            let run = |threads: usize| {
+                let mut cfg = with_devices(4, strategy);
+                cfg.hardware.mem.policy = policy;
+                cfg.hardware.mem.onchip_bytes = 1 << 20;
+                cfg.threads = threads;
+                Simulator::new(cfg).run().unwrap()
+            };
+            let serial = run(1);
+            for threads in [2usize, 4, 7] {
+                let parallel = run(threads);
+                assert_eq!(
+                    eonsim::stats::writer::to_json(&serial),
+                    eonsim::stats::writer::to_json(&parallel),
+                    "{strategy:?}/{} t{threads}: JSON bytes diverged",
+                    policy.name()
+                );
+                assert_eq!(
+                    eonsim::stats::writer::to_csv(&serial),
+                    eonsim::stats::writer::to_csv(&parallel),
+                    "{strategy:?}/{} t{threads}: CSV bytes diverged",
+                    policy.name()
+                );
+            }
+        }
+    }
+}
+
+/// The threaded fan-out composes with the skew-aware v2 features:
+/// hot-row replication + overlap under `threads = 4` reproduces the
+/// serial run exactly, replica hits included.
+#[test]
+fn threaded_replicated_overlap_run_matches_serial() {
+    let run = |threads: usize| {
+        let mut cfg = skewed_cfg(1.2, 1024);
+        cfg.sharding.overlap_exchange = true;
+        cfg.threads = threads;
+        Simulator::new(cfg).run().unwrap()
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial.total_cycles(), parallel.total_cycles());
+    assert_eq!(serial.total_mem(), parallel.total_mem());
+    assert_eq!(
+        serial.total_ops().replicated_hits,
+        parallel.total_ops().replicated_hits
+    );
+    assert!(serial.total_ops().replicated_hits > 0, "replication active");
+    for (a, b) in serial.per_batch.iter().zip(&parallel.per_batch) {
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.per_device, b.per_device);
+    }
+}
+
 /// Column-wise and replicated runs are exactly reproducible.
 #[test]
 fn column_wise_and_replicated_runs_are_deterministic() {
