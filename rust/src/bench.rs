@@ -393,6 +393,201 @@ pub fn render_text(report: &BenchReport) -> String {
     out
 }
 
+// ---------------------------------------------------------------------
+// `eonsim bench cmp` — the perf-trajectory diff between two
+// BENCH_hotpath.json artifacts (EXPERIMENTS.md §Perf; CI `bench-diff`).
+// Parsed with the in-repo JSON parser (`runtime::json`) — the same
+// no-serde machinery the PJRT artifact loader uses.
+
+use crate::runtime::json::Json;
+
+/// One parsed section of a `BENCH_hotpath.json` artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotSection {
+    pub id: String,
+    pub mean_secs: f64,
+    pub items_per_sec: f64,
+}
+
+/// The fields of a `BENCH_hotpath.json` artifact the diff consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchSnapshot {
+    pub schema_version: u32,
+    pub smoke: bool,
+    pub sections: Vec<SnapshotSection>,
+    pub speedup: f64,
+}
+
+/// Parse a `BENCH_hotpath.json` artifact (any schema-version-1 file
+/// [`to_json`] wrote). Errors name what is missing, so a truncated
+/// artifact fails loudly instead of diffing as "no sections".
+pub fn parse_snapshot(text: &str) -> anyhow::Result<BenchSnapshot> {
+    let root = Json::parse(text)
+        .map_err(|e| anyhow::anyhow!("not a BENCH_hotpath.json artifact: {e}"))?;
+    let schema_version = root
+        .get("schema_version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("not a BENCH_hotpath.json: no schema_version"))?
+        as u32;
+    let smoke = matches!(root.get("smoke"), Some(Json::Bool(true)));
+    let mut sections = Vec::new();
+    for s in root
+        .get("sections")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("no sections array in artifact"))?
+    {
+        let id = s
+            .get("id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("section without an id"))?
+            .to_string();
+        let mean_secs = s
+            .get("mean_secs")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("section `{id}` has no mean_secs"))?;
+        let items_per_sec = s.get("items_per_sec").and_then(Json::as_f64).unwrap_or(0.0);
+        sections.push(SnapshotSection { id, mean_secs, items_per_sec });
+    }
+    anyhow::ensure!(!sections.is_empty(), "artifact has no benchmark sections");
+    let speedup = root
+        .get("sharded")
+        .and_then(|s| s.get("speedup"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    Ok(BenchSnapshot { schema_version, smoke, sections, speedup })
+}
+
+/// One section's old-vs-new delta. `delta_pct` is the mean wall-time
+/// change: positive = slower (a regression), negative = faster.
+#[derive(Debug, Clone)]
+pub struct SectionDelta {
+    pub id: String,
+    pub old_mean_secs: f64,
+    pub new_mean_secs: f64,
+    pub delta_pct: f64,
+}
+
+/// The full cmp result between two artifacts.
+#[derive(Debug, Clone)]
+pub struct CmpReport {
+    pub deltas: Vec<SectionDelta>,
+    /// Section ids present in only one artifact (renamed/added/removed).
+    pub only_old: Vec<String>,
+    pub only_new: Vec<String>,
+    pub old_speedup: f64,
+    pub new_speedup: f64,
+    /// Smoke-scale artifacts compared against full-scale ones are noise.
+    pub scale_mismatch: bool,
+}
+
+impl CmpReport {
+    /// The slowest-moving section, if any regressed at all.
+    pub fn worst_regression(&self) -> Option<&SectionDelta> {
+        self.deltas
+            .iter()
+            .filter(|d| d.delta_pct > 0.0)
+            .max_by(|a, b| a.delta_pct.total_cmp(&b.delta_pct))
+    }
+}
+
+/// Diff two parsed snapshots, matching sections by id.
+pub fn compare(old: &BenchSnapshot, new: &BenchSnapshot) -> CmpReport {
+    let mut deltas = Vec::new();
+    let mut only_old = Vec::new();
+    for o in &old.sections {
+        match new.sections.iter().find(|n| n.id == o.id) {
+            Some(n) => {
+                let delta_pct = if o.mean_secs > 0.0 {
+                    (n.mean_secs - o.mean_secs) / o.mean_secs * 100.0
+                } else {
+                    0.0
+                };
+                deltas.push(SectionDelta {
+                    id: o.id.clone(),
+                    old_mean_secs: o.mean_secs,
+                    new_mean_secs: n.mean_secs,
+                    delta_pct,
+                });
+            }
+            None => only_old.push(o.id.clone()),
+        }
+    }
+    let only_new = new
+        .sections
+        .iter()
+        .filter(|n| !old.sections.iter().any(|o| o.id == n.id))
+        .map(|n| n.id.clone())
+        .collect();
+    CmpReport {
+        deltas,
+        only_old,
+        only_new,
+        old_speedup: old.speedup,
+        new_speedup: new.speedup,
+        scale_mismatch: old.smoke != new.smoke,
+    }
+}
+
+/// Read and diff two `BENCH_hotpath.json` files.
+pub fn compare_files(old_path: &str, new_path: &str) -> anyhow::Result<CmpReport> {
+    let read = |p: &str| -> anyhow::Result<BenchSnapshot> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("cannot read `{p}`: {e}"))?;
+        parse_snapshot(&text).map_err(|e| anyhow::anyhow!("`{p}`: {e}"))
+    };
+    Ok(compare(&read(old_path)?, &read(new_path)?))
+}
+
+/// Render a cmp table — aligned text for terminals, a markdown table
+/// (`--md`) for CI job summaries.
+pub fn render_cmp(r: &CmpReport, markdown: bool) -> String {
+    let mut out = String::new();
+    if markdown {
+        let _ = writeln!(out, "| section | old mean (s) | new mean (s) | delta |");
+        let _ = writeln!(out, "|---|---:|---:|---:|");
+        for d in &r.deltas {
+            let _ = writeln!(
+                out,
+                "| `{}` | {:.4} | {:.4} | {:+.1}% |",
+                d.id, d.old_mean_secs, d.new_mean_secs, d.delta_pct
+            );
+        }
+        let _ = writeln!(
+            out,
+            "| `sharded.speedup` | {:.2}x | {:.2}x | — |",
+            r.old_speedup, r.new_speedup
+        );
+    } else {
+        let _ = writeln!(out, "=== bench cmp (positive delta = slower) ===");
+        for d in &r.deltas {
+            let _ = writeln!(
+                out,
+                "cmp {:<24} {:>10.4}s -> {:>10.4}s  {:>+7.1}%",
+                d.id, d.old_mean_secs, d.new_mean_secs, d.delta_pct
+            );
+        }
+        let _ = writeln!(
+            out,
+            "cmp {:<24} {:>9.2}x -> {:>9.2}x",
+            "sharded.speedup", r.old_speedup, r.new_speedup
+        );
+    }
+    for id in &r.only_old {
+        let _ = writeln!(out, "(section `{id}` only in OLD — removed or renamed)");
+    }
+    for id in &r.only_new {
+        let _ = writeln!(out, "(section `{id}` only in NEW — added)");
+    }
+    if r.scale_mismatch {
+        let _ = writeln!(
+            out,
+            "WARNING: one artifact is --smoke scale and the other is not; \
+             deltas are not comparable"
+        );
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -461,6 +656,78 @@ mod tests {
         let text = render_text(&synthetic());
         assert!(text.contains("4.00x speedup"), "{text}");
         assert!(text.contains("zipf sample"));
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_to_json() {
+        let snap = parse_snapshot(&to_json(&synthetic())).unwrap();
+        assert_eq!(snap.schema_version, SCHEMA_VERSION);
+        assert!(snap.smoke);
+        assert_eq!(snap.sections.len(), 1);
+        assert_eq!(snap.sections[0].id, "zipf_sample");
+        assert!((snap.sections[0].mean_secs - 0.5).abs() < 1e-12);
+        assert!((snap.sections[0].items_per_sec - 2000.0).abs() < 1e-9);
+        assert!((snap.speedup - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_rejects_non_artifacts() {
+        assert!(parse_snapshot("{}").is_err());
+        assert!(parse_snapshot("not json at all").is_err());
+        // schema marker but no sections
+        assert!(parse_snapshot("{\"schema_version\":1,\"sections\":[]}").is_err());
+    }
+
+    #[test]
+    fn cmp_reports_per_section_deltas_and_worst_regression() {
+        let old = parse_snapshot(&to_json(&synthetic())).unwrap();
+        let mut slower = synthetic();
+        slower.sections[0].mean_secs = 0.6; // +20% wall time
+        slower.sharded.parallel_secs = 1.0; // speedup 4x -> 2x
+        let new = parse_snapshot(&to_json(&slower)).unwrap();
+        let r = compare(&old, &new);
+        assert_eq!(r.deltas.len(), 1);
+        assert!((r.deltas[0].delta_pct - 20.0).abs() < 1e-6, "{:?}", r.deltas[0]);
+        let worst = r.worst_regression().unwrap();
+        assert_eq!(worst.id, "zipf_sample");
+        assert!(worst.delta_pct > 15.0 && worst.delta_pct < 25.0);
+        assert!((r.old_speedup - 4.0).abs() < 1e-9);
+        assert!((r.new_speedup - 2.0).abs() < 1e-9);
+        assert!(!r.scale_mismatch);
+        // an improvement is not a regression
+        let better = compare(&new, &old);
+        assert!(better.worst_regression().is_none());
+        assert!(better.deltas[0].delta_pct < 0.0);
+    }
+
+    #[test]
+    fn cmp_tracks_renamed_sections_and_scale_mismatch() {
+        let old = parse_snapshot(&to_json(&synthetic())).unwrap();
+        let mut renamed = synthetic();
+        renamed.smoke = false;
+        renamed.sections[0].id = "zipf_sample_v2";
+        let new = parse_snapshot(&to_json(&renamed)).unwrap();
+        let r = compare(&old, &new);
+        assert!(r.deltas.is_empty());
+        assert_eq!(r.only_old, vec!["zipf_sample".to_string()]);
+        assert_eq!(r.only_new, vec!["zipf_sample_v2".to_string()]);
+        assert!(r.scale_mismatch);
+        let text = render_cmp(&r, false);
+        assert!(text.contains("only in OLD"), "{text}");
+        assert!(text.contains("WARNING"), "{text}");
+    }
+
+    #[test]
+    fn cmp_renders_text_and_markdown() {
+        let old = parse_snapshot(&to_json(&synthetic())).unwrap();
+        let r = compare(&old, &old);
+        let text = render_cmp(&r, false);
+        assert!(text.contains("zipf_sample"), "{text}");
+        assert!(text.contains("+0.0%"), "identical artifacts show zero delta: {text}");
+        let md = render_cmp(&r, true);
+        assert!(md.starts_with("| section |"), "{md}");
+        assert!(md.contains("| `zipf_sample` |"), "{md}");
+        assert!(md.contains("`sharded.speedup`"), "{md}");
     }
 
     #[test]

@@ -1,15 +1,21 @@
 //! Hand-rolled CLI argument parsing (no clap in the offline vendor set).
 //!
-//! Grammar: `eonsim <command> [--flag value]... [--switch]...`
+//! Grammar: `eonsim <command> [positional]... [--flag value]... [--switch]...`
+//!
+//! Positionals (non-`--` words that no flag claimed as its value) are
+//! collected in order for subcommand-style grammars like
+//! `eonsim bench cmp OLD.json NEW.json`; commands that take none reject
+//! them at dispatch time with a clear error.
 
 use std::collections::BTreeMap;
 
-/// Parsed command line: a command word + flags.
+/// Parsed command line: a command word + positionals + flags.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: String,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
+    positionals: Vec<String>,
 }
 
 impl Args {
@@ -19,25 +25,35 @@ impl Args {
         let command = it.next().unwrap_or_else(|| "help".to_string());
         let mut flags = BTreeMap::new();
         let mut switches = Vec::new();
+        let mut positionals = Vec::new();
         while let Some(arg) = it.next() {
-            let name = arg
-                .strip_prefix("--")
-                .ok_or_else(|| anyhow::anyhow!("unexpected positional argument `{arg}`"))?
-                .to_string();
+            let Some(name) = arg.strip_prefix("--") else {
+                positionals.push(arg);
+                continue;
+            };
             // `--key=value` or `--key value` or bare switch
             if let Some((k, v)) = name.split_once('=') {
                 flags.insert(k.to_string(), v.to_string());
             } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                flags.insert(name, it.next().unwrap());
+                flags.insert(name.to_string(), it.next().unwrap());
             } else {
-                switches.push(name);
+                switches.push(name.to_string());
             }
         }
-        Ok(Args { command, flags, switches })
+        Ok(Args { command, flags, switches, positionals })
     }
 
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// The `i`-th positional argument, if present.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
     }
 
     pub fn has(&self, name: &str) -> bool {
@@ -97,8 +113,17 @@ mod tests {
     }
 
     #[test]
-    fn rejects_positional() {
-        assert!(Args::parse(["run".to_string(), "stray".to_string()]).is_err());
+    fn collects_positionals_in_order() {
+        let a = parse(&["bench", "cmp", "old.json", "new.json", "--fail-above", "5"]);
+        assert_eq!(a.command, "bench");
+        assert_eq!(a.positional(0), Some("cmp"));
+        assert_eq!(a.positional(1), Some("old.json"));
+        assert_eq!(a.positional(2), Some("new.json"));
+        assert_eq!(a.positional(3), None);
+        assert_eq!(a.flag("fail-above"), Some("5"));
+        // flag values are claimed by their flag, not collected
+        assert_eq!(a.positionals().len(), 3);
+        assert!(parse(&["run"]).positionals().is_empty());
     }
 
     #[test]

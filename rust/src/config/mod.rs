@@ -159,6 +159,56 @@ impl ShardStrategy {
     }
 }
 
+/// Hierarchical interconnect topology (`[topology]`). The default of
+/// one node is the classic flat all-to-all and keeps every pre-topology
+/// result bit-identical — all other keys in this section are inert at
+/// `nodes = 1`. With `nodes > 1` the devices are grouped node-major
+/// (`devices / nodes` per node): intra-node traffic rides a per-device
+/// link, inter-node traffic shares one uplink per node, and the
+/// exchange accounting splits into the two tiers
+/// (`CycleBreakdown::{exchange_intra, exchange_inter}`).
+#[derive(Debug, Clone)]
+pub struct TopologyConfig {
+    /// Number of nodes the devices are grouped into. Must divide
+    /// `sharding.devices` (`nodes * devices_per_node == devices`);
+    /// `1` = flat all-to-all (the classic, bit-identical model).
+    pub nodes: usize,
+    /// Intra-node per-device link bandwidth in bytes per core cycle.
+    /// Defaults to `sharding.link_bytes_per_cycle` when unset, so a
+    /// two-tier config with equal tier bandwidths isolates the pure
+    /// byte-volume effect of the hierarchy.
+    pub intra_link_bytes_per_cycle: Option<f64>,
+    /// Inter-node uplink bandwidth in bytes per core cycle — a per-NODE
+    /// resource shared by all of the node's devices (DCN/IB-class
+    /// fabric, typically ~8× slower than the intra links).
+    pub inter_link_bytes_per_cycle: f64,
+    /// Node-aware table placement (table-wise sharding, `nodes > 1`
+    /// only): assign tables greedily by profiled weight to the
+    /// least-loaded node instead of round-robin, minimizing the busiest
+    /// node's inter-node exchange bytes. Row-hashed and column-wise
+    /// sharding are placement-invariant, so the pass is a no-op there.
+    pub node_aware_placement: bool,
+    /// Replicate the top-K hot rows once per *node* (pinned at each
+    /// node's leader device) instead of on every device: the K rows
+    /// cost `K * vec_bytes` once per node, freeing on-chip capacity on
+    /// the other `devices_per_node - 1` devices, while replica-served
+    /// bags ride the cheap intra-node links from the leader to the
+    /// sample's home device. Inert at `nodes = 1`.
+    pub replicate_per_node: bool,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        TopologyConfig {
+            nodes: 1,
+            intra_link_bytes_per_cycle: None,
+            inter_link_bytes_per_cycle: 12.5,
+            node_aware_placement: false,
+            replicate_per_node: false,
+        }
+    }
+}
+
 /// Multi-device sharding configuration. The preset default of one
 /// device keeps every existing single-NPU result bit-identical; more
 /// devices split the embedding stage across per-device memory systems
@@ -184,6 +234,8 @@ pub struct ShardingConfig {
     /// batch's cycle total (`CycleBreakdown::exchange_exposed`). Off by
     /// default, which reproduces the serial-exchange timing exactly.
     pub overlap_exchange: bool,
+    /// Hierarchical interconnect (`[topology]` section; flat default).
+    pub topology: TopologyConfig,
 }
 
 impl Default for ShardingConfig {
@@ -195,6 +247,7 @@ impl Default for ShardingConfig {
             hop_latency_cycles: 700,
             replicate_top_k: 0,
             overlap_exchange: false,
+            topology: TopologyConfig::default(),
         }
     }
 }
@@ -561,6 +614,21 @@ impl SimConfig {
         s.replicate_top_k = t.usize_or("sharding.replicate_top_k", s.replicate_top_k)?;
         s.overlap_exchange = t.bool_or("sharding.overlap_exchange", s.overlap_exchange)?;
 
+        let tp = &mut s.topology;
+        tp.nodes = t.usize_or("topology.nodes", tp.nodes)?;
+        if t.contains("topology.intra_link_bytes_per_cycle") {
+            tp.intra_link_bytes_per_cycle =
+                Some(t.float("topology.intra_link_bytes_per_cycle")?);
+        }
+        tp.inter_link_bytes_per_cycle = t.float_or(
+            "topology.inter_link_bytes_per_cycle",
+            tp.inter_link_bytes_per_cycle,
+        )?;
+        tp.node_aware_placement =
+            t.bool_or("topology.node_aware_placement", tp.node_aware_placement)?;
+        tp.replicate_per_node =
+            t.bool_or("topology.replicate_per_node", tp.replicate_per_node)?;
+
         cfg.threads = t.usize_or("sim.threads", cfg.threads)?;
         cfg.seed = t.u64_or("seed", cfg.seed)?;
         cfg.validate()?;
@@ -610,6 +678,40 @@ impl SimConfig {
             return invalid(
                 "sharding.link_bytes_per_cycle",
                 format!("must be positive, got {}", s.link_bytes_per_cycle),
+            );
+        }
+        let tp = &s.topology;
+        if tp.nodes == 0 {
+            return invalid(
+                "topology.nodes",
+                "at least one node required (nodes = 1 is the flat all-to-all)".into(),
+            );
+        }
+        if s.devices % tp.nodes != 0 {
+            return invalid(
+                "topology.nodes",
+                format!(
+                    "nodes = {} must divide devices = {} \
+                     (nodes * devices_per_node == devices)",
+                    tp.nodes, s.devices
+                ),
+            );
+        }
+        if let Some(intra) = tp.intra_link_bytes_per_cycle {
+            if !(intra > 0.0) {
+                return invalid(
+                    "topology.intra_link_bytes_per_cycle",
+                    format!("tier bandwidth must be positive, got {intra}"),
+                );
+            }
+        }
+        if !(tp.inter_link_bytes_per_cycle > 0.0) {
+            return invalid(
+                "topology.inter_link_bytes_per_cycle",
+                format!(
+                    "tier bandwidth must be positive, got {}",
+                    tp.inter_link_bytes_per_cycle
+                ),
             );
         }
         if s.replicate_top_k as u64 > e.rows_per_table {
@@ -756,6 +858,63 @@ mod tests {
         let plain = SimConfig::from_table(&Table::parse("").unwrap()).unwrap();
         assert_eq!(plain.sharding.replicate_top_k, 0);
         assert!(!plain.sharding.overlap_exchange);
+    }
+
+    #[test]
+    fn topology_defaults_to_flat() {
+        let cfg = SimConfig::from_table(&Table::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.sharding.topology.nodes, 1);
+        assert_eq!(cfg.sharding.topology.intra_link_bytes_per_cycle, None);
+        assert!(!cfg.sharding.topology.node_aware_placement);
+        assert!(!cfg.sharding.topology.replicate_per_node);
+    }
+
+    #[test]
+    fn topology_section_parses() {
+        let t = Table::parse(
+            "[sharding]\ndevices = 8\n[topology]\nnodes = 2\n\
+             intra_link_bytes_per_cycle = 100\ninter_link_bytes_per_cycle = 12.5\n\
+             node_aware_placement = true\nreplicate_per_node = true",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_table(&t).unwrap();
+        let tp = &cfg.sharding.topology;
+        assert_eq!(tp.nodes, 2);
+        assert_eq!(tp.intra_link_bytes_per_cycle, Some(100.0));
+        assert_eq!(tp.inter_link_bytes_per_cycle, 12.5);
+        assert!(tp.node_aware_placement);
+        assert!(tp.replicate_per_node);
+    }
+
+    #[test]
+    fn rejects_nodes_not_dividing_devices() {
+        let t = Table::parse("[sharding]\ndevices = 4\n[topology]\nnodes = 3").unwrap();
+        let err = SimConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("topology.nodes"), "error names the key: {err}");
+        assert!(err.contains("divide"), "error explains the constraint: {err}");
+        // zero nodes is its own clear error
+        let t = Table::parse("[topology]\nnodes = 0").unwrap();
+        let err = SimConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("topology.nodes"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_positive_tier_bandwidth() {
+        let t = Table::parse(
+            "[sharding]\ndevices = 8\n[topology]\nnodes = 2\n\
+             inter_link_bytes_per_cycle = 0",
+        )
+        .unwrap();
+        let err = SimConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("topology.inter_link_bytes_per_cycle"), "{err}");
+        assert!(err.contains("positive"), "{err}");
+        let t = Table::parse(
+            "[sharding]\ndevices = 8\n[topology]\nnodes = 2\n\
+             intra_link_bytes_per_cycle = -1",
+        )
+        .unwrap();
+        let err = SimConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("topology.intra_link_bytes_per_cycle"), "{err}");
     }
 
     #[test]

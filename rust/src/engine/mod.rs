@@ -53,11 +53,14 @@ impl Simulator {
         // single-NPU path, bit-identical)
         let mut emb_sim = ShardedEmbeddingSim::new(cfg);
 
-        // Offline profiling pass, shared by the pinning policy and
-        // hot-row replication: collect per-row frequency over the whole
-        // workload trace, then pin the hottest vectors up to capacity
-        // and/or replicate the top-K rows on every device.
+        // Offline profiling pass, shared by the pinning policy,
+        // hot-row replication, and node-aware table placement: collect
+        // per-row frequency over the whole workload trace, then pin the
+        // hottest vectors up to capacity, replicate the top-K rows
+        // (per device or per node), and/or place tables by traffic.
+        let topo = emb_sim.topology();
         let replicate = cfg.sharding.replicate_top_k > 0 && emb_sim.num_devices() > 1;
+        let place = emb_sim.wants_placement_weights();
         let reserve = if replicate {
             cfg.sharding.replicate_top_k as u64 * w.embedding.vec_bytes()
         } else {
@@ -69,7 +72,8 @@ impl Simulator {
         // deterministic trace was regenerated per consumer); an
         // unprofiled run streams batch-by-batch in bounded memory as
         // before. Either path feeds the batch loop the same lookups.
-        let needs_profile = replicate || matches!(hw.mem.policy, OnchipPolicy::Pinning);
+        let needs_profile =
+            replicate || place || matches!(hw.mem.policy, OnchipPolicy::Pinning);
         let (cached, mut gen): (Option<WorkloadTrace>, Option<TraceGenerator>) =
             if needs_profile {
                 (Some(WorkloadTrace::generate(w)?), None)
@@ -86,6 +90,20 @@ impl Simulator {
             if replicate {
                 emb_sim.set_replicas(replicas.clone());
             }
+            if place {
+                // per-table weight = lookups that still travel after
+                // replication (replica-served rows leave the all-to-all
+                // entirely, so they should not steer the placement)
+                let mut weights = vec![0u64; w.embedding.num_tables];
+                for b in shared.batches() {
+                    for l in &b.lookups {
+                        if !(replicate && replicas.is_replicated(l.table, l.row)) {
+                            weights[l.table as usize] += 1;
+                        }
+                    }
+                }
+                emb_sim.set_placement_weights(&weights);
+            }
             if matches!(hw.mem.policy, OnchipPolicy::Pinning) {
                 // replicas pin capacity (and the hottest rows) first; the
                 // remaining budget pins the next-hottest non-replicated
@@ -95,11 +113,23 @@ impl Simulator {
                 } else {
                     profile
                 };
-                emb_sim.set_pin_set(PinSet::from_profile(
+                let reserved_budget = PinSet::from_profile(
                     &pin_profile,
                     hw.mem.onchip_bytes.saturating_sub(reserve),
                     w.embedding.vec_bytes(),
-                ));
+                );
+                if replicate && emb_sim.replicates_per_node() {
+                    // only node leaders host the replica reserve; the
+                    // other devices pin with the full buffer
+                    let full_budget = PinSet::from_profile(
+                        &pin_profile,
+                        hw.mem.onchip_bytes,
+                        w.embedding.vec_bytes(),
+                    );
+                    emb_sim.set_pin_sets(reserved_budget, full_budget);
+                } else {
+                    emb_sim.set_pin_set(reserved_budget);
+                }
             }
         }
 
@@ -110,6 +140,7 @@ impl Simulator {
             policy: hw.mem.policy.name().to_string(),
             batch_size: w.batch_size,
             num_devices: emb_sim.num_devices(),
+            nodes: topo.nodes(),
             freq_ghz: hw.freq_ghz,
             per_batch: Vec::with_capacity(w.num_batches),
             energy_joules: 0.0,
@@ -170,6 +201,8 @@ impl Simulator {
                     embedding: emb_r.cycles,
                     exchange,
                     exchange_exposed,
+                    exchange_intra: emb_r.exchange_intra_cycles,
+                    exchange_inter: emb_r.exchange_inter_cycles,
                     interaction,
                     top_mlp: top_r.cycles,
                 },
@@ -264,6 +297,7 @@ mod tests {
         assert_eq!(report.policy, "spm");
         assert_eq!(report.batch_size, 32);
         assert_eq!(report.num_devices, 1);
+        assert_eq!(report.nodes, 1, "single device is always a flat topology");
     }
 
     #[test]

@@ -42,7 +42,8 @@ pub mod trace;
 pub mod workload;
 
 pub use config::{
-    CoreConfig, HardwareConfig, MemoryConfig, ShardingConfig, SimConfig, WorkloadConfig,
+    CoreConfig, HardwareConfig, MemoryConfig, ShardingConfig, SimConfig, TopologyConfig,
+    WorkloadConfig,
 };
 
 

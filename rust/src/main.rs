@@ -34,6 +34,11 @@ COMMANDS:
                --shard-strategy <s>   table|row|column      [table]
                --replicate-top-k <n>  replicate the K hottest rows on every device [0]
                --overlap-exchange     overlap the all-to-all with top-MLP compute
+               --nodes <n>            group devices into n interconnect nodes [1 = flat]
+               --intra-link-bytes <x> intra-node link bandwidth, B/cycle [link_bytes_per_cycle]
+               --inter-link-bytes <x> per-node inter-node uplink bandwidth, B/cycle [12.5]
+               --node-placement       profile-driven node-aware table placement
+               --replicate-per-node   hold hot-row replicas once per node (at its leader)
                --threads <n>          host worker threads for the per-device fan-out
                                       [available parallelism; 1 = fully serial;
                                        results are byte-identical for any n]
@@ -47,7 +52,7 @@ COMMANDS:
                --requests <n>         requests to submit    [100]
                --artifacts <dir>      artifact directory    [artifacts]
   sweep      parameter sweep -> CSV on stdout
-               --param <batch|tables|alpha|onchip_mb|cores|devices|replicate_top_k>
+               --param <batch|tables|alpha|onchip_mb|cores|devices|nodes|replicate_top_k>
                --values <comma-separated>   e.g. 32,64,128
                --policy <p> [spm]  (plus the `run` flags)
                points fan out across a --threads-bounded worker pool; rows
@@ -57,6 +62,9 @@ COMMANDS:
                --reps <n>           repetitions per section [3]
                --json <file>        write machine-readable BENCH_hotpath.json
                --threads <n>        workers for the parallel leg [host parallelism]
+  bench cmp <OLD.json> <NEW.json>   compare two BENCH_hotpath.json artifacts
+               --fail-above <pct>   exit non-zero if any section slows > pct %
+               --md                 render a markdown table (for CI job summaries)
   trace-gen  write an index trace file
                --out <file>  --len <n> [100000]  --rows <n> [1000000]
                --alpha <x> [0.9]  --seed <n>
@@ -71,6 +79,14 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // only `bench` (the `bench cmp` grammar) takes positional words
+    if !args.positionals().is_empty() && args.command != "bench" {
+        eprintln!(
+            "error: unexpected positional argument `{}`\n\n{HELP}",
+            args.positionals()[0]
+        );
+        std::process::exit(2);
+    }
     let result = match args.command.as_str() {
         "run" => cmd_run(&args),
         "validate" => cmd_validate(&args),
@@ -116,6 +132,21 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
     if args.has("overlap-exchange") {
         cfg.sharding.overlap_exchange = true;
     }
+    cfg.sharding.topology.nodes = args.usize_flag("nodes", cfg.sharding.topology.nodes)?;
+    if args.flag("intra-link-bytes").is_some() {
+        cfg.sharding.topology.intra_link_bytes_per_cycle =
+            Some(args.f64_flag("intra-link-bytes", 0.0)?);
+    }
+    cfg.sharding.topology.inter_link_bytes_per_cycle = args.f64_flag(
+        "inter-link-bytes",
+        cfg.sharding.topology.inter_link_bytes_per_cycle,
+    )?;
+    if args.has("node-placement") {
+        cfg.sharding.topology.node_aware_placement = true;
+    }
+    if args.has("replicate-per-node") {
+        cfg.sharding.topology.replicate_per_node = true;
+    }
     cfg.threads = args.usize_flag("threads", cfg.threads)?;
     cfg.validate()?;
     Ok(cfg)
@@ -157,6 +188,17 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         let exchange: u64 = report.per_batch.iter().map(|b| b.cycles.exchange).sum();
         let exposed: u64 = report.per_batch.iter().map(|b| b.cycles.exchange_exposed).sum();
         println!("  exchange      : {exchange} cycles all-to-all ({exposed} exposed)");
+        if report.nodes > 1 {
+            let intra: u64 = report.per_batch.iter().map(|b| b.cycles.exchange_intra).sum();
+            let inter: u64 = report.per_batch.iter().map(|b| b.cycles.exchange_inter).sum();
+            println!(
+                "  topology      : {} nodes x {} devices/node; {intra} intra-node + \
+                 {inter} inter-node transfer cycles, {} B over the node uplinks",
+                report.nodes,
+                report.num_devices / report.nodes.max(1),
+                report.total_inter_node_bytes()
+            );
+        }
         println!(
             "  imbalance     : {:.3} (busiest / mean device lookups)",
             report.imbalance_factor()
@@ -376,6 +418,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             "onchip_mb" => cfg.hardware.mem.onchip_bytes = (v as u64) << 20,
             "cores" => cfg.hardware.num_cores = v as usize,
             "devices" => cfg.sharding.devices = v as usize,
+            "nodes" => cfg.sharding.topology.nodes = v as usize,
             "replicate_top_k" => cfg.sharding.replicate_top_k = v as usize,
             other => anyhow::bail!("unknown sweep param `{other}`"),
         }
@@ -412,6 +455,12 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    if args.positional(0) == Some("cmp") {
+        return cmd_bench_cmp(args);
+    }
+    if let Some(stray) = args.positional(0) {
+        anyhow::bail!("unknown bench subcommand `{stray}` (did you mean `bench cmp`?)");
+    }
     let opts = eonsim::bench::BenchOptions {
         smoke: args.has("smoke"),
         reps: args.usize_flag("reps", 3)?,
@@ -429,6 +478,34 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.flag("json") {
         std::fs::write(path, eonsim::bench::to_json(&report))?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `eonsim bench cmp OLD.json NEW.json [--fail-above PCT] [--md]` —
+/// the perf-trajectory diff: per-section deltas between two
+/// `BENCH_hotpath.json` artifacts, exiting non-zero when any section
+/// regressed beyond the threshold (CI's `bench-diff` job renders the
+/// table into its job summary and stays non-gating at the job level).
+fn cmd_bench_cmp(args: &Args) -> anyhow::Result<()> {
+    let old = args
+        .positional(1)
+        .ok_or_else(|| anyhow::anyhow!("bench cmp requires OLD.json and NEW.json"))?;
+    let new = args
+        .positional(2)
+        .ok_or_else(|| anyhow::anyhow!("bench cmp requires NEW.json after OLD.json"))?;
+    let report = eonsim::bench::compare_files(old, new)?;
+    print!("{}", eonsim::bench::render_cmp(&report, args.has("md")));
+    let fail_above = args.f64_flag("fail-above", f64::INFINITY)?;
+    if let Some(worst) = report.worst_regression() {
+        if worst.delta_pct > fail_above {
+            anyhow::bail!(
+                "section `{}` regressed {:+.1}% (> --fail-above {:.1}%)",
+                worst.id,
+                worst.delta_pct,
+                fail_above
+            );
+        }
     }
     Ok(())
 }

@@ -23,15 +23,23 @@
 //! * an interconnect model charges the embedding-exchange phase from the
 //!   busiest device's send volume over a configurable link bandwidth
 //!   plus a fixed hop latency. Replica-served bags are produced at their
-//!   home device and charge nothing.
+//!   home device and charge nothing;
+//! * [`topology::Topology`] optionally splits the pod into nodes
+//!   (`[topology] nodes > 1`): exchange bags whose home device shares
+//!   the sender's node drain over the per-device intra links, the rest
+//!   over each node's shared uplink — with per-node hot-row replication
+//!   (one copy at each node's leader) and a node-aware
+//!   [`topology::TablePlacement`] pass riding on top.
 //!
 //! With one device (the preset default) the partitioner is the identity,
 //! the exchange is free, replication is inert, and every result is
 //! bit-identical to the classic single-NPU path. With replication off
 //! and the serial exchange (the defaults), results are bit-identical to
-//! the original table-sharded model.
+//! the original table-sharded model; with one node (the default) the
+//! tiered accounting degenerates to exactly the flat model.
 
 pub mod replicate;
+pub mod topology;
 
 use crate::config::{ShardStrategy, SimConfig};
 use crate::engine::embedding::EmbeddingSim;
@@ -40,6 +48,7 @@ use crate::stats::{DeviceCounters, MemCounts, OpCounts};
 use crate::testutil::mix64;
 use crate::trace::{BatchTrace, Lookup};
 use replicate::HotRowReplicator;
+use topology::{TablePlacement, Topology};
 
 /// One device's share of a batch: its lookups (in original issue order)
 /// and the number of distinct bags it contributes pooled vectors to.
@@ -54,12 +63,25 @@ pub struct DeviceTrace {
     /// device already and are excluded. Equal to `bags` when no replica
     /// set is installed.
     pub exchange_bags: u64,
+    /// The subset of `exchange_bags` whose home device is another
+    /// device in the *same node* (intra-tier traffic). Bags consumed on
+    /// this device itself stay local and appear in neither tier count.
+    pub intra_bags: u64,
+    /// The subset of `exchange_bags` whose home device is in *another
+    /// node* (inter-tier traffic; always 0 on a flat topology).
+    pub inter_bags: u64,
+    /// Per-node replication only: replica-served bags produced at this
+    /// (leader) device but consumed at another device of the same node,
+    /// shipped whole over the intra-node links. 0 in per-device
+    /// replication mode, where replicas live at the home device itself.
+    pub replica_ship_bags: u64,
     /// Lookups routed here because their row is replicated on-device.
     pub replicated: u64,
 }
 
 /// Splits batch traces across devices according to a [`ShardStrategy`],
-/// rerouting replicated hot rows to their sample's home device.
+/// rerouting replicated hot rows to their sample's home device (or, in
+/// per-node replication mode, to the home node's leader).
 #[derive(Debug, Clone)]
 pub struct TablePartitioner {
     devices: usize,
@@ -67,21 +89,54 @@ pub struct TablePartitioner {
     /// Lookups per sample (tables * pool), for bag/home identification.
     lookups_per_sample: usize,
     replicas: HotRowReplicator,
+    /// Node structure for tier accounting and per-node replica routing
+    /// (flat by default — every pair of devices is same-node).
+    topology: Topology,
+    /// Per-node replication: replicated lookups route to the home
+    /// node's *leader* device instead of the home device itself.
+    replicate_per_node: bool,
+    /// Node-aware table → device map (table-wise sharding only);
+    /// `None` = the legacy `table % devices` round-robin.
+    placement: Option<TablePlacement>,
 }
 
 impl TablePartitioner {
     pub fn new(devices: usize, strategy: ShardStrategy, lookups_per_sample: usize) -> Self {
+        let devices = devices.max(1);
         TablePartitioner {
-            devices: devices.max(1),
+            devices,
             strategy,
             lookups_per_sample: lookups_per_sample.max(1),
             replicas: HotRowReplicator::empty(),
+            topology: Topology::flat(devices, 1.0),
+            replicate_per_node: false,
+            placement: None,
         }
     }
 
     /// Install the hot-row replica set used to reroute lookups.
     pub fn set_replicas(&mut self, replicas: HotRowReplicator) {
         self.replicas = replicas;
+    }
+
+    /// Install the node structure used for tier accounting (and, with
+    /// [`set_replicate_per_node`](Self::set_replicate_per_node), for
+    /// leader routing). Must agree with this partitioner's device count.
+    pub fn set_topology(&mut self, topology: Topology) {
+        debug_assert!(topology.devices() >= self.devices, "topology too small");
+        self.topology = topology;
+    }
+
+    /// Route replicated lookups to the home node's leader device (which
+    /// holds the node's single replica copy) instead of the home device.
+    pub fn set_replicate_per_node(&mut self, per_node: bool) {
+        self.replicate_per_node = per_node;
+    }
+
+    /// Install an explicit table → device placement (table-wise
+    /// sharding; other strategies never consult it).
+    pub fn set_placement(&mut self, placement: TablePlacement) {
+        self.placement = Some(placement);
     }
 
     pub fn devices(&self) -> usize {
@@ -95,11 +150,28 @@ impl TablePartitioner {
     #[inline]
     pub fn device_of(&self, lookup: &Lookup) -> usize {
         match self.strategy {
-            ShardStrategy::TableWise => lookup.table as usize % self.devices,
+            ShardStrategy::TableWise => match &self.placement {
+                Some(p) => p.device_of(lookup.table),
+                None => lookup.table as usize % self.devices,
+            },
             ShardStrategy::RowHashed => {
                 (mix64(((lookup.table as u64) << 48) ^ lookup.row) % self.devices as u64) as usize
             }
             ShardStrategy::ColumnWise => 0,
+        }
+    }
+
+    /// Where a replicated lookup is served: its sample's home device
+    /// (per-device replication — every device holds the replicas) or
+    /// the home node's leader (per-node replication — one copy per
+    /// node, shipped home over the intra-node links).
+    #[inline]
+    fn replica_target(&self, lookup_index: usize) -> usize {
+        let home = self.home_of(lookup_index);
+        if self.replicate_per_node {
+            self.topology.leader_of(self.topology.node_of(home))
+        } else {
+            home
         }
     }
 
@@ -114,8 +186,9 @@ impl TablePartitioner {
     /// original issue order within each device. Under table/row sharding
     /// every lookup lands on exactly one device; under column-wise every
     /// non-replicated lookup lands on every device (each gathers its
-    /// dim-slice). Replicated lookups always land only on the sample's
-    /// home device.
+    /// dim-slice). Replicated lookups always land exactly once: at the
+    /// sample's home device, or at the home node's leader in per-node
+    /// replication mode.
     pub fn split(&self, trace: &BatchTrace) -> Vec<DeviceTrace> {
         let mut out = Vec::new();
         self.split_into(trace, &mut out);
@@ -150,6 +223,9 @@ impl TablePartitioner {
                 },
                 bags: 0,
                 exchange_bags: 0,
+                intra_bags: 0,
+                inter_bags: 0,
+                replica_ship_bags: 0,
                 replicated: 0,
             });
         }
@@ -158,7 +234,25 @@ impl TablePartitioner {
             d.trace.lookups.clear();
             d.bags = 0;
             d.exchange_bags = 0;
+            d.intra_bags = 0;
+            d.inter_bags = 0;
+            d.replica_ship_bags = 0;
             d.replicated = 0;
+        }
+    }
+
+    /// Classify one freshly counted exchange bag into its interconnect
+    /// tier: consumed locally (neither), on another device of the same
+    /// node (intra), or in another node (inter).
+    #[inline]
+    fn tally_tier(&self, out: &mut DeviceTrace, d: usize, home: usize) {
+        if d == home {
+            return;
+        }
+        if self.topology.same_node(d, home) {
+            out.intra_bags += 1;
+        } else {
+            out.inter_bags += 1;
         }
     }
 
@@ -168,10 +262,11 @@ impl TablePartitioner {
         // iff its last-seen bag id changes
         let mut last_bag: Vec<Option<(usize, u32)>> = vec![None; self.devices];
         let mut last_remote: Vec<Option<(usize, u32)>> = vec![None; self.devices];
+        let mut last_ship: Vec<Option<(usize, u32)>> = vec![None; self.devices];
         for (i, l) in trace.lookups.iter().enumerate() {
             let replicated = !self.replicas.is_empty()
                 && self.replicas.is_replicated(l.table, l.row);
-            let d = if replicated { self.home_of(i) } else { self.device_of(l) };
+            let d = if replicated { self.replica_target(i) } else { self.device_of(l) };
             let bag = (i / self.lookups_per_sample, l.table);
             if last_bag[d] != Some(bag) {
                 last_bag[d] = Some(bag);
@@ -179,10 +274,18 @@ impl TablePartitioner {
             }
             if replicated {
                 out[d].replicated += 1;
+                // per-node replicas are served at the node leader; if
+                // the home device is elsewhere in the node, the pooled
+                // bag ships home over the intra-node links
+                if d != self.home_of(i) && last_ship[d] != Some(bag) {
+                    last_ship[d] = Some(bag);
+                    out[d].replica_ship_bags += 1;
+                }
             } else if last_remote[d] != Some(bag) {
                 // only non-replicated contributions travel the all-to-all
                 last_remote[d] = Some(bag);
                 out[d].exchange_bags += 1;
+                self.tally_tier(&mut out[d], d, self.home_of(i));
             }
             out[d].trace.lookups.push(*l);
         }
@@ -191,19 +294,26 @@ impl TablePartitioner {
     fn split_column(&self, trace: &BatchTrace, out: &mut [DeviceTrace]) {
         let mut last_bag: Vec<Option<(usize, u32)>> = vec![None; self.devices];
         let mut last_remote: Vec<Option<(usize, u32)>> = vec![None; self.devices];
+        let mut last_ship: Vec<Option<(usize, u32)>> = vec![None; self.devices];
         for (i, l) in trace.lookups.iter().enumerate() {
             let bag = (i / self.lookups_per_sample, l.table);
             if !self.replicas.is_empty() && self.replicas.is_replicated(l.table, l.row) {
-                // the home device holds the full replica: serve the whole
-                // vector there, other devices skip this lookup entirely
-                let d = self.home_of(i);
+                // the serving device holds the full replica: serve the
+                // whole vector there, other devices skip this lookup
+                // entirely
+                let d = self.replica_target(i);
                 if last_bag[d] != Some(bag) {
                     last_bag[d] = Some(bag);
                     out[d].bags += 1;
                 }
                 out[d].replicated += 1;
+                if d != self.home_of(i) && last_ship[d] != Some(bag) {
+                    last_ship[d] = Some(bag);
+                    out[d].replica_ship_bags += 1;
+                }
                 out[d].trace.lookups.push(*l);
             } else {
+                let home = self.home_of(i);
                 for d in 0..self.devices {
                     if last_bag[d] != Some(bag) {
                         last_bag[d] = Some(bag);
@@ -212,6 +322,7 @@ impl TablePartitioner {
                     if last_remote[d] != Some(bag) {
                         last_remote[d] = Some(bag);
                         out[d].exchange_bags += 1;
+                        self.tally_tier(&mut out[d], d, home);
                     }
                     out[d].trace.lookups.push(*l);
                 }
@@ -227,6 +338,12 @@ pub struct ShardedStageResult {
     pub cycles: u64,
     /// All-to-all exchange cycles charged after pooling (0 on 1 device).
     pub exchange_cycles: u64,
+    /// Intra-node transfer cycles within `exchange_cycles` (the
+    /// busiest device's intra-tier bytes over one per-device link).
+    pub exchange_intra_cycles: u64,
+    /// Inter-node transfer cycles within `exchange_cycles` (the
+    /// busiest node's aggregate uplink bytes; 0 on a flat topology).
+    pub exchange_inter_cycles: u64,
     /// Memory counters summed over devices.
     pub mem: MemCounts,
     /// Operation counters. Table/row sharding sums over devices; under
@@ -245,7 +362,8 @@ pub struct ShardedEmbeddingSim {
     devices: Vec<EmbeddingSim>,
     partitioner: TablePartitioner,
     strategy: ShardStrategy,
-    link_bytes_per_cycle: f64,
+    /// Interconnect shape + per-tier bandwidths (flat on one node).
+    topology: Topology,
     hop_latency_cycles: u64,
     /// Bytes one device contributes per exchanged bag: the full pooled
     /// vector under table/row sharding, the device's dim-slice under
@@ -254,6 +372,12 @@ pub struct ShardedEmbeddingSim {
     /// Lines of one *full* embedding vector — what a replica hit costs
     /// on-chip, even on a device simulating only a dim-slice.
     full_vec_lines: u64,
+    /// Bytes of one full embedding vector — what a per-node replica bag
+    /// ships over the intra-node links from the leader to its home.
+    full_vec_bytes: u64,
+    /// Replicas held once per node (at the node leader) instead of on
+    /// every device. Only meaningful on two-tier topologies.
+    replicate_per_node: bool,
     pool: usize,
     /// Host worker threads for the per-device fan-out (`[sim] threads`).
     /// The devices are fully independent state machines, so any value
@@ -269,9 +393,27 @@ impl ShardedEmbeddingSim {
         let n = cfg.sharding.devices.max(1);
         let emb = &cfg.workload.embedding;
         let strategy = cfg.sharding.strategy;
-        // replicas pin on-chip capacity on every device (full vectors,
-        // even under column-wise). Single-device runs stay untouched so
-        // the classic path is bit-identical regardless of knobs.
+        let topo = Topology::from_config(&cfg.sharding);
+        // the per-node knobs are only meaningful on a real hierarchy:
+        // at nodes = 1 every [topology] key is inert, keeping flat runs
+        // bit-identical to the pre-topology engine
+        let per_node = cfg.sharding.topology.replicate_per_node && !topo.is_flat();
+        // node-aware placement (table-wise, two-tier only): start from
+        // the uniform-weight balance; a profiled engine run refines it
+        // with per-table traffic weights via `set_placement`
+        let placement = if cfg.sharding.topology.node_aware_placement
+            && !topo.is_flat()
+            && n > 1
+            && matches!(strategy, ShardStrategy::TableWise)
+        {
+            Some(TablePlacement::balance(&vec![1u64; emb.num_tables], &topo))
+        } else {
+            None
+        };
+        // replicas pin on-chip capacity (full vectors, even under
+        // column-wise) — on every device, or only on each node's leader
+        // in per-node mode. Single-device runs stay untouched so the
+        // classic path is bit-identical regardless of knobs.
         let reserve = if n > 1 {
             cfg.sharding.replicate_top_k as u64 * emb.vec_bytes()
         } else {
@@ -281,22 +423,25 @@ impl ShardedEmbeddingSim {
         let devices = (0..n)
             .map(|d| {
                 let mut dev_cfg = cfg.clone();
-                if reserve > 0 {
+                if reserve > 0 && (!per_node || topo.is_leader(d)) {
                     let m = &mut dev_cfg.hardware.mem;
                     m.onchip_bytes =
                         m.onchip_bytes.saturating_sub(reserve).max(m.access_granularity);
                 }
                 // a device's sub-trace carries only its shard's lookups
                 // per sample — align the per-core sample stride to that:
-                // exactly `owned_tables * pool` table-wise (tables are
-                // assigned round-robin, so device d owns one extra table
-                // when d < tables % n), ~`tables * pool / n` row-hashed,
-                // and the full `tables * pool` column-wise (every device
-                // sees every lookup, just a narrower slice of it)
+                // exactly `owned_tables * pool` table-wise (round-robin
+                // gives device d one extra table when d < tables % n;
+                // a node-aware placement supplies exact counts),
+                // ~`tables * pool / n` row-hashed, and the full
+                // `tables * pool` column-wise (every device sees every
+                // lookup, just a narrower slice of it)
                 let per_sample = match strategy {
                     ShardStrategy::TableWise => {
-                        let owned =
-                            emb.num_tables / n + usize::from(d < emb.num_tables % n);
+                        let owned = match &placement {
+                            Some(p) => p.tables_on(d),
+                            None => emb.num_tables / n + usize::from(d < emb.num_tables % n),
+                        };
                         owned * emb.pool
                     }
                     ShardStrategy::RowHashed => emb.num_tables * emb.pool / n,
@@ -313,21 +458,48 @@ impl ShardedEmbeddingSim {
                 sim
             })
             .collect();
+        let mut partitioner = TablePartitioner::new(n, strategy, emb.num_tables * emb.pool);
+        partitioner.set_topology(topo);
+        partitioner.set_replicate_per_node(per_node);
+        if let Some(p) = placement {
+            partitioner.set_placement(p);
+        }
         ShardedEmbeddingSim {
             devices,
-            partitioner: TablePartitioner::new(n, strategy, emb.num_tables * emb.pool),
+            partitioner,
             strategy,
-            link_bytes_per_cycle: cfg.sharding.link_bytes_per_cycle.max(f64::MIN_POSITIVE),
+            topology: topo,
             hop_latency_cycles: cfg.sharding.hop_latency_cycles,
             slice_bytes,
             full_vec_lines: emb
                 .vec_bytes()
                 .div_ceil(cfg.hardware.mem.access_granularity)
                 .max(1),
+            full_vec_bytes: emb.vec_bytes(),
+            replicate_per_node: per_node,
             pool: emb.pool,
             threads: cfg.threads.max(1),
             split_buf: Vec::new(),
         }
+    }
+
+    /// The resolved interconnect topology.
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    /// Whether this sim holds hot-row replicas once per node (at the
+    /// node leaders) rather than on every device.
+    pub fn replicates_per_node(&self) -> bool {
+        self.replicate_per_node
+    }
+
+    /// Whether a profiled placement-weight refinement would be consumed
+    /// — i.e. the constructor decided node-aware placement applies
+    /// (table-wise strategy, two-tier topology, placement enabled).
+    /// The engine consults this instead of re-deriving the rule.
+    pub fn wants_placement_weights(&self) -> bool {
+        self.partitioner.placement.is_some()
     }
 
     pub fn num_devices(&self) -> usize {
@@ -342,31 +514,85 @@ impl ShardedEmbeddingSim {
         }
     }
 
+    /// Install distinct pin sets for node leaders and the other
+    /// devices. Per-node replication pins the replica reserve only at
+    /// each node's leader, so the remaining `devices_per_node - 1`
+    /// devices have the full buffer available for pinning — the engine
+    /// hands them the larger-budget set.
+    pub fn set_pin_sets(&mut self, leaders: PinSet, members: PinSet) {
+        for (d, dev) in self.devices.iter_mut().enumerate() {
+            let pins = if self.topology.is_leader(d) {
+                leaders.clone()
+            } else {
+                members.clone()
+            };
+            dev.set_pin_set(pins);
+        }
+    }
+
     /// Install the hot-row replica set on the partitioner (routing) and
-    /// every device (on-chip service). No-op on a single device, which
-    /// stays bit-identical to the classic path.
+    /// the serving devices (on-chip service) — every device, or only
+    /// each node's leader in per-node replication mode. No-op on a
+    /// single device, which stays bit-identical to the classic path.
     pub fn set_replicas(&mut self, replicas: HotRowReplicator) {
         if self.devices.len() == 1 {
             return;
         }
         self.partitioner.set_replicas(replicas.clone());
-        for dev in &mut self.devices {
+        for (d, dev) in self.devices.iter_mut().enumerate() {
+            if self.replicate_per_node && !self.topology.is_leader(d) {
+                // non-leaders hold no replica copy and are never routed
+                // a replicated lookup
+                continue;
+            }
             // replicas are stored whole, so a hit costs the full
             // vector's lines even on a dim-slice device
             dev.set_replicas(replicas.clone(), self.full_vec_lines);
         }
     }
 
-    /// All-to-all cycles for per-device send volumes: the busiest
-    /// device's outbound bytes over one link, plus a fixed hop latency.
-    /// Each device keeps `1/N` of its pooled output local, so `N - 1` of
-    /// `N` parts travel.
-    fn exchange_cycles(&self, send_bytes: &[u64]) -> u64 {
-        let max_bytes = send_bytes.iter().copied().max().unwrap_or(0);
-        if max_bytes == 0 {
-            return 0;
+    /// Refine the node-aware table placement with profiled per-table
+    /// weights (typically each table's non-replicated lookup count).
+    /// Only meaningful for table-wise sharding on a two-tier topology
+    /// with `topology.node_aware_placement` enabled — a no-op otherwise,
+    /// so callers can invoke it unconditionally. Call before the first
+    /// batch: the per-device sample strides are re-derived from the new
+    /// table→device map.
+    pub fn set_placement_weights(&mut self, weights: &[u64]) {
+        if self.devices.len() == 1
+            || self.topology.is_flat()
+            || !matches!(self.strategy, ShardStrategy::TableWise)
+            || self.partitioner.placement.is_none()
+        {
+            return;
         }
-        self.hop_latency_cycles + (max_bytes as f64 / self.link_bytes_per_cycle).ceil() as u64
+        let placement = TablePlacement::balance(weights, &self.topology);
+        for (d, dev) in self.devices.iter_mut().enumerate() {
+            dev.set_lookups_per_sample((placement.tables_on(d) * self.pool).max(1));
+        }
+        self.partitioner.set_placement(placement);
+    }
+
+    /// Exchange-phase cycles from per-device intra-tier bytes and
+    /// per-device inter-tier bytes: the intra tier drains the busiest
+    /// *device's* bytes over its own link; the inter tier drains the
+    /// busiest *node's* aggregate bytes over its shared uplink. The two
+    /// drains are serialized after one hop launch. On a flat topology
+    /// every byte is intra and the result is bit-identical to the
+    /// classic `hop + ceil(max_send / link)` accounting.
+    fn exchange_cycles(
+        &self,
+        intra_bytes: &[u64],
+        inter_bytes: &[u64],
+    ) -> topology::ExchangeCycles {
+        let intra_max = intra_bytes.iter().copied().max().unwrap_or(0);
+        let mut node_bytes = vec![0u64; self.topology.nodes()];
+        for (d, &b) in inter_bytes.iter().enumerate() {
+            node_bytes[self.topology.node_of(d)] += b;
+        }
+        let inter_max = node_bytes.iter().copied().max().unwrap_or(0);
+        self.topology
+            .exchange_cycles(self.hop_latency_cycles, intra_max, inter_max)
     }
 
     /// Simulate one batch across all devices.
@@ -379,12 +605,15 @@ impl ShardedEmbeddingSim {
             return ShardedStageResult {
                 cycles: r.cycles,
                 exchange_cycles: 0,
+                exchange_intra_cycles: 0,
+                exchange_inter_cycles: 0,
                 mem: r.mem,
                 ops: r.ops,
                 per_device: vec![DeviceCounters {
                     device: 0,
                     cycles: r.cycles,
                     exchange_bytes: 0,
+                    inter_bytes: 0,
                     mem: r.mem,
                     ops: r.ops,
                 }],
@@ -437,7 +666,8 @@ impl ShardedEmbeddingSim {
         let mut mem = MemCounts::default();
         let mut ops = OpCounts::default();
         let mut per_device = Vec::with_capacity(n);
-        let mut send_bytes = Vec::with_capacity(n);
+        let mut intra_bytes = Vec::with_capacity(n);
+        let mut inter_bytes = Vec::with_capacity(n);
         let mut wall = 0u64;
         for (device, (r, part)) in results.iter().zip(&split).enumerate() {
             // the partitioner knows the exact distinct-bag count of each
@@ -446,14 +676,25 @@ impl ShardedEmbeddingSim {
             mem.add(&r.mem);
             ops.add(&r.ops);
             // pooled output for the exchange-charged bags; (n-1)/n of it
-            // is remote. Replica-served bags live at home: free.
-            let bytes = part.exchange_bags * self.slice_bytes[device] * (n as u64 - 1)
+            // is remote (the classic flat accounting, kept bit-identical).
+            // The travelling share splits across the tiers in exact
+            // proportion to where each bag's home device sits: same node
+            // (intra links) or another node (the node uplink).
+            let total = part.exchange_bags * self.slice_bytes[device] * (n as u64 - 1)
                 / n as u64;
-            send_bytes.push(bytes);
+            let travel = part.intra_bags + part.inter_bags;
+            let inter = if travel > 0 { total * part.inter_bags / travel } else { 0 };
+            // per-node replica bags ship whole from the node leader to
+            // their home device over the intra links (same-node by
+            // construction). Per-device replicas live at home: free.
+            let intra = (total - inter) + part.replica_ship_bags * self.full_vec_bytes;
+            intra_bytes.push(intra);
+            inter_bytes.push(inter);
             per_device.push(DeviceCounters {
                 device,
                 cycles: r.cycles,
-                exchange_bytes: bytes,
+                exchange_bytes: intra + inter,
+                inter_bytes: inter,
                 mem: r.mem,
                 ops: r.ops,
             });
@@ -476,9 +717,12 @@ impl ShardedEmbeddingSim {
             };
         }
         self.split_buf = split;
+        let ex = self.exchange_cycles(&intra_bytes, &inter_bytes);
         ShardedStageResult {
             cycles: wall,
-            exchange_cycles: self.exchange_cycles(&send_bytes),
+            exchange_cycles: ex.total,
+            exchange_intra_cycles: ex.intra,
+            exchange_inter_cycles: ex.inter,
             mem,
             ops,
             per_device,
@@ -639,6 +883,127 @@ mod tests {
         for (with, without) in split.iter().zip(&plain) {
             assert!(with.exchange_bags <= without.exchange_bags);
         }
+    }
+
+    #[test]
+    fn split_tier_counts_partition_the_exchange_bags() {
+        // 2×4 two-tier: every exchange bag is local, intra, or inter —
+        // and the tier counts are exact (homes round-robin the samples)
+        let cfg = small_cfg(8, ShardStrategy::TableWise);
+        let trace = one_batch(&cfg);
+        let lps = cfg.workload.embedding.num_tables * cfg.workload.embedding.pool;
+        let mut p = TablePartitioner::new(8, ShardStrategy::TableWise, lps);
+        p.set_topology(Topology::two_tier(2, 4, 100.0, 12.5));
+        let split = p.split(&trace);
+        for (d, dt) in split.iter().enumerate() {
+            assert!(dt.intra_bags + dt.inter_bags <= dt.exchange_bags, "device {d}");
+            assert!(dt.inter_bags > 0, "device {d} must send across nodes");
+            assert_eq!(dt.replica_ship_bags, 0);
+        }
+        // flat topology never records an inter-tier bag
+        let flat = TablePartitioner::new(8, ShardStrategy::TableWise, lps).split(&trace);
+        for (two, one) in split.iter().zip(&flat) {
+            assert_eq!(one.inter_bags, 0);
+            assert_eq!(one.intra_bags + one.inter_bags, two.intra_bags + two.inter_bags);
+            assert_eq!(two.exchange_bags, one.exchange_bags);
+        }
+    }
+
+    #[test]
+    fn per_node_replication_routes_to_node_leaders() {
+        let cfg = small_cfg(8, ShardStrategy::TableWise);
+        let trace = one_batch(&cfg);
+        let lps = cfg.workload.embedding.num_tables * cfg.workload.embedding.pool;
+        let mut profile = Profile::new();
+        for l in &trace.lookups {
+            profile.record(l.table, l.row);
+        }
+        let replicas = replicate::HotRowReplicator::from_profile(&profile, 64);
+        let topo = Topology::two_tier(2, 4, 100.0, 12.5);
+        let mut p = TablePartitioner::new(8, ShardStrategy::TableWise, lps);
+        p.set_topology(topo);
+        p.set_replicas(replicas.clone());
+        p.set_replicate_per_node(true);
+        let split = p.split(&trace);
+        // conservation, and replicated lookups land only on leaders
+        let total: usize = split.iter().map(|d| d.trace.lookups.len()).sum();
+        assert_eq!(total, trace.lookups.len());
+        let replicated: u64 = split.iter().map(|d| d.replicated).sum();
+        assert!(replicated > 0, "hot rows must reroute under a skewed trace");
+        for (d, dt) in split.iter().enumerate() {
+            if !topo.is_leader(d) {
+                assert_eq!(dt.replicated, 0, "non-leader {d} must hold no replicas");
+                assert_eq!(dt.replica_ship_bags, 0);
+            }
+        }
+        // leaders ship replica bags to homes elsewhere in their node
+        assert!(
+            split.iter().map(|d| d.replica_ship_bags).sum::<u64>() > 0,
+            "3 of 4 homes per node sit off-leader"
+        );
+    }
+
+    #[test]
+    fn per_device_replication_never_ships_replica_bags() {
+        let cfg = small_cfg(4, ShardStrategy::TableWise);
+        let trace = one_batch(&cfg);
+        let lps = cfg.workload.embedding.num_tables * cfg.workload.embedding.pool;
+        let mut profile = Profile::new();
+        for l in &trace.lookups {
+            profile.record(l.table, l.row);
+        }
+        let mut p = TablePartitioner::new(4, ShardStrategy::TableWise, lps);
+        p.set_replicas(replicate::HotRowReplicator::from_profile(&profile, 64));
+        for d in p.split(&trace) {
+            assert_eq!(d.replica_ship_bags, 0, "home-device replicas never travel");
+        }
+    }
+
+    #[test]
+    fn placement_overrides_table_owner() {
+        let lps = 128;
+        let mut p = TablePartitioner::new(4, ShardStrategy::TableWise, lps);
+        let topo = Topology::two_tier(2, 2, 100.0, 12.5);
+        p.set_topology(topo);
+        p.set_placement(TablePlacement::balance(&[9, 9, 1, 1], &topo));
+        let owners: Vec<usize> = (0..4u32)
+            .map(|table| p.device_of(&Lookup { table, row: 0 }))
+            .collect();
+        // the two heavy tables split across nodes
+        assert_ne!(topo.node_of(owners[0]), topo.node_of(owners[1]));
+        // every table still owned by exactly one device
+        let trace = one_batch(&small_cfg(4, ShardStrategy::TableWise));
+        let split = p.split(&trace);
+        let total: usize = split.iter().map(|d| d.trace.lookups.len()).sum();
+        assert_eq!(total, trace.lookups.len());
+    }
+
+    #[test]
+    fn two_tier_exchange_bytes_conserve_per_device() {
+        // intra + inter == the flat run's per-device exchange bytes, and
+        // the tier cycle split sums (with the hop) to the total
+        let mut cfg = small_cfg(8, ShardStrategy::TableWise);
+        cfg.sharding.topology.nodes = 2;
+        cfg.sharding.topology.inter_link_bytes_per_cycle = 12.5;
+        let trace = one_batch(&cfg);
+        let two = ShardedEmbeddingSim::new(&cfg).simulate_batch(&trace);
+        let flat = ShardedEmbeddingSim::new(&small_cfg(8, ShardStrategy::TableWise))
+            .simulate_batch(&trace);
+        for (t, f) in two.per_device.iter().zip(&flat.per_device) {
+            assert_eq!(t.exchange_bytes, f.exchange_bytes, "device {}", t.device);
+            assert!(t.inter_bytes > 0 && t.inter_bytes < t.exchange_bytes);
+            assert_eq!(f.inter_bytes, 0);
+        }
+        assert!(two.exchange_intra_cycles > 0 && two.exchange_inter_cycles > 0);
+        assert_eq!(
+            two.exchange_cycles,
+            cfg.sharding.hop_latency_cycles
+                + two.exchange_intra_cycles
+                + two.exchange_inter_cycles
+        );
+        assert_eq!(flat.exchange_inter_cycles, 0);
+        assert_eq!(flat.exchange_cycles, two.exchange_cycles - two.exchange_inter_cycles
+            - two.exchange_intra_cycles + flat.exchange_intra_cycles);
     }
 
     #[test]

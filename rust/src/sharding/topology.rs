@@ -1,0 +1,387 @@
+//! Hierarchical interconnect topologies for multi-device serving.
+//!
+//! Real NPU pods are not one flat all-to-all: devices sit in *nodes*
+//! joined by fast intra-node links (ICI/NVLink-class serdes, one link
+//! per device) while nodes talk over a much slower inter-node fabric
+//! (DCN/InfiniBand-class, one shared uplink per node). Embedding
+//! exchange cost is dominated by which tier a pooled (or partial)
+//! vector crosses — the all-to-all bottleneck TensorDIMM identifies for
+//! embedding gathers. This module models exactly that split:
+//!
+//! * [`Topology`] — flat (one tier, the classic model, bit-identical to
+//!   the pre-topology accounting) or two-tier
+//!   `{nodes × devices_per_node}` with per-tier bandwidths. The
+//!   exchange model consults it per device-pair: bags whose home device
+//!   shares the sender's node ride the intra links, the rest cross the
+//!   node uplink. The two phases are serialized (intra drain, then
+//!   inter drain), and the inter tier charges the *busiest node's*
+//!   aggregate uplink bytes — the uplink is a per-node resource shared
+//!   by all of the node's devices, so packing hot shards into one node
+//!   saturates it.
+//! * [`TablePlacement`] — a [`crate::config::ShardStrategy`]-orthogonal
+//!   placement pass for table-wise sharding: tables are assigned in
+//!   descending (profiled) weight, each to the least-loaded node and
+//!   then the least-loaded device inside it. The hottest tables land
+//!   first, so they spread across nodes and pair with complementary
+//!   cold tables within a node — minimizing the busiest node's
+//!   inter-node exchange bytes (which is what the serialized inter-tier
+//!   phase charges). Row-hashed and column-wise sharding are
+//!   placement-invariant by construction (rows/slices are spread
+//!   uniformly whatever the table→device map says), so the pass applies
+//!   to table-wise splits only.
+
+use crate::config::ShardingConfig;
+
+/// Per-tier cycle split of one all-to-all exchange phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExchangeCycles {
+    /// Full exchange phase: hop latency + intra drain + inter drain.
+    pub total: u64,
+    /// Intra-node transfer cycles (busiest device's intra bytes over
+    /// one per-device link).
+    pub intra: u64,
+    /// Inter-node transfer cycles (busiest node's aggregate uplink
+    /// bytes over one per-node link; 0 on flat topologies).
+    pub inter: u64,
+}
+
+/// Interconnect shape: how `nodes * devices_per_node` devices are wired.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Topology {
+    nodes: usize,
+    devices_per_node: usize,
+    intra_bytes_per_cycle: f64,
+    inter_bytes_per_cycle: f64,
+}
+
+impl Topology {
+    /// One flat all-to-all tier — the classic model. Every device pair
+    /// is "intra", the inter tier never charges a cycle, and the
+    /// exchange accounting is bit-identical to the pre-topology code.
+    pub fn flat(devices: usize, link_bytes_per_cycle: f64) -> Self {
+        Topology {
+            nodes: 1,
+            devices_per_node: devices.max(1),
+            intra_bytes_per_cycle: link_bytes_per_cycle.max(f64::MIN_POSITIVE),
+            inter_bytes_per_cycle: link_bytes_per_cycle.max(f64::MIN_POSITIVE),
+        }
+    }
+
+    /// Two tiers: `nodes` nodes of `devices_per_node` devices each.
+    pub fn two_tier(
+        nodes: usize,
+        devices_per_node: usize,
+        intra_bytes_per_cycle: f64,
+        inter_bytes_per_cycle: f64,
+    ) -> Self {
+        Topology {
+            nodes: nodes.max(1),
+            devices_per_node: devices_per_node.max(1),
+            intra_bytes_per_cycle: intra_bytes_per_cycle.max(f64::MIN_POSITIVE),
+            inter_bytes_per_cycle: inter_bytes_per_cycle.max(f64::MIN_POSITIVE),
+        }
+    }
+
+    /// Resolve the configured topology for a sharding deployment.
+    /// `nodes = 1` (the default) is flat and always uses the classic
+    /// `sharding.link_bytes_per_cycle`, so every pre-topology config
+    /// stays bit-identical no matter what the other `[topology]` keys
+    /// say. Two-tier intra bandwidth falls back to the flat link when
+    /// not set explicitly.
+    pub fn from_config(s: &ShardingConfig) -> Self {
+        let devices = s.devices.max(1);
+        let nodes = s.topology.nodes.max(1);
+        if nodes <= 1 || devices <= 1 {
+            Topology::flat(devices, s.link_bytes_per_cycle)
+        } else {
+            // validate() rejects non-divisible counts on every real
+            // path; ceil keeps node_of in range even on raw configs
+            Topology::two_tier(
+                nodes,
+                devices.div_ceil(nodes),
+                s.topology
+                    .intra_link_bytes_per_cycle
+                    .unwrap_or(s.link_bytes_per_cycle),
+                s.topology.inter_link_bytes_per_cycle,
+            )
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn devices_per_node(&self) -> usize {
+        self.devices_per_node
+    }
+
+    pub fn devices(&self) -> usize {
+        self.nodes * self.devices_per_node
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.nodes == 1
+    }
+
+    /// Which node a device belongs to (devices are numbered node-major:
+    /// node `k` owns devices `k*dpn .. (k+1)*dpn`).
+    #[inline]
+    pub fn node_of(&self, device: usize) -> usize {
+        device / self.devices_per_node
+    }
+
+    /// The node's designated leader device (its first device) — where
+    /// per-node hot-row replicas live.
+    #[inline]
+    pub fn leader_of(&self, node: usize) -> usize {
+        node * self.devices_per_node
+    }
+
+    /// Whether a device is its node's leader.
+    #[inline]
+    pub fn is_leader(&self, device: usize) -> bool {
+        device % self.devices_per_node == 0
+    }
+
+    #[inline]
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Cycles for one exchange phase given the busiest device's
+    /// intra-tier bytes and the busiest node's aggregate inter-tier
+    /// bytes. The two tier drains are serialized after one hop launch;
+    /// an exchange with no bytes at all is free (no hop either),
+    /// matching the classic accounting.
+    pub fn exchange_cycles(
+        &self,
+        hop_latency_cycles: u64,
+        intra_max_bytes: u64,
+        inter_max_bytes: u64,
+    ) -> ExchangeCycles {
+        if intra_max_bytes == 0 && inter_max_bytes == 0 {
+            return ExchangeCycles::default();
+        }
+        let drain = |bytes: u64, bpc: f64| -> u64 {
+            if bytes == 0 {
+                0
+            } else {
+                (bytes as f64 / bpc).ceil() as u64
+            }
+        };
+        let intra = drain(intra_max_bytes, self.intra_bytes_per_cycle);
+        let inter = drain(inter_max_bytes, self.inter_bytes_per_cycle);
+        ExchangeCycles { total: hop_latency_cycles + intra + inter, intra, inter }
+    }
+}
+
+/// An explicit table → device map for table-wise sharding, replacing
+/// the legacy `table % devices` round-robin when node-aware placement
+/// is enabled.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TablePlacement {
+    map: Vec<usize>,
+    devices: usize,
+}
+
+impl TablePlacement {
+    /// The legacy round-robin assignment, as an explicit map.
+    pub fn round_robin(num_tables: usize, devices: usize) -> Self {
+        let devices = devices.max(1);
+        TablePlacement {
+            map: (0..num_tables).map(|t| t % devices).collect(),
+            devices,
+        }
+    }
+
+    /// Greedy node-aware balance: tables in descending weight order
+    /// (ties by table id) each go to the least-loaded node, then the
+    /// least-loaded device within it (ties by lowest id). Zero-weight
+    /// tables count as weight 1 so uniform workloads still spread.
+    /// Deterministic for a given weight vector and topology.
+    pub fn balance(weights: &[u64], topo: &Topology) -> Self {
+        let nodes = topo.nodes();
+        let dpn = topo.devices_per_node();
+        let mut node_load = vec![0u64; nodes];
+        let mut dev_load = vec![0u64; topo.devices()];
+        let mut order: Vec<usize> = (0..weights.len()).collect();
+        order.sort_unstable_by(|&a, &b| weights[b].cmp(&weights[a]).then(a.cmp(&b)));
+        let mut map = vec![0usize; weights.len()];
+        for t in order {
+            let w = weights[t].max(1);
+            let node = (0..nodes)
+                .min_by_key(|&k| (node_load[k], k))
+                .expect("at least one node");
+            let first = topo.leader_of(node);
+            let dev = (first..first + dpn)
+                .min_by_key(|&d| (dev_load[d], d))
+                .expect("at least one device per node");
+            map[t] = dev;
+            node_load[node] += w;
+            dev_load[dev] += w;
+        }
+        TablePlacement { map, devices: topo.devices() }
+    }
+
+    /// The device a table is placed on (tables beyond the map — which a
+    /// well-formed trace never produces — fall back to round-robin).
+    #[inline]
+    pub fn device_of(&self, table: u32) -> usize {
+        self.map
+            .get(table as usize)
+            .copied()
+            .unwrap_or(table as usize % self.devices)
+    }
+
+    /// How many tables a device owns under this placement.
+    pub fn tables_on(&self, device: usize) -> usize {
+        self.map.iter().filter(|&&d| d == device).count()
+    }
+
+    pub fn num_tables(&self) -> usize {
+        self.map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ShardingConfig, TopologyConfig};
+
+    #[test]
+    fn node_arithmetic() {
+        let t = Topology::two_tier(2, 4, 100.0, 12.5);
+        assert_eq!(t.devices(), 8);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.leader_of(1), 4);
+        assert!(t.is_leader(0) && t.is_leader(4));
+        assert!(!t.is_leader(5));
+        assert!(t.same_node(1, 3));
+        assert!(!t.same_node(3, 4));
+        assert!(!t.is_flat());
+    }
+
+    #[test]
+    fn flat_exchange_matches_legacy_formula() {
+        // the classic model: hop + ceil(max_bytes / link), 0 when idle
+        let t = Topology::flat(4, 100.0);
+        assert!(t.is_flat());
+        let ex = t.exchange_cycles(700, 28_672, 0);
+        assert_eq!(ex.total, 700 + (28_672f64 / 100.0).ceil() as u64);
+        assert_eq!(ex.intra, ex.total - 700);
+        assert_eq!(ex.inter, 0);
+        assert_eq!(t.exchange_cycles(700, 0, 0), ExchangeCycles::default());
+    }
+
+    #[test]
+    fn two_tier_exchange_serializes_tiers() {
+        let t = Topology::two_tier(2, 4, 100.0, 25.0);
+        let ex = t.exchange_cycles(700, 1000, 1000);
+        assert_eq!(ex.intra, 10);
+        assert_eq!(ex.inter, 40, "inter tier drains over the slower uplink");
+        assert_eq!(ex.total, 700 + 10 + 40);
+        // inter-only traffic still pays the hop
+        let ex = t.exchange_cycles(700, 0, 500);
+        assert_eq!(ex, ExchangeCycles { total: 720, intra: 0, inter: 20 });
+    }
+
+    #[test]
+    fn from_config_defaults_to_flat_and_ignores_tier_knobs_at_one_node() {
+        // weird tier settings must be inert while nodes = 1
+        let s = ShardingConfig {
+            devices: 4,
+            topology: TopologyConfig {
+                intra_link_bytes_per_cycle: Some(3.0),
+                inter_link_bytes_per_cycle: 1.0,
+                ..TopologyConfig::default()
+            },
+            ..ShardingConfig::default()
+        };
+        let t = Topology::from_config(&s);
+        assert!(t.is_flat());
+        assert_eq!(
+            t.exchange_cycles(700, 10_000, 0),
+            Topology::flat(4, s.link_bytes_per_cycle).exchange_cycles(700, 10_000, 0)
+        );
+    }
+
+    #[test]
+    fn from_config_two_tier_inherits_flat_link_for_intra() {
+        let s = ShardingConfig {
+            devices: 8,
+            link_bytes_per_cycle: 64.0,
+            topology: TopologyConfig {
+                nodes: 2,
+                inter_link_bytes_per_cycle: 8.0,
+                ..TopologyConfig::default()
+            },
+            ..ShardingConfig::default()
+        };
+        let t = Topology::from_config(&s);
+        assert_eq!(t.nodes(), 2);
+        assert_eq!(t.devices_per_node(), 4);
+        // intra defaulted to the flat link bandwidth (64 B/cycle)
+        assert_eq!(t.exchange_cycles(0, 640, 0).intra, 10);
+        assert_eq!(t.exchange_cycles(0, 0, 640).inter, 80);
+    }
+
+    #[test]
+    fn round_robin_matches_modulo() {
+        let p = TablePlacement::round_robin(10, 4);
+        for t in 0..10u32 {
+            assert_eq!(p.device_of(t), t as usize % 4);
+        }
+        assert_eq!(p.tables_on(0), 3);
+        assert_eq!(p.tables_on(3), 2);
+    }
+
+    #[test]
+    fn balance_splits_lumpy_tables_across_nodes() {
+        // 10 uniform tables on 2×4: round-robin packs 6 into node 0
+        // (devices 0..3 own tables 0,8,1,9,2,3); the balanced placement
+        // splits them 5/5
+        let topo = Topology::two_tier(2, 4, 100.0, 12.5);
+        let rr = TablePlacement::round_robin(10, 8);
+        let rr_node0: usize = (0..4).map(|d| rr.tables_on(d)).sum();
+        assert_eq!(rr_node0, 6, "round-robin is node-lumpy");
+        let p = TablePlacement::balance(&[1; 10], &topo);
+        let node0: usize = (0..4).map(|d| p.tables_on(d)).sum();
+        let node1: usize = (4..8).map(|d| p.tables_on(d)).sum();
+        assert_eq!((node0, node1), (5, 5), "balanced across nodes");
+        // every table placed exactly once, no device over ceil(10/8)+1
+        let total: usize = (0..8).map(|d| p.tables_on(d)).sum();
+        assert_eq!(total, 10);
+        assert!((0..8).all(|d| p.tables_on(d) <= 2));
+    }
+
+    #[test]
+    fn balance_spreads_hot_tables_and_pairs_them_with_cold() {
+        // two hot tables must not share a node; each co-locates with a
+        // cold partner instead
+        let topo = Topology::two_tier(2, 2, 100.0, 12.5);
+        let p = TablePlacement::balance(&[100, 100, 1, 1], &topo);
+        assert_ne!(
+            topo.node_of(p.device_of(0)),
+            topo.node_of(p.device_of(1)),
+            "hot tables split across nodes"
+        );
+        // each node carries one hot + one cold table
+        for node in 0..2 {
+            let tables: Vec<u32> = (0..4u32)
+                .filter(|&t| topo.node_of(p.device_of(t)) == node)
+                .collect();
+            assert_eq!(tables.len(), 2, "node {node}: {tables:?}");
+            assert!(tables.iter().any(|&t| t < 2), "node {node} has a hot table");
+            assert!(tables.iter().any(|&t| t >= 2), "node {node} has a cold table");
+        }
+    }
+
+    #[test]
+    fn balance_is_deterministic() {
+        let topo = Topology::two_tier(2, 4, 100.0, 12.5);
+        let w = [7u64, 3, 3, 9, 1, 1, 4, 4, 2, 2];
+        assert_eq!(TablePlacement::balance(&w, &topo), TablePlacement::balance(&w, &topo));
+    }
+}

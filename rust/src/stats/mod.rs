@@ -103,6 +103,14 @@ pub struct CycleBreakdown {
     /// interaction + top-MLP compute. This — not `exchange` — is what
     /// [`CycleBreakdown::total`] counts.
     pub exchange_exposed: u64,
+    /// Intra-node tier of `exchange`: the busiest device's same-node
+    /// transfer cycles over its per-device link. On a flat topology
+    /// (`nodes = 1`) this is the whole transfer (`exchange` minus the
+    /// hop latency); informational, like `exchange` itself.
+    pub exchange_intra: u64,
+    /// Inter-node tier of `exchange`: the busiest node's aggregate
+    /// uplink transfer cycles. Always 0 on a flat topology.
+    pub exchange_inter: u64,
     /// Feature interaction (VPU).
     pub interaction: u64,
     /// Top-MLP.
@@ -123,8 +131,12 @@ pub struct DeviceCounters {
     pub device: usize,
     /// Embedding-stage cycles this device spent on its shard.
     pub cycles: u64,
-    /// Bytes this device contributed to the all-to-all exchange.
+    /// Bytes this device contributed to the all-to-all exchange
+    /// (both tiers; includes per-node replica shipping).
     pub exchange_bytes: u64,
+    /// The subset of `exchange_bytes` that crossed the inter-node
+    /// fabric (0 on a flat topology).
+    pub inter_bytes: u64,
     pub mem: MemCounts,
     pub ops: OpCounts,
 }
@@ -148,6 +160,9 @@ pub struct SimReport {
     pub batch_size: usize,
     /// Devices the embedding stage was sharded across.
     pub num_devices: usize,
+    /// Interconnect nodes the devices were grouped into (1 = flat
+    /// all-to-all; also 1 for single-device runs).
+    pub nodes: usize,
     pub freq_ghz: f64,
     pub per_batch: Vec<BatchResult>,
     /// Total energy estimate in joules (filled by the energy model).
@@ -227,11 +242,22 @@ impl SimReport {
                 let slot = &mut out[d.device];
                 slot.cycles += d.cycles;
                 slot.exchange_bytes += d.exchange_bytes;
+                slot.inter_bytes += d.inter_bytes;
                 slot.mem.add(&d.mem);
                 slot.ops.add(&d.ops);
             }
         }
         out
+    }
+
+    /// Total bytes that crossed the inter-node fabric over all batches
+    /// (0 on flat topologies and single-device runs).
+    pub fn total_inter_node_bytes(&self) -> u64 {
+        self.per_batch
+            .iter()
+            .flat_map(|b| &b.per_device)
+            .map(|d| d.inter_bytes)
+            .sum()
     }
 }
 
@@ -247,6 +273,8 @@ mod tests {
                 embedding: emb,
                 exchange: 0,
                 exchange_exposed: 0,
+                exchange_intra: 0,
+                exchange_inter: 0,
                 interaction: 5,
                 top_mlp: 7,
             },
@@ -277,6 +305,7 @@ mod tests {
             policy: "lru".into(),
             batch_size: 4,
             num_devices: 1,
+            nodes: 1,
             freq_ghz: 1.0,
             per_batch: vec![batch(0, 100, 8, 2), batch(1, 200, 6, 4)],
             energy_joules: 0.0,
@@ -322,6 +351,8 @@ mod tests {
             embedding: 2,
             exchange: 40,
             exchange_exposed: 40,
+            exchange_intra: 30,
+            exchange_inter: 5,
             interaction: 3,
             top_mlp: 4,
         };
@@ -348,6 +379,7 @@ mod tests {
             policy: "spm".into(),
             batch_size: 4,
             num_devices: 2,
+            nodes: 1,
             freq_ghz: 1.0,
             per_batch: vec![b],
             energy_joules: 0.0,
@@ -364,6 +396,7 @@ mod tests {
             device,
             cycles,
             exchange_bytes: 10,
+            inter_bytes: 3,
             mem: MemCounts { offchip_reads: offchip, ..Default::default() },
             ops: OpCounts { lookups: 5, ..Default::default() },
         };
@@ -376,6 +409,7 @@ mod tests {
             policy: "spm".into(),
             batch_size: 4,
             num_devices: 2,
+            nodes: 1,
             freq_ghz: 1.0,
             per_batch: vec![b0, b1],
             energy_joules: 0.0,
@@ -387,6 +421,10 @@ mod tests {
         assert_eq!(totals[0].mem.offchip_reads, 8);
         assert_eq!(totals[1].mem.offchip_reads, 11);
         assert_eq!(totals[1].exchange_bytes, 20);
+        assert_eq!(totals[0].inter_bytes, 6, "inter-node bytes aggregate per device");
         assert_eq!(totals[0].ops.lookups, 10);
+        // 4 device entries × 3 inter bytes each across the two batches
+        assert_eq!(report.total_inter_node_bytes(), 12);
+        assert_eq!(SimReport::default().total_inter_node_bytes(), 0);
     }
 }

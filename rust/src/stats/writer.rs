@@ -10,6 +10,7 @@ pub fn to_csv(report: &SimReport) -> String {
     let mut out = String::new();
     out.push_str(
         "batch,bottom_mlp_cycles,embedding_cycles,exchange_cycles,exchange_exposed_cycles,\
+         exchange_intra_cycles,exchange_inter_cycles,\
          interaction_cycles,top_mlp_cycles,\
          total_cycles,onchip_reads,onchip_writes,offchip_reads,offchip_writes,hits,misses,\
          global_hits,replicated_hits\n",
@@ -17,12 +18,14 @@ pub fn to_csv(report: &SimReport) -> String {
     for b in &report.per_batch {
         let _ = writeln!(
             out,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             b.batch_index,
             b.cycles.bottom_mlp,
             b.cycles.embedding,
             b.cycles.exchange,
             b.cycles.exchange_exposed,
+            b.cycles.exchange_intra,
+            b.cycles.exchange_inter,
             b.cycles.interaction,
             b.cycles.top_mlp,
             b.cycles.total(),
@@ -42,13 +45,14 @@ pub fn to_csv(report: &SimReport) -> String {
 fn device_json(d: &crate::stats::DeviceCounters) -> String {
     format!(
         concat!(
-            "{{\"device\":{},\"cycles\":{},\"exchange_bytes\":{},",
+            "{{\"device\":{},\"cycles\":{},\"exchange_bytes\":{},\"inter_bytes\":{},",
             "\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
             "\"hits\":{},\"misses\":{},\"lookups\":{},\"replicated_hits\":{}}}"
         ),
         d.device,
         d.cycles,
         d.exchange_bytes,
+        d.inter_bytes,
         d.mem.onchip_reads,
         d.mem.onchip_writes,
         d.mem.offchip_reads,
@@ -64,7 +68,8 @@ fn batch_json(b: &BatchResult) -> String {
     format!(
         concat!(
             "{{\"batch\":{},\"cycles\":{{\"bottom_mlp\":{},\"embedding\":{},",
-            "\"exchange\":{},\"exchange_exposed\":{},\"interaction\":{},",
+            "\"exchange\":{},\"exchange_exposed\":{},",
+            "\"exchange_intra\":{},\"exchange_inter\":{},\"interaction\":{},",
             "\"top_mlp\":{},\"total\":{}}},",
             "\"mem\":{{\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
             "\"offchip_writes\":{},\"hits\":{},\"misses\":{},\"global_hits\":{}}},",
@@ -76,6 +81,8 @@ fn batch_json(b: &BatchResult) -> String {
         b.cycles.embedding,
         b.cycles.exchange,
         b.cycles.exchange_exposed,
+        b.cycles.exchange_intra,
+        b.cycles.exchange_inter,
         b.cycles.interaction,
         b.cycles.top_mlp,
         b.cycles.total(),
@@ -101,7 +108,7 @@ pub fn to_json(report: &SimReport) -> String {
     format!(
         concat!(
             "{{\"platform\":\"{}\",\"policy\":\"{}\",\"batch_size\":{},",
-            "\"num_devices\":{},",
+            "\"num_devices\":{},\"nodes\":{},\"inter_node_bytes\":{},",
             "\"freq_ghz\":{},\"total_cycles\":{},\"exec_time_secs\":{:e},",
             "\"onchip_ratio\":{:.6},\"hit_rate\":{:.6},\"energy_joules\":{:e},",
             "\"imbalance_factor\":{:.6},\"replicated_hits\":{},",
@@ -111,6 +118,8 @@ pub fn to_json(report: &SimReport) -> String {
         report.policy,
         report.batch_size,
         report.num_devices,
+        report.nodes,
+        report.total_inter_node_bytes(),
         report.freq_ghz,
         report.total_cycles(),
         report.exec_time_secs(),
@@ -134,6 +143,7 @@ mod tests {
             policy: "lru".into(),
             batch_size: 32,
             num_devices: 1,
+            nodes: 1,
             freq_ghz: 1.0,
             per_batch: vec![BatchResult {
                 batch_index: 0,
@@ -142,6 +152,8 @@ mod tests {
                     embedding: 2,
                     exchange: 0,
                     exchange_exposed: 0,
+                    exchange_intra: 0,
+                    exchange_inter: 0,
                     interaction: 3,
                     top_mlp: 4,
                 },
@@ -169,9 +181,11 @@ mod tests {
         assert!(lines[0].starts_with("batch,"));
         assert!(lines[0].contains("exchange_cycles"));
         assert!(lines[0].contains("exchange_exposed_cycles"));
+        assert!(lines[0].contains("exchange_intra_cycles,exchange_inter_cycles"));
         assert!(lines[0].ends_with("replicated_hits"));
-        // batch 0: bottom 1, emb 2, exchange 0/0, interact 3, top 4 = 10
-        assert!(lines[1].starts_with("0,1,2,0,0,3,4,10,"));
+        // batch 0: bottom 1, emb 2, exchange 0/0 (intra 0, inter 0),
+        // interact 3, top 4 = 10
+        assert!(lines[1].starts_with("0,1,2,0,0,0,0,3,4,10,"));
         assert!(lines[1].ends_with(",0"), "replicated_hits column closes the row");
         assert_eq!(
             lines[0].split(',').count(),
@@ -187,8 +201,11 @@ mod tests {
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert!(json.contains("\"platform\":\"tpuv6e\""));
         assert!(json.contains("\"num_devices\":1"));
+        assert!(json.contains("\"nodes\":1"));
+        assert!(json.contains("\"inter_node_bytes\":0"));
         assert!(json.contains("\"total_cycles\":10"));
         assert!(json.contains("\"exchange_exposed\":0"));
+        assert!(json.contains("\"exchange_intra\":0,\"exchange_inter\":0"));
         assert!(json.contains("\"imbalance_factor\":1.000000"));
         assert!(json.contains("\"replicated_hits\":0"));
         assert!(json.contains("\"per_batch\":[{"));
@@ -204,6 +221,7 @@ mod tests {
                 device: 0,
                 cycles: 11,
                 exchange_bytes: 22,
+                inter_bytes: 7,
                 mem: MemCounts { offchip_reads: 3, ..Default::default() },
                 ops: OpCounts { lookups: 4, ..Default::default() },
             },
@@ -212,7 +230,10 @@ mod tests {
         let json = to_json(&r);
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert!(json.contains("\"num_devices\":2"));
-        assert!(json.contains("\"per_device\":[{\"device\":0,\"cycles\":11,\"exchange_bytes\":22,"));
+        assert!(json.contains("\"inter_node_bytes\":7"), "top level sums device inter bytes");
+        assert!(json.contains(
+            "\"per_device\":[{\"device\":0,\"cycles\":11,\"exchange_bytes\":22,\"inter_bytes\":7,"
+        ));
         assert!(json.contains("{\"device\":1,"));
     }
 }

@@ -62,12 +62,27 @@ impl SplitMix64 {
     }
 }
 
+/// Resolve the per-property case count: the caller's default, unless a
+/// `PROPTEST_CASES` override names an absolute count (the nightly CI
+/// job exports `PROPTEST_CASES=1024` to run the whole property suite at
+/// full scale — far too slow per-PR). Malformed values fall back to the
+/// default rather than silently running zero cases.
+fn case_budget(env_value: Option<&str>, default_cases: usize) -> usize {
+    env_value
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(default_cases)
+}
+
 /// Minimal `forall`-style property harness.
 ///
-/// Runs `cases` random trials; on failure, reports the failing seed so the
-/// case can be replayed deterministically. No shrinking — failures carry
-/// the generating seed instead, which is enough to reproduce and debug.
+/// Runs `cases` random trials (or `PROPTEST_CASES` when the environment
+/// overrides it); on failure, reports the failing seed so the case can
+/// be replayed deterministically. No shrinking — failures carry the
+/// generating seed instead, which is enough to reproduce and debug.
 pub fn forall<F: FnMut(&mut SplitMix64)>(name: &str, cases: usize, mut prop: F) {
+    let env = std::env::var("PROPTEST_CASES").ok();
+    let cases = case_budget(env.as_deref(), cases);
     for case in 0..cases {
         let seed = 0xE0_5EEDu64 ^ (case as u64).wrapping_mul(0x2545_F491_4F6C_DD1D);
         let mut rng = SplitMix64::new(seed);
@@ -147,6 +162,18 @@ mod tests {
         let mut a = root.fork(1);
         let mut b = root.fork(2);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn case_budget_overrides_only_with_valid_values() {
+        // pure helper (no env mutation: env vars are process-global and
+        // would race the other property tests in this binary)
+        assert_eq!(case_budget(None, 12), 12);
+        assert_eq!(case_budget(Some("1024"), 12), 1024);
+        assert_eq!(case_budget(Some(" 64 "), 12), 64);
+        assert_eq!(case_budget(Some("0"), 12), 1, "never zero cases");
+        assert_eq!(case_budget(Some("banana"), 12), 12, "malformed -> default");
+        assert_eq!(case_budget(Some(""), 12), 12);
     }
 
     #[test]

@@ -373,6 +373,39 @@ fn config_rejects_replicate_top_k_exceeding_rows_with_clear_error() {
 }
 
 #[test]
+fn config_rejects_indivisible_topology_nodes_with_clear_error() {
+    let t = eonsim::config::parse::Table::parse(
+        "[sharding]\ndevices = 4\n[topology]\nnodes = 3",
+    )
+    .unwrap();
+    let err = SimConfig::from_table(&t).unwrap_err().to_string();
+    assert!(err.contains("topology.nodes"), "error names the key: {err}");
+    assert!(err.contains("divide"), "error explains the constraint: {err}");
+    // the in-range edges are legal: nodes == 1 (flat) and nodes == devices
+    for nodes in [1usize, 2, 4] {
+        let ok = eonsim::config::parse::Table::parse(&format!(
+            "[sharding]\ndevices = 4\n[topology]\nnodes = {nodes}"
+        ))
+        .unwrap();
+        assert!(SimConfig::from_table(&ok).is_ok(), "nodes = {nodes} divides 4");
+    }
+}
+
+#[test]
+fn config_rejects_non_positive_tier_bandwidth_with_clear_error() {
+    let t = eonsim::config::parse::Table::parse(
+        "[sharding]\ndevices = 8\n[topology]\nnodes = 2\ninter_link_bytes_per_cycle = 0",
+    )
+    .unwrap();
+    let err = SimConfig::from_table(&t).unwrap_err().to_string();
+    assert!(
+        err.contains("topology.inter_link_bytes_per_cycle"),
+        "error names the key: {err}"
+    );
+    assert!(err.contains("positive"), "error explains the bound: {err}");
+}
+
+#[test]
 fn cli_flags_reach_sharding_validation() {
     // the CLI path funnels through the same validate(): a bad
     // replicate_top_k arriving via config file must fail loudly, not

@@ -355,6 +355,103 @@ fn prop_parallel_run_bit_identical_to_serial() {
     });
 }
 
+/// Two-tier exchange accounting conserves bytes for every shard
+/// strategy × replication mode (none / per-device / per-node): each
+/// device's intra + inter tier bytes equal its flat-topology exchange
+/// total, the tier cycle components compose the exchange with the hop,
+/// and (outside per-node mode, whose routing is leader-based by design)
+/// the whole report except the exchange pricing is identical to the
+/// flat run. `nodes = 1` is the flat run — the PR-3 regression anchor.
+#[test]
+fn prop_two_tier_exchange_bytes_conserve_against_flat() {
+    forall("two-tier byte conservation", 8, |rng| {
+        let mut cfg = random_small_cfg(rng);
+        let (devices, nodes) = [(2usize, 2usize), (4, 2), (4, 4), (6, 2), (6, 3), (8, 2), (8, 4)]
+            [rng.next_below(7) as usize];
+        let strategy = [
+            ShardStrategy::TableWise,
+            ShardStrategy::RowHashed,
+            ShardStrategy::ColumnWise,
+        ][rng.next_below(3) as usize];
+        let mode = rng.next_below(3); // 0 = none, 1 = per-device, 2 = per-node
+        cfg.sharding.devices = devices;
+        cfg.sharding.strategy = strategy;
+        cfg.sharding.replicate_top_k = if mode > 0 { 32 } else { 0 };
+        cfg.sharding.topology.nodes = nodes;
+        cfg.sharding.topology.inter_link_bytes_per_cycle = 8.0;
+        cfg.sharding.topology.replicate_per_node = mode == 2;
+        cfg.validate().unwrap_or_else(|e| panic!("config must be valid: {e}"));
+        let tiered = Simulator::new(cfg.clone()).run().unwrap();
+        let mut flat_cfg = cfg.clone();
+        flat_cfg.sharding.topology.nodes = 1;
+        flat_cfg.sharding.topology.replicate_per_node = false;
+        let flat = Simulator::new(flat_cfg).run().unwrap();
+        let tag = format!("{strategy:?} {devices}d/{nodes}n mode {mode}");
+
+        assert_eq!(tiered.nodes, nodes, "{tag}");
+        assert_eq!(flat.nodes, 1, "{tag}");
+        assert_eq!(tiered.total_ops().lookups, flat.total_ops().lookups, "{tag}");
+        for b in &tiered.per_batch {
+            // tier cycles compose the exchange (hop charged once)
+            if b.cycles.exchange > 0 {
+                assert_eq!(
+                    b.cycles.exchange,
+                    cfg.sharding.hop_latency_cycles
+                        + b.cycles.exchange_intra
+                        + b.cycles.exchange_inter,
+                    "{tag}"
+                );
+            } else {
+                assert_eq!(b.cycles.exchange_intra + b.cycles.exchange_inter, 0, "{tag}");
+            }
+            for d in &b.per_device {
+                assert!(d.inter_bytes <= d.exchange_bytes, "{tag} device {}", d.device);
+            }
+        }
+        for b in &flat.per_batch {
+            assert_eq!(b.cycles.exchange_inter, 0, "{tag}: flat has no inter tier");
+            assert!(b.per_device.iter().all(|d| d.inter_bytes == 0), "{tag}");
+        }
+        if mode != 2 {
+            // identical routing: the tier split must conserve each
+            // device's exchange bytes exactly, and everything that is
+            // not exchange pricing is byte-identical to the flat run
+            assert_eq!(tiered.total_mem(), flat.total_mem(), "{tag}");
+            assert_eq!(tiered.total_ops(), flat.total_ops(), "{tag}");
+            for (bt, bf) in tiered.per_batch.iter().zip(&flat.per_batch) {
+                assert_eq!(bt.cycles.embedding, bf.cycles.embedding, "{tag}");
+                for (dt, df) in bt.per_device.iter().zip(&bf.per_device) {
+                    assert_eq!(
+                        dt.exchange_bytes, df.exchange_bytes,
+                        "{tag} device {}: intra + inter must equal the flat total",
+                        dt.device
+                    );
+                    assert_eq!(dt.mem, df.mem, "{tag}");
+                    assert_eq!(dt.ops, df.ops, "{tag}");
+                }
+            }
+        } else {
+            // per-node routing concentrates replica service on leaders
+            let dpn = devices / nodes;
+            for d in tiered.total_per_device() {
+                if d.device % dpn != 0 {
+                    assert_eq!(
+                        d.ops.replicated_hits, 0,
+                        "{tag}: non-leader {} must hold no replicas",
+                        d.device
+                    );
+                }
+            }
+            // and never changes how many lookups are served in total
+            assert_eq!(
+                tiered.total_ops().replicated_hits,
+                flat.total_ops().replicated_hits,
+                "{tag}: the replica set is mode-independent"
+            );
+        }
+    });
+}
+
 /// The single-generation trace pipeline reproduces the regeneration
 /// path exactly: a profile built from the shared `WorkloadTrace` equals
 /// `Profile::from_workload`'s, and the `PinSet` / `HotRowReplicator`

@@ -346,6 +346,314 @@ fn overlap_exposed_never_exceeds_exchange_across_sweep() {
     }
 }
 
+// -------------------------------------- hierarchical topologies (PR 4)
+
+/// An 8-device pod grouped into `nodes` interconnect nodes (node-major:
+/// node k owns devices k*dpn .. (k+1)*dpn), with both tiers at the flat
+/// link's bandwidth unless the caller overrides them.
+fn pod_cfg(nodes: usize, alpha: f64) -> SimConfig {
+    let mut cfg = presets::tpuv6e_dlrm_small();
+    cfg.workload.batch_size = 32;
+    cfg.workload.num_batches = 2;
+    cfg.workload.embedding.num_tables = 8;
+    cfg.workload.embedding.rows_per_table = 50_000;
+    cfg.workload.embedding.pool = 16;
+    cfg.workload.trace.alpha = alpha;
+    cfg.sharding.devices = 8;
+    cfg.sharding.strategy = ShardStrategy::TableWise;
+    cfg.sharding.topology.nodes = nodes;
+    cfg.sharding.topology.inter_link_bytes_per_cycle = cfg.sharding.link_bytes_per_cycle;
+    cfg
+}
+
+/// Acceptance (issue criterion): a `nodes = 1` topology — even with
+/// every other `[topology]` knob set to something exotic — produces
+/// byte-identical CSV and JSON to a config that never mentions the
+/// section, for every shard strategy. Flat stays the PR-3 model.
+#[test]
+fn nodes_1_topology_is_byte_identical_to_pre_topology_output() {
+    for strategy in [
+        ShardStrategy::TableWise,
+        ShardStrategy::RowHashed,
+        ShardStrategy::ColumnWise,
+    ] {
+        let plain = Simulator::new(with_devices(4, strategy)).run().unwrap();
+        let mut topo = with_devices(4, strategy);
+        topo.sharding.topology.nodes = 1;
+        topo.sharding.topology.intra_link_bytes_per_cycle = Some(3.0);
+        topo.sharding.topology.inter_link_bytes_per_cycle = 1.0;
+        topo.sharding.topology.node_aware_placement = true;
+        topo.sharding.topology.replicate_per_node = true;
+        let flat = Simulator::new(topo).run().unwrap();
+        assert_eq!(
+            eonsim::stats::writer::to_json(&plain),
+            eonsim::stats::writer::to_json(&flat),
+            "{strategy:?}: nodes = 1 must be inert"
+        );
+        assert_eq!(
+            eonsim::stats::writer::to_csv(&plain),
+            eonsim::stats::writer::to_csv(&flat),
+            "{strategy:?}: nodes = 1 must be inert"
+        );
+    }
+}
+
+/// The flat exchange accounting is still the PR-3 formula, computed
+/// independently here: `hop + ceil(busiest device's send bytes / link)`
+/// per batch, with the whole transfer in the intra tier.
+#[test]
+fn flat_exchange_matches_legacy_formula_exactly() {
+    let cfg = with_devices(4, ShardStrategy::TableWise);
+    let report = Simulator::new(cfg.clone()).run().unwrap();
+    for b in &report.per_batch {
+        let max_bytes = b.per_device.iter().map(|d| d.exchange_bytes).max().unwrap();
+        let want = cfg.sharding.hop_latency_cycles
+            + (max_bytes as f64 / cfg.sharding.link_bytes_per_cycle).ceil() as u64;
+        assert_eq!(b.cycles.exchange, want, "batch {}", b.batch_index);
+        assert_eq!(b.cycles.exchange_intra, want - cfg.sharding.hop_latency_cycles);
+        assert_eq!(b.cycles.exchange_inter, 0);
+        assert!(b.per_device.iter().all(|d| d.inter_bytes == 0));
+    }
+}
+
+/// Acceptance (issue criterion): on a 2×4 pod with *equal* per-tier
+/// bandwidth, the inter-node exposed cycles strictly dominate the
+/// intra-node cycles — 4 of a device's 7 peers are off-node, and the
+/// node uplink serializes all 4 of its devices' off-node bytes.
+#[test]
+fn two_tier_inter_cycles_strictly_dominate_intra_at_equal_bandwidth() {
+    for alpha in [0.6, 1.2] {
+        let report = Simulator::new(pod_cfg(2, alpha)).run().unwrap();
+        assert_eq!(report.nodes, 2);
+        for b in &report.per_batch {
+            assert!(b.cycles.exchange_intra > 0, "alpha {alpha}");
+            assert!(
+                b.cycles.exchange_inter > b.cycles.exchange_intra,
+                "alpha {alpha}, batch {}: inter {} !> intra {}",
+                b.batch_index,
+                b.cycles.exchange_inter,
+                b.cycles.exchange_intra
+            );
+            assert_eq!(
+                b.cycles.exchange,
+                700 + b.cycles.exchange_intra + b.cycles.exchange_inter,
+                "tiers + hop compose the exchange"
+            );
+        }
+        assert!(report.total_inter_node_bytes() > 0);
+    }
+}
+
+/// A two-tier topology only re-prices the exchange: gather cycles,
+/// memory counters, op counters, per-device exchange byte totals, and
+/// the load split are all identical to the flat run on the same trace.
+#[test]
+fn two_tier_conserves_everything_but_exchange_pricing() {
+    let flat = Simulator::new(pod_cfg(1, 1.1)).run().unwrap();
+    for nodes in [2usize, 4] {
+        let tiered = Simulator::new(pod_cfg(nodes, 1.1)).run().unwrap();
+        assert_eq!(tiered.total_mem(), flat.total_mem(), "{nodes} nodes");
+        assert_eq!(tiered.total_ops(), flat.total_ops(), "{nodes} nodes");
+        for (bt, bf) in tiered.per_batch.iter().zip(&flat.per_batch) {
+            assert_eq!(bt.cycles.embedding, bf.cycles.embedding, "{nodes} nodes");
+            for (dt, df) in bt.per_device.iter().zip(&bf.per_device) {
+                assert_eq!(dt.cycles, df.cycles, "{nodes} nodes");
+                assert_eq!(dt.exchange_bytes, df.exchange_bytes,
+                    "{nodes} nodes: tier split conserves device bytes");
+                assert!(dt.inter_bytes > 0 && dt.inter_bytes < dt.exchange_bytes);
+            }
+        }
+    }
+}
+
+/// A slower inter-node fabric lengthens only the exchange phase, and
+/// monotonically: halving the uplink bandwidth can never shrink the
+/// inter-tier cycles.
+#[test]
+fn exchange_scales_with_inter_link_bandwidth() {
+    let run = |inter: f64| {
+        let mut cfg = pod_cfg(2, 1.1);
+        cfg.sharding.topology.inter_link_bytes_per_cycle = inter;
+        Simulator::new(cfg).run().unwrap()
+    };
+    let fast = run(100.0);
+    let slow = run(12.5);
+    let inter = |r: &SimReport| -> u64 {
+        r.per_batch.iter().map(|b| b.cycles.exchange_inter).sum()
+    };
+    let intra = |r: &SimReport| -> u64 {
+        r.per_batch.iter().map(|b| b.cycles.exchange_intra).sum()
+    };
+    assert!(inter(&slow) > inter(&fast), "slower uplink, more inter cycles");
+    assert_eq!(intra(&slow), intra(&fast), "intra tier untouched");
+    assert_eq!(
+        slow.total_mem(),
+        fast.total_mem(),
+        "fabric speed never changes memory traffic"
+    );
+    assert!(slow.total_cycles() > fast.total_cycles());
+}
+
+/// Per-node replication: hot rows are pinned once per node at its
+/// leader; hits convert off-chip lines exactly as per-device
+/// replication does, but only leaders serve them.
+#[test]
+fn per_node_replication_serves_hot_rows_at_node_leaders() {
+    let base = Simulator::new(pod_cfg(2, 1.2)).run().unwrap();
+    let mut dev_cfg = pod_cfg(2, 1.2);
+    dev_cfg.sharding.replicate_top_k = 256;
+    let per_device = Simulator::new(dev_cfg.clone()).run().unwrap();
+    let mut node_cfg = dev_cfg;
+    node_cfg.sharding.topology.replicate_per_node = true;
+    let per_node = Simulator::new(node_cfg).run().unwrap();
+
+    let hits = per_node.total_ops().replicated_hits;
+    assert!(hits > 0, "alpha 1.2 must produce replica traffic");
+    assert_eq!(per_node.total_ops().lookups, base.total_ops().lookups);
+    // SPM: every replica hit converts exactly one full vector (8 lines)
+    // of off-chip reads into on-chip hits — same law as per-device mode
+    assert_eq!(
+        per_node.total_mem().offchip_reads + hits * 8,
+        base.total_mem().offchip_reads
+    );
+    assert_eq!(
+        per_device.total_ops().replicated_hits, hits,
+        "the replica set (and so the hit count) is mode-independent"
+    );
+    // hits concentrate on the two node leaders (devices 0 and 4)
+    for d in per_node.total_per_device() {
+        if d.device % 4 == 0 {
+            assert!(d.ops.replicated_hits > 0, "leader {} serves replicas", d.device);
+        } else {
+            assert_eq!(d.ops.replicated_hits, 0, "non-leader {} holds none", d.device);
+        }
+    }
+    // replica bags ship intra-node only: the uplink traffic is exactly
+    // the per-device mode's (non-replicated routing is identical in
+    // both modes), while the leaders' intra shipping makes the total
+    // exchange bytes strictly larger than per-device replication's
+    assert_eq!(
+        per_node.total_inter_node_bytes(),
+        per_device.total_inter_node_bytes()
+    );
+    let exchange_bytes = |r: &SimReport| -> u64 {
+        r.total_per_device().iter().map(|d| d.exchange_bytes).sum()
+    };
+    assert!(exchange_bytes(&per_node) > exchange_bytes(&per_device));
+}
+
+/// Per-node replication frees the replica reserve on non-leader
+/// devices: under the pinning policy they pin with the full buffer
+/// (leaders keep the reserved budget), so the pod serves strictly more
+/// on-chip hits than per-device replication, which reserves replica
+/// capacity on all 8 devices.
+#[test]
+fn per_node_replication_frees_pinning_budget_on_non_leaders() {
+    let run = |per_node: bool| {
+        let mut cfg = pod_cfg(2, 1.2);
+        cfg.hardware.mem.policy = eonsim::config::OnchipPolicy::Pinning;
+        // 512 pinnable vectors; the 256-row replica reserve pins half
+        cfg.hardware.mem.onchip_bytes = 256 << 10;
+        cfg.sharding.replicate_top_k = 256;
+        cfg.sharding.topology.replicate_per_node = per_node;
+        Simulator::new(cfg).run().unwrap()
+    };
+    let per_device = run(false);
+    let per_node = run(true);
+    assert_eq!(
+        per_node.total_ops().replicated_hits,
+        per_device.total_ops().replicated_hits,
+        "the replica set itself is mode-independent"
+    );
+    assert!(
+        per_node.total_mem().hits > per_device.total_mem().hits,
+        "members' freed reserve must pin more rows: {} !> {}",
+        per_node.total_mem().hits,
+        per_device.total_mem().hits
+    );
+    assert!(
+        per_node.total_mem().offchip_reads < per_device.total_mem().offchip_reads,
+        "every extra pinned hit converts off-chip lines"
+    );
+}
+
+/// Node-aware placement spreads a lumpy table count across nodes: 10
+/// tables on a 2×4 pod land 6/4 under round-robin (devices 0 and 1 both
+/// get a second table — same node) but 5/5 under the placement pass,
+/// strictly lowering the busiest node's uplink bytes.
+#[test]
+fn node_aware_placement_balances_lumpy_tables_across_nodes() {
+    let lumpy = |place: bool| {
+        let mut cfg = pod_cfg(2, 1.1);
+        cfg.workload.embedding.num_tables = 10;
+        cfg.sharding.topology.node_aware_placement = place;
+        Simulator::new(cfg).run().unwrap()
+    };
+    let rr = lumpy(false);
+    let placed = lumpy(true);
+    let node_inter = |r: &SimReport, node: usize| -> u64 {
+        r.total_per_device()
+            .iter()
+            .filter(|d| d.device / 4 == node)
+            .map(|d| d.inter_bytes)
+            .sum()
+    };
+    let rr_max = node_inter(&rr, 0).max(node_inter(&rr, 1));
+    let placed_max = node_inter(&placed, 0).max(node_inter(&placed, 1));
+    assert!(
+        placed_max < rr_max,
+        "placement must shrink the busiest node's uplink bytes: {placed_max} !< {rr_max}"
+    );
+    let inter_cycles = |r: &SimReport| -> u64 {
+        r.per_batch.iter().map(|b| b.cycles.exchange_inter).sum()
+    };
+    assert!(inter_cycles(&placed) < inter_cycles(&rr));
+    // placement moves work, never loses it
+    assert_eq!(placed.total_ops().lookups, rr.total_ops().lookups);
+    assert_eq!(placed.total_mem().offchip_reads, rr.total_mem().offchip_reads);
+    assert!(placed.imbalance_factor() <= rr.imbalance_factor() + 1e-12);
+}
+
+/// The shipped pod config drives the engine end-to-end.
+#[test]
+fn pod_config_file_drives_engine() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut cfg = SimConfig::from_file(dir.join("pod_2x4.toml")).unwrap();
+    assert_eq!(cfg.sharding.devices, 8);
+    assert_eq!(cfg.sharding.topology.nodes, 2);
+    assert!(cfg.sharding.topology.replicate_per_node);
+    cfg.workload.batch_size = 16;
+    cfg.workload.num_batches = 1;
+    cfg.workload.embedding.rows_per_table = 20_000;
+    cfg.workload.embedding.pool = 16;
+    let report = Simulator::new(cfg).run().unwrap();
+    assert_eq!(report.num_devices, 8);
+    assert_eq!(report.nodes, 2);
+    assert!(report.per_batch[0].cycles.exchange_inter > 0);
+    assert!(report.total_inter_node_bytes() > 0);
+}
+
+/// The threaded fan-out composes with two-tier topologies: any worker
+/// count reproduces the serial tiered accounting byte-for-byte.
+#[test]
+fn threaded_two_tier_run_matches_serial() {
+    let run = |threads: usize| {
+        let mut cfg = pod_cfg(2, 1.2);
+        cfg.sharding.replicate_top_k = 256;
+        cfg.sharding.topology.replicate_per_node = true;
+        cfg.sharding.topology.node_aware_placement = true;
+        cfg.threads = threads;
+        Simulator::new(cfg).run().unwrap()
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(
+        eonsim::stats::writer::to_json(&serial),
+        eonsim::stats::writer::to_json(&parallel)
+    );
+    assert!(serial.total_ops().replicated_hits > 0);
+}
+
 // ------------------------------------------- parallel engine (PR 3)
 
 /// Acceptance (issue criterion): `--threads N` produces *byte-identical*
