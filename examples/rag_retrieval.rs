@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
             hardware: presets::tpuv6e_hardware(),
             workload: wl.clone(),
             sharding: eonsim::config::ShardingConfig::default(),
+            serving: eonsim::config::ServingConfig::default(),
             threads: eonsim::config::default_threads(),
             seed: 7,
         };

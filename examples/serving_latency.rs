@@ -1,0 +1,74 @@
+//! Simulated-time serving latency: sweep the offered arrival rate
+//! through the saturation knee under each batching policy and print the
+//! tail-latency curve — p50/p95/p99 total latency, utilization, batch
+//! fill, and drops — all in *simulated* NPU time.
+//!
+//! This is the open-loop question batch runs cannot answer: given this
+//! deployment, what p99 does a given request rate see, and where does
+//! the queue blow up? The service capacity anchor is the simulated
+//! throughput of a perfectly batched stream (`max_batch` requests per
+//! `max_batch`-sized batch), so the sweep brackets the knee for any
+//! workload scale.
+//!
+//! Run: `cargo run --release --example serving_latency`
+
+use eonsim::config::{presets, BatchPolicyKind, OnchipPolicy};
+use eonsim::coordinator::serving;
+use eonsim::engine::Simulator;
+
+fn main() -> anyhow::Result<()> {
+    let mut base = presets::tpuv6e_dlrm_small();
+    base.workload.embedding.num_tables = 16;
+    base.workload.embedding.rows_per_table = 100_000;
+    base.workload.embedding.pool = 32;
+    base.workload.trace.alpha = 1.1;
+    base.hardware.mem.policy = OnchipPolicy::Spm;
+    base.serving.requests = 512;
+    base.serving.max_batch = 32;
+
+    // service-capacity anchor: a full batch's simulated seconds
+    let mut probe = base.clone();
+    probe.workload.batch_size = base.serving.max_batch;
+    probe.workload.num_batches = 1;
+    let batch_secs = Simulator::new(probe).run()?.exec_time_secs();
+    let mu = base.serving.max_batch as f64 / batch_secs;
+    println!(
+        "== serving latency vs offered load (16 tables, pool 32, zipf 1.1) ==\n\
+         best-case service rate ~{mu:.0} req/s (32-batch in {:.3} ms)\n",
+        batch_secs * 1e3
+    );
+
+    for policy in [BatchPolicyKind::Dynamic, BatchPolicyKind::Size, BatchPolicyKind::Timeout] {
+        println!("-- batching policy: {} --", policy.name());
+        println!(
+            "{:>10} {:>6} {:>10} {:>10} {:>10} {:>6} {:>6} {:>7} {:>7}",
+            "rate", "load", "p50 ms", "p95 ms", "p99 ms", "util", "fill", "batches", "drops"
+        );
+        for mult in [0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 4.0] {
+            let mut cfg = base.clone();
+            cfg.serving.policy = policy;
+            cfg.serving.arrival_rate = mu * mult;
+            let r = serving::simulate(&cfg)?;
+            println!(
+                "{:>10.0} {:>5.2}x {:>10.3} {:>10.3} {:>10.3} {:>5.1}% {:>5.1}% {:>7} {:>7}",
+                cfg.serving.arrival_rate,
+                mult,
+                r.total.p50 * 1e3,
+                r.total.p95 * 1e3,
+                r.total.p99 * 1e3,
+                r.utilization() * 100.0,
+                r.mean_batch_fill() * 100.0,
+                r.batches,
+                r.dropped
+            );
+        }
+        println!();
+    }
+    println!("takeaways: the dynamic batcher tracks arrival rate smoothly —");
+    println!("small batches (low latency, poor fill) when lightly loaded,");
+    println!("full variants near capacity; past ~1x the queue dominates and");
+    println!("p99 grows without bound (the saturation knee). Size-triggered");
+    println!("batching buys fill at idle-time latency; the timeout policy");
+    println!("caps that wait at its window.");
+    Ok(())
+}

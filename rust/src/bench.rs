@@ -263,7 +263,36 @@ pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
         ));
     }
 
-    // 6) sharded end-to-end: identical profiled 4-device run at
+    // 6) simulated-time serving loop (`eonsim serve`'s hot path): an
+    // open-loop Poisson stream through the dynamic batcher, every batch
+    // stepped on a persistent SimCore — the request-level layer's cost
+    // on top of the batch engine, tracked so `bench cmp` catches
+    // serving-path regressions
+    {
+        let mut scfg = presets::tpuv6e_dlrm_small();
+        scfg.workload.embedding.num_tables = 8;
+        scfg.workload.embedding.rows_per_table = 100_000;
+        scfg.workload.embedding.pool = 16;
+        scfg.workload.trace.alpha = 1.1;
+        scfg.hardware.mem.policy = OnchipPolicy::Cache(CachePolicyKind::Lru);
+        scfg.hardware.mem.onchip_bytes = 8 << 20;
+        let n_requests = opts.scaled(2_048);
+        scfg.serving.requests = n_requests as usize;
+        scfg.serving.arrival_rate = 500_000.0; // saturating: deep batches
+        scfg.serving.max_batch = 32;
+        sections.push(section(
+            "serving_e2e",
+            format!("serving e2e ({n_requests} reqs, poisson, dynamic)"),
+            n_requests,
+            reps,
+            || {
+                let r = crate::coordinator::serving::simulate(&scfg).unwrap();
+                std::hint::black_box((r.served, r.total.p99));
+            },
+        ));
+    }
+
+    // 7) sharded end-to-end: identical profiled 4-device run at
     // threads = 1 vs threads = N (results are bit-identical; only the
     // host wall clock moves)
     let serial_cfg = sharded_cfg(opts, 1);

@@ -195,6 +195,17 @@ pub struct TopologyConfig {
     /// bags ride the cheap intra-node links from the leader to the
     /// sample's home device. Inert at `nodes = 1`.
     pub replicate_per_node: bool,
+    /// Hierarchical reduction for row-hashed partial sums (`nodes > 1`,
+    /// `strategy = "row"` only): the devices of a node combine their
+    /// partial sums for off-node bags over the intra-node links before
+    /// the uplink, so each node ships **one** combined partial per bag
+    /// instead of one per contributing device — cutting inter-node
+    /// bytes by ~`devices_per_node`. Per-device total exchange bytes
+    /// are conserved (the combine traffic moves to the intra tier).
+    /// Inert at `nodes = 1` and for table/column sharding (table-wise
+    /// bags have a single contributor; column slices concatenate and
+    /// cannot be summed).
+    pub hierarchical_reduction: bool,
 }
 
 impl Default for TopologyConfig {
@@ -205,6 +216,7 @@ impl Default for TopologyConfig {
             inter_link_bytes_per_cycle: 12.5,
             node_aware_placement: false,
             replicate_per_node: false,
+            hierarchical_reduction: false,
         }
     }
 }
@@ -248,6 +260,155 @@ impl Default for ShardingConfig {
             replicate_top_k: 0,
             overlap_exchange: false,
             topology: TopologyConfig::default(),
+        }
+    }
+}
+
+/// Batching policy for the simulated-time serving loop (`[serving]`,
+/// [`crate::coordinator::serving`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicyKind {
+    /// Serve whatever waits the moment the simulated NPU frees up,
+    /// padded to the smallest covering compiled variant — the classic
+    /// dynamic batcher.
+    Dynamic,
+    /// Wait until `max_batch` requests queue (flush the remainder when
+    /// the arrival process ends). Maximizes fill at a latency cost.
+    Size,
+    /// Dispatch when the queue fills *or* the oldest waiting request
+    /// has queued for `timeout_ms` of simulated time.
+    Timeout,
+}
+
+impl BatchPolicyKind {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "dynamic" | "variant" => Ok(Self::Dynamic),
+            "size" => Ok(Self::Size),
+            "timeout" => Ok(Self::Timeout),
+            other => Err(ConfigError::Invalid {
+                key: "serving.policy".into(),
+                msg: format!("unknown batching policy `{other}` (want dynamic|size|timeout)"),
+            }),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Dynamic => "dynamic",
+            Self::Size => "size",
+            Self::Timeout => "timeout",
+        }
+    }
+}
+
+/// Open-loop arrival process kind for the serving loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Memoryless Poisson arrivals at `arrival_rate` req/s.
+    Poisson,
+    /// Markov-modulated Poisson: exponential on/off phases (mean
+    /// `burst_on_ms` / `burst_off_ms`); the rate is multiplied by
+    /// `burst_factor` during bursts and divided by it between them.
+    Bursty,
+    /// Replay inter-arrival gaps (seconds, one per line) from
+    /// `trace_path`, cycled if shorter than `requests`.
+    Trace,
+}
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "poisson" => Ok(Self::Poisson),
+            "bursty" => Ok(Self::Bursty),
+            "trace" | "file" | "replay" => Ok(Self::Trace),
+            other => Err(ConfigError::Invalid {
+                key: "serving.arrival".into(),
+                msg: format!("unknown arrival process `{other}` (want poisson|bursty|trace)"),
+            }),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Poisson => "poisson",
+            Self::Bursty => "bursty",
+            Self::Trace => "trace",
+        }
+    }
+}
+
+/// Simulated-time serving configuration (`[serving]`): the open-loop
+/// request stream, queue bound, and batching policy the
+/// `eonsim serve` discrete-event loop runs. All times are *simulated*
+/// seconds on the NPU clock — host wall time never enters the model.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Arrival process shape.
+    pub arrival: ArrivalKind,
+    /// Mean offered load in requests per simulated second.
+    pub arrival_rate: f64,
+    /// Total requests the arrival process offers before stopping.
+    pub requests: usize,
+    /// Bounded request queue capacity; arrivals to a full queue are
+    /// dropped (and reported). `0` = unbounded.
+    pub queue_capacity: usize,
+    /// Batching policy.
+    pub policy: BatchPolicyKind,
+    /// Dispatch threshold and largest compiled batch variant. Formed
+    /// batches pad to the smallest power-of-two variant (≤ `max_batch`)
+    /// covering their request count.
+    pub max_batch: usize,
+    /// Timeout policy: max simulated queueing of the oldest waiting
+    /// request before dispatch, in seconds (`timeout_ms` in TOML/CLI).
+    pub timeout_secs: f64,
+    /// Bursty arrivals: rate multiplier during a burst (divides the
+    /// rate between bursts).
+    pub burst_factor: f64,
+    /// Mean burst duration in seconds (`burst_on_ms` in TOML).
+    pub burst_on_secs: f64,
+    /// Mean gap between bursts in seconds (`burst_off_ms` in TOML).
+    pub burst_off_secs: f64,
+    /// Inter-arrival replay file (`arrival = "trace"`): one gap in
+    /// seconds per line.
+    pub trace_path: Option<String>,
+    /// Arrival-process RNG seed (independent of the workload trace
+    /// seed, so load and content vary independently).
+    pub seed: u64,
+}
+
+impl ServingConfig {
+    /// The compiled batch variants the dynamic batcher pads to:
+    /// ascending powers of two capped by (and always including)
+    /// `max_batch`.
+    pub fn variants(&self) -> Vec<usize> {
+        let max = self.max_batch.max(1);
+        let mut v = Vec::new();
+        let mut s = 1usize;
+        while s < max {
+            v.push(s);
+            s *= 2;
+        }
+        v.push(max);
+        v
+    }
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            arrival: ArrivalKind::Poisson,
+            arrival_rate: 50_000.0,
+            requests: 512,
+            queue_capacity: 0,
+            policy: BatchPolicyKind::Dynamic,
+            max_batch: 32,
+            timeout_secs: 1e-3,
+            burst_factor: 4.0,
+            burst_on_secs: 2e-3,
+            burst_off_secs: 8e-3,
+            trace_path: None,
+            seed: 0xA881,
         }
     }
 }
@@ -501,6 +662,9 @@ pub struct SimConfig {
     pub workload: WorkloadConfig,
     /// Multi-device sharding (1 device = the classic single-NPU path).
     pub sharding: ShardingConfig,
+    /// Simulated-time serving layer (`[serving]` / `eonsim serve`).
+    /// Inert for batch runs — `run`/`sweep`/`validate` never read it.
+    pub serving: ServingConfig,
     /// Host worker threads for the per-device fan-out and driver sweeps
     /// (`[sim] threads` / `--threads`; default = available parallelism).
     /// Purely a host-performance knob: any value produces byte-identical
@@ -628,6 +792,29 @@ impl SimConfig {
             t.bool_or("topology.node_aware_placement", tp.node_aware_placement)?;
         tp.replicate_per_node =
             t.bool_or("topology.replicate_per_node", tp.replicate_per_node)?;
+        tp.hierarchical_reduction =
+            t.bool_or("topology.hierarchical_reduction", tp.hierarchical_reduction)?;
+
+        let sv = &mut cfg.serving;
+        if t.contains("serving.arrival") {
+            sv.arrival = ArrivalKind::parse(t.str_("serving.arrival")?)?;
+        }
+        sv.arrival_rate = t.float_or("serving.arrival_rate", sv.arrival_rate)?;
+        sv.requests = t.usize_or("serving.requests", sv.requests)?;
+        sv.queue_capacity = t.usize_or("serving.queue_capacity", sv.queue_capacity)?;
+        if t.contains("serving.policy") {
+            sv.policy = BatchPolicyKind::parse(t.str_("serving.policy")?)?;
+        }
+        sv.max_batch = t.usize_or("serving.max_batch", sv.max_batch)?;
+        sv.timeout_secs = t.float_or("serving.timeout_ms", sv.timeout_secs * 1e3)? / 1e3;
+        sv.burst_factor = t.float_or("serving.burst_factor", sv.burst_factor)?;
+        sv.burst_on_secs = t.float_or("serving.burst_on_ms", sv.burst_on_secs * 1e3)? / 1e3;
+        sv.burst_off_secs =
+            t.float_or("serving.burst_off_ms", sv.burst_off_secs * 1e3)? / 1e3;
+        if t.contains("serving.trace_path") {
+            sv.trace_path = Some(t.str_("serving.trace_path")?.to_string());
+        }
+        sv.seed = t.u64_or("serving.seed", sv.seed)?;
 
         cfg.threads = t.usize_or("sim.threads", cfg.threads)?;
         cfg.seed = t.u64_or("seed", cfg.seed)?;
@@ -662,6 +849,79 @@ impl SimConfig {
                 "sim.threads",
                 "at least one worker thread required (threads = 0 would run \
                  nothing; use threads = 1 for fully serial execution)"
+                    .into(),
+            );
+        }
+        let sv = &self.serving;
+        if !(sv.arrival_rate > 0.0) {
+            return invalid(
+                "serving.arrival_rate",
+                format!("must be positive requests/sec, got {}", sv.arrival_rate),
+            );
+        }
+        if sv.requests == 0 {
+            return invalid(
+                "serving.requests",
+                "at least one request required (the serving loop would have \
+                 nothing to simulate)"
+                    .into(),
+            );
+        }
+        if sv.max_batch == 0 {
+            return invalid(
+                "serving.max_batch",
+                "at least one request per batch required".into(),
+            );
+        }
+        if sv.timeout_secs < 0.0 {
+            return invalid(
+                "serving.timeout_ms",
+                format!("timeout must be non-negative, got {} s", sv.timeout_secs),
+            );
+        }
+        if !(sv.burst_factor >= 1.0) {
+            return invalid(
+                "serving.burst_factor",
+                format!(
+                    "burst rate multiplier must be >= 1 (it multiplies the rate \
+                     during bursts and divides it between them; 1 = plain \
+                     Poisson), got {}",
+                    sv.burst_factor
+                ),
+            );
+        }
+        if !(sv.burst_on_secs > 0.0) {
+            return invalid(
+                "serving.burst_on_ms",
+                format!("mean burst duration must be positive, got {} s", sv.burst_on_secs),
+            );
+        }
+        if !(sv.burst_off_secs > 0.0) {
+            return invalid(
+                "serving.burst_off_ms",
+                format!("mean burst gap must be positive, got {} s", sv.burst_off_secs),
+            );
+        }
+        if matches!(sv.policy, BatchPolicyKind::Size)
+            && sv.queue_capacity > 0
+            && sv.queue_capacity < sv.max_batch
+        {
+            return invalid(
+                "serving.queue_capacity",
+                format!(
+                    "the size policy dispatches only at max_batch = {} waiting \
+                     requests, which a {}-deep queue can never hold — nearly all \
+                     load would be dropped; raise queue_capacity (or 0 = \
+                     unbounded), lower max_batch, or use the timeout policy",
+                    sv.max_batch, sv.queue_capacity
+                ),
+            );
+        }
+        if matches!(sv.arrival, ArrivalKind::Trace) && sv.trace_path.is_none() {
+            return invalid(
+                "serving.trace_path",
+                "arrival = \"trace\" requires a trace_path of inter-arrival \
+                 gaps (seconds, one per line)"
                     .into(),
             );
         }
@@ -915,6 +1175,109 @@ mod tests {
         .unwrap();
         let err = SimConfig::from_table(&t).unwrap_err().to_string();
         assert!(err.contains("topology.intra_link_bytes_per_cycle"), "{err}");
+    }
+
+    #[test]
+    fn serving_defaults_are_valid_and_inert() {
+        let cfg = SimConfig::from_table(&Table::parse("").unwrap()).unwrap();
+        let sv = &cfg.serving;
+        assert_eq!(sv.arrival, ArrivalKind::Poisson);
+        assert_eq!(sv.policy, BatchPolicyKind::Dynamic);
+        assert_eq!(sv.max_batch, 32);
+        assert_eq!(sv.queue_capacity, 0, "unbounded by default");
+        assert!(sv.requests > 0 && sv.arrival_rate > 0.0);
+    }
+
+    #[test]
+    fn serving_section_parses() {
+        let t = Table::parse(
+            "[serving]\narrival = \"bursty\"\narrival_rate = 120000\n\
+             requests = 4096\nqueue_capacity = 256\npolicy = \"timeout\"\n\
+             max_batch = 64\ntimeout_ms = 2.5\nburst_factor = 8\n\
+             burst_on_ms = 1\nburst_off_ms = 4\nseed = 7",
+        )
+        .unwrap();
+        let sv = SimConfig::from_table(&t).unwrap().serving;
+        assert_eq!(sv.arrival, ArrivalKind::Bursty);
+        assert_eq!(sv.arrival_rate, 120_000.0);
+        assert_eq!(sv.requests, 4096);
+        assert_eq!(sv.queue_capacity, 256);
+        assert_eq!(sv.policy, BatchPolicyKind::Timeout);
+        assert_eq!(sv.max_batch, 64);
+        assert!((sv.timeout_secs - 2.5e-3).abs() < 1e-12);
+        assert_eq!(sv.burst_factor, 8.0);
+        assert!((sv.burst_on_secs - 1e-3).abs() < 1e-12);
+        assert_eq!(sv.seed, 7);
+    }
+
+    #[test]
+    fn serving_variants_are_pow2_up_to_max_batch() {
+        let with_max = |max_batch| ServingConfig { max_batch, ..Default::default() };
+        assert_eq!(with_max(32).variants(), vec![1, 2, 4, 8, 16, 32]);
+        // a non-pow2 cap is still included once, ascending
+        assert_eq!(with_max(24).variants(), vec![1, 2, 4, 8, 16, 24]);
+        assert_eq!(with_max(1).variants(), vec![1]);
+    }
+
+    #[test]
+    fn serving_validation_rejects_bad_values_with_clear_errors() {
+        for (doc, key) in [
+            ("[serving]\narrival_rate = 0", "serving.arrival_rate"),
+            ("[serving]\nrequests = 0", "serving.requests"),
+            ("[serving]\nmax_batch = 0", "serving.max_batch"),
+            ("[serving]\ntimeout_ms = -1", "serving.timeout_ms"),
+            ("[serving]\nburst_factor = 0", "serving.burst_factor"),
+            // sub-1 factors would silently degenerate to plain Poisson
+            // through the arrival process's defensive clamp — reject
+            ("[serving]\nburst_factor = 0.5", "serving.burst_factor"),
+            ("[serving]\nburst_on_ms = 0", "serving.burst_on_ms"),
+            ("[serving]\nburst_off_ms = 0", "serving.burst_off_ms"),
+            ("[serving]\narrival = \"trace\"", "serving.trace_path"),
+            ("[serving]\npolicy = \"fifo\"", "serving.policy"),
+            ("[serving]\narrival = \"lognormal\"", "serving.arrival"),
+            // a size-policy queue shallower than max_batch can never
+            // reach the dispatch threshold: nearly all load would drop
+            ("[serving]\npolicy = \"size\"\nqueue_capacity = 8", "serving.queue_capacity"),
+        ] {
+            let err = SimConfig::from_table(&Table::parse(doc).unwrap())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(key), "`{doc}` must name `{key}`: {err}");
+        }
+        // the same shallow queue is legal where dispatch can still fire
+        for doc in [
+            "[serving]\npolicy = \"size\"\nqueue_capacity = 32",
+            "[serving]\npolicy = \"timeout\"\nqueue_capacity = 8",
+            "[serving]\npolicy = \"dynamic\"\nqueue_capacity = 8",
+        ] {
+            assert!(
+                SimConfig::from_table(&Table::parse(doc).unwrap()).is_ok(),
+                "`{doc}` must validate"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_policy_and_arrival_roundtrip() {
+        for s in ["dynamic", "size", "timeout"] {
+            assert_eq!(BatchPolicyKind::parse(s).unwrap().name(), s);
+        }
+        for s in ["poisson", "bursty", "trace"] {
+            assert_eq!(ArrivalKind::parse(s).unwrap().name(), s);
+        }
+    }
+
+    #[test]
+    fn hierarchical_reduction_parses_and_defaults_off() {
+        let plain = SimConfig::from_table(&Table::parse("").unwrap()).unwrap();
+        assert!(!plain.sharding.topology.hierarchical_reduction);
+        let t = Table::parse(
+            "[sharding]\ndevices = 8\nstrategy = \"row\"\n\
+             [topology]\nnodes = 2\nhierarchical_reduction = true",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_table(&t).unwrap();
+        assert!(cfg.sharding.topology.hierarchical_reduction);
     }
 
     #[test]

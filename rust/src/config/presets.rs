@@ -78,6 +78,7 @@ pub fn tpuv6e_dlrm_small() -> SimConfig {
         hardware: tpuv6e_hardware(),
         workload: dlrm_rmc2_small(256),
         sharding: ShardingConfig::default(),
+        serving: ServingConfig::default(),
         threads: super::default_threads(),
         seed: 0xE05_1337,
     }

@@ -7,6 +7,16 @@
 //! waiting requests, a pluggable executor (the PJRT DLRM model in
 //! production, a mock in tests), and per-request latency accounting in
 //! both wall-clock and *simulated* NPU time (from [`crate::engine`]).
+//! The functional coordinator keeps a simulated clock that advances by
+//! each served batch's simulated seconds, so `sim_latency_secs` covers
+//! queueing behind earlier batches plus the batch's own compute.
+//!
+//! [`serving`] is the *simulated-time* serving layer: a discrete-event
+//! loop with open-loop arrivals, a bounded queue, pluggable batching
+//! policies, and tail-latency reporting — no functional execution, all
+//! timing in simulated NPU seconds from [`crate::engine::SimCore`].
+
+pub mod serving;
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -28,9 +38,14 @@ pub struct Response {
     pub prediction: f32,
     /// Host wall-clock latency (queue + execute) in seconds.
     pub wall_latency_secs: f64,
-    /// Simulated NPU latency of the batch this request rode in (the
-    /// padded variant's latency — what the NPU actually executes).
+    /// Simulated end-to-end latency in seconds: the simulated time this
+    /// request spent queued behind earlier batches (`sim_queue_secs`)
+    /// plus the padded variant's simulated compute — what the request
+    /// actually experiences on the simulated NPU.
     pub sim_latency_secs: f64,
+    /// Simulated queueing delay alone: how long this request waited on
+    /// the simulated clock while batches served before it executed.
+    pub sim_queue_secs: f64,
     /// Compiled variant size the request's batch ran as: the smallest
     /// supported batch size covering the served requests (equal to the
     /// request count only when it is itself a variant).
@@ -95,7 +110,9 @@ impl TimingModel for EngineTiming {
 pub struct Coordinator<E: BatchExecutor, T: TimingModel> {
     executor: E,
     timing: T,
-    queue: VecDeque<(Request, Instant)>,
+    /// Waiting requests with their wall-clock and simulated-clock
+    /// enqueue stamps.
+    queue: VecDeque<(Request, Instant, f64)>,
     /// Compiled variant batch sizes, ascending.
     variants: Vec<usize>,
     /// Flush threshold: serve as soon as this many requests wait.
@@ -103,6 +120,10 @@ pub struct Coordinator<E: BatchExecutor, T: TimingModel> {
     next_id: u64,
     served_batches: u64,
     served_requests: u64,
+    /// Simulated clock: total simulated seconds of every batch served so
+    /// far. A request enqueued at clock `t` and completing at clock `t'`
+    /// experienced `t' - t` of simulated latency — queueing included.
+    sim_clock: f64,
 }
 
 impl<E: BatchExecutor, T: TimingModel> Coordinator<E, T> {
@@ -120,6 +141,7 @@ impl<E: BatchExecutor, T: TimingModel> Coordinator<E, T> {
             next_id: 0,
             served_batches: 0,
             served_requests: 0,
+            sim_clock: 0.0,
         }
     }
 
@@ -134,8 +156,14 @@ impl<E: BatchExecutor, T: TimingModel> Coordinator<E, T> {
     pub fn submit(&mut self, dense: Vec<f32>, indices: Vec<i32>) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back((Request { id, dense, indices }, Instant::now()));
+        self.queue
+            .push_back((Request { id, dense, indices }, Instant::now(), self.sim_clock));
         id
+    }
+
+    /// Total simulated seconds served so far (the simulated clock).
+    pub fn sim_elapsed_secs(&self) -> f64 {
+        self.sim_clock
     }
 
     pub fn pending(&self) -> usize {
@@ -162,10 +190,10 @@ impl<E: BatchExecutor, T: TimingModel> Coordinator<E, T> {
         if n == 0 {
             return Ok(Vec::new());
         }
-        let drained: Vec<(Request, Instant)> = self.queue.drain(..n).collect();
+        let drained: Vec<(Request, Instant, f64)> = self.queue.drain(..n).collect();
         let mut dense = Vec::with_capacity(n * drained[0].0.dense.len());
         let mut indices = Vec::with_capacity(n * drained[0].0.indices.len());
-        for (r, _) in &drained {
+        for (r, _, _) in &drained {
             dense.extend_from_slice(&r.dense);
             indices.extend_from_slice(&r.indices);
         }
@@ -173,9 +201,13 @@ impl<E: BatchExecutor, T: TimingModel> Coordinator<E, T> {
         let preds = self.executor.run(&dense, &indices, n)?;
         anyhow::ensure!(preds.len() == n, "executor returned {} of {n}", preds.len());
         // the NPU runs the padded variant, so its latency is what the
-        // requests actually experience
+        // requests actually experience — on top of the simulated time
+        // they already spent queued behind previously served batches
         let variant = self.variant_for(n);
         let sim_secs = self.timing.batch_secs(variant);
+        let sim_start = self.sim_clock;
+        self.sim_clock += sim_secs;
+        let sim_done = self.sim_clock;
         let now = Instant::now();
         self.served_batches += 1;
         self.served_requests += n as u64;
@@ -183,11 +215,12 @@ impl<E: BatchExecutor, T: TimingModel> Coordinator<E, T> {
         Ok(drained
             .into_iter()
             .zip(preds)
-            .map(|((r, enq), prediction)| Response {
+            .map(|((r, enq, sim_enq), prediction)| Response {
                 id: r.id,
                 prediction,
                 wall_latency_secs: now.duration_since(enq).as_secs_f64(),
-                sim_latency_secs: sim_secs,
+                sim_latency_secs: sim_done - sim_enq,
+                sim_queue_secs: sim_start - sim_enq,
                 batch_size: variant,
             })
             .collect())
@@ -346,6 +379,34 @@ mod tests {
         // exactly one variant per served batch
         assert_eq!(c.served_batches(), 3);
         assert_eq!(c.served_requests(), 5 + 9 + 32);
+    }
+
+    /// Regression: with a timing model attached, `sim_latency_secs` used
+    /// to report the batch's compute seconds only — a request that
+    /// waited through earlier batches showed the same latency as one
+    /// served immediately. It must include simulated queueing delay.
+    #[test]
+    fn sim_latency_includes_simulated_queueing_delay() {
+        let mut c = Coordinator::new(mock(), EchoTiming);
+        // 64 requests enqueued at simulated clock 0 ride two 32-batches
+        submit_n(&mut c, 64);
+        let first = c.serve_one().unwrap();
+        let second = c.serve_one().unwrap();
+        assert_eq!((first.len(), second.len()), (32, 32));
+        for r in &first {
+            assert_eq!(r.sim_queue_secs, 0.0, "first batch starts immediately");
+            assert_eq!(r.sim_latency_secs, 32.0, "compute only");
+        }
+        for r in &second {
+            assert_eq!(r.sim_queue_secs, 32.0, "waited behind the first batch");
+            assert_eq!(r.sim_latency_secs, 64.0, "queueing + compute");
+        }
+        assert_eq!(c.sim_elapsed_secs(), 64.0);
+        // a request arriving after the backlog drained queues for nothing
+        submit_n(&mut c, 1);
+        let late = c.serve_one().unwrap();
+        assert_eq!(late[0].sim_queue_secs, 0.0);
+        assert_eq!(late[0].sim_latency_secs, 1.0, "its own 1-variant compute");
     }
 
     #[test]

@@ -7,12 +7,31 @@
 //! model, accumulates memory/op counters, and emits per-batch and overall
 //! results. Profiling-based pinning performs its offline frequency pass
 //! first, like the runtime it models.
+//!
+//! The engine is split into a reusable core and a thin driver:
+//!
+//! * [`SimCore`] owns the persistent sharded hierarchy (per-device
+//!   buffers, controllers, DRAM state), performs the offline profiling
+//!   pass (pinning / hot-row replication / node-aware placement) at
+//!   construction, and exposes [`SimCore::step_batch`] — simulate one
+//!   batch trace through the full bottom-MLP → embedding → interaction →
+//!   top-MLP pipeline, returning its [`BatchResult`]. State persists
+//!   across steps, so cross-batch on-chip warmth is preserved.
+//! * [`TraceSource`] streams the configured workload's batch traces to
+//!   the step loop: the profiled (cached) prefix first, then the
+//!   retained generator for anything beyond it. It is handed out
+//!   separately from the core so a driver can hold a borrowed trace
+//!   while stepping the core.
+//! * [`Simulator::run`] is now a thin loop over the two — bit-identical
+//!   to the pre-split closed-loop engine (enforced by tests) — while
+//!   request-level drivers ([`crate::coordinator::serving`]) step the
+//!   same core batch-by-batch under a simulated serving clock.
 
 pub mod embedding;
 pub mod matrix;
 
 use crate::compute::elementwise_cycles;
-use crate::config::{OnchipPolicy, SimConfig};
+use crate::config::{MnkLayer, OnchipPolicy, SimConfig};
 use crate::energy::{annotate, EnergyTable};
 use crate::mem::policy::pinning::{PinSet, Profile};
 use crate::sharding::replicate::HotRowReplicator;
@@ -20,45 +39,72 @@ use crate::sharding::ShardedEmbeddingSim;
 use crate::stats::{BatchResult, CycleBreakdown, MemCounts, SimReport};
 use crate::trace::{BatchTrace, TraceGenerator, WorkloadTrace};
 
-/// End-to-end workload simulator.
-pub struct Simulator {
-    cfg: SimConfig,
-    energy_table: EnergyTable,
+/// Streams the configured workload's batch traces in generation order:
+/// the cached (profiled) prefix first, then the retained generator for
+/// anything beyond it. Profiled runs therefore still generate each
+/// trace exactly once, and open-ended drivers (the serving loop) can
+/// keep pulling batches past the profiled depth in bounded memory.
+pub struct TraceSource {
+    cached: Option<WorkloadTrace>,
+    gen: TraceGenerator,
+    cursor: usize,
+    scratch: BatchTrace,
 }
 
-impl Simulator {
-    pub fn new(cfg: SimConfig) -> Self {
-        Simulator { cfg, energy_table: EnergyTable::default() }
+impl TraceSource {
+    /// The next batch trace in workload order. The returned borrow is
+    /// valid until the next call (streamed batches reuse one slot).
+    pub fn next_trace(&mut self) -> &BatchTrace {
+        let idx = self.cursor;
+        self.cursor += 1;
+        let in_cache = self
+            .cached
+            .as_ref()
+            .is_some_and(|ws| idx < ws.num_batches());
+        if in_cache {
+            return &self.cached.as_ref().expect("cached trace").batches()[idx];
+        }
+        self.scratch = self.gen.next_batch();
+        &self.scratch
     }
 
-    pub fn config(&self) -> &SimConfig {
-        &self.cfg
+    /// Batches handed out so far.
+    pub fn position(&self) -> usize {
+        self.cursor
     }
+}
 
-    /// Override the per-action energy table.
-    pub fn with_energy_table(mut self, table: EnergyTable) -> Self {
-        self.energy_table = table;
-        self
-    }
+/// The reusable batch-step core: persistent sharded embedding hierarchy
+/// + profile state + the per-batch MLP/interaction models. Construction
+/// runs the offline profiling pass (exactly the classic engine's);
+/// [`step_batch`](Self::step_batch) then simulates one batch at a time.
+pub struct SimCore {
+    cfg: SimConfig,
+    emb_sim: ShardedEmbeddingSim,
+    bottom: Vec<MnkLayer>,
+    top: Vec<MnkLayer>,
+    /// Trace machinery, handed to the driver via
+    /// [`take_trace_source`](Self::take_trace_source).
+    source: Option<TraceSource>,
+    /// Batches stepped so far (the next result's `batch_index`).
+    steps: usize,
+}
 
-    /// Run the configured workload: `num_batches` batches through the
-    /// persistent memory hierarchy. Returns per-batch + overall results.
-    pub fn run(&self) -> anyhow::Result<SimReport> {
-        let cfg = &self.cfg;
+impl SimCore {
+    /// Build the core: per-device simulators, then the offline profiling
+    /// pass shared by the pinning policy, hot-row replication, and
+    /// node-aware table placement — collect per-row frequency over the
+    /// whole workload trace, pin the hottest vectors up to capacity,
+    /// replicate the top-K rows (per device or per node), and/or place
+    /// tables by traffic.
+    pub fn new(cfg: SimConfig) -> anyhow::Result<SimCore> {
         let w = &cfg.workload;
         let hw = &cfg.hardware;
-        let elem = w.embedding.elem_bytes;
 
         // one embedding simulator per device (1 device = the classic
         // single-NPU path, bit-identical)
-        let mut emb_sim = ShardedEmbeddingSim::new(cfg);
+        let mut emb_sim = ShardedEmbeddingSim::new(&cfg);
 
-        // Offline profiling pass, shared by the pinning policy,
-        // hot-row replication, and node-aware table placement: collect
-        // per-row frequency over the whole workload trace, then pin the
-        // hottest vectors up to capacity, replicate the top-K rows
-        // (per device or per node), and/or place tables by traffic.
-        let topo = emb_sim.topology();
         let replicate = cfg.sharding.replicate_top_k > 0 && emb_sim.num_devices() > 1;
         let place = emb_sim.wants_placement_weights();
         let reserve = if replicate {
@@ -68,18 +114,20 @@ impl Simulator {
         };
         // Generate each workload trace exactly once. A profiled run
         // needs the whole trace up front, so it is materialized and then
-        // shared with the batch loop below (previously the identical
-        // deterministic trace was regenerated per consumer); an
-        // unprofiled run streams batch-by-batch in bounded memory as
-        // before. Either path feeds the batch loop the same lookups.
+        // shared with the batch loop; an unprofiled run streams
+        // batch-by-batch in bounded memory. Either path feeds the step
+        // loop the same lookups, and the generator is retained so
+        // open-ended drivers can stream past the profiled prefix.
         let needs_profile =
             replicate || place || matches!(hw.mem.policy, OnchipPolicy::Pinning);
-        let (cached, mut gen): (Option<WorkloadTrace>, Option<TraceGenerator>) =
-            if needs_profile {
-                (Some(WorkloadTrace::generate(w)?), None)
-            } else {
-                (None, Some(TraceGenerator::new(w)?))
-            };
+        let mut gen = TraceGenerator::new(w)?;
+        let cached = if needs_profile {
+            Some(WorkloadTrace::from_batches(
+                (0..w.num_batches).map(|_| gen.next_batch()).collect(),
+            ))
+        } else {
+            None
+        };
         if let Some(shared) = &cached {
             let profile = Profile::from_batches(shared.batches());
             let replicas = if replicate {
@@ -135,83 +183,164 @@ impl Simulator {
 
         let bottom = w.bottom_layers();
         let top = w.top_layers();
-        let mut report = SimReport {
-            platform: hw.name.clone(),
-            policy: hw.mem.policy.name().to_string(),
-            batch_size: w.batch_size,
-            num_devices: emb_sim.num_devices(),
-            nodes: topo.nodes(),
-            freq_ghz: hw.freq_ghz,
-            per_batch: Vec::with_capacity(w.num_batches),
+        let source = TraceSource {
+            cached,
+            gen,
+            cursor: 0,
+            scratch: BatchTrace { batch_index: 0, lookups: Vec::new() },
+        };
+        Ok(SimCore {
+            cfg,
+            emb_sim,
+            bottom,
+            top,
+            source: Some(source),
+            steps: 0,
+        })
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.emb_sim.num_devices()
+    }
+
+    /// Batches stepped so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Hand out the workload's trace stream. Owned separately from the
+    /// core so the driver can hold a borrowed trace while stepping the
+    /// core; can only be taken once.
+    pub fn take_trace_source(&mut self) -> TraceSource {
+        self.source.take().expect("trace source already taken")
+    }
+
+    /// A report skeleton carrying this core's platform/topology metadata
+    /// (empty `per_batch`; energy is annotated by the driver).
+    pub fn new_report(&self) -> SimReport {
+        SimReport {
+            platform: self.cfg.hardware.name.clone(),
+            policy: self.cfg.hardware.mem.policy.name().to_string(),
+            batch_size: self.cfg.workload.batch_size,
+            num_devices: self.emb_sim.num_devices(),
+            nodes: self.emb_sim.topology().nodes(),
+            freq_ghz: self.cfg.hardware.freq_ghz,
+            per_batch: Vec::new(),
             energy_joules: 0.0,
+        }
+    }
+
+    /// Convert a per-batch cycle total to simulated seconds.
+    pub fn cycles_to_secs(&self, cycles: u64) -> f64 {
+        self.cfg.hardware.cycles_to_secs(cycles)
+    }
+
+    /// Simulate one batch through the full pipeline against the
+    /// persistent hierarchy. `batch_index` numbers the steps in order,
+    /// whatever trace the driver supplies.
+    pub fn step_batch(&mut self, trace: &BatchTrace) -> BatchResult {
+        let cfg = &self.cfg;
+        let w = &cfg.workload;
+        let hw = &cfg.hardware;
+        let elem = w.embedding.elem_bytes;
+        let batch_index = self.steps;
+        self.steps += 1;
+
+        let bottom_r = matrix::simulate_layers(hw, &self.bottom, elem);
+        let emb_r = self.emb_sim.simulate_batch(trace);
+        // feature interaction: one elementwise combine over
+        // (num_tables + 1) vectors of `dim` per sample
+        let interact_elems =
+            (w.batch_size * w.embedding.dim * (w.embedding.num_tables + 1)) as u64;
+        let interaction = elementwise_cycles(&hw.core, interact_elems);
+        let top_r = matrix::simulate_layers(hw, &self.top, elem);
+
+        let mut mem = emb_r.mem;
+        // MLP traffic staged through the local buffer: write + read
+        // per line of operand/result traffic.
+        let mlp_lines = (bottom_r.traffic_bytes + top_r.traffic_bytes)
+            / hw.mem.access_granularity;
+        mem.add(&MemCounts {
+            onchip_reads: mlp_lines,
+            onchip_writes: mlp_lines,
+            offchip_reads: mlp_lines,
+            offchip_writes: 0,
+            hits: 0,
+            misses: 0,
+            global_hits: 0,
+        });
+
+        let mut ops = emb_r.ops;
+        ops.macs += bottom_r.ops.macs + top_r.ops.macs;
+        ops.vpu_ops += interact_elems;
+
+        // overlap model: the exchange streams pooled vectors home
+        // sample-by-sample, so downstream interaction + top-MLP
+        // compute on arrived samples hides in-flight transfers; only
+        // the non-hidden remainder stays on the critical path.
+        let exchange = emb_r.exchange_cycles;
+        let exchange_exposed = if cfg.sharding.overlap_exchange {
+            exchange.saturating_sub(interaction + top_r.cycles)
+        } else {
+            exchange
         };
 
-        for batch_index in 0..w.num_batches {
-            let streamed;
-            let trace: &BatchTrace = if let Some(shared) = &cached {
-                &shared.batches()[batch_index]
-            } else {
-                streamed = gen.as_mut().expect("streaming generator").next_batch();
-                &streamed
-            };
-
-            let bottom_r = matrix::simulate_layers(hw, &bottom, elem);
-            let emb_r = emb_sim.simulate_batch(trace);
-            // feature interaction: one elementwise combine over
-            // (num_tables + 1) vectors of `dim` per sample
-            let interact_elems =
-                (w.batch_size * w.embedding.dim * (w.embedding.num_tables + 1)) as u64;
-            let interaction = elementwise_cycles(&hw.core, interact_elems);
-            let top_r = matrix::simulate_layers(hw, &top, elem);
-
-            let mut mem = emb_r.mem;
-            // MLP traffic staged through the local buffer: write + read
-            // per line of operand/result traffic.
-            let mlp_lines = (bottom_r.traffic_bytes + top_r.traffic_bytes)
-                / hw.mem.access_granularity;
-            mem.add(&MemCounts {
-                onchip_reads: mlp_lines,
-                onchip_writes: mlp_lines,
-                offchip_reads: mlp_lines,
-                offchip_writes: 0,
-                hits: 0,
-                misses: 0,
-                global_hits: 0,
-            });
-
-            let mut ops = emb_r.ops;
-            ops.macs += bottom_r.ops.macs + top_r.ops.macs;
-            ops.vpu_ops += interact_elems;
-
-            // overlap model: the exchange streams pooled vectors home
-            // sample-by-sample, so downstream interaction + top-MLP
-            // compute on arrived samples hides in-flight transfers; only
-            // the non-hidden remainder stays on the critical path.
-            let exchange = emb_r.exchange_cycles;
-            let exchange_exposed = if cfg.sharding.overlap_exchange {
-                exchange.saturating_sub(interaction + top_r.cycles)
-            } else {
-                exchange
-            };
-
-            report.per_batch.push(BatchResult {
-                batch_index,
-                cycles: CycleBreakdown {
-                    bottom_mlp: bottom_r.cycles,
-                    embedding: emb_r.cycles,
-                    exchange,
-                    exchange_exposed,
-                    exchange_intra: emb_r.exchange_intra_cycles,
-                    exchange_inter: emb_r.exchange_inter_cycles,
-                    interaction,
-                    top_mlp: top_r.cycles,
-                },
-                mem,
-                ops,
-                per_device: emb_r.per_device,
-            });
+        BatchResult {
+            batch_index,
+            cycles: CycleBreakdown {
+                bottom_mlp: bottom_r.cycles,
+                embedding: emb_r.cycles,
+                exchange,
+                exchange_exposed,
+                exchange_intra: emb_r.exchange_intra_cycles,
+                exchange_inter: emb_r.exchange_inter_cycles,
+                interaction,
+                top_mlp: top_r.cycles,
+            },
+            mem,
+            ops,
+            per_device: emb_r.per_device,
         }
+    }
+}
 
+/// End-to-end workload simulator.
+pub struct Simulator {
+    cfg: SimConfig,
+    energy_table: EnergyTable,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig) -> Self {
+        Simulator { cfg, energy_table: EnergyTable::default() }
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// Override the per-action energy table.
+    pub fn with_energy_table(mut self, table: EnergyTable) -> Self {
+        self.energy_table = table;
+        self
+    }
+
+    /// Run the configured workload: `num_batches` batches through the
+    /// persistent memory hierarchy. Returns per-batch + overall results.
+    /// A thin loop over [`SimCore::step_batch`] — bit-identical to the
+    /// pre-split closed-loop engine.
+    pub fn run(&self) -> anyhow::Result<SimReport> {
+        let mut core = SimCore::new(self.cfg.clone())?;
+        let mut source = core.take_trace_source();
+        let mut report = core.new_report();
+        report.per_batch.reserve(self.cfg.workload.num_batches);
+        for _ in 0..self.cfg.workload.num_batches {
+            report.per_batch.push(core.step_batch(source.next_trace()));
+        }
         annotate(&mut report, &self.energy_table);
         Ok(report)
     }
@@ -338,5 +467,73 @@ mod tests {
             let lookups: u64 = b.per_device.iter().map(|d| d.ops.lookups).sum();
             assert_eq!(lookups, b.ops.lookups);
         }
+    }
+
+    // ------------------------------------------------------- SimCore seam
+
+    /// The run() loop is *only* sugar over the core: stepping the same
+    /// traces by hand must reproduce every batch byte-for-byte.
+    #[test]
+    fn manual_simcore_loop_matches_run_exactly() {
+        for devices in [1usize, 4] {
+            let mut cfg = small_cfg();
+            cfg.sharding.devices = devices;
+            cfg.workload.trace.alpha = 1.1;
+            let want = Simulator::new(cfg.clone()).run().unwrap();
+
+            let mut core = SimCore::new(cfg).unwrap();
+            let mut source = core.take_trace_source();
+            let mut report = core.new_report();
+            for _ in 0..2 {
+                report.per_batch.push(core.step_batch(source.next_trace()));
+            }
+            annotate(&mut report, &EnergyTable::default());
+            assert_eq!(want.per_batch.len(), report.per_batch.len());
+            for (a, b) in want.per_batch.iter().zip(&report.per_batch) {
+                assert_eq!(a.batch_index, b.batch_index, "{devices} devices");
+                assert_eq!(a.cycles, b.cycles, "{devices} devices");
+                assert_eq!(a.mem, b.mem, "{devices} devices");
+                assert_eq!(a.ops, b.ops, "{devices} devices");
+                assert_eq!(a.per_device, b.per_device, "{devices} devices");
+            }
+            assert_eq!(want.energy_joules, report.energy_joules);
+        }
+    }
+
+    /// Profiled (pinning) runs cache the trace prefix; the retained
+    /// generator continues the stream past it bit-identically to an
+    /// uncached generator advanced the same distance.
+    #[test]
+    fn trace_source_streams_past_the_profiled_prefix() {
+        let mut cfg = small_cfg();
+        cfg.hardware.mem.policy = OnchipPolicy::Pinning;
+        cfg.workload.num_batches = 2;
+        let mut core = SimCore::new(cfg.clone()).unwrap();
+        let mut source = core.take_trace_source();
+        let mut reference = TraceGenerator::new(&cfg.workload).unwrap();
+        for i in 0..4 {
+            // 2 cached + 2 streamed past the prefix
+            let want = reference.next_batch();
+            let got = source.next_trace();
+            assert_eq!(got.lookups, want.lookups, "batch {i}");
+        }
+        assert_eq!(source.position(), 4);
+    }
+
+    #[test]
+    fn simcore_metadata_and_steps() {
+        let mut core = SimCore::new(small_cfg()).unwrap();
+        let mut source = core.take_trace_source();
+        let report = core.new_report();
+        assert_eq!(report.platform, "tpuv6e");
+        assert_eq!(report.num_devices, 1);
+        assert!(report.per_batch.is_empty());
+        assert_eq!(core.steps(), 0);
+        let r0 = core.step_batch(source.next_trace());
+        let r1 = core.step_batch(source.next_trace());
+        assert_eq!((r0.batch_index, r1.batch_index), (0, 1));
+        assert_eq!(core.steps(), 2);
+        // seconds conversion matches the hardware clock
+        assert!((core.cycles_to_secs(940_000_000) - 1.0).abs() < 1e-9);
     }
 }

@@ -42,8 +42,8 @@ pub mod trace;
 pub mod workload;
 
 pub use config::{
-    CoreConfig, HardwareConfig, MemoryConfig, ShardingConfig, SimConfig, TopologyConfig,
-    WorkloadConfig,
+    CoreConfig, HardwareConfig, MemoryConfig, ServingConfig, ShardingConfig, SimConfig,
+    TopologyConfig, WorkloadConfig,
 };
 
 

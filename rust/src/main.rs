@@ -10,8 +10,8 @@
 //!   help       this text
 
 use eonsim::cli::Args;
-use eonsim::config::{presets, OnchipPolicy, ShardStrategy, SimConfig};
-use eonsim::coordinator::{Coordinator, EngineTiming};
+use eonsim::config::{presets, ArrivalKind, BatchPolicyKind, OnchipPolicy, ShardStrategy, SimConfig};
+use eonsim::coordinator::{serving, Coordinator, EngineTiming};
 use eonsim::engine::Simulator;
 use eonsim::runtime::dlrm::{random_request, DlrmExecutor};
 use eonsim::runtime::Runtime;
@@ -39,6 +39,8 @@ COMMANDS:
                --inter-link-bytes <x> per-node inter-node uplink bandwidth, B/cycle [12.5]
                --node-placement       profile-driven node-aware table placement
                --replicate-per-node   hold hot-row replicas once per node (at its leader)
+               --hierarchical-reduction  combine row-hashed partials intra-node
+                                      before the uplink (row strategy, nodes > 1)
                --threads <n>          host worker threads for the per-device fan-out
                                       [available parallelism; 1 = fully serial;
                                        results are byte-identical for any n]
@@ -48,13 +50,27 @@ COMMANDS:
   figures    print paper-figure series
                --fig <3a|3b|3c|4a|4b|4c|all>  [all]
                --full                 full sweeps (slower)
-  serve      functional DLRM serving demo (needs `make artifacts`)
-               --requests <n>         requests to submit    [100]
+  serve      simulated-time serving: open-loop arrivals -> bounded queue ->
+             batching policy -> SimCore-timed batches, tail latency reported
+               --arrival-rate <r>     offered load, req/s simulated [50000]
+               --requests <n>         requests to offer     [512]
+               --batch-policy <p>     dynamic|size|timeout  [dynamic]
+               --max-batch <n>        dispatch threshold / largest variant [32]
+               --timeout-ms <x>       timeout-policy window [1.0]
+               --queue-capacity <n>   bounded queue (0 = unbounded) [0]
+               --arrival <a>          poisson|bursty|trace  [poisson]
+               --arrival-trace <file> inter-arrival gaps, secs per line
+               --csv <file> / --json <file>   write the serving report
+               (plus the `run` workload/sharding flags, or --config with a
+               [serving] section)
+             functional PJRT demo (needs `make artifacts`):
+               --functional           run the legacy functional demo
                --artifacts <dir>      artifact directory    [artifacts]
   sweep      parameter sweep -> CSV on stdout
-               --param <batch|tables|alpha|onchip_mb|cores|devices|nodes|replicate_top_k>
+               --param <batch|tables|alpha|onchip_mb|cores|devices|nodes|replicate_top_k|arrival_rate>
                --values <comma-separated>   e.g. 32,64,128
                --policy <p> [spm]  (plus the `run` flags)
+               arrival_rate sweeps the serving loop (serving-report columns);
                points fan out across a --threads-bounded worker pool; rows
                print in sweep order either way
   bench      host-performance microbenchmarks (hot paths + sharded fan-out)
@@ -147,9 +163,45 @@ fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
     if args.has("replicate-per-node") {
         cfg.sharding.topology.replicate_per_node = true;
     }
+    if args.has("hierarchical-reduction") {
+        cfg.sharding.topology.hierarchical_reduction = true;
+    }
+    apply_serving_flags(&mut cfg, args)?;
     cfg.threads = args.usize_flag("threads", cfg.threads)?;
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Fold the `serve`-family flags into `cfg.serving` (validated with the
+/// rest of the config by `build_config`). Inert for commands that never
+/// read `[serving]`.
+fn apply_serving_flags(cfg: &mut SimConfig, args: &Args) -> anyhow::Result<()> {
+    let sv = &mut cfg.serving;
+    sv.arrival_rate = args.f64_flag("arrival-rate", sv.arrival_rate)?;
+    // the functional demo also takes --requests; the meaning matches
+    sv.requests = args.usize_flag("requests", sv.requests)?;
+    sv.queue_capacity = args.usize_flag("queue-capacity", sv.queue_capacity)?;
+    sv.max_batch = args.usize_flag("max-batch", sv.max_batch)?;
+    sv.timeout_secs = args.f64_flag("timeout-ms", sv.timeout_secs * 1e3)? / 1e3;
+    if let Some(p) = args.flag("batch-policy") {
+        sv.policy = BatchPolicyKind::parse(p)?;
+    }
+    if let Some(a) = args.flag("arrival") {
+        sv.arrival = ArrivalKind::parse(a)?;
+    }
+    if let Some(path) = args.flag("arrival-trace") {
+        // a replay file implies trace arrivals; a *conflicting* explicit
+        // --arrival must error rather than be silently overridden
+        if args.flag("arrival").is_some() && !matches!(sv.arrival, ArrivalKind::Trace) {
+            anyhow::bail!(
+                "--arrival-trace implies --arrival trace, but --arrival {} was given",
+                sv.arrival.name()
+            );
+        }
+        sv.trace_path = Some(path.to_string());
+        sv.arrival = ArrivalKind::Trace;
+    }
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
@@ -339,6 +391,71 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.has("functional") || args.flag("artifacts").is_some() {
+        return cmd_serve_functional(args);
+    }
+    let cfg = build_config(args)?;
+    let s = &cfg.serving;
+    println!(
+        "serving {} requests at {:.0} req/s ({}) -> {} batching (max batch {}, \
+         queue {}) on {} ({} device(s), policy {})",
+        s.requests,
+        s.arrival_rate,
+        s.arrival.name(),
+        s.policy.name(),
+        s.max_batch,
+        if s.queue_capacity == 0 { "unbounded".to_string() } else { s.queue_capacity.to_string() },
+        cfg.hardware.name,
+        cfg.sharding.devices,
+        cfg.hardware.mem.policy.name(),
+    );
+    let t0 = std::time::Instant::now();
+    let report = serving::simulate(&cfg)?;
+    let host = t0.elapsed().as_secs_f64();
+    println!(
+        "  served        : {} of {} offered ({} dropped, {:.1}% drop rate) in {} batches",
+        report.served,
+        report.offered,
+        report.dropped,
+        report.drop_rate() * 100.0,
+        report.batches
+    );
+    println!(
+        "  makespan      : {:.3} ms simulated, utilization {:.1}%, {:.0} req/s served",
+        report.makespan_secs * 1e3,
+        report.utilization() * 100.0,
+        report.throughput_rps()
+    );
+    println!(
+        "  batch fill    : {:.1}% of dispatched variant slots",
+        report.mean_batch_fill() * 100.0
+    );
+    let row = |name: &str, l: &serving::LatencyStats| {
+        println!(
+            "  {name:<13} : mean {:8.3}  p50 {:8.3}  p95 {:8.3}  p99 {:8.3}  max {:8.3}  ms",
+            l.mean * 1e3,
+            l.p50 * 1e3,
+            l.p95 * 1e3,
+            l.p99 * 1e3,
+            l.max * 1e3
+        );
+    };
+    row("queue", &report.queue);
+    row("compute", &report.compute);
+    row("total", &report.total);
+    println!("  host wall     : {host:.2} s");
+    if let Some(path) = args.flag("csv") {
+        std::fs::write(path, writer::serving_to_csv(&report))?;
+        println!("  wrote {path}");
+    }
+    if let Some(path) = args.flag("json") {
+        std::fs::write(path, writer::serving_to_json(&report))?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve_functional(args: &Args) -> anyhow::Result<()> {
     let dir = args.flag("artifacts").unwrap_or("artifacts");
     let n_requests = args.usize_flag("requests", 100)?;
     println!("loading artifacts from {dir}/ ...");
@@ -406,6 +523,44 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         .map(|v| v.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("bad value `{v}`: {e}")))
         .collect::<anyhow::Result<Vec<_>>>()?;
     let base = build_config(args)?;
+    // arrival-rate points drive the serving loop, whose report is a
+    // different shape (tail latency, drops, utilization) — they get
+    // their own CSV columns
+    if param == "arrival_rate" {
+        let mut points = Vec::with_capacity(values.len());
+        for &v in &values {
+            let mut cfg = base.clone();
+            cfg.serving.arrival_rate = v;
+            if values.len() > 1 {
+                cfg.threads = 1;
+            }
+            cfg.validate()?;
+            points.push((v, cfg));
+        }
+        let rows = eonsim::parallel::parallel_map_with(base.threads, &points, |(v, cfg)| {
+            let r = serving::simulate(cfg)?;
+            Ok(format!(
+                "{v},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{},{:.1}",
+                r.policy,
+                r.arrival,
+                r.total.p50 * 1e3,
+                r.total.p95 * 1e3,
+                r.total.p99 * 1e3,
+                r.utilization(),
+                r.drop_rate(),
+                r.batches,
+                r.throughput_rps(),
+            ))
+        })?;
+        println!(
+            "arrival_rate,batch_policy,arrival,p50_ms,p95_ms,p99_ms,utilization,\
+             drop_rate,batches,throughput_rps"
+        );
+        for row in rows {
+            println!("{row}");
+        }
+        return Ok(());
+    }
     // build (and validate) every sweep point up front so a bad value
     // fails before any simulation runs
     let mut points = Vec::with_capacity(values.len());

@@ -70,6 +70,14 @@ pub struct DeviceTrace {
     /// The subset of `exchange_bags` whose home device is in *another
     /// node* (inter-tier traffic; always 0 on a flat topology).
     pub inter_bags: u64,
+    /// The subset of `inter_bags` for which this device is its node's
+    /// *first* contributor (in trace order). Summed over a node's
+    /// devices this counts the node's **distinct** off-node bags — what
+    /// the uplink carries when hierarchical reduction combines the
+    /// node's row-hashed partials intra-node before shipping. Always
+    /// `<= inter_bags`; equal when every off-node bag has one
+    /// contributor per node (e.g. table-wise sharding).
+    pub node_led_inter_bags: u64,
     /// Per-node replication only: replica-served bags produced at this
     /// (leader) device but consumed at another device of the same node,
     /// shipped whole over the intra-node links. 0 in per-device
@@ -225,6 +233,7 @@ impl TablePartitioner {
                 exchange_bags: 0,
                 intra_bags: 0,
                 inter_bags: 0,
+                node_led_inter_bags: 0,
                 replica_ship_bags: 0,
                 replicated: 0,
             });
@@ -236,6 +245,7 @@ impl TablePartitioner {
             d.exchange_bags = 0;
             d.intra_bags = 0;
             d.inter_bags = 0;
+            d.node_led_inter_bags = 0;
             d.replica_ship_bags = 0;
             d.replicated = 0;
         }
@@ -243,9 +253,21 @@ impl TablePartitioner {
 
     /// Classify one freshly counted exchange bag into its interconnect
     /// tier: consumed locally (neither), on another device of the same
-    /// node (intra), or in another node (inter).
+    /// node (intra), or in another node (inter). An inter bag also
+    /// checks the node-distinct tally (`last_node_inter`, one slot per
+    /// node — bag lookups are contiguous in the trace, so a per-node
+    /// last-seen marker counts distinct `(node, bag)` pairs exactly):
+    /// the node's first contributor "leads" the bag for hierarchical
+    /// reduction.
     #[inline]
-    fn tally_tier(&self, out: &mut DeviceTrace, d: usize, home: usize) {
+    fn tally_tier(
+        &self,
+        out: &mut DeviceTrace,
+        last_node_inter: &mut [Option<(usize, u32)>],
+        d: usize,
+        home: usize,
+        bag: (usize, u32),
+    ) {
         if d == home {
             return;
         }
@@ -253,6 +275,11 @@ impl TablePartitioner {
             out.intra_bags += 1;
         } else {
             out.inter_bags += 1;
+            let node = self.topology.node_of(d);
+            if last_node_inter[node] != Some(bag) {
+                last_node_inter[node] = Some(bag);
+                out.node_led_inter_bags += 1;
+            }
         }
     }
 
@@ -263,6 +290,8 @@ impl TablePartitioner {
         let mut last_bag: Vec<Option<(usize, u32)>> = vec![None; self.devices];
         let mut last_remote: Vec<Option<(usize, u32)>> = vec![None; self.devices];
         let mut last_ship: Vec<Option<(usize, u32)>> = vec![None; self.devices];
+        let mut last_node_inter: Vec<Option<(usize, u32)>> =
+            vec![None; self.topology.nodes()];
         for (i, l) in trace.lookups.iter().enumerate() {
             let replicated = !self.replicas.is_empty()
                 && self.replicas.is_replicated(l.table, l.row);
@@ -285,7 +314,7 @@ impl TablePartitioner {
                 // only non-replicated contributions travel the all-to-all
                 last_remote[d] = Some(bag);
                 out[d].exchange_bags += 1;
-                self.tally_tier(&mut out[d], d, self.home_of(i));
+                self.tally_tier(&mut out[d], &mut last_node_inter, d, self.home_of(i), bag);
             }
             out[d].trace.lookups.push(*l);
         }
@@ -295,6 +324,8 @@ impl TablePartitioner {
         let mut last_bag: Vec<Option<(usize, u32)>> = vec![None; self.devices];
         let mut last_remote: Vec<Option<(usize, u32)>> = vec![None; self.devices];
         let mut last_ship: Vec<Option<(usize, u32)>> = vec![None; self.devices];
+        let mut last_node_inter: Vec<Option<(usize, u32)>> =
+            vec![None; self.topology.nodes()];
         for (i, l) in trace.lookups.iter().enumerate() {
             let bag = (i / self.lookups_per_sample, l.table);
             if !self.replicas.is_empty() && self.replicas.is_replicated(l.table, l.row) {
@@ -322,7 +353,7 @@ impl TablePartitioner {
                     if last_remote[d] != Some(bag) {
                         last_remote[d] = Some(bag);
                         out[d].exchange_bags += 1;
-                        self.tally_tier(&mut out[d], d, home);
+                        self.tally_tier(&mut out[d], &mut last_node_inter, d, home, bag);
                     }
                     out[d].trace.lookups.push(*l);
                 }
@@ -378,6 +409,12 @@ pub struct ShardedEmbeddingSim {
     /// Replicas held once per node (at the node leader) instead of on
     /// every device. Only meaningful on two-tier topologies.
     replicate_per_node: bool,
+    /// Hierarchical reduction of row-hashed partial sums: a node's
+    /// devices combine their partials for off-node bags over the intra
+    /// links, shipping **one** combined partial per distinct bag up the
+    /// uplink instead of one per contributor. Only meaningful for
+    /// row-hashed sharding on a two-tier topology.
+    reduce_inter: bool,
     pool: usize,
     /// Host worker threads for the per-device fan-out (`[sim] threads`).
     /// The devices are fully independent state machines, so any value
@@ -398,6 +435,14 @@ impl ShardedEmbeddingSim {
         // at nodes = 1 every [topology] key is inert, keeping flat runs
         // bit-identical to the pre-topology engine
         let per_node = cfg.sharding.topology.replicate_per_node && !topo.is_flat();
+        // hierarchical reduction only makes sense where several devices
+        // of one node hold *summable* partials of the same bag: row
+        // hashing on a two-tier pod. Table-wise bags have a single
+        // contributor; column slices concatenate and cannot be combined.
+        let reduce_inter = cfg.sharding.topology.hierarchical_reduction
+            && !topo.is_flat()
+            && matches!(strategy, ShardStrategy::RowHashed)
+            && n > 1;
         // node-aware placement (table-wise, two-tier only): start from
         // the uniform-weight balance; a profiled engine run refines it
         // with per-table traffic weights via `set_placement`
@@ -477,6 +522,7 @@ impl ShardedEmbeddingSim {
                 .max(1),
             full_vec_bytes: emb.vec_bytes(),
             replicate_per_node: per_node,
+            reduce_inter,
             pool: emb.pool,
             threads: cfg.threads.max(1),
             split_buf: Vec::new(),
@@ -683,7 +729,18 @@ impl ShardedEmbeddingSim {
             let total = part.exchange_bags * self.slice_bytes[device] * (n as u64 - 1)
                 / n as u64;
             let travel = part.intra_bags + part.inter_bags;
-            let inter = if travel > 0 { total * part.inter_bags / travel } else { 0 };
+            let mut inter = if travel > 0 { total * part.inter_bags / travel } else { 0 };
+            if self.reduce_inter && part.inter_bags > 0 {
+                // hierarchical reduction: only the bags this device
+                // *leads* for its node cross the uplink (as the node's
+                // combined partial); its other off-node partials ship
+                // intra-node to the bag's combiner instead. The moved
+                // bytes land in the intra tier below (`total - inter`),
+                // so the device's total exchange volume is conserved —
+                // only the tier split (and therefore the uplink price)
+                // changes.
+                inter = inter * part.node_led_inter_bags / part.inter_bags;
+            }
             // per-node replica bags ship whole from the node leader to
             // their home device over the intra links (same-node by
             // construction). Per-device replicas live at home: free.
@@ -941,6 +998,69 @@ mod tests {
             split.iter().map(|d| d.replica_ship_bags).sum::<u64>() > 0,
             "3 of 4 homes per node sit off-leader"
         );
+    }
+
+    #[test]
+    fn node_led_inter_bags_count_distinct_off_node_bags() {
+        let lps_of = |cfg: &SimConfig| {
+            cfg.workload.embedding.num_tables * cfg.workload.embedding.pool
+        };
+        // row-hashed 2×4: several devices of a node hold partials of the
+        // same off-node bag, so the node-distinct count is strictly
+        // smaller than the contribution count
+        let cfg = small_cfg(8, ShardStrategy::RowHashed);
+        let trace = one_batch(&cfg);
+        let mut p = TablePartitioner::new(8, ShardStrategy::RowHashed, lps_of(&cfg));
+        let topo = Topology::two_tier(2, 4, 100.0, 12.5);
+        p.set_topology(topo);
+        let split = p.split(&trace);
+        for node in 0..2 {
+            let devs = (node * 4)..(node * 4 + 4);
+            let led: u64 = devs.clone().map(|d| split[d].node_led_inter_bags).sum();
+            let contrib: u64 = devs.map(|d| split[d].inter_bags).sum();
+            assert!(led > 0 && led < contrib, "node {node}: led {led} vs {contrib}");
+        }
+        for d in &split {
+            assert!(d.node_led_inter_bags <= d.inter_bags);
+        }
+        // table-wise: one contributor per bag, so leading == contributing
+        let cfg = small_cfg(8, ShardStrategy::TableWise);
+        let trace = one_batch(&cfg);
+        let mut p = TablePartitioner::new(8, ShardStrategy::TableWise, lps_of(&cfg));
+        p.set_topology(topo);
+        for d in p.split(&trace) {
+            assert_eq!(d.node_led_inter_bags, d.inter_bags);
+        }
+        // flat topologies record no inter (and so no led) bags at all
+        let p = TablePartitioner::new(8, ShardStrategy::RowHashed, lps_of(&cfg));
+        for d in p.split(&trace) {
+            assert_eq!(d.inter_bags, 0);
+            assert_eq!(d.node_led_inter_bags, 0);
+        }
+    }
+
+    #[test]
+    fn hierarchical_reduction_moves_uplink_bytes_to_the_intra_tier() {
+        let mut cfg = small_cfg(8, ShardStrategy::RowHashed);
+        cfg.sharding.topology.nodes = 2;
+        let trace = one_batch(&cfg);
+        let plain = ShardedEmbeddingSim::new(&cfg).simulate_batch(&trace);
+        let mut rcfg = cfg.clone();
+        rcfg.sharding.topology.hierarchical_reduction = true;
+        let reduced = ShardedEmbeddingSim::new(&rcfg).simulate_batch(&trace);
+        // per-device total exchange volume is conserved; only the tier
+        // split moves
+        for (a, b) in plain.per_device.iter().zip(&reduced.per_device) {
+            assert_eq!(a.exchange_bytes, b.exchange_bytes, "device {}", a.device);
+            assert!(b.inter_bytes < a.inter_bytes, "device {}", a.device);
+        }
+        // combining partials shrinks the serialized uplink drain, and
+        // with it the whole exchange phase
+        assert!(reduced.exchange_inter_cycles < plain.exchange_inter_cycles);
+        assert!(reduced.exchange_cycles < plain.exchange_cycles);
+        // compute counters are untouched — reduction re-prices transfers
+        assert_eq!(plain.mem, reduced.mem);
+        assert_eq!(plain.ops, reduced.ops);
     }
 
     #[test]

@@ -132,6 +132,103 @@ pub fn to_json(report: &SimReport) -> String {
     )
 }
 
+// ------------------------------------------------------------- serving
+
+use crate::coordinator::serving::{LatencyStats, ServingReport};
+
+fn latency_json(l: &LatencyStats) -> String {
+    format!(
+        "{{\"mean\":{:e},\"p50\":{:e},\"p95\":{:e},\"p99\":{:e},\"max\":{:e}}}",
+        l.mean, l.p50, l.p95, l.p99, l.max
+    )
+}
+
+/// Full serving report as a JSON object: summary metrics, the three
+/// latency distributions, aggregate counters, and the per-batch log.
+/// Byte-deterministic for a fixed config seed regardless of host
+/// thread count (per-request records are in-process only).
+pub fn serving_to_json(report: &ServingReport) -> String {
+    let batches: Vec<String> = report
+        .per_batch
+        .iter()
+        .map(|b| {
+            format!(
+                concat!(
+                    "{{\"dispatch_secs\":{:e},\"complete_secs\":{:e},\"requests\":{},",
+                    "\"variant\":{},\"compute_secs\":{:e},\"queued_after\":{}}}"
+                ),
+                b.dispatch_secs,
+                b.complete_secs,
+                b.requests,
+                b.variant,
+                b.compute_secs,
+                b.queued_after,
+            )
+        })
+        .collect();
+    format!(
+        concat!(
+            "{{\"platform\":\"{}\",\"policy\":\"{}\",\"arrival\":\"{}\",",
+            "\"arrival_rate\":{:e},\"offered\":{},\"served\":{},\"dropped\":{},",
+            "\"drop_rate\":{:.6},\"batches\":{},\"makespan_secs\":{:e},",
+            "\"busy_secs\":{:e},\"utilization\":{:.6},\"throughput_rps\":{:e},",
+            "\"mean_batch_fill\":{:.6},\"total_cycles\":{},",
+            "\"latency\":{{\"queue\":{},\"compute\":{},\"total\":{}}},",
+            "\"ops\":{{\"macs\":{},\"vpu_ops\":{},\"lookups\":{},\"replicated_hits\":{}}},",
+            "\"mem\":{{\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
+            "\"offchip_writes\":{},\"hits\":{},\"misses\":{},\"global_hits\":{}}},",
+            "\"per_batch\":[{}]}}"
+        ),
+        report.platform,
+        report.policy,
+        report.arrival,
+        report.arrival_rate,
+        report.offered,
+        report.served,
+        report.dropped,
+        report.drop_rate(),
+        report.batches,
+        report.makespan_secs,
+        report.busy_secs,
+        report.utilization(),
+        report.throughput_rps(),
+        report.mean_batch_fill(),
+        report.total_cycles,
+        latency_json(&report.queue),
+        latency_json(&report.compute),
+        latency_json(&report.total),
+        report.ops.macs,
+        report.ops.vpu_ops,
+        report.ops.lookups,
+        report.ops.replicated_hits,
+        report.mem.onchip_reads,
+        report.mem.onchip_writes,
+        report.mem.offchip_reads,
+        report.mem.offchip_writes,
+        report.mem.hits,
+        report.mem.misses,
+        report.mem.global_hits,
+        batches.join(","),
+    )
+}
+
+/// One CSV row per dispatched batch (simulated seconds).
+pub fn serving_to_csv(report: &ServingReport) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "batch,dispatch_secs,complete_secs,requests,variant,compute_secs,queued_after\n",
+    );
+    for (i, b) in report.per_batch.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "{},{:e},{:e},{},{},{:e},{}",
+            i, b.dispatch_secs, b.complete_secs, b.requests, b.variant, b.compute_secs,
+            b.queued_after,
+        );
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,5 +332,93 @@ mod tests {
             "\"per_device\":[{\"device\":0,\"cycles\":11,\"exchange_bytes\":22,\"inter_bytes\":7,"
         ));
         assert!(json.contains("{\"device\":1,"));
+    }
+
+    fn serving_report() -> ServingReport {
+        use crate::coordinator::serving::{RequestLatency, ServedBatch};
+        ServingReport {
+            platform: "tpuv6e".into(),
+            policy: "dynamic".into(),
+            arrival: "poisson".into(),
+            arrival_rate: 50_000.0,
+            offered: 3,
+            served: 3,
+            dropped: 0,
+            batches: 2,
+            makespan_secs: 4e-3,
+            busy_secs: 2e-3,
+            total_cycles: 1234,
+            queue: LatencyStats { mean: 1e-4, p50: 1e-4, p95: 2e-4, p99: 2e-4, max: 2e-4 },
+            compute: LatencyStats::default(),
+            total: LatencyStats { mean: 1e-3, p50: 1e-3, p95: 2e-3, p99: 2e-3, max: 2e-3 },
+            mem: MemCounts { offchip_reads: 9, ..Default::default() },
+            ops: OpCounts { lookups: 10, ..Default::default() },
+            per_batch: vec![
+                ServedBatch {
+                    dispatch_secs: 0.0,
+                    complete_secs: 1e-3,
+                    requests: 2,
+                    variant: 2,
+                    compute_secs: 1e-3,
+                    queued_after: 1,
+                },
+                ServedBatch {
+                    dispatch_secs: 1e-3,
+                    complete_secs: 2e-3,
+                    requests: 1,
+                    variant: 1,
+                    compute_secs: 1e-3,
+                    queued_after: 0,
+                },
+            ],
+            per_request: vec![RequestLatency {
+                id: 0,
+                arrival_secs: 0.0,
+                queue_secs: 0.0,
+                compute_secs: 1e-3,
+                total_secs: 1e-3,
+            }],
+        }
+    }
+
+    #[test]
+    fn serving_json_is_well_formed_and_complete() {
+        let json = serving_to_json(&serving_report());
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        for key in [
+            "\"policy\":\"dynamic\"",
+            "\"arrival\":\"poisson\"",
+            "\"offered\":3",
+            "\"served\":3",
+            "\"dropped\":0",
+            "\"batches\":2",
+            "\"utilization\":0.5",
+            "\"total_cycles\":1234",
+            "\"latency\":{\"queue\":{\"mean\":",
+            "\"p99\":",
+            "\"lookups\":10",
+            "\"per_batch\":[{\"dispatch_secs\":",
+            "\"variant\":2",
+        ] {
+            assert!(json.contains(key), "missing `{key}` in {json}");
+        }
+        // per-request records are in-process only
+        assert!(!json.contains("per_request"));
+    }
+
+    #[test]
+    fn serving_csv_rows_match_batches() {
+        let csv = serving_to_csv(&serving_report());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("batch,dispatch_secs"));
+        assert!(lines[1].starts_with("0,"));
+        assert!(lines[2].starts_with("1,"));
+        assert_eq!(
+            lines[0].split(',').count(),
+            lines[1].split(',').count(),
+            "header and row column counts agree"
+        );
     }
 }

@@ -1,0 +1,260 @@
+//! Open-loop request arrival processes for the simulated-time serving
+//! layer ([`crate::coordinator::serving`]).
+//!
+//! All times are *simulated* seconds. Each process yields a monotone
+//! non-decreasing stream of absolute arrival instants, fully
+//! deterministic given its seed — so a serving experiment replays
+//! byte-identically, and an arrival-rate sweep with one seed varies only
+//! the time axis, not the request identities.
+
+use crate::config::{ArrivalKind, ServingConfig};
+use crate::testutil::SplitMix64;
+
+enum Process {
+    /// Memoryless: exponential inter-arrival gaps at a fixed rate.
+    Poisson { rate: f64 },
+    /// Markov-modulated Poisson: exponential on/off phases; the rate is
+    /// `rate * factor` during a burst and `rate / factor` between
+    /// bursts. Phase flips are evaluated at arrival instants (a
+    /// deterministic, seed-replayable approximation of the MMPP).
+    Bursty {
+        rate: f64,
+        factor: f64,
+        on_mean_secs: f64,
+        off_mean_secs: f64,
+        in_burst: bool,
+        phase_end: f64,
+    },
+    /// Replay recorded inter-arrival gaps, cycled when exhausted.
+    Replay { gaps: Vec<f64>, cursor: usize },
+}
+
+/// A deterministic open-loop arrival-time generator.
+pub struct ArrivalProcess {
+    process: Process,
+    rng: SplitMix64,
+    /// The last emitted arrival instant.
+    now: f64,
+}
+
+impl ArrivalProcess {
+    /// Poisson arrivals at `rate` requests per simulated second.
+    pub fn poisson(rate: f64, seed: u64) -> Self {
+        ArrivalProcess {
+            process: Process::Poisson { rate },
+            rng: SplitMix64::new(seed),
+            now: 0.0,
+        }
+    }
+
+    /// Bursty (on/off modulated Poisson) arrivals around a mean `rate`.
+    pub fn bursty(
+        rate: f64,
+        factor: f64,
+        on_mean_secs: f64,
+        off_mean_secs: f64,
+        seed: u64,
+    ) -> Self {
+        ArrivalProcess {
+            process: Process::Bursty {
+                rate,
+                factor: factor.max(1.0),
+                on_mean_secs,
+                off_mean_secs,
+                // pre-first-flip state: the lazy flip below (now >=
+                // phase_end = 0) inverts this, so the stream *opens in
+                // a burst* and draws its first phase from on_mean_secs
+                in_burst: false,
+                phase_end: 0.0,
+            },
+            rng: SplitMix64::new(seed),
+            now: 0.0,
+        }
+    }
+
+    /// Replay explicit inter-arrival gaps (seconds), cycled.
+    pub fn replay(gaps: Vec<f64>) -> anyhow::Result<Self> {
+        anyhow::ensure!(!gaps.is_empty(), "empty arrival trace");
+        for &g in &gaps {
+            anyhow::ensure!(
+                g.is_finite() && g >= 0.0,
+                "arrival trace gaps must be finite and non-negative, got {g}"
+            );
+        }
+        Ok(ArrivalProcess {
+            process: Process::Replay { gaps, cursor: 0 },
+            rng: SplitMix64::new(0),
+            now: 0.0,
+        })
+    }
+
+    /// Load a replay trace: one inter-arrival gap in seconds per line
+    /// (blank lines and `#` comments ignored).
+    pub fn replay_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read arrival trace `{path}`: {e}"))?;
+        let mut gaps = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let g: f64 = line.parse().map_err(|e| {
+                anyhow::anyhow!("{path}:{}: bad inter-arrival gap `{line}`: {e}", lineno + 1)
+            })?;
+            gaps.push(g);
+        }
+        anyhow::ensure!(!gaps.is_empty(), "empty arrival trace {path}");
+        Self::replay(gaps)
+    }
+
+    /// Build the configured process.
+    pub fn from_config(s: &ServingConfig) -> anyhow::Result<Self> {
+        Ok(match s.arrival {
+            ArrivalKind::Poisson => Self::poisson(s.arrival_rate, s.seed),
+            ArrivalKind::Bursty => Self::bursty(
+                s.arrival_rate,
+                s.burst_factor,
+                s.burst_on_secs,
+                s.burst_off_secs,
+                s.seed,
+            ),
+            ArrivalKind::Trace => {
+                let path = s
+                    .trace_path
+                    .as_deref()
+                    .ok_or_else(|| anyhow::anyhow!("arrival = trace requires trace_path"))?;
+                Self::replay_file(path)?
+            }
+        })
+    }
+
+    /// Exponential sample with the given mean (`-mean * ln(1 - U)`;
+    /// `1 - U` keeps the argument in `(0, 1]`).
+    fn exp(rng: &mut SplitMix64, mean: f64) -> f64 {
+        -mean * (1.0 - rng.next_f64()).ln()
+    }
+
+    /// The next absolute arrival instant (monotone non-decreasing).
+    pub fn next_arrival(&mut self) -> f64 {
+        let gap = match &mut self.process {
+            Process::Poisson { rate } => Self::exp(&mut self.rng, 1.0 / *rate),
+            Process::Bursty {
+                rate,
+                factor,
+                on_mean_secs,
+                off_mean_secs,
+                in_burst,
+                phase_end,
+            } => {
+                // flip phases that the clock has run past
+                while self.now >= *phase_end {
+                    *in_burst = !*in_burst;
+                    let mean = if *in_burst { *on_mean_secs } else { *off_mean_secs };
+                    *phase_end += Self::exp(&mut self.rng, mean);
+                }
+                let phase_rate =
+                    if *in_burst { *rate * *factor } else { *rate / *factor };
+                Self::exp(&mut self.rng, 1.0 / phase_rate)
+            }
+            Process::Replay { gaps, cursor } => {
+                let g = gaps[*cursor];
+                *cursor = (*cursor + 1) % gaps.len();
+                g
+            }
+        };
+        self.now += gap;
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_monotone_deterministic_and_rate_scaled() {
+        let times = |rate: f64, seed: u64| -> Vec<f64> {
+            let mut p = ArrivalProcess::poisson(rate, seed);
+            (0..500).map(|_| p.next_arrival()).collect()
+        };
+        let a = times(1000.0, 7);
+        let b = times(1000.0, 7);
+        assert_eq!(a, b, "same seed, same stream");
+        assert!(a.windows(2).all(|w| w[1] >= w[0]), "monotone");
+        // the same uniform draws at twice the rate compress time exactly 2x
+        let fast = times(2000.0, 7);
+        for (&t, &f) in a.iter().zip(&fast) {
+            assert!((t - 2.0 * f).abs() < 1e-9 * t.max(1.0), "{t} vs {f}");
+        }
+        // mean inter-arrival ~ 1/rate (law of large numbers, loose bound)
+        let mean_gap = a.last().unwrap() / a.len() as f64;
+        assert!((mean_gap - 1e-3).abs() < 3e-4, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn bursty_opens_in_a_burst() {
+        // regression: the lazily-initialized phase state used to flip to
+        // the OFF phase before the first arrival, so short experiments
+        // saw mostly idle-rate traffic. The stream must open at the
+        // burst rate (mean gap 1/(rate*factor), far below 1/rate).
+        let mut p = ArrivalProcess::bursty(1000.0, 8.0, 5e-3, 5e-3, 3);
+        let first_gaps: Vec<f64> = (0..5).map(|_| p.next_arrival()).collect();
+        let mean_gap = first_gaps.last().unwrap() / first_gaps.len() as f64;
+        assert!(
+            mean_gap < 1.0 / 1000.0,
+            "first gaps must be burst-paced, mean {mean_gap}"
+        );
+    }
+
+    #[test]
+    fn bursty_alternates_rates_and_stays_monotone() {
+        let mut p = ArrivalProcess::bursty(1000.0, 8.0, 5e-3, 5e-3, 11);
+        let times: Vec<f64> = (0..2000).map(|_| p.next_arrival()).collect();
+        assert!(times.windows(2).all(|w| w[1] >= w[0]));
+        // gaps must span both phases: burst gaps ~1/8000 s, idle ~1/125 s
+        let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+        let short = gaps.iter().filter(|&&g| g < 0.5e-3).count();
+        let long = gaps.iter().filter(|&&g| g > 2e-3).count();
+        assert!(short > 0, "no burst-phase gaps seen");
+        assert!(long > 0, "no idle-phase gaps seen");
+    }
+
+    #[test]
+    fn replay_cycles_and_rejects_bad_gaps() {
+        let mut p = ArrivalProcess::replay(vec![0.5, 0.25]).unwrap();
+        assert_eq!(p.next_arrival(), 0.5);
+        assert_eq!(p.next_arrival(), 0.75);
+        assert_eq!(p.next_arrival(), 1.25, "cycled back to the first gap");
+        assert!(ArrivalProcess::replay(vec![]).is_err());
+        assert!(ArrivalProcess::replay(vec![0.1, -0.5]).is_err());
+        assert!(ArrivalProcess::replay(vec![f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn replay_file_parses_gaps_and_skips_comments() {
+        let path = std::env::temp_dir()
+            .join(format!("eonsim_arrivals_{}.txt", std::process::id()));
+        std::fs::write(&path, "# gaps in seconds\n0.001\n\n0.002\n").unwrap();
+        let mut p = ArrivalProcess::replay_file(&path.to_string_lossy()).unwrap();
+        assert!((p.next_arrival() - 0.001).abs() < 1e-12);
+        assert!((p.next_arrival() - 0.003).abs() < 1e-12);
+        std::fs::write(&path, "0.001\nbogus\n").unwrap();
+        let err = ArrivalProcess::replay_file(&path.to_string_lossy())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bogus"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn from_config_builds_each_kind() {
+        let mut s = crate::config::ServingConfig::default();
+        assert!(ArrivalProcess::from_config(&s).is_ok());
+        s.arrival = crate::config::ArrivalKind::Bursty;
+        assert!(ArrivalProcess::from_config(&s).is_ok());
+        s.arrival = crate::config::ArrivalKind::Trace;
+        s.trace_path = None;
+        assert!(ArrivalProcess::from_config(&s).is_err());
+    }
+}

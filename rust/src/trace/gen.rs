@@ -66,6 +66,13 @@ impl WorkloadTrace {
         Ok(WorkloadTrace { batches })
     }
 
+    /// Wrap already-generated batches (the engine's `SimCore` generates
+    /// them through a retained [`TraceGenerator`] so the stream can
+    /// continue past the profiled prefix).
+    pub fn from_batches(batches: Vec<BatchTrace>) -> Self {
+        WorkloadTrace { batches }
+    }
+
     pub fn batches(&self) -> &[BatchTrace] {
         &self.batches
     }

@@ -18,10 +18,12 @@
 //! The same index trace can therefore be replayed against any hardware
 //! configuration — the paper's trace-reuse property.
 
+pub mod arrivals;
 pub mod gen;
 pub mod io;
 pub mod zipf;
 
+pub use arrivals::ArrivalProcess;
 pub use gen::{BatchTrace, Lookup, TraceGenerator, WorkloadTrace};
 pub use zipf::{RowPermutation, ZipfSampler};
 

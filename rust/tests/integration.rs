@@ -480,6 +480,79 @@ fn shipped_configs_are_byte_identical_across_thread_counts() {
     assert!(count >= 3, "expected the shipped config files, found {count}");
 }
 
+/// Acceptance (issue criterion): `Simulator::run()` rebuilt on
+/// `SimCore::step_batch` produces byte-identical `SimReport` JSON and
+/// CSV for every shipped config — the run loop is pure sugar over the
+/// core, so a hand-rolled step loop must reproduce it exactly.
+#[test]
+fn simulator_run_is_byte_identical_to_manual_simcore_loop_on_shipped_configs() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut count = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "toml") != Some(true) {
+            continue;
+        }
+        count += 1;
+        let mut cfg = SimConfig::from_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        // shrink for test speed, keep the config's structure
+        cfg.workload.batch_size = 8;
+        cfg.workload.num_batches = 2;
+        cfg.workload.embedding.num_tables = cfg.workload.embedding.num_tables.min(4);
+        cfg.workload.embedding.rows_per_table = cfg.workload.embedding.rows_per_table.min(10_000);
+        cfg.workload.embedding.pool = cfg.workload.embedding.pool.min(16);
+        cfg.sharding.replicate_top_k = cfg.sharding.replicate_top_k.min(64);
+
+        let want = Simulator::new(cfg.clone())
+            .run()
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+
+        let mut core = eonsim::engine::SimCore::new(cfg.clone()).unwrap();
+        let mut source = core.take_trace_source();
+        let mut report = core.new_report();
+        for _ in 0..cfg.workload.num_batches {
+            report.per_batch.push(core.step_batch(source.next_trace()));
+        }
+        eonsim::energy::annotate(&mut report, &eonsim::energy::EnergyTable::default());
+
+        assert_eq!(
+            writer::to_json(&want),
+            writer::to_json(&report),
+            "{}: JSON bytes diverged between run() and the manual SimCore loop",
+            path.display()
+        );
+        assert_eq!(
+            writer::to_csv(&want),
+            writer::to_csv(&report),
+            "{}: CSV bytes diverged",
+            path.display()
+        );
+    }
+    assert!(count >= 3, "expected the shipped config files, found {count}");
+}
+
+/// Tier-1 serve smoke (issue satellite): the shipped serving config
+/// drives the simulated-time serving loop end to end, shrunk for speed.
+#[test]
+fn serve_smoke_runs_shipped_serving_config() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut cfg = SimConfig::from_file(dir.join("serving_poisson.toml")).unwrap();
+    cfg.workload.embedding.num_tables = cfg.workload.embedding.num_tables.min(4);
+    cfg.workload.embedding.rows_per_table = cfg.workload.embedding.rows_per_table.min(10_000);
+    cfg.workload.embedding.pool = cfg.workload.embedding.pool.min(8);
+    cfg.serving.requests = 64;
+    let report = eonsim::coordinator::serving::simulate(&cfg).unwrap();
+    assert_eq!(report.served + report.dropped, report.offered);
+    assert!(report.served > 0);
+    assert!(report.batches > 0);
+    assert!(report.total.p99 >= report.total.p50);
+    assert!(report.total_cycles > 0);
+    let json = writer::serving_to_json(&report);
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    assert!(json.contains("\"policy\":"));
+}
+
 #[test]
 fn multicore_global_config_reports_global_hits() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");

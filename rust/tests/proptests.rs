@@ -514,3 +514,63 @@ fn prop_time_cycle_consistency() {
         assert!((report.exec_time_secs() - want).abs() < 1e-12);
     });
 }
+
+/// No arrival process, batching policy, or batch bound drops or
+/// duplicates a request id through the serving batcher: with an
+/// unbounded queue, the served ids are exactly `0..requests`, each
+/// once, and every latency component is finite and non-negative.
+#[test]
+fn prop_serving_batcher_conserves_request_ids() {
+    forall("serving id conservation", 8, |rng| {
+        let mut cfg = presets::tpuv6e_dlrm_small();
+        // tiny workload: the property is about the batcher, not the sim
+        cfg.workload.embedding.num_tables = 1 + rng.next_below(3) as usize;
+        cfg.workload.embedding.rows_per_table = 1_000;
+        cfg.workload.embedding.pool = 1 + rng.next_below(4) as usize;
+        cfg.hardware.mem.policy = OnchipPolicy::Spm;
+        let s = &mut cfg.serving;
+        s.requests = 1 + rng.next_below(200) as usize;
+        s.arrival_rate = 1_000.0 * (1.0 + rng.next_f64() * 999.0);
+        s.max_batch = 1 + rng.next_below(40) as usize;
+        s.queue_capacity = 0; // unbounded: nothing may be shed
+        s.policy = [
+            eonsim::config::BatchPolicyKind::Dynamic,
+            eonsim::config::BatchPolicyKind::Size,
+            eonsim::config::BatchPolicyKind::Timeout,
+        ][rng.next_below(3) as usize];
+        s.arrival = [
+            eonsim::config::ArrivalKind::Poisson,
+            eonsim::config::ArrivalKind::Bursty,
+        ][rng.next_below(2) as usize];
+        s.timeout_secs = rng.next_f64() * 2e-3;
+        s.seed = rng.next_u64();
+        let requests = s.requests;
+        let tag = format!(
+            "{} x {} reqs @ {:.0}/s, max_batch {}",
+            s.policy.name(),
+            requests,
+            s.arrival_rate,
+            s.max_batch
+        );
+
+        let report = eonsim::coordinator::serving::simulate(&cfg).unwrap();
+        assert_eq!(report.offered, requests as u64, "{tag}");
+        assert_eq!(report.dropped, 0, "{tag}: unbounded queue never drops");
+        assert_eq!(report.served, requests as u64, "{tag}");
+        let mut ids: Vec<u64> = report.per_request.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..requests as u64).collect::<Vec<u64>>(), "{tag}");
+        for r in &report.per_request {
+            assert!(r.queue_secs >= 0.0 && r.queue_secs.is_finite(), "{tag}");
+            assert!(r.compute_secs > 0.0 && r.compute_secs.is_finite(), "{tag}");
+            assert!((r.total_secs - (r.queue_secs + r.compute_secs)).abs() < 1e-12, "{tag}");
+        }
+        // batches respect the dispatch bound and account for everyone
+        let served_sum: u64 = report.per_batch.iter().map(|b| b.requests as u64).sum();
+        assert_eq!(served_sum, requests as u64, "{tag}");
+        assert!(
+            report.per_batch.iter().all(|b| b.requests <= cfg.serving.max_batch),
+            "{tag}"
+        );
+    });
+}

@@ -1,0 +1,204 @@
+//! Integration tests for the simulated-time serving layer: determinism
+//! (byte-identical reports across host thread counts), counter
+//! conservation against the equivalent batch run, tail-latency shape
+//! through saturation (the acceptance criterion), and policy behavior
+//! through the full config -> serving -> writer stack.
+
+use eonsim::config::{presets, ArrivalKind, BatchPolicyKind, OnchipPolicy, SimConfig};
+use eonsim::coordinator::serving;
+use eonsim::engine::Simulator;
+use eonsim::stats::writer;
+
+/// Small serving deployment: fast enough for tier-1, rich enough to
+/// exercise batching (the full preset model is far too heavy here).
+fn serving_cfg() -> SimConfig {
+    let mut cfg = presets::tpuv6e_dlrm_small();
+    cfg.workload.embedding.num_tables = 8;
+    cfg.workload.embedding.rows_per_table = 20_000;
+    cfg.workload.embedding.pool = 8;
+    cfg.workload.trace.alpha = 1.1;
+    cfg.hardware.mem.policy = OnchipPolicy::Spm;
+    cfg.serving.requests = 96;
+    cfg.serving.arrival_rate = 300_000.0;
+    cfg.serving.max_batch = 32;
+    cfg
+}
+
+/// Acceptance (issue satellite): fixed seed + any host thread count =>
+/// byte-identical `ServingReport` JSON, including on a sharded,
+/// replicated deployment where the per-device fan-out actually runs.
+#[test]
+fn serving_report_json_is_byte_identical_across_thread_counts() {
+    let run = |threads: usize| {
+        let mut cfg = serving_cfg();
+        cfg.sharding.devices = 4;
+        cfg.sharding.replicate_top_k = 64;
+        cfg.threads = threads;
+        writer::serving_to_json(&serving::simulate(&cfg).unwrap())
+    };
+    let serial = run(1);
+    for threads in [2usize, 4, 8] {
+        assert_eq!(serial, run(threads), "JSON bytes diverged at threads = {threads}");
+    }
+    // and plain repetition is byte-stable too
+    assert_eq!(run(1), serial);
+}
+
+/// Acceptance (issue satellite): the embedding counters of the served
+/// requests equal the equivalent `Simulator::run` batches exactly. The
+/// size policy makes the equivalence airtight: 96 requests at max_batch
+/// 32 dispatch as exactly three full 32-batches, which is precisely a
+/// `batch_size = 32, num_batches = 3` batch run on the same seed.
+#[test]
+fn served_counters_conserve_against_equivalent_batch_run() {
+    let mut cfg = serving_cfg();
+    cfg.serving.policy = BatchPolicyKind::Size;
+    let report = serving::simulate(&cfg).unwrap();
+    assert_eq!(report.served, 96);
+    assert_eq!(report.batches, 3, "three exactly-full 32-batches");
+    for b in &report.per_batch {
+        assert_eq!((b.requests, b.variant), (32, 32));
+    }
+
+    let mut run_cfg = cfg.clone();
+    run_cfg.workload.batch_size = 32;
+    run_cfg.workload.num_batches = 3;
+    let batch_run = Simulator::new(run_cfg).run().unwrap();
+    assert_eq!(report.ops, batch_run.total_ops(), "op counters conserve");
+    assert_eq!(report.mem, batch_run.total_mem(), "memory counters conserve");
+    assert_eq!(report.total_cycles, batch_run.total_cycles(), "cycles conserve");
+}
+
+/// Acceptance (issue criterion): p99 total latency is monotonically
+/// non-decreasing across an arrival-rate sweep through saturation, and
+/// the saturated tail is far above the unloaded one (the knee exists).
+#[test]
+fn p99_latency_is_monotone_through_saturation() {
+    let mut cfg = serving_cfg();
+    cfg.serving.requests = 320;
+    // best-case service rate: a full 32-batch's simulated seconds
+    let mut probe = cfg.clone();
+    probe.workload.batch_size = 32;
+    probe.workload.num_batches = 1;
+    let batch_secs = Simulator::new(probe).run().unwrap().exec_time_secs();
+    let mu = 32.0 / batch_secs; // req/s at perfect batching
+    let mut p99s = Vec::new();
+    for mult in [0.5, 1.0, 2.0, 4.0, 8.0] {
+        cfg.serving.arrival_rate = mu * mult;
+        let r = serving::simulate(&cfg).unwrap();
+        assert_eq!(r.served, 320, "unbounded queue serves everything");
+        p99s.push(r.total.p99);
+    }
+    for (i, w) in p99s.windows(2).enumerate() {
+        assert!(
+            w[1] >= w[0],
+            "p99 fell between rate points {i} and {}: {:?}",
+            i + 1,
+            p99s
+        );
+    }
+    assert!(
+        *p99s.last().unwrap() > p99s[0] * 3.0,
+        "saturation must blow up the tail: {p99s:?}"
+    );
+}
+
+/// The full `[serving]` config -> simulate -> writers path: the shape
+/// of the report survives the round trip and stays self-consistent.
+#[test]
+fn serving_stack_roundtrip_through_writers() {
+    let cfg = serving_cfg();
+    let report = serving::simulate(&cfg).unwrap();
+    assert!(report.total.p99 >= report.total.p50, "percentiles ordered");
+    assert!(report.total.max >= report.total.p99);
+    assert!(report.queue.mean + report.compute.mean <= report.total.mean + 1e-12);
+    assert!(report.utilization() > 0.0 && report.utilization() <= 1.0 + 1e-9);
+    let json = writer::serving_to_json(&report);
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    assert!(json.contains(&format!("\"served\":{}", report.served)));
+    assert!(json.contains(&format!("\"total_cycles\":{}", report.total_cycles)));
+    let csv = writer::serving_to_csv(&report);
+    assert_eq!(csv.lines().count() as u64, report.batches + 1, "header + one row per batch");
+}
+
+/// Batching policies trade fill against latency in the expected
+/// direction at a fixed, moderate arrival rate.
+#[test]
+fn size_policy_fills_better_dynamic_responds_faster() {
+    let mut cfg = serving_cfg();
+    cfg.serving.requests = 128;
+    cfg.serving.arrival_rate = 150_000.0;
+    cfg.serving.policy = BatchPolicyKind::Dynamic;
+    let dynamic = serving::simulate(&cfg).unwrap();
+    cfg.serving.policy = BatchPolicyKind::Size;
+    let size = serving::simulate(&cfg).unwrap();
+    assert!(
+        size.mean_batch_fill() >= dynamic.mean_batch_fill(),
+        "size-triggered batching must not fill worse: {} vs {}",
+        size.mean_batch_fill(),
+        dynamic.mean_batch_fill()
+    );
+    assert!(
+        dynamic.queue.p50 <= size.queue.p50,
+        "dynamic batching must not queue longer at the median: {} vs {}",
+        dynamic.queue.p50,
+        size.queue.p50
+    );
+}
+
+/// Bursty arrivals at the same mean rate produce a heavier queueing
+/// tail than Poisson — the reason the arrival process is configurable.
+#[test]
+fn bursty_arrivals_thicken_the_tail() {
+    let mut cfg = serving_cfg();
+    cfg.serving.requests = 256;
+    cfg.serving.arrival_rate = 100_000.0;
+    cfg.serving.burst_factor = 16.0;
+    let poisson = serving::simulate(&cfg).unwrap();
+    cfg.serving.arrival = ArrivalKind::Bursty;
+    let bursty = serving::simulate(&cfg).unwrap();
+    assert_eq!(poisson.served, 256);
+    assert_eq!(bursty.served, 256);
+    assert!(
+        bursty.queue.p99 >= poisson.queue.p99,
+        "bursts must not shrink the queueing tail: {} vs {}",
+        bursty.queue.p99,
+        poisson.queue.p99
+    );
+}
+
+/// Arrival-trace replay drives the serving loop deterministically from
+/// a file of inter-arrival gaps.
+#[test]
+fn arrival_trace_replay_drives_serving() {
+    let path = std::env::temp_dir()
+        .join(format!("eonsim_serve_replay_{}.txt", std::process::id()));
+    std::fs::write(&path, "0.0001\n0.0002\n").unwrap();
+    let mut cfg = serving_cfg();
+    cfg.serving.requests = 20;
+    cfg.serving.arrival = ArrivalKind::Trace;
+    cfg.serving.trace_path = Some(path.to_string_lossy().into_owned());
+    let a = serving::simulate(&cfg).unwrap();
+    let b = serving::simulate(&cfg).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(a.served, 20);
+    assert_eq!(a.per_batch, b.per_batch, "replay is deterministic");
+}
+
+/// A bounded queue under overload sheds load and says so.
+#[test]
+fn bounded_queue_sheds_load_under_overload() {
+    let mut cfg = serving_cfg();
+    cfg.serving.queue_capacity = 8;
+    cfg.serving.arrival_rate = 10_000_000.0;
+    cfg.serving.requests = 400;
+    let r = serving::simulate(&cfg).unwrap();
+    assert!(r.dropped > 0);
+    assert_eq!(r.offered, 400);
+    assert_eq!(r.served + r.dropped, r.offered);
+    // served requests still have exactly-once ids
+    let mut ids: Vec<u64> = r.per_request.iter().map(|q| q.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len() as u64, r.served, "no duplicate served ids");
+}

@@ -741,3 +741,76 @@ fn column_wise_and_replicated_runs_are_deterministic() {
         assert_eq!(bc.per_device, bd.per_device);
     }
 }
+
+/// Issue satellite (ROADMAP-named): hierarchical reduction for
+/// row-hashed partials. On a 2×4 pod, combining each node's partial
+/// sums intra-node before the uplink cuts inter-node bytes by
+/// ~`devices_per_node` (each off-node bag ships once per node instead
+/// of once per contributing device), while per-device total exchange
+/// volume and every compute counter stay identical.
+#[test]
+fn hierarchical_reduction_cuts_row_hashed_inter_bytes_by_devices_per_node() {
+    let mut cfg = pod_cfg(2, 1.1);
+    cfg.sharding.strategy = ShardStrategy::RowHashed;
+    let plain = Simulator::new(cfg.clone()).run().unwrap();
+    let mut rcfg = cfg.clone();
+    rcfg.sharding.topology.hierarchical_reduction = true;
+    let reduced = Simulator::new(rcfg).run().unwrap();
+
+    // the regression anchor: the reduction factor is ~devices_per_node
+    let dpn = 4.0;
+    let before = plain.total_inter_node_bytes() as f64;
+    let after = reduced.total_inter_node_bytes() as f64;
+    assert!(after > 0.0, "reduced uplink traffic must not vanish");
+    let factor = before / after;
+    assert!(
+        factor > dpn / 2.0 && factor <= dpn + 1e-9,
+        "inter-node bytes shrank {factor:.2}x; expected ~{dpn}x \
+         ({before} -> {after} B)"
+    );
+
+    // transfers are re-priced, compute is untouched
+    assert_eq!(plain.total_mem(), reduced.total_mem());
+    assert_eq!(plain.total_ops(), reduced.total_ops());
+    for (a, b) in plain.per_batch.iter().zip(&reduced.per_batch) {
+        assert_eq!(a.cycles.embedding, b.cycles.embedding);
+        assert!(b.cycles.exchange_inter < a.cycles.exchange_inter);
+        assert!(b.cycles.exchange <= a.cycles.exchange);
+        for (da, db) in a.per_device.iter().zip(&b.per_device) {
+            assert_eq!(
+                da.exchange_bytes, db.exchange_bytes,
+                "device {}: combine traffic moves tiers, total conserved",
+                da.device
+            );
+            assert!(db.inter_bytes < da.inter_bytes, "device {}", da.device);
+        }
+    }
+}
+
+/// The reduction knob is inert everywhere it has no physical meaning:
+/// flat topologies (`nodes = 1`) and table-wise sharding (one
+/// contributor per bag) are byte-identical with it on or off.
+#[test]
+fn hierarchical_reduction_is_inert_on_flat_and_table_wise() {
+    // flat: nodes = 1 with the flag set vs a config that never set it
+    let run_json = |mutate: &dyn Fn(&mut SimConfig)| {
+        let mut cfg = with_devices(4, ShardStrategy::RowHashed);
+        mutate(&mut cfg);
+        let report = Simulator::new(cfg).run().unwrap();
+        eonsim::stats::writer::to_json(&report)
+    };
+    assert_eq!(
+        run_json(&|_| {}),
+        run_json(&|cfg| cfg.sharding.topology.hierarchical_reduction = true),
+        "flat topology must ignore hierarchical_reduction byte-for-byte"
+    );
+    // two-tier table-wise: every bag has one contributor per node, so
+    // combining changes nothing — and the model does not even engage
+    let table = |reduce: bool| {
+        let mut cfg = pod_cfg(2, 1.1);
+        cfg.sharding.topology.hierarchical_reduction = reduce;
+        let r = Simulator::new(cfg).run().unwrap();
+        (r.total_inter_node_bytes(), r.total_cycles())
+    };
+    assert_eq!(table(false), table(true));
+}
