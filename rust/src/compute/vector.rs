@@ -19,6 +19,7 @@ pub fn pooling_cycles(core: &CoreConfig, bags: u64, pool: u64, dim: u64) -> u64 
     }
     // one vector-add issues ceil(dim / lanes) ops on one sublane slot
     let ops_per_add = dim.div_ceil(core.vpu_lanes as u64);
+    // eonsim-lint: allow(underflow, reason = "the pool <= 1 early-return above guarantees pool >= 2 here")
     let adds_per_bag = pool - 1;
     // bags are spread across sublanes
     let bag_waves = bags.div_ceil(core.vpu_sublanes as u64);

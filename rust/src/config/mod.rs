@@ -827,11 +827,43 @@ impl SimConfig {
         let invalid = |key: &str, msg: String| {
             Err(ConfigError::Invalid { key: key.into(), msg })
         };
+        let c = &self.hardware.core;
+        if c.sa_rows == 0 || c.sa_cols == 0 {
+            return invalid(
+                "core.sa_rows",
+                format!(
+                    "systolic array dims must be nonzero (sa_rows = {}, sa_cols = {}); \
+                     the matmul fold math divides by both",
+                    c.sa_rows, c.sa_cols
+                ),
+            );
+        }
+        if c.vpu_lanes == 0 || c.vpu_sublanes == 0 {
+            return invalid(
+                "core.vpu_lanes",
+                format!(
+                    "VPU dims must be nonzero (vpu_lanes = {}, vpu_sublanes = {}); \
+                     pooling-cycle math divides by both",
+                    c.vpu_lanes, c.vpu_sublanes
+                ),
+            );
+        }
         let m = &self.hardware.mem;
         if !m.access_granularity.is_power_of_two() {
             return invalid(
                 "mem.access_granularity",
                 format!("{} is not a power of two", m.access_granularity),
+            );
+        }
+        let d = &self.hardware.mem.dram;
+        if d.channels == 0 || d.banks_per_channel == 0 {
+            return invalid(
+                "dram.channels",
+                format!(
+                    "DRAM geometry must be nonzero (channels = {}, banks_per_channel = {}); \
+                     the per-channel bandwidth split divides by channels",
+                    d.channels, d.banks_per_channel
+                ),
             );
         }
         if m.onchip_bytes < m.access_granularity {
@@ -1048,6 +1080,25 @@ mod tests {
     #[test]
     fn preset_is_valid() {
         presets::tpuv6e_dlrm_small().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_zero_core_dims() {
+        let t = Table::parse("[core]\nsa_rows = 0").unwrap();
+        let err = SimConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("core.sa_rows"), "error names the key: {err}");
+        let t = Table::parse("[core]\nvpu_lanes = 0").unwrap();
+        let err = SimConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("core.vpu_lanes"), "error names the key: {err}");
+    }
+
+    #[test]
+    fn rejects_zero_dram_geometry() {
+        for bad in ["channels = 0", "banks_per_channel = 0"] {
+            let t = Table::parse(&format!("[dram]\n{bad}")).unwrap();
+            let err = SimConfig::from_table(&t).unwrap_err().to_string();
+            assert!(err.contains("dram.channels"), "error names the key: {err}");
+        }
     }
 
     #[test]

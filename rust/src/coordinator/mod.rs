@@ -80,12 +80,12 @@ impl TimingModel for NoTiming {
 /// served batch size (memoized — the simulator is deterministic).
 pub struct EngineTiming {
     cfg: crate::config::SimConfig,
-    cache: std::collections::HashMap<usize, f64>,
+    cache: std::collections::BTreeMap<usize, f64>,
 }
 
 impl EngineTiming {
     pub fn new(cfg: crate::config::SimConfig) -> Self {
-        EngineTiming { cfg, cache: std::collections::HashMap::new() }
+        EngineTiming { cfg, cache: std::collections::BTreeMap::new() }
     }
 }
 

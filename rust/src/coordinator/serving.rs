@@ -136,6 +136,7 @@ pub struct ServingReport {
     pub per_batch: Vec<ServedBatch>,
     /// Per-request records, in dispatch order (not serialized to JSON;
     /// tests and tooling consume them in-process).
+    // eonsim-lint: allow(schema, reason = "in-process only by design: per-request rows would bloat the JSON report and serving_to_json tests assert their absence")
     pub per_request: Vec<RequestLatency>,
 }
 

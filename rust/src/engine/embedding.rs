@@ -336,7 +336,11 @@ impl EmbeddingSim {
             .max()
             .unwrap_or(0);
         let global_cycles = (global_busy as f64 / self.global_bytes_per_cycle).ceil() as u64;
-        let mem_cycles = (offchip_done - base)
+        // offchip_done starts at base and is only ever max()ed upward,
+        // but keep the subtraction saturating so a future scheduling
+        // change cannot wrap the whole batch's cycle count.
+        let mem_cycles = offchip_done
+            .saturating_sub(base)
             .max(onchip_cycles)
             .max(global_cycles)
             .max(issue_cycles);
@@ -400,6 +404,25 @@ mod tests {
             ));
         }
         (sim.simulate_batch(&trace), cfg)
+    }
+
+    #[test]
+    fn batch_cycles_never_wrap() {
+        // regression: mem_cycles derives from `offchip_done - base`; if
+        // that subtraction ever wrapped, the batch total would explode
+        // toward u64::MAX. Keep totals sane and `now` monotone across
+        // consecutive batches.
+        let cfg = small_cfg(OnchipPolicy::Cache(CachePolicyKind::Lru));
+        let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+        let mut sim = EmbeddingSim::new(&cfg);
+        let mut prev_now = 0u64;
+        for _ in 0..3 {
+            let trace = gen.next_batch();
+            let r = sim.simulate_batch(&trace);
+            assert!(r.cycles < 1 << 40, "batch cycles wrapped: {}", r.cycles);
+            assert!(sim.now > prev_now, "simulated clock must advance");
+            prev_now = sim.now;
+        }
     }
 
     #[test]

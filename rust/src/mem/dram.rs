@@ -75,9 +75,11 @@ impl DramModel {
         {
             Some(MapShifts {
                 line_shift: line_bytes.trailing_zeros(),
+                // eonsim-lint: allow(underflow, reason = "the is_power_of_two guard above rejects 0, so channels >= 1 and the mask cannot wrap")
                 chan_mask: cfg.channels as u64 - 1,
                 chan_shift: (cfg.channels as u64).trailing_zeros(),
                 row_line_shift: lines_per_row.trailing_zeros(),
+                // eonsim-lint: allow(underflow, reason = "the is_power_of_two guard above rejects 0, so banks_per_channel >= 1 and the mask cannot wrap")
                 bank_mask: cfg.banks_per_channel as u64 - 1,
                 bank_shift: (cfg.banks_per_channel as u64).trailing_zeros(),
             })

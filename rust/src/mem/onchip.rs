@@ -95,6 +95,7 @@ impl Cache {
     /// invalid way if present, else evicting the policy's victim).
     pub fn access(&mut self, line_addr: u64) -> AccessOutcome {
         let line = line_addr / self.line_bytes;
+        // eonsim-lint: allow(underflow, reason = "sets is (lines/ways).max(1) rounded to a power of two at construction, so sets >= 1 and the mask cannot wrap")
         let set = (line as usize) & (self.sets - 1);
         let base = set * self.ways;
 
@@ -126,6 +127,7 @@ impl Cache {
     /// Lookup without state change (for invariant checks in tests).
     pub fn probe(&self, line_addr: u64) -> bool {
         let line = line_addr / self.line_bytes;
+        // eonsim-lint: allow(underflow, reason = "sets >= 1 by construction (same invariant as access)")
         let set = (line as usize) & (self.sets - 1);
         let base = set * self.ways;
         (0..self.ways).any(|w| self.tags[base + w] == line)

@@ -4,12 +4,14 @@
 //! does. Mitigates thrashing under low-skew traffic where LRU/SRRIP
 //! degrade.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
-/// Frequency profile over `(table, row)` vector ids.
+/// Frequency profile over `(table, row)` vector ids. Ordered maps keep
+/// every derived artifact (top-K sets, pinned bytes) independent of
+/// insertion/hash order, so reports stay byte-identical across runs.
 #[derive(Debug, Default, Clone)]
 pub struct Profile {
-    counts: HashMap<(u32, u64), u64>,
+    counts: BTreeMap<(u32, u64), u64>,
 }
 
 impl Profile {
@@ -80,7 +82,7 @@ impl Profile {
 /// The pinned-vector set derived from a [`Profile`] and a capacity.
 #[derive(Debug, Clone)]
 pub struct PinSet {
-    pinned: HashSet<(u32, u64)>,
+    pinned: BTreeSet<(u32, u64)>,
     capacity_vectors: usize,
 }
 
@@ -92,13 +94,13 @@ impl PinSet {
         let pinned = profile
             .top_k(capacity_vectors)
             .into_iter()
-            .collect::<HashSet<_>>();
+            .collect::<BTreeSet<_>>();
         PinSet { pinned, capacity_vectors }
     }
 
     /// Empty pin set (profiling disabled).
     pub fn empty() -> Self {
-        PinSet { pinned: HashSet::new(), capacity_vectors: 0 }
+        PinSet { pinned: BTreeSet::new(), capacity_vectors: 0 }
     }
 
     #[inline]

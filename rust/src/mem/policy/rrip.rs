@@ -150,6 +150,7 @@ impl ReplacePolicy for Drrip {
                 false
             }
             SetRole::BrripLeader => {
+                // eonsim-lint: allow(underflow, reason = "psel is a signed i32 saturated into [0, PSEL_MAX] by the max(0); no unsigned wrap is possible")
                 self.psel = (self.psel - 1).max(0);
                 true
             }

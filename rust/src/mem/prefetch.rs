@@ -52,6 +52,7 @@ impl SoftwarePrefetcher {
     #[inline]
     pub fn consume(&mut self) -> bool {
         if self.inflight > 0 {
+            // eonsim-lint: allow(underflow, reason = "guarded by the inflight > 0 branch condition directly above")
             self.inflight -= 1;
             self.covered += 1;
             true

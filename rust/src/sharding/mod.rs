@@ -726,6 +726,7 @@ impl ShardedEmbeddingSim {
             // The travelling share splits across the tiers in exact
             // proportion to where each bag's home device sits: same node
             // (intra links) or another node (the node uplink).
+            // eonsim-lint: allow(underflow, reason = "n = devices.len() >= 1 is enforced by config validate (sharding.devices >= 1), so n - 1 cannot wrap")
             let total = part.exchange_bags * self.slice_bytes[device] * (n as u64 - 1)
                 / n as u64;
             let travel = part.intra_bags + part.inter_bags;
@@ -744,6 +745,7 @@ impl ShardedEmbeddingSim {
             // per-node replica bags ship whole from the node leader to
             // their home device over the intra links (same-node by
             // construction). Per-device replicas live at home: free.
+            // eonsim-lint: allow(underflow, reason = "inter <= total by construction: it is total scaled by the ratios inter_bags/travel and node_led_inter_bags/inter_bags, both <= 1")
             let intra = (total - inter) + part.replica_ship_bags * self.full_vec_bytes;
             intra_bytes.push(intra);
             inter_bytes.push(inter);

@@ -21,12 +21,14 @@
 
 use crate::config::WorkloadConfig;
 use crate::mem::policy::pinning::Profile;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
-/// The set of `(table, row)` pairs replicated on every device.
+/// The set of `(table, row)` pairs replicated on every device. An
+/// ordered set: replica membership feeds per-device exchange accounting,
+/// which must not depend on hash order.
 #[derive(Debug, Clone, Default)]
 pub struct HotRowReplicator {
-    rows: HashSet<(u32, u64)>,
+    rows: BTreeSet<(u32, u64)>,
     k: usize,
 }
 

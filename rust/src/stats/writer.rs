@@ -13,12 +13,12 @@ pub fn to_csv(report: &SimReport) -> String {
          exchange_intra_cycles,exchange_inter_cycles,\
          interaction_cycles,top_mlp_cycles,\
          total_cycles,onchip_reads,onchip_writes,offchip_reads,offchip_writes,hits,misses,\
-         global_hits,replicated_hits\n",
+         global_hits,macs,vpu_ops,lookups,replicated_hits\n",
     );
     for b in &report.per_batch {
         let _ = writeln!(
             out,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             b.batch_index,
             b.cycles.bottom_mlp,
             b.cycles.embedding,
@@ -36,6 +36,9 @@ pub fn to_csv(report: &SimReport) -> String {
             b.mem.hits,
             b.mem.misses,
             b.mem.global_hits,
+            b.ops.macs,
+            b.ops.vpu_ops,
+            b.ops.lookups,
             b.ops.replicated_hits,
         );
     }
@@ -283,7 +286,8 @@ mod tests {
         // batch 0: bottom 1, emb 2, exchange 0/0 (intra 0, inter 0),
         // interact 3, top 4 = 10
         assert!(lines[1].starts_with("0,1,2,0,0,0,0,3,4,10,"));
-        assert!(lines[1].ends_with(",0"), "replicated_hits column closes the row");
+        assert!(lines[0].contains("global_hits,macs,vpu_ops,lookups,replicated_hits"));
+        assert!(lines[1].ends_with(",8,9,10,0"), "op counters close the row");
         assert_eq!(
             lines[0].split(',').count(),
             lines[1].split(',').count(),

@@ -1,0 +1,147 @@
+//! `eonsim-lint`: an invariant-enforcing static analysis pass over the
+//! simulator's own source.
+//!
+//! EONSim's value rests on reproducible numbers — byte-identical reports
+//! across `--threads`, exact counter conservation, documented configs —
+//! yet the defect classes that threaten those invariants (HashMap
+//! iteration order, unsigned underflow, report fields missed by a
+//! writer, wall-clock leaks into simulated time) are all *statically*
+//! detectable. This crate detects them, with a hand-rolled scanner (no
+//! `syn`; the repo builds offline with vendored deps) and six
+//! repo-specific rules. Run it as:
+//!
+//! ```text
+//! cargo run -p xtask -- lint            # gate: exit 1 on any finding
+//! cargo run -p xtask -- lint --json out.json
+//! ```
+//!
+//! See `rules::RULES` for the rule registry and CONTRIBUTING.md for the
+//! allow-comment escape hatch.
+
+pub mod rules;
+pub mod scan;
+
+pub use rules::{Finding, RULES};
+
+use scan::SourceFile;
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Lint the repo tree rooted at `root` (the directory holding the
+/// workspace `Cargo.toml`): every `.rs` file under `rust/src/` plus the
+/// config documentation contract against `rust/configs/README.md`.
+/// Returns deterministic, sorted findings; empty means clean.
+pub fn lint_root(root: &Path) -> io::Result<Vec<Finding>> {
+    let src_root = root.join("rust").join("src");
+    let mut files: BTreeMap<String, SourceFile> = BTreeMap::new();
+    for path in rust_files(&src_root)? {
+        let rel = rel_path(root, &path);
+        let text = fs::read_to_string(&path)?;
+        files.insert(rel.clone(), SourceFile::parse(&rel, &text));
+    }
+    let readme_path = root.join("rust").join("configs").join("README.md");
+    let readme = match fs::read_to_string(&readme_path) {
+        Ok(text) => Some(text),
+        Err(e) if e.kind() == io::ErrorKind::NotFound => None,
+        Err(e) => return Err(e),
+    };
+    Ok(rules::run(&files, readme.as_deref()))
+}
+
+/// All `.rs` files below `dir`, sorted for deterministic scan order.
+fn rust_files(dir: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let mut entries: Vec<PathBuf> =
+            fs::read_dir(&d)?.map(|e| e.map(|e| e.path())).collect::<Result<_, _>>()?;
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Forward-slash path of `path` relative to `root` (rule paths are
+/// specified with `/` regardless of host OS).
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Machine-readable findings report (stable field order, sorted input).
+pub fn findings_to_json(findings: &[Finding]) -> String {
+    let mut out = String::from("[\n");
+    for (i, f) in findings.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"file\":{},\"line\":{},\"rule\":{},\"snippet\":{},\"message\":{}}}",
+            json_str(&f.file),
+            f.line,
+            json_str(&f.rule),
+            json_str(&f.snippet),
+            json_str(&f.message)
+        ));
+        if i + 1 < findings.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]\n");
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escaping() {
+        let f = vec![Finding {
+            file: "a.rs".into(),
+            line: 3,
+            rule: "underflow".into(),
+            snippet: "let s = \"x\\y\";".into(),
+            message: "raw `-`".into(),
+        }];
+        let j = findings_to_json(&f);
+        assert!(j.contains("\\\"x\\\\y\\\""));
+        assert!(j.contains("\"line\":3"));
+    }
+
+    #[test]
+    fn empty_findings_is_empty_array() {
+        assert_eq!(findings_to_json(&[]), "[\n]\n");
+    }
+}

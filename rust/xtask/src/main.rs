@@ -1,0 +1,101 @@
+//! `cargo run -p xtask -- <command>` — repo-local developer tooling.
+//!
+//! Commands:
+//!   lint [--root DIR] [--json FILE] [--rules]
+//!       Run the eonsim-lint static analysis pass over the repo tree.
+//!       Exit 0 when clean, 1 on findings, 2 on usage/IO errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint(&args[1..]),
+        Some("help") | None => {
+            print_usage();
+            ExitCode::SUCCESS
+        }
+        Some(other) => {
+            eprintln!("xtask: unknown command `{other}`");
+            print_usage();
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!("usage: cargo run -p xtask -- lint [--root DIR] [--json FILE] [--rules]");
+}
+
+fn lint(args: &[String]) -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut json_out: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(v) => root = Some(PathBuf::from(v)),
+                    None => return usage_error("--root needs a directory"),
+                }
+            }
+            "--json" => {
+                i += 1;
+                match args.get(i) {
+                    Some(v) => json_out = Some(PathBuf::from(v)),
+                    None => return usage_error("--json needs a file path"),
+                }
+            }
+            "--rules" => {
+                for (name, contract) in eonsim_lint::RULES {
+                    println!("{name:12} {contract}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            other => return usage_error(&format!("unknown flag `{other}`")),
+        }
+        i += 1;
+    }
+
+    let root = root.unwrap_or_else(default_root);
+    let findings = match eonsim_lint::lint_root(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("xtask lint: failed to scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(path) = &json_out {
+        if let Err(e) = std::fs::write(path, eonsim_lint::findings_to_json(&findings)) {
+            eprintln!("xtask lint: failed to write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+        println!("    {}", f.snippet);
+    }
+    if findings.is_empty() {
+        println!("eonsim-lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("eonsim-lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn usage_error(msg: &str) -> ExitCode {
+    eprintln!("xtask lint: {msg}");
+    print_usage();
+    ExitCode::from(2)
+}
+
+/// The workspace root: `cargo run -p xtask` sets CARGO_MANIFEST_DIR to
+/// `rust/xtask`, two levels below the repo root.
+fn default_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+}

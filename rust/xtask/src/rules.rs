@@ -1,0 +1,769 @@
+//! The six repo-specific lint rules plus the allow-comment machinery.
+//!
+//! Each rule is grounded in a real defect class from this repo's history
+//! (see CONTRIBUTING.md): the PR 1 `vpu_ops` pool=0 underflow, HashMap
+//! iteration-order hazards in pinning/replication, and report fields that
+//! silently missed a writer. Rules emit `Raw` findings; a resolution pass
+//! then applies `// eonsim-lint: allow(rule, reason = "…")` comments,
+//! reports reasonless allows as `allow-syntax`, and stale allows as
+//! `unused-allow` — so the escape hatch itself cannot rot.
+
+use crate::scan::{float_context, has_binary_minus, word_in, SourceFile};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A confirmed lint finding (post allow-resolution), ordered for
+/// deterministic reports.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub snippet: String,
+    pub message: String,
+}
+
+/// Rule registry: name and one-line contract, for `xtask lint --rules`
+/// and the docs.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "determinism",
+        "no HashMap/HashSet in accounting/report paths (engine/, sharding/, stats/, \
+         mem/policy/, coordinator/) — iteration order must not leak into output",
+    ),
+    (
+        "underflow",
+        "no raw `-` on integer counters in engine/, compute/, mem/, sharding/ — use \
+         saturating_sub/checked_sub or prove the invariant in an allow reason",
+    ),
+    (
+        "schema",
+        "every report struct field reaches both the CSV and JSON emitters in \
+         stats/writer.rs, and every CycleBreakdown component is accounted in total()",
+    ),
+    (
+        "config-doc",
+        "every config key parsed in config/mod.rs is documented in \
+         rust/configs/README.md, and validate() errors name real keys",
+    ),
+    (
+        "sim-time",
+        "no Instant::now/SystemTime/available_parallelism inside simulated-time paths",
+    ),
+    (
+        "concurrency",
+        "no thread::spawn/thread::scope outside parallel.rs and the sharded fan-out",
+    ),
+];
+
+const DET_PATHS: &[&str] = &[
+    "rust/src/engine/",
+    "rust/src/sharding/",
+    "rust/src/stats/",
+    "rust/src/mem/policy/",
+    "rust/src/coordinator/",
+];
+const UND_PATHS: &[&str] =
+    &["rust/src/engine/", "rust/src/compute/", "rust/src/mem/", "rust/src/sharding/"];
+const TIME_PATHS: &[&str] = &[
+    "rust/src/engine/",
+    "rust/src/compute/",
+    "rust/src/mem/",
+    "rust/src/sharding/",
+    "rust/src/stats/",
+    "rust/src/trace/",
+    "rust/src/coordinator/serving.rs",
+];
+const CONC_EXEMPT: &[&str] = &["rust/src/parallel.rs", "rust/src/sharding/mod.rs"];
+
+const TIME_TOKENS: &[&str] =
+    &["Instant::now", "SystemTime", "available_parallelism", "available_threads"];
+const CONC_TOKENS: &[&str] = &["thread::spawn", "thread::scope", "rayon", "crossbeam"];
+
+fn in_paths(rel: &str, paths: &[&str]) -> bool {
+    paths.iter().any(|p| rel.starts_with(p))
+}
+
+/// An unresolved finding: file/line/rule/message before allow filtering.
+struct Raw {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+/// Run every rule over the scanned files and resolve allow comments.
+/// `readme` is the text of `rust/configs/README.md` when present (the
+/// config-doc rule is skipped without it, so fixture trees stay small).
+pub fn run(files: &BTreeMap<String, SourceFile>, readme: Option<&str>) -> Vec<Finding> {
+    let mut raw: Vec<Raw> = Vec::new();
+    for (rel, sf) in files {
+        per_line_rules(rel, sf, &mut raw);
+    }
+    schema_rule(files, &mut raw);
+    config_doc_rule(files, readme, &mut raw);
+    resolve_allows(files, raw)
+}
+
+fn per_line_rules(rel: &str, sf: &SourceFile, raw: &mut Vec<Raw>) {
+    for (idx, li) in sf.lines.iter().enumerate() {
+        if li.in_test {
+            continue;
+        }
+        let line = idx + 1;
+        if in_paths(rel, DET_PATHS) {
+            for tok in ["HashMap", "HashSet"] {
+                if word_in(&li.code, tok) {
+                    raw.push(Raw {
+                        file: rel.to_string(),
+                        line,
+                        rule: "determinism",
+                        message: format!(
+                            "{tok} in an accounting/report path: iteration order can leak \
+                             into output; use BTreeMap/BTreeSet or a sorted drain"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+        if in_paths(rel, UND_PATHS)
+            && has_binary_minus(&li.code)
+            && !float_context(&li.code, &li.strings)
+        {
+            raw.push(Raw {
+                file: rel.to_string(),
+                line,
+                rule: "underflow",
+                message: "raw `-` on an integer in a counter path; use saturating_sub/\
+                          checked_sub or prove the invariant in an allow reason"
+                    .to_string(),
+            });
+        }
+        if in_paths(rel, TIME_PATHS) {
+            for tok in TIME_TOKENS {
+                if li.code.contains(tok) {
+                    raw.push(Raw {
+                        file: rel.to_string(),
+                        line,
+                        rule: "sim-time",
+                        message: format!("host time source `{tok}` inside a simulated-time path"),
+                    });
+                    break;
+                }
+            }
+        }
+        if !CONC_EXEMPT.contains(&rel) {
+            for tok in CONC_TOKENS {
+                if li.code.contains(tok) {
+                    raw.push(Raw {
+                        file: rel.to_string(),
+                        line,
+                        rule: "concurrency",
+                        message: format!(
+                            "`{tok}` outside parallel.rs and the sharded fan-out \
+                             (concurrency is confined so determinism stays auditable)"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// schema rule
+// ---------------------------------------------------------------------------
+
+/// The report-schema contract: which writer functions must mention every
+/// field of which struct. A struct listed with an empty CSV set is
+/// JSON-only by design (hierarchical payloads that CSV cannot express).
+struct SchemaReq {
+    file: &'static str,
+    name: &'static str,
+    csv: &'static [&'static str],
+    json: &'static [&'static str],
+}
+
+const SCHEMA: &[SchemaReq] = &[
+    SchemaReq {
+        file: "rust/src/stats/mod.rs",
+        name: "CycleBreakdown",
+        csv: &["to_csv"],
+        json: &["to_json", "batch_json"],
+    },
+    SchemaReq {
+        file: "rust/src/stats/mod.rs",
+        name: "MemCounts",
+        csv: &["to_csv"],
+        json: &["to_json", "batch_json"],
+    },
+    SchemaReq {
+        file: "rust/src/stats/mod.rs",
+        name: "OpCounts",
+        csv: &["to_csv"],
+        json: &["to_json", "batch_json"],
+    },
+    SchemaReq {
+        file: "rust/src/stats/mod.rs",
+        name: "BatchResult",
+        csv: &["to_csv"],
+        json: &["batch_json"],
+    },
+    SchemaReq { file: "rust/src/stats/mod.rs", name: "SimReport", csv: &[], json: &["to_json"] },
+    SchemaReq {
+        file: "rust/src/stats/mod.rs",
+        name: "DeviceCounters",
+        csv: &[],
+        json: &["device_json"],
+    },
+    SchemaReq {
+        file: "rust/src/coordinator/serving.rs",
+        name: "ServedBatch",
+        csv: &["serving_to_csv"],
+        json: &["serving_to_json"],
+    },
+    SchemaReq {
+        file: "rust/src/coordinator/serving.rs",
+        name: "LatencyStats",
+        csv: &[],
+        json: &["latency_json"],
+    },
+    SchemaReq {
+        file: "rust/src/coordinator/serving.rs",
+        name: "ServingReport",
+        csv: &[],
+        json: &["serving_to_json"],
+    },
+];
+
+const WRITER: &str = "rust/src/stats/writer.rs";
+
+/// Fields of `pub struct <name> { … }` as `(ident, 1-based line)`.
+fn struct_fields(sf: &SourceFile, name: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut depth: Option<i64> = None;
+    for (idx, li) in sf.lines.iter().enumerate() {
+        if li.in_test {
+            continue;
+        }
+        match depth {
+            None => {
+                if declares(&li.code, "struct", name) && li.code.contains('{') {
+                    depth = Some(1);
+                }
+            }
+            Some(d) => {
+                if let Some(field) = field_ident(&li.code) {
+                    out.push((field, idx + 1));
+                }
+                let d = d + brace_delta(&li.code);
+                if d <= 0 {
+                    break;
+                }
+                depth = Some(d);
+            }
+        }
+    }
+    out
+}
+
+/// Body text of `fn <name>` (code plus string contents), or `None`.
+fn fn_body(sf: &SourceFile, name: &str) -> Option<String> {
+    let mut out = String::new();
+    let mut depth: i64 = 0;
+    let mut started = false;
+    let mut in_fn = false;
+    for li in sf.lines.iter() {
+        if li.in_test {
+            continue;
+        }
+        if !in_fn {
+            if declares(&li.code, "fn", name) {
+                in_fn = true;
+            } else {
+                continue;
+            }
+        }
+        out.push_str(&li.code);
+        out.push(' ');
+        for s in &li.strings {
+            out.push_str(s);
+            out.push(' ');
+        }
+        out.push('\n');
+        if li.code.contains('{') {
+            started = true;
+        }
+        depth += brace_delta(&li.code);
+        if started && depth <= 0 {
+            break;
+        }
+    }
+    if in_fn {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+fn brace_delta(code: &str) -> i64 {
+    let mut d = 0i64;
+    for c in code.chars() {
+        match c {
+            '{' => d += 1,
+            '}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+/// `kw <name>` with word boundaries on both (e.g. `struct OpCounts`,
+/// `fn total`), tolerant of `pub`/whitespace prefixes anywhere on the line.
+fn declares(code: &str, kw: &str, name: &str) -> bool {
+    let b = code.as_bytes();
+    let k = kw.as_bytes();
+    let n = name.as_bytes();
+    if b.len() < k.len() {
+        return false;
+    }
+    for i in 0..=b.len() - k.len() {
+        if &b[i..i + k.len()] != k {
+            continue;
+        }
+        let ok_l = i == 0 || !is_word(b[i - 1]);
+        let after = i + k.len();
+        if !ok_l || after >= b.len() || is_word(b[after]) {
+            continue;
+        }
+        let mut j = after;
+        while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+            j += 1;
+        }
+        if j + n.len() <= b.len() && &b[j..j + n.len()] == n {
+            let e = j + n.len();
+            if e == b.len() || !is_word(b[e]) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// `pub <ident>:` field declaration on a struct body line.
+fn field_ident(code: &str) -> Option<String> {
+    let t = code.trim_start();
+    let t = t.strip_prefix("pub ")?;
+    let t = t.trim_start();
+    let ident: String = t
+        .chars()
+        .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '_')
+        .collect();
+    if ident.is_empty() {
+        return None;
+    }
+    let rest = t[ident.len()..].trim_start();
+    if rest.starts_with(':') {
+        Some(ident)
+    } else {
+        None
+    }
+}
+
+fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn schema_rule(files: &BTreeMap<String, SourceFile>, raw: &mut Vec<Raw>) {
+    let Some(writer) = files.get(WRITER) else {
+        return; // fixture trees without a writer skip the schema rule
+    };
+    let mut regions: BTreeMap<&str, String> = BTreeMap::new();
+    for req in SCHEMA {
+        for fn_name in req.csv.iter().chain(req.json.iter()) {
+            if !regions.contains_key(fn_name) {
+                if let Some(body) = fn_body(writer, fn_name) {
+                    regions.insert(fn_name, body);
+                }
+            }
+        }
+    }
+    for req in SCHEMA {
+        let Some(sf) = files.get(req.file) else {
+            continue;
+        };
+        for (field, line) in struct_fields(sf, req.name) {
+            for (kind, fns) in [("CSV", req.csv), ("JSON", req.json)] {
+                if fns.is_empty() {
+                    continue;
+                }
+                let found = fns.iter().any(|f| {
+                    regions.get(f).map(|body| word_in(body, &field)).unwrap_or(false)
+                });
+                if !found {
+                    raw.push(Raw {
+                        file: req.file.to_string(),
+                        line,
+                        rule: "schema",
+                        message: format!(
+                            "{}.{} is not emitted by the {} writer ({}) in stats/writer.rs",
+                            req.name,
+                            field,
+                            kind,
+                            fns.join("/")
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    // CycleBreakdown::total() must account for every component it exposes.
+    if let Some(stats) = files.get("rust/src/stats/mod.rs") {
+        if let Some(total) = fn_body(stats, "total") {
+            for (field, line) in struct_fields(stats, "CycleBreakdown") {
+                if !word_in(&total, &field) {
+                    raw.push(Raw {
+                        file: "rust/src/stats/mod.rs".to_string(),
+                        line,
+                        rule: "schema",
+                        message: format!(
+                            "CycleBreakdown.{field} is not accounted in CycleBreakdown::total()"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// config-doc rule
+// ---------------------------------------------------------------------------
+
+/// Typed getters on `config::parse::Table` whose first string argument is
+/// a config key. `contains`/`get` are section-presence probes, not keys.
+const GETTERS: &[&str] = &[
+    "str_", "int", "u64_", "usize_", "float", "bool_", "int_array", "u64_or", "usize_or",
+    "float_or", "str_or", "bool_or",
+];
+
+const CONFIG_MOD: &str = "rust/src/config/mod.rs";
+const README_REL: &str = "rust/configs/README.md";
+
+fn is_key_shaped(s: &str) -> bool {
+    let mut first = true;
+    let mut prev_dot = true; // segment must not start with dot/digit run only
+    if s.is_empty() {
+        return false;
+    }
+    for c in s.chars() {
+        match c {
+            'a'..='z' => {
+                first = false;
+                prev_dot = false;
+            }
+            '0'..='9' | '_' => {
+                if first || prev_dot {
+                    return false;
+                }
+            }
+            '.' => {
+                if first || prev_dot {
+                    return false;
+                }
+                prev_dot = true;
+            }
+            _ => return false,
+        }
+    }
+    !prev_dot
+}
+
+/// `(key, line)` pairs for every key literal passed to a Table getter
+/// inside `fn from_table`, via a tiny cross-line state machine: seeing
+/// `.getter(` arms the scanner; the next string literal is the key.
+fn parsed_config_keys(sf: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut in_fn = false;
+    let mut depth: i64 = 0;
+    let mut started = false;
+    let mut pending_key = false;
+    for (idx, li) in sf.lines.iter().enumerate() {
+        if li.in_test {
+            continue;
+        }
+        if !in_fn {
+            if declares(&li.code, "fn", "from_table") {
+                in_fn = true;
+                depth = 0;
+                started = false;
+            } else {
+                continue;
+            }
+        }
+        scan_getter_line(li, idx + 1, &mut pending_key, &mut out);
+        if li.code.contains('{') {
+            started = true;
+        }
+        depth += brace_delta(&li.code);
+        if started && depth <= 0 {
+            in_fn = false;
+        }
+    }
+    out.retain(|(k, _)| is_key_shaped(k));
+    out
+}
+
+/// One line of the getter state machine: walk code left to right, arming
+/// on `.getter(` and capturing the next opening string literal.
+fn scan_getter_line(
+    li: &crate::scan::Line,
+    line: usize,
+    pending_key: &mut bool,
+    out: &mut Vec<(String, usize)>,
+) {
+    let b = li.code.as_bytes();
+    let mut str_idx = 0usize; // which literal of li.strings comes next
+    let mut quote_open = false;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'"' {
+            if !quote_open {
+                if *pending_key {
+                    if let Some(s) = li.strings.get(str_idx) {
+                        out.push((s.clone(), line));
+                    }
+                    *pending_key = false;
+                }
+                quote_open = true;
+            } else {
+                quote_open = false;
+                str_idx += 1;
+            }
+            i += 1;
+            continue;
+        }
+        if is_word(c) {
+            let start = i;
+            while i < b.len() && is_word(b[i]) {
+                i += 1;
+            }
+            let ident = &li.code[start..i];
+            let dotted = start > 0 && b[start - 1] == b'.';
+            if dotted && GETTERS.contains(&ident) {
+                let mut j = i;
+                while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+                    j += 1;
+                }
+                if j < b.len() && b[j] == b'(' {
+                    *pending_key = true;
+                }
+            }
+            continue;
+        }
+        i += 1;
+    }
+}
+
+/// README blocks keyed by `[section]` heading; `_top` holds everything
+/// under headings with no `[section]` marker (incl. the preamble).
+fn readme_sections(text: &str) -> BTreeMap<String, String> {
+    let mut out: BTreeMap<String, String> = BTreeMap::new();
+    let mut cur = "_top".to_string();
+    for line in text.lines() {
+        if line.starts_with('#') {
+            cur = heading_section(line).unwrap_or_else(|| "_top".to_string());
+        }
+        out.entry(cur.clone()).or_default().push_str(line);
+        out.entry(cur.clone()).or_default().push('\n');
+    }
+    out
+}
+
+fn heading_section(line: &str) -> Option<String> {
+    let open = line.find('[')?;
+    let rest = &line[open + 1..];
+    let close = rest.find(']')?;
+    let name = &rest[..close];
+    if !name.is_empty()
+        && name.chars().all(|c| c.is_ascii_lowercase() || c == '_' || c == '.')
+    {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+fn config_doc_rule(
+    files: &BTreeMap<String, SourceFile>,
+    readme: Option<&str>,
+    raw: &mut Vec<Raw>,
+) {
+    let Some(cfg) = files.get(CONFIG_MOD) else {
+        return;
+    };
+    let Some(readme) = readme else {
+        return;
+    };
+    let parsed = parsed_config_keys(cfg);
+    let sections = readme_sections(readme);
+    let empty = String::new();
+
+    for (key, line) in &parsed {
+        let (sec, bare) = match key.rfind('.') {
+            Some(p) => (&key[..p], &key[p + 1..]),
+            None => ("_top", key.as_str()),
+        };
+        let block = sections.get(sec).unwrap_or(&empty);
+        let documented = if sec == "_top" {
+            word_in(block, bare)
+        } else {
+            word_in(block, bare) || word_in(readme, key)
+        };
+        if !documented {
+            let place = if sec == "_top" {
+                "the top-level key section".to_string()
+            } else {
+                format!("`[{sec}]`")
+            };
+            raw.push(Raw {
+                file: CONFIG_MOD.to_string(),
+                line: *line,
+                rule: "config-doc",
+                message: format!(
+                    "config key `{key}` is parsed but not documented under {place} in {README_REL}"
+                ),
+            });
+        }
+    }
+
+    // validate() errors must name a real parsed key or a section.
+    let parsed_keys: BTreeSet<&str> = parsed.iter().map(|(k, _)| k.as_str()).collect();
+    let section_names: BTreeSet<&str> = parsed_keys
+        .iter()
+        .filter_map(|k| k.rfind('.').map(|p| &k[..p]))
+        .collect();
+    let mut in_fn = false;
+    let mut depth: i64 = 0;
+    let mut started = false;
+    let mut pending_invalid = false;
+    for (idx, li) in cfg.lines.iter().enumerate() {
+        if li.in_test {
+            continue;
+        }
+        if !in_fn {
+            if declares(&li.code, "fn", "validate") {
+                in_fn = true;
+                depth = 0;
+                started = false;
+            } else {
+                continue;
+            }
+        }
+        if li.code.contains("invalid(") || word_in(&li.code, "Invalid") {
+            pending_invalid = true;
+        }
+        if pending_invalid {
+            if let Some(key) = li.strings.first() {
+                pending_invalid = false;
+                if is_key_shaped(key)
+                    && !parsed_keys.contains(key.as_str())
+                    && !section_names.contains(key.as_str())
+                {
+                    raw.push(Raw {
+                        file: CONFIG_MOD.to_string(),
+                        line: idx + 1,
+                        rule: "config-doc",
+                        message: format!(
+                            "validate error names `{key}`, which is not a parsed config key \
+                             or section"
+                        ),
+                    });
+                }
+            }
+        }
+        if li.code.contains('{') {
+            started = true;
+        }
+        depth += brace_delta(&li.code);
+        if started && depth <= 0 {
+            break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// allow resolution
+// ---------------------------------------------------------------------------
+
+/// Apply allow comments: a matching allow suppresses its finding (and is
+/// marked used); reasonless allows become `allow-syntax`; reasoned allows
+/// that suppress nothing become `unused-allow`.
+fn resolve_allows(files: &BTreeMap<String, SourceFile>, raw: Vec<Raw>) -> Vec<Finding> {
+    let mut used: BTreeSet<(String, usize, String)> = BTreeSet::new();
+    let mut out: Vec<Finding> = Vec::new();
+
+    for rf in raw {
+        let sf = &files[&rf.file];
+        let allows = sf
+            .lines
+            .get(rf.line - 1)
+            .map(|li| li.allows.as_slice())
+            .unwrap_or(&[]);
+        if allows.iter().any(|a| a.rule == rf.rule) {
+            used.insert((rf.file.clone(), rf.line, rf.rule.to_string()));
+        } else {
+            out.push(Finding {
+                snippet: sf.snippet(rf.line),
+                file: rf.file,
+                line: rf.line,
+                rule: rf.rule.to_string(),
+                message: rf.message,
+            });
+        }
+    }
+
+    for (rel, sf) in files {
+        for (idx, li) in sf.lines.iter().enumerate() {
+            if li.in_test {
+                continue;
+            }
+            let line = idx + 1;
+            for allow in &li.allows {
+                let reasonless =
+                    allow.reason.as_deref().map(|r| r.trim().is_empty()).unwrap_or(true);
+                if reasonless {
+                    out.push(Finding {
+                        file: rel.clone(),
+                        line,
+                        rule: "allow-syntax".to_string(),
+                        snippet: sf.snippet(line),
+                        message: format!(
+                            "allow({rule}) is missing its mandatory reason (use \
+                             `// eonsim-lint: allow({rule}, reason = \"…\")`)",
+                            rule = allow.rule
+                        ),
+                    });
+                } else if !used.contains(&(rel.clone(), line, allow.rule.clone())) {
+                    out.push(Finding {
+                        file: rel.clone(),
+                        line,
+                        rule: "unused-allow".to_string(),
+                        snippet: sf.snippet(line),
+                        message: format!(
+                            "allow({}) suppresses nothing on this line — remove it or fix \
+                             the rule reference",
+                            allow.rule
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    out.sort();
+    out.dedup();
+    out
+}

@@ -1,0 +1,507 @@
+//! A hand-rolled Rust source scanner for `eonsim-lint`.
+//!
+//! Deliberately **not** a full parser (no `syn` — the repo builds with
+//! vendored, offline deps only): a line-oriented lexical cleaner that is
+//! exact about the three things the rules need and conservative about
+//! everything else:
+//!
+//! * comments (`//`, nested `/* */`) and string literals (plain, raw,
+//!   multi-line continuations) are stripped from the *code* channel, with
+//!   string literal contents captured in a separate per-line channel so
+//!   rules can match either code tokens or emitted text;
+//! * `#[cfg(test)]` items (the `mod tests` blocks) are brace-matched and
+//!   excluded — test code may use `HashMap`, wall clocks, raw `-`, etc.;
+//! * `// eonsim-lint: allow(<rule>, reason = "...")` escape-hatch
+//!   comments are parsed and attached to the line they guard (the same
+//!   line for a trailing comment, the next code line for a comment-only
+//!   line).
+//!
+//! Every heuristic here has a mirror in the rule layer's fixtures: if the
+//! scanner misclassifies a construct the repo actually uses, a fixture
+//! breaks before the tree does.
+
+/// One parsed `// eonsim-lint: allow(...)` escape-hatch entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    pub rule: String,
+    /// `None` or empty ⇒ the mandatory reason is missing (an
+    /// `allow-syntax` finding in its own right).
+    pub reason: Option<String>,
+}
+
+/// One source line after cleaning.
+#[derive(Debug, Default)]
+pub struct Line {
+    /// Code with comments removed and string contents blanked (each
+    /// literal collapses to `""`, so quote positions survive).
+    pub code: String,
+    /// String literal contents, in order, attached to the line on which
+    /// the literal *starts*.
+    pub strings: Vec<String>,
+    /// Inside a `#[cfg(test)]` item (excluded from every rule).
+    pub in_test: bool,
+    /// Allow entries guarding this line.
+    pub allows: Vec<Allow>,
+}
+
+/// A scanned file: raw lines (for snippets) plus cleaned lines.
+#[derive(Debug)]
+pub struct SourceFile {
+    pub rel: String,
+    pub raw_lines: Vec<String>,
+    pub lines: Vec<Line>,
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Normal,
+    Str { start_line: usize },
+    RawStr { hashes: usize, start_line: usize },
+    Block { depth: usize },
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let raw_lines: Vec<String> = text.split('\n').map(|s| s.to_string()).collect();
+        let mut lines: Vec<Line> = Vec::with_capacity(raw_lines.len());
+        let mut state = State::Normal;
+        let mut cur_str = String::new();
+        let mut pending_allows: Vec<Allow> = Vec::new();
+
+        for (lineno, raw) in raw_lines.iter().enumerate() {
+            let mut li = Line::default();
+            let mut code = String::new();
+            let mut comment_text: Option<&str> = None;
+            let chars: Vec<(usize, char)> = raw.char_indices().collect();
+            let mut k = 0usize;
+            while k < chars.len() {
+                let (b, c) = chars[k];
+                let rest = &raw[b..];
+                match state {
+                    State::Block { depth } => {
+                        if rest.starts_with("*/") {
+                            state = if depth == 1 {
+                                State::Normal
+                            } else {
+                                State::Block { depth: depth - 1 }
+                            };
+                            k += 2;
+                        } else if rest.starts_with("/*") {
+                            state = State::Block { depth: depth + 1 };
+                            k += 2;
+                        } else {
+                            k += 1;
+                        }
+                    }
+                    State::Str { start_line } => {
+                        if c == '\\' {
+                            // Escape: keep the escaped char (or, at end of
+                            // line, a multi-line string continuation).
+                            if k + 1 < chars.len() {
+                                cur_str.push(chars[k + 1].1);
+                                k += 2;
+                            } else {
+                                k += 1;
+                            }
+                        } else if c == '"' {
+                            attach_string(&mut lines, &mut li, start_line, lineno, &mut cur_str);
+                            code.push('"');
+                            state = State::Normal;
+                            k += 1;
+                        } else {
+                            cur_str.push(c);
+                            k += 1;
+                        }
+                    }
+                    State::RawStr { hashes, start_line } => {
+                        let end: String =
+                            std::iter::once('"').chain(std::iter::repeat('#').take(hashes)).collect();
+                        if rest.starts_with(&end) {
+                            attach_string(&mut lines, &mut li, start_line, lineno, &mut cur_str);
+                            code.push('"');
+                            state = State::Normal;
+                            k += end.len();
+                        } else {
+                            cur_str.push(c);
+                            k += 1;
+                        }
+                    }
+                    State::Normal => {
+                        if rest.starts_with("//") {
+                            comment_text = Some(rest);
+                            break;
+                        } else if rest.starts_with("/*") {
+                            state = State::Block { depth: 1 };
+                            k += 2;
+                        } else if let Some(h) = raw_string_open(rest, prev_char(&code)) {
+                            state = State::RawStr { hashes: h, start_line: lineno };
+                            cur_str.clear();
+                            code.push('"');
+                            k += h + 2; // r + hashes + opening quote
+                        } else if c == '"' {
+                            state = State::Str { start_line: lineno };
+                            cur_str.clear();
+                            code.push('"');
+                            k += 1;
+                        } else if c == '\'' {
+                            // Char literal vs lifetime tick.
+                            if let Some(len) = char_literal_len(&chars, k) {
+                                code.push(' ');
+                                k += len;
+                            } else {
+                                code.push('\'');
+                                k += 1;
+                            }
+                        } else {
+                            code.push(c);
+                            k += 1;
+                        }
+                    }
+                }
+            }
+            li.code = code;
+            if let Some(comment) = comment_text {
+                for allow in parse_allows(comment) {
+                    if li.code.trim().is_empty() {
+                        pending_allows.push(allow);
+                    } else {
+                        li.allows.push(allow);
+                    }
+                }
+            }
+            if !li.code.trim().is_empty() && !pending_allows.is_empty() {
+                li.allows.append(&mut pending_allows);
+            }
+            lines.push(li);
+        }
+
+        mark_test_regions(&mut lines);
+        SourceFile { rel: rel.to_string(), raw_lines, lines }
+    }
+
+    /// Raw text of a 1-based line, trimmed and bounded, for findings.
+    pub fn snippet(&self, line: usize) -> String {
+        let raw = self.raw_lines.get(line.wrapping_sub(1)).map(String::as_str).unwrap_or("");
+        let t = raw.trim();
+        if t.len() > 120 {
+            let mut cut = 120;
+            while !t.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            format!("{}…", &t[..cut])
+        } else {
+            t.to_string()
+        }
+    }
+}
+
+/// Attach a completed (or line-spanning) string literal to the line it
+/// started on.
+fn attach_string(
+    lines: &mut [Line],
+    current: &mut Line,
+    start_line: usize,
+    current_line: usize,
+    cur: &mut String,
+) {
+    let s = std::mem::take(cur);
+    if start_line == current_line {
+        current.strings.push(s);
+    } else if let Some(li) = lines.get_mut(start_line) {
+        li.strings.push(s);
+    }
+}
+
+fn prev_char(code: &str) -> Option<char> {
+    code.chars().last()
+}
+
+/// `r"`, `r#"`, `r##"`, … at the head of `rest`, not preceded by an
+/// identifier char (so `writer"` or `var` never match). Returns hash count.
+fn raw_string_open(rest: &str, prev: Option<char>) -> Option<usize> {
+    if let Some(p) = prev {
+        if p.is_ascii_alphanumeric() || p == '_' {
+            return None;
+        }
+    }
+    let mut it = rest.chars();
+    if it.next() != Some('r') {
+        return None;
+    }
+    let mut hashes = 0usize;
+    for c in it {
+        match c {
+            '#' => hashes += 1,
+            '"' => return Some(hashes),
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// Length in chars of a char literal at position `k`, or `None` for a
+/// lifetime tick.
+fn char_literal_len(chars: &[(usize, char)], k: usize) -> Option<usize> {
+    if k + 2 < chars.len() && chars[k + 1].1 == '\\' && k + 3 < chars.len() && chars[k + 3].1 == '\''
+    {
+        return Some(4); // '\n'
+    }
+    if k + 2 < chars.len() && chars[k + 1].1 != '\\' && chars[k + 1].1 != '\'' && chars[k + 2].1 == '\''
+    {
+        return Some(3); // 'x'
+    }
+    None
+}
+
+/// Parse every `eonsim-lint: allow(rule)` / `allow(rule, reason = "…")`
+/// occurrence in a comment. A malformed tail (missing `)`, unquoted
+/// reason) yields an `Allow` with `reason: None`, which the rule layer
+/// reports as `allow-syntax`.
+pub fn parse_allows(comment: &str) -> Vec<Allow> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find("eonsim-lint:") {
+        rest = &rest[pos + "eonsim-lint:".len()..];
+        let t = rest.trim_start();
+        let Some(t) = t.strip_prefix("allow(") else {
+            continue;
+        };
+        let t = t.trim_start();
+        let rule: String =
+            t.chars().take_while(|c| c.is_ascii_lowercase() || *c == '-').collect();
+        if rule.is_empty() {
+            continue;
+        }
+        let t = t[rule.len()..].trim_start();
+        let reason = if let Some(t) = t.strip_prefix(',') {
+            let t = t.trim_start();
+            t.strip_prefix("reason").and_then(|t| {
+                let t = t.trim_start();
+                let t = t.strip_prefix('=')?;
+                let t = t.trim_start();
+                let t = t.strip_prefix('"')?;
+                let end = t.find('"')?;
+                Some(t[..end].to_string())
+            })
+        } else if t.starts_with(')') {
+            None
+        } else {
+            None
+        };
+        out.push(Allow { rule, reason });
+    }
+    out
+}
+
+/// Mark lines belonging to `#[cfg(test)]` items by brace-matching the
+/// block that follows the attribute.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut armed = false;
+    let mut in_test = false;
+    let mut test_depth: i64 = 0;
+    for li in lines.iter_mut() {
+        if !in_test && li.code.contains("#[cfg(test)]") {
+            armed = true;
+        }
+        if armed || in_test {
+            li.in_test = true;
+        }
+        for c in li.code.chars() {
+            if c == '{' {
+                if armed {
+                    in_test = true;
+                    armed = false;
+                    test_depth = depth;
+                }
+                depth += 1;
+            } else if c == '}' {
+                depth -= 1;
+                if in_test && depth == test_depth {
+                    in_test = false;
+                }
+            }
+        }
+    }
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Word-boundary substring match (`_` and alphanumerics are word chars,
+/// so `exchange` does not match `exchange_exposed`).
+pub fn word_in(text: &str, word: &str) -> bool {
+    let t = text.as_bytes();
+    let w = word.as_bytes();
+    if w.is_empty() || t.len() < w.len() {
+        return false;
+    }
+    for b in 0..=t.len() - w.len() {
+        if &t[b..b + w.len()] == w {
+            let ok_l = b == 0 || !is_word_byte(t[b - 1]);
+            let r = b + w.len();
+            let ok_r = r == t.len() || !is_word_byte(t[r]);
+            if ok_l && ok_r {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Does the cleaned code contain a *binary* `-` (or `-=`)? A `-` counts
+/// as binary when the previous significant char ends an operand
+/// (identifier, number, `)`, `]`); `->` arrows and unary negation are
+/// ignored.
+pub fn has_binary_minus(code: &str) -> bool {
+    let mut prev_sig: Option<char> = None;
+    let chars: Vec<char> = code.chars().collect();
+    let mut k = 0usize;
+    while k < chars.len() {
+        let c = chars[k];
+        if c == '-' {
+            if k + 1 < chars.len() && chars[k + 1] == '>' {
+                prev_sig = Some('>');
+                k += 2;
+                continue;
+            }
+            if let Some(p) = prev_sig {
+                if p.is_ascii_alphanumeric() || p == '_' || p == ')' || p == ']' {
+                    return true;
+                }
+            }
+        }
+        if !c.is_whitespace() {
+            prev_sig = Some(c);
+        }
+        k += 1;
+    }
+    false
+}
+
+/// Float-context exemption for the underflow rule: the line mentions an
+/// explicit float type or contains a float literal — integer-underflow
+/// reasoning does not apply.
+pub fn float_context(code: &str, strings: &[String]) -> bool {
+    let joined = format!("{} {}", code, strings.join(" "));
+    if word_in(&joined, "f64") || word_in(&joined, "f32") {
+        return true;
+    }
+    let b = joined.as_bytes();
+    for i in 0..b.len() {
+        // d.d  (e.g. `1.0`)
+        if i + 2 < b.len() && b[i].is_ascii_digit() && b[i + 1] == b'.' && b[i + 2].is_ascii_digit()
+        {
+            return true;
+        }
+        // d e [-] d  (e.g. `1e9`, `2e-3`)
+        if i + 2 < b.len() && b[i].is_ascii_digit() && b[i + 1] == b'e' {
+            if b[i + 2].is_ascii_digit() {
+                return true;
+            }
+            if i + 3 < b.len() && b[i + 2] == b'-' && b[i + 3].is_ascii_digit() {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let f = SourceFile::parse("x.rs", "let a = \"HashMap\"; // HashMap\nlet b = 1;");
+        assert!(!f.lines[0].code.contains("HashMap"));
+        assert_eq!(f.lines[0].strings, vec!["HashMap".to_string()]);
+        assert!(f.lines[1].code.contains("let b"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let f = SourceFile::parse("x.rs", "a /* x /* y */ z */ b\nc");
+        assert_eq!(f.lines[0].code.replace(' ', ""), "ab");
+        assert_eq!(f.lines[1].code, "c");
+    }
+
+    #[test]
+    fn multiline_string_attaches_to_start_line() {
+        let f = SourceFile::parse("x.rs", "let s = \"one \\\n two\";\nnext");
+        assert_eq!(f.lines[0].strings.len(), 1);
+        assert!(f.lines[0].strings[0].contains("two"));
+        assert!(f.lines[1].strings.is_empty());
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let f = SourceFile::parse("x.rs", "let s: &'a str = r#\"raw \"quoted\"\"#;");
+        assert_eq!(f.lines[0].strings, vec!["raw \"quoted\"".to_string()]);
+        assert!(f.lines[0].code.contains("&'a str"));
+    }
+
+    #[test]
+    fn char_literal_minus_is_not_code() {
+        let f = SourceFile::parse("x.rs", "let c = '-';");
+        assert!(!has_binary_minus(&f.lines[0].code));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let x = 2 - 1; }\n}\nfn b() {}";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn allow_trailing_and_line_above() {
+        let src = "let a = x - y; // eonsim-lint: allow(underflow, reason = \"proven\")\n\
+                   // eonsim-lint: allow(determinism, reason = \"sorted drain\")\n\
+                   use std::collections::HashMap;";
+        let f = SourceFile::parse("x.rs", src);
+        assert_eq!(f.lines[0].allows.len(), 1);
+        assert_eq!(f.lines[0].allows[0].rule, "underflow");
+        assert_eq!(f.lines[0].allows[0].reason.as_deref(), Some("proven"));
+        assert_eq!(f.lines[2].allows.len(), 1);
+        assert_eq!(f.lines[2].allows[0].rule, "determinism");
+    }
+
+    #[test]
+    fn allow_without_reason_parses_as_none() {
+        let allows = parse_allows("// eonsim-lint: allow(underflow)");
+        assert_eq!(allows.len(), 1);
+        assert_eq!(allows[0].reason, None);
+    }
+
+    #[test]
+    fn binary_minus_classification() {
+        assert!(has_binary_minus("a - b"));
+        assert!(has_binary_minus("x -= 1"));
+        assert!(has_binary_minus("(a) - 1"));
+        assert!(has_binary_minus("arr[i] - 1"));
+        assert!(!has_binary_minus("fn f() -> u64"));
+        assert!(!has_binary_minus("f(-1)"));
+        assert!(!has_binary_minus("let x = -1;"));
+    }
+
+    #[test]
+    fn float_context_exempts() {
+        assert!(float_context("let x = a as f64 - b;", &[]));
+        assert!(float_context("let x = 1.5 - y;", &[]));
+        assert!(float_context("let x = 1e-3 - y;", &[]));
+        assert!(!float_context("let x = a - b;", &[]));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(word_in("b.cycles.exchange,", "exchange"));
+        assert!(!word_in("exchange_exposed", "exchange"));
+        assert!(!word_in("global_hits", "hits"));
+        assert!(word_in("hits,misses", "hits"));
+    }
+}

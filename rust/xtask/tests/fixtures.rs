@@ -1,0 +1,96 @@
+//! Fixture-based end-to-end tests: each rule has one bad snippet that
+//! must fire (with the right rule name) and one good snippet that must
+//! be clean, plus the allow-comment machinery and a self-check that the
+//! shipped tree passes its own lint.
+
+use eonsim_lint::{lint_root, Finding};
+use std::path::{Path, PathBuf};
+
+fn fixture_root(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures").join(name)
+}
+
+fn lint_fixture(name: &str) -> Vec<Finding> {
+    lint_root(&fixture_root(name)).expect("fixture tree must be readable")
+}
+
+/// Assert the fixture fires at least once and *only* for `rule`.
+fn assert_fires(name: &str, rule: &str) {
+    let findings = lint_fixture(name);
+    assert!(!findings.is_empty(), "{name} must produce findings");
+    for f in &findings {
+        assert_eq!(f.rule, rule, "{name} fired unexpected rule: {f:?}");
+        assert!(f.line > 0, "findings carry 1-based lines: {f:?}");
+        assert!(!f.snippet.is_empty(), "findings carry a snippet: {f:?}");
+    }
+}
+
+fn assert_clean(name: &str) {
+    let findings = lint_fixture(name);
+    assert!(findings.is_empty(), "{name} must be clean, got: {findings:?}");
+}
+
+#[test]
+fn determinism_fixture() {
+    assert_fires("determinism_bad", "determinism");
+    assert_clean("determinism_good");
+}
+
+#[test]
+fn underflow_fixture() {
+    assert_fires("underflow_bad", "underflow");
+    assert_clean("underflow_good");
+}
+
+#[test]
+fn schema_fixture() {
+    let findings = lint_fixture("schema_bad");
+    assert_eq!(findings.len(), 3, "stall misses CSV, JSON, and total(): {findings:?}");
+    for f in &findings {
+        assert_eq!(f.rule, "schema");
+        assert!(f.message.contains("stall"), "finding names the field: {f:?}");
+    }
+    assert_clean("schema_good");
+}
+
+#[test]
+fn config_doc_fixture() {
+    let findings = lint_fixture("config_doc_bad");
+    assert!(
+        findings.iter().any(|f| f.rule == "config-doc" && f.message.contains("core.widgets")),
+        "undocumented key must be named: {findings:?}"
+    );
+    assert_clean("config_doc_good");
+}
+
+#[test]
+fn sim_time_fixture() {
+    assert_fires("sim_time_bad", "sim-time");
+    assert_clean("sim_time_good");
+}
+
+#[test]
+fn concurrency_fixture() {
+    assert_fires("concurrency_bad", "concurrency");
+    // identical code inside parallel.rs — the confinement point — is exempt
+    assert_clean("concurrency_good");
+}
+
+#[test]
+fn allow_machinery() {
+    // reasonless allow: suppresses the finding but is itself a finding
+    assert_fires("allow_reasonless", "allow-syntax");
+    // reasoned allow: suppresses, and nothing else fires
+    assert_clean("allow_reasoned");
+    // reasoned allow matching nothing: must be flagged as stale
+    assert_fires("allow_unused", "unused-allow");
+}
+
+/// The lint must pass on the repository's own tree: every surviving
+/// allow carries a reason, every report field reaches its writers.
+#[test]
+fn shipped_tree_is_clean() {
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let findings = lint_root(&repo_root).expect("repo tree must be readable");
+    assert!(findings.is_empty(), "the shipped tree must lint clean, got: {findings:?}");
+}

@@ -1,0 +1,7 @@
+//! Good: a reasoned allow suppresses the finding and is itself clean.
+
+pub fn scratch_len() -> usize {
+    // eonsim-lint: allow(determinism, reason = "fixture: map is dropped before any iteration, order never observed")
+    let m: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+    m.len()
+}

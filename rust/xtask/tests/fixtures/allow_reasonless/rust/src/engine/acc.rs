@@ -1,0 +1,8 @@
+//! Bad: the allow suppresses the determinism finding, but it has no
+//! reason — the lint demands one (`allow-syntax`).
+
+pub fn scratch_len() -> usize {
+    // eonsim-lint: allow(determinism)
+    let m: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+    m.len()
+}

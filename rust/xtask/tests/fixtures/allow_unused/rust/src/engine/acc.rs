@@ -1,0 +1,7 @@
+//! Bad: a reasoned allow that suppresses nothing — stale comments must
+//! not linger (`unused-allow`).
+
+pub fn identity(x: u64) -> u64 {
+    // eonsim-lint: allow(underflow, reason = "stale: the subtraction below was removed")
+    x
+}

@@ -1,0 +1,9 @@
+//! Bad: ad-hoc threading outside the confined fan-out.
+
+pub fn sum_shards(shards: Vec<Vec<u64>>) -> u64 {
+    let mut handles = Vec::new();
+    for shard in shards {
+        handles.push(std::thread::spawn(move || shard.iter().sum::<u64>()));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).sum()
+}

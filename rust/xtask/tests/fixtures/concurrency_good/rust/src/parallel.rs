@@ -1,0 +1,10 @@
+//! Good: the identical fan-out, but inside `parallel.rs` — the one
+//! place threading is confined to (and therefore exempt).
+
+pub fn sum_shards(shards: Vec<Vec<u64>>) -> u64 {
+    let mut handles = Vec::new();
+    for shard in shards {
+        handles.push(std::thread::spawn(move || shard.iter().sum::<u64>()));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).sum()
+}

@@ -1,0 +1,13 @@
+//! Bad: `core.widgets` is parsed but never documented in
+//! `rust/configs/README.md`.
+
+pub struct SimConfig {
+    pub widgets: usize,
+}
+
+impl SimConfig {
+    pub fn from_table(t: &Table) -> SimConfig {
+        let widgets = t.usize_or("core.widgets", 4);
+        SimConfig { widgets }
+    }
+}

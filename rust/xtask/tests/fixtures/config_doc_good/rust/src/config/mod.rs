@@ -1,0 +1,12 @@
+//! Good: the parsed key is documented under its `[core]` section.
+
+pub struct SimConfig {
+    pub widgets: usize,
+}
+
+impl SimConfig {
+    pub fn from_table(t: &Table) -> SimConfig {
+        let widgets = t.usize_or("core.widgets", 4);
+        SimConfig { widgets }
+    }
+}

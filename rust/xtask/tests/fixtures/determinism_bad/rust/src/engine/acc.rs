@@ -1,0 +1,10 @@
+//! Bad: a HashMap in an accounting path — iteration order can leak
+//! into report ordering.
+
+pub fn tally(ids: &[u64]) -> std::collections::HashMap<u64, u64> {
+    let mut counts = std::collections::HashMap::new();
+    for &id in ids {
+        *counts.entry(id).or_insert(0u64) += 1;
+    }
+    counts
+}

@@ -1,0 +1,9 @@
+//! Good: the same tally over an ordered map — deterministic iteration.
+
+pub fn tally(ids: &[u64]) -> std::collections::BTreeMap<u64, u64> {
+    let mut counts = std::collections::BTreeMap::new();
+    for &id in ids {
+        *counts.entry(id).or_insert(0u64) += 1;
+    }
+    counts
+}

@@ -1,0 +1,13 @@
+//! Bad: `stall` is a public report field but never reaches a writer,
+//! and `total()` forgets it too.
+
+pub struct CycleBreakdown {
+    pub compute: u64,
+    pub stall: u64,
+}
+
+impl CycleBreakdown {
+    pub fn total(&self) -> u64 {
+        self.compute
+    }
+}

@@ -1,0 +1,15 @@
+//! Report emitters that silently drop the `stall` column.
+
+use crate::stats::CycleBreakdown;
+
+pub fn to_csv(b: &CycleBreakdown) -> String {
+    format!("compute\n{}\n", b.compute)
+}
+
+pub fn to_json(b: &CycleBreakdown) -> String {
+    format!("{{\"compute\":{}}}", b.compute)
+}
+
+pub fn batch_json(b: &CycleBreakdown) -> String {
+    to_json(b)
+}

@@ -1,0 +1,12 @@
+//! Good: every report field reaches both emitters and `total()`.
+
+pub struct CycleBreakdown {
+    pub compute: u64,
+    pub stall: u64,
+}
+
+impl CycleBreakdown {
+    pub fn total(&self) -> u64 {
+        self.compute + self.stall
+    }
+}

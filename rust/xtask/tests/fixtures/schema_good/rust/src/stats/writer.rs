@@ -1,0 +1,15 @@
+//! Report emitters covering the full schema.
+
+use crate::stats::CycleBreakdown;
+
+pub fn to_csv(b: &CycleBreakdown) -> String {
+    format!("compute,stall\n{},{}\n", b.compute, b.stall)
+}
+
+pub fn to_json(b: &CycleBreakdown) -> String {
+    format!("{{\"compute\":{},\"stall\":{}}}", b.compute, b.stall)
+}
+
+pub fn batch_json(b: &CycleBreakdown) -> String {
+    to_json(b)
+}

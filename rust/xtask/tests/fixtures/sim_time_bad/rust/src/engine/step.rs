@@ -1,0 +1,6 @@
+//! Bad: a host wall-clock read inside a simulated-time path.
+
+pub fn step_duration_ns() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,5 @@
+//! Good: durations derive from simulated cycles, not host clocks.
+
+pub fn step_duration_ns(cycles: u64, freq_ghz: f64) -> f64 {
+    cycles as f64 / freq_ghz
+}

@@ -1,0 +1,6 @@
+//! Bad: raw `-` on unsigned counters — panics in debug, wraps in
+//! release when `done > total`.
+
+pub fn remaining(total: u64, done: u64) -> u64 {
+    total - done
+}

@@ -1,0 +1,5 @@
+//! Good: the subtraction clamps at zero instead of wrapping.
+
+pub fn remaining(total: u64, done: u64) -> u64 {
+    total.saturating_sub(done)
+}
