@@ -1,0 +1,112 @@
+//! Fleet-scale serving: route one open-loop request stream across a
+//! 4-replica fleet under each router policy and print the fleet tail —
+//! with a homogeneous fleet first, then with one 2x-degraded straggler
+//! replica — plus an autoscaler run showing the cost/tail trade.
+//!
+//! The routing comparison is the "Tail at Scale" story: with identical
+//! replicas and near-deterministic batch service, round-robin's even
+//! quarter-split is essentially as good as queue-aware routing. Add one
+//! straggler, though, and round-robin keeps feeding the slow replica
+//! its full share — its queue diverges and the *fleet* p99 blows up —
+//! while join-shortest-queue and power-of-two-choices observe the
+//! backlog and shift load to the healthy replicas.
+//!
+//! Run: `cargo run --release --example fleet_serving`
+
+use eonsim::config::{presets, OnchipPolicy, RouterPolicy};
+use eonsim::coordinator::fleet;
+use eonsim::engine::Simulator;
+
+fn main() -> anyhow::Result<()> {
+    let mut base = presets::tpuv6e_dlrm_small();
+    base.workload.embedding.num_tables = 16;
+    base.workload.embedding.rows_per_table = 100_000;
+    base.workload.embedding.pool = 32;
+    base.workload.trace.alpha = 1.1;
+    base.hardware.mem.policy = OnchipPolicy::Spm;
+    base.serving.requests = 600;
+    base.serving.max_batch = 32;
+    base.fleet.replicas = 4;
+
+    // service-capacity anchor: a full batch's simulated seconds
+    let mut probe = base.clone();
+    probe.workload.batch_size = base.serving.max_batch;
+    probe.workload.num_batches = 1;
+    let batch_secs = Simulator::new(probe).run()?.exec_time_secs();
+    let mu = base.serving.max_batch as f64 / batch_secs;
+
+    let routers =
+        [RouterPolicy::RoundRobin, RouterPolicy::Jsq, RouterPolicy::PowerOfTwo];
+    for (title, straggler, load) in [
+        ("homogeneous fleet", 1.0, 0.9 * 4.0),
+        ("one 2x straggler replica", 2.0, 0.9 * 3.5),
+    ] {
+        // 90% of the fleet's actual capacity: 4 healthy replica-shares,
+        // or 3 healthy plus a half-speed one
+        let rate = load * mu;
+        println!(
+            "== {title}: 4 replicas at {rate:.0} req/s (90% of capacity) ==",
+        );
+        println!(
+            "{:>12} {:>10} {:>10} {:>10} {:>6} {:>9}",
+            "router", "p50 ms", "p95 ms", "p99 ms", "util", "slowest"
+        );
+        for router in routers {
+            let mut cfg = base.clone();
+            cfg.fleet.router = router;
+            cfg.fleet.straggler_factor = straggler;
+            cfg.serving.arrival_rate = rate;
+            let r = fleet::simulate(&cfg)?;
+            let slowest =
+                r.per_replica.iter().map(|p| p.served).max().unwrap_or(0);
+            println!(
+                "{:>12} {:>10.3} {:>10.3} {:>10.3} {:>5.1}% {:>9}",
+                router.name(),
+                r.total.p50 * 1e3,
+                r.total.p95 * 1e3,
+                r.total.p99 * 1e3,
+                r.utilization() * 100.0,
+                slowest,
+            );
+        }
+        println!();
+    }
+
+    // autoscaling under bursty load: same traffic, fewer replica-seconds
+    println!("== autoscaler under bursty load (jsq, 4 provisioned) ==");
+    let mut cfg = base.clone();
+    cfg.fleet.router = RouterPolicy::Jsq;
+    cfg.serving.arrival = eonsim::config::ArrivalKind::Bursty;
+    cfg.serving.arrival_rate = 0.5 * mu;
+    cfg.serving.burst_factor = 16.0;
+    cfg.serving.burst_on_secs = 2.0 * batch_secs;
+    cfg.serving.burst_off_secs = 30.0 * batch_secs;
+    cfg.fleet.scale_window_secs = 2.0 * batch_secs;
+    cfg.fleet.warmup_secs = 0.0;
+    cfg.fleet.scale_up_util = 0.5;
+    cfg.fleet.scale_down_util = 0.25;
+    for autoscale in [false, true] {
+        cfg.fleet.autoscale = autoscale;
+        let r = fleet::simulate(&cfg)?;
+        let (ups, downs) = (
+            r.scale_events.iter().filter(|e| e.action == "up").count(),
+            r.scale_events.iter().filter(|e| e.action == "down").count(),
+        );
+        println!(
+            "  autoscale {:>5}: p99 {:>8.3} ms, cost/request {:.3e} replica-secs, \
+             {} ups / {} downs",
+            autoscale,
+            r.total.p99 * 1e3,
+            r.cost_per_request(),
+            ups,
+            downs,
+        );
+    }
+    println!();
+    println!("takeaways: queue-aware routing buys nothing over round-robin");
+    println!("until the fleet is heterogeneous — then it is the difference");
+    println!("between a bounded and a diverging tail. The autoscaler serves");
+    println!("the same bursty traffic for roughly half the replica-seconds");
+    println!("by draining the fleet between bursts.");
+    Ok(())
+}

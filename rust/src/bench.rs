@@ -290,6 +290,26 @@ pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
                 std::hint::black_box((r.served, r.total.p99));
             },
         ));
+
+        // 6b) fleet serving (`eonsim serve --replicas`): the same open
+        // loop routed across 4 replica pods by join-shortest-queue, with
+        // the replica cores stepped through the host worker pool — the
+        // fleet layer's cost on top of serving, tracked by `bench cmp`
+        let mut fcfg = scfg.clone();
+        fcfg.fleet.replicas = 4;
+        fcfg.fleet.router = crate::config::RouterPolicy::Jsq;
+        fcfg.serving.arrival_rate = 2_000_000.0; // saturate all 4 pods
+        fcfg.threads = opts.threads.max(1);
+        sections.push(section(
+            "fleet_e2e",
+            format!("fleet e2e ({n_requests} reqs, 4 replicas, jsq)"),
+            n_requests,
+            reps,
+            || {
+                let r = crate::coordinator::fleet::simulate(&fcfg).unwrap();
+                std::hint::black_box((r.served, r.total.p99));
+            },
+        ));
     }
 
     // 7) sharded end-to-end: identical profiled 4-device run at

@@ -413,6 +413,126 @@ impl Default for ServingConfig {
     }
 }
 
+/// Request-routing policy for the fleet serving layer (`[fleet]`,
+/// [`crate::coordinator::fleet`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Cycle through the accepting replicas in index order — blind to
+    /// load, perfectly even in counts.
+    RoundRobin,
+    /// Join-shortest-queue: route to the accepting replica with the
+    /// fewest outstanding requests (queued + in the computing batch),
+    /// lowest index on ties.
+    Jsq,
+    /// Power-of-two-choices: sample two *distinct* accepting replicas
+    /// with the fleet's SplitMix64 stream and take the less loaded
+    /// (first draw on ties). Near-JSQ quality at O(1) state reads.
+    PowerOfTwo,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "round_robin" | "rr" => Ok(Self::RoundRobin),
+            "jsq" | "shortest" => Ok(Self::Jsq),
+            "po2" | "power_of_two" => Ok(Self::PowerOfTwo),
+            other => Err(ConfigError::Invalid {
+                key: "fleet.router".into(),
+                msg: format!("unknown router policy `{other}` (want round_robin|jsq|po2)"),
+            }),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::RoundRobin => "round_robin",
+            Self::Jsq => "jsq",
+            Self::PowerOfTwo => "po2",
+        }
+    }
+}
+
+/// Fleet-scale serving configuration (`[fleet]`): how many independent
+/// SimCore replicas serve the arrival stream, how requests route to
+/// them, and the SLO-admission / autoscaling knobs layered on top. Each
+/// replica runs the `[serving]` batching policy over its own bounded
+/// queue; a replica is itself a (possibly multi-node) pod per
+/// `[sharding]`/`[topology]`. All times are simulated seconds.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Provisioned replica slots. `1` keeps `eonsim serve` on the
+    /// single-replica serving loop; `> 1` engages the fleet router.
+    pub replicas: usize,
+    /// Request router policy across replicas.
+    pub router: RouterPolicy,
+    /// Latency SLO for admission control in seconds (`slo_ms` in
+    /// TOML/CLI): an arrival whose *predicted* queue delay at its routed
+    /// replica exceeds this is shed at the front door. `0` disables
+    /// admission control. Served requests finishing above the SLO count
+    /// as `slo_violations` and are excluded from goodput.
+    pub slo_secs: f64,
+    /// Enable the utilization-driven autoscaler. Off: all `replicas`
+    /// serve for the whole run.
+    pub autoscale: bool,
+    /// Autoscaler floor: never fewer active replicas than this.
+    pub min_replicas: usize,
+    /// Autoscaler ceiling; `0` = `replicas` (every provisioned slot).
+    pub max_replicas: usize,
+    /// Scale *up* when windowed fleet utilization exceeds this.
+    pub scale_up_util: f64,
+    /// Scale *down* when windowed fleet utilization falls below this.
+    pub scale_down_util: f64,
+    /// Autoscaler evaluation window in seconds (`scale_window_ms` in
+    /// TOML): utilization is measured per window and acted on at its
+    /// boundary.
+    pub scale_window_secs: f64,
+    /// Simulated warmup penalty in seconds (`warmup_ms` in TOML): a
+    /// freshly scaled-up replica accepts no requests until its warmup
+    /// elapses (model load + compilation on the simulated clock).
+    pub warmup_secs: f64,
+    /// Degraded-replica model (the "tail at scale" straggler): the
+    /// LAST provisioned replica's batches take `straggler_factor`
+    /// times their intrinsic compute seconds (same cycles, slower
+    /// effective clock — a thermally throttled or noisy-neighbor pod).
+    /// `1.0` (the default) = a homogeneous fleet. This is the knob that
+    /// separates queue-aware routing from round-robin: a blind router
+    /// keeps feeding the slow replica its full share.
+    pub straggler_factor: f64,
+    /// Router RNG seed (the power-of-two-choices sampling stream;
+    /// independent of workload and arrival seeds).
+    pub seed: u64,
+}
+
+impl FleetConfig {
+    /// The autoscaler ceiling with the `0 = replicas` default applied.
+    pub fn max_active(&self) -> usize {
+        if self.max_replicas == 0 {
+            self.replicas
+        } else {
+            self.max_replicas.min(self.replicas)
+        }
+    }
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            replicas: 1,
+            router: RouterPolicy::RoundRobin,
+            slo_secs: 0.0,
+            autoscale: false,
+            min_replicas: 1,
+            max_replicas: 0,
+            scale_up_util: 0.8,
+            scale_down_util: 0.3,
+            scale_window_secs: 5e-3,
+            warmup_secs: 2e-3,
+            straggler_factor: 1.0,
+            seed: 0xF1EE7,
+        }
+    }
+}
+
 /// Vector + matrix unit configuration for one NPU core.
 #[derive(Debug, Clone)]
 pub struct CoreConfig {
@@ -665,6 +785,9 @@ pub struct SimConfig {
     /// Simulated-time serving layer (`[serving]` / `eonsim serve`).
     /// Inert for batch runs — `run`/`sweep`/`validate` never read it.
     pub serving: ServingConfig,
+    /// Fleet-scale serving (`[fleet]`): replica count, router, SLO
+    /// admission, autoscaling. Inert at the single-replica default.
+    pub fleet: FleetConfig,
     /// Host worker threads for the per-device fan-out and driver sweeps
     /// (`[sim] threads` / `--threads`; default = available parallelism).
     /// Purely a host-performance knob: any value produces byte-identical
@@ -816,6 +939,23 @@ impl SimConfig {
         }
         sv.seed = t.u64_or("serving.seed", sv.seed)?;
 
+        let fl = &mut cfg.fleet;
+        fl.replicas = t.usize_or("fleet.replicas", fl.replicas)?;
+        if t.contains("fleet.router") {
+            fl.router = RouterPolicy::parse(t.str_("fleet.router")?)?;
+        }
+        fl.slo_secs = t.float_or("fleet.slo_ms", fl.slo_secs * 1e3)? / 1e3;
+        fl.autoscale = t.bool_or("fleet.autoscale", fl.autoscale)?;
+        fl.min_replicas = t.usize_or("fleet.min_replicas", fl.min_replicas)?;
+        fl.max_replicas = t.usize_or("fleet.max_replicas", fl.max_replicas)?;
+        fl.scale_up_util = t.float_or("fleet.scale_up_util", fl.scale_up_util)?;
+        fl.scale_down_util = t.float_or("fleet.scale_down_util", fl.scale_down_util)?;
+        fl.scale_window_secs =
+            t.float_or("fleet.scale_window_ms", fl.scale_window_secs * 1e3)? / 1e3;
+        fl.warmup_secs = t.float_or("fleet.warmup_ms", fl.warmup_secs * 1e3)? / 1e3;
+        fl.straggler_factor = t.float_or("fleet.straggler_factor", fl.straggler_factor)?;
+        fl.seed = t.u64_or("fleet.seed", fl.seed)?;
+
         cfg.threads = t.usize_or("sim.threads", cfg.threads)?;
         cfg.seed = t.u64_or("seed", cfg.seed)?;
         cfg.validate()?;
@@ -955,6 +1095,86 @@ impl SimConfig {
                 "arrival = \"trace\" requires a trace_path of inter-arrival \
                  gaps (seconds, one per line)"
                     .into(),
+            );
+        }
+        let fl = &self.fleet;
+        if fl.replicas == 0 {
+            return invalid(
+                "fleet.replicas",
+                "at least one replica required (replicas = 1 is the \
+                 single-replica serving loop)"
+                    .into(),
+            );
+        }
+        if fl.slo_secs < 0.0 {
+            return invalid(
+                "fleet.slo_ms",
+                format!("latency SLO must be non-negative (0 disables), got {} s", fl.slo_secs),
+            );
+        }
+        if fl.warmup_secs < 0.0 {
+            return invalid(
+                "fleet.warmup_ms",
+                format!("warmup penalty must be non-negative, got {} s", fl.warmup_secs),
+            );
+        }
+        if !(fl.scale_window_secs > 0.0) {
+            return invalid(
+                "fleet.scale_window_ms",
+                format!(
+                    "autoscaler evaluation window must be positive, got {} s",
+                    fl.scale_window_secs
+                ),
+            );
+        }
+        // check the explicit ceiling before the floor: with
+        // max_replicas < min_replicas the floor check below would also
+        // fire, but the ceiling is the key the user actually mistyped
+        if fl.max_replicas != 0 && fl.max_replicas < fl.min_replicas {
+            return invalid(
+                "fleet.max_replicas",
+                format!(
+                    "autoscaler ceiling {} is below min_replicas = {} \
+                     (0 means \"use fleet.replicas\")",
+                    fl.max_replicas, fl.min_replicas
+                ),
+            );
+        }
+        if fl.min_replicas == 0 || fl.min_replicas > fl.max_active() {
+            return invalid(
+                "fleet.min_replicas",
+                format!(
+                    "autoscaler floor must satisfy 1 <= min_replicas <= {} \
+                     (the provisioned ceiling), got {}",
+                    fl.max_active(),
+                    fl.min_replicas
+                ),
+            );
+        }
+        if !(fl.straggler_factor >= 1.0) {
+            return invalid(
+                "fleet.straggler_factor",
+                format!(
+                    "straggler slowdown must be >= 1.0 (1.0 = homogeneous \
+                     fleet), got {}",
+                    fl.straggler_factor
+                ),
+            );
+        }
+        if !(fl.scale_up_util > 0.0 && fl.scale_up_util <= 1.0) {
+            return invalid(
+                "fleet.scale_up_util",
+                format!("scale-up threshold must be in (0, 1], got {}", fl.scale_up_util),
+            );
+        }
+        if !(fl.scale_down_util >= 0.0 && fl.scale_down_util < fl.scale_up_util) {
+            return invalid(
+                "fleet.scale_down_util",
+                format!(
+                    "scale-down threshold must satisfy 0 <= scale_down_util < \
+                     scale_up_util = {} (equal thresholds would oscillate), got {}",
+                    fl.scale_up_util, fl.scale_down_util
+                ),
             );
         }
         let s = &self.sharding;
@@ -1316,6 +1536,85 @@ mod tests {
         for s in ["poisson", "bursty", "trace"] {
             assert_eq!(ArrivalKind::parse(s).unwrap().name(), s);
         }
+    }
+
+    #[test]
+    fn fleet_defaults_are_valid_and_inert() {
+        let cfg = SimConfig::from_table(&Table::parse("").unwrap()).unwrap();
+        let fl = &cfg.fleet;
+        assert_eq!(fl.replicas, 1, "single-replica loop by default");
+        assert_eq!(fl.router, RouterPolicy::RoundRobin);
+        assert_eq!(fl.slo_secs, 0.0, "SLO admission disabled by default");
+        assert!(!fl.autoscale);
+        assert_eq!(fl.straggler_factor, 1.0, "homogeneous fleet by default");
+        assert_eq!(fl.max_active(), 1, "0 = max_replicas defaults to replicas");
+    }
+
+    #[test]
+    fn fleet_section_parses() {
+        let t = Table::parse(
+            "[fleet]\nreplicas = 8\nrouter = \"po2\"\nslo_ms = 1.5\n\
+             autoscale = true\nmin_replicas = 2\nmax_replicas = 6\n\
+             scale_up_util = 0.9\nscale_down_util = 0.2\n\
+             scale_window_ms = 4\nwarmup_ms = 3\nstraggler_factor = 1.5\n\
+             seed = 42",
+        )
+        .unwrap();
+        let fl = SimConfig::from_table(&t).unwrap().fleet;
+        assert_eq!(fl.replicas, 8);
+        assert_eq!(fl.router, RouterPolicy::PowerOfTwo);
+        assert!((fl.slo_secs - 1.5e-3).abs() < 1e-12);
+        assert!(fl.autoscale);
+        assert_eq!((fl.min_replicas, fl.max_replicas), (2, 6));
+        assert_eq!(fl.max_active(), 6);
+        assert_eq!((fl.scale_up_util, fl.scale_down_util), (0.9, 0.2));
+        assert!((fl.scale_window_secs - 4e-3).abs() < 1e-12);
+        assert!((fl.warmup_secs - 3e-3).abs() < 1e-12);
+        assert_eq!(fl.straggler_factor, 1.5);
+        assert_eq!(fl.seed, 42);
+    }
+
+    #[test]
+    fn router_policy_roundtrip() {
+        for s in ["round_robin", "jsq", "po2"] {
+            assert_eq!(RouterPolicy::parse(s).unwrap().name(), s);
+        }
+        // aliases land on the same canonical policies
+        assert_eq!(RouterPolicy::parse("rr").unwrap(), RouterPolicy::RoundRobin);
+        assert_eq!(RouterPolicy::parse("shortest").unwrap(), RouterPolicy::Jsq);
+        assert_eq!(RouterPolicy::parse("power_of_two").unwrap(), RouterPolicy::PowerOfTwo);
+    }
+
+    #[test]
+    fn fleet_validation_rejects_bad_values_with_clear_errors() {
+        for (doc, key) in [
+            ("[fleet]\nreplicas = 0", "fleet.replicas"),
+            ("[fleet]\nrouter = \"random\"", "fleet.router"),
+            ("[fleet]\nslo_ms = -1", "fleet.slo_ms"),
+            ("[fleet]\nwarmup_ms = -1", "fleet.warmup_ms"),
+            ("[fleet]\nscale_window_ms = 0", "fleet.scale_window_ms"),
+            ("[fleet]\nmin_replicas = 0", "fleet.min_replicas"),
+            // floor above the provisioned ceiling can never be satisfied
+            ("[fleet]\nreplicas = 2\nmin_replicas = 4", "fleet.min_replicas"),
+            ("[fleet]\nreplicas = 8\nmin_replicas = 4\nmax_replicas = 2", "fleet.max_replicas"),
+            ("[fleet]\nscale_up_util = 0", "fleet.scale_up_util"),
+            ("[fleet]\nscale_up_util = 1.5", "fleet.scale_up_util"),
+            // equal thresholds would flap up/down every window
+            ("[fleet]\nscale_up_util = 0.5\nscale_down_util = 0.5", "fleet.scale_down_util"),
+            ("[fleet]\nscale_down_util = -0.1", "fleet.scale_down_util"),
+            // a straggler *speedup* (or NaN) is rejected, 1.0 = off
+            ("[fleet]\nstraggler_factor = 0.5", "fleet.straggler_factor"),
+            ("[fleet]\nstraggler_factor = nan", "fleet.straggler_factor"),
+        ] {
+            let err = SimConfig::from_table(&Table::parse(doc).unwrap())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(key), "`{doc}` must name `{key}`: {err}");
+        }
+        // a ceiling wider than the provisioned pool is clamped, not an error
+        let t = Table::parse("[fleet]\nreplicas = 4\nmax_replicas = 16").unwrap();
+        let fl = SimConfig::from_table(&t).unwrap().fleet;
+        assert_eq!(fl.max_active(), 4, "ceiling clamps to provisioned replicas");
     }
 
     #[test]

@@ -79,6 +79,7 @@ pub fn tpuv6e_dlrm_small() -> SimConfig {
         workload: dlrm_rmc2_small(256),
         sharding: ShardingConfig::default(),
         serving: ServingConfig::default(),
+        fleet: FleetConfig::default(),
         threads: super::default_threads(),
         seed: 0xE05_1337,
     }

@@ -1,0 +1,943 @@
+//! Fleet-scale simulated serving: N replica serving loops behind a
+//! router, with SLO admission control and a utilization autoscaler.
+//!
+//! PR 5's [`super::serving`] loop answers "what does one NPU pod's tail
+//! latency look like under open-loop load"; the ROADMAP north star is a
+//! *datacenter* serving millions of users. This module scales the same
+//! discrete-event model out (the multi-chip/pod serving axis NeuSim
+//! frames, PAPERS.md): each replica is an independent
+//! [`ServingSim`] — its own persistent variant cores, bounded queue,
+//! and batching policy, optionally a full multi-node `[topology]` pod —
+//! and a global event loop routes every arrival to one replica:
+//!
+//! * **router policies** ([`RouterPolicy`]): round-robin,
+//!   join-shortest-queue, and power-of-two-choices, the last drawing
+//!   its replica pairs from a dedicated SplitMix64 stream
+//!   (`fleet.seed`) so routing is deterministic;
+//! * **SLO admission control**: with `fleet.slo_ms > 0`, an arrival
+//!   whose *predicted* delay at its routed replica (residual busy time
+//!   plus queued-batches × an EWMA of observed batch compute) exceeds
+//!   the SLO is **shed** at the door instead of queued — load shedding
+//!   that protects the tail at the cost of goodput, accounted
+//!   separately from queue-capacity drops;
+//! * **autoscaler**: with `fleet.autoscale`, a fixed simulated-time
+//!   window compares fleet utilization against scale-up/down
+//!   thresholds and activates (after a configurable warmup penalty) or
+//!   drains replicas between `min_replicas` and the provisioned pool,
+//!   logging every decision as a [`ScaleEvent`];
+//! * **straggler model**: `fleet.straggler_factor > 1.0` degrades the
+//!   effective clock of the *last* provisioned replica — every batch it
+//!   serves takes `straggler_factor` times its intrinsic compute
+//!   seconds (cycle counters stay unscaled). This is the
+//!   capacity-heterogeneity regime ("The Tail at Scale") where
+//!   queue-aware routing structurally beats round-robin: RR keeps
+//!   feeding the slow replica its full 1/N share, so its queue — and
+//!   the fleet p99 — diverges, while JSQ/po2 shift load away;
+//! * **host parallelism**: replicas dispatching at the same simulated
+//!   instant step their cores via
+//!   [`parallel_map_mut`](crate::parallel::parallel_map_mut) — routing,
+//!   admission, and result application stay serial in replica order, so
+//!   the report is byte-identical at any `--threads`.
+//!
+//! A fleet of one replica with admission and autoscaling disabled (the
+//! config default) reproduces [`super::serving::simulate`] exactly —
+//! request for request, batch for batch (tested).
+
+use crate::config::{RouterPolicy, SimConfig};
+use crate::coordinator::serving::{policy_dispatch_time, LatencyStats, RequestLatency};
+use crate::coordinator::serving::ServingSim;
+use crate::stats::{MemCounts, OpCounts};
+use crate::testutil::SplitMix64;
+use crate::trace::ArrivalProcess;
+use std::collections::VecDeque;
+
+/// One dispatched batch on the simulated clock, tagged with its replica.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetBatch {
+    /// Index of the replica that served it.
+    pub replica: usize,
+    /// Simulated instant the batch left the replica's queue.
+    pub dispatch_secs: f64,
+    /// Simulated instant its compute finished.
+    pub complete_secs: f64,
+    /// Requests actually served in it.
+    pub requests: usize,
+    /// Compiled variant it ran as (smallest covering `requests`).
+    pub variant: usize,
+    /// The variant's simulated compute seconds for this step.
+    pub compute_secs: f64,
+    /// Requests still queued at the replica the moment it dispatched.
+    pub queued_after: usize,
+}
+
+/// One replica's lifetime totals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaStats {
+    /// Replica index in the provisioned pool.
+    pub replica: usize,
+    /// Requests it served to completion.
+    pub served: u64,
+    /// Batches it dispatched.
+    pub batches: u64,
+    /// Simulated seconds it spent computing batches.
+    pub busy_secs: f64,
+    /// Simulated seconds it was active (provisioned-and-on), the
+    /// cost-per-request denominator's per-replica share.
+    pub active_secs: f64,
+    /// busy / fleet makespan — the fleet-level utilization share.
+    pub utilization: f64,
+    /// Total simulated NPU cycles across its batches.
+    pub total_cycles: u64,
+}
+
+/// One autoscaler decision, on the simulated clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleEvent {
+    /// Simulated instant the decision fired (a window boundary).
+    pub time_secs: f64,
+    /// `"up"` (activate / cancel a drain) or `"down"` (start a drain).
+    pub action: String,
+    /// The replica acted on.
+    pub replica: usize,
+    /// Accepting replicas after the action took effect.
+    pub active_after: usize,
+    /// The window utilization that triggered it.
+    pub utilization: f64,
+}
+
+/// Everything one fleet serving simulation measured.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub platform: String,
+    /// Router policy name.
+    pub router: String,
+    /// Batching policy name (shared by every replica).
+    pub policy: String,
+    /// Arrival process name.
+    pub arrival: String,
+    /// Mean offered load (req / simulated second), fleet-wide.
+    pub arrival_rate: f64,
+    /// Provisioned replica slots.
+    pub replicas: usize,
+    /// Requests the arrival process offered.
+    pub offered: u64,
+    /// Requests served to completion, fleet-wide.
+    pub served: u64,
+    /// Arrivals dropped at a full replica queue.
+    pub dropped: u64,
+    /// Arrivals shed by SLO admission control.
+    pub shed: u64,
+    /// The admission SLO (0 = disabled).
+    pub slo_secs: f64,
+    /// Served requests whose total latency still exceeded the SLO.
+    pub slo_violations: u64,
+    /// Batches dispatched, fleet-wide.
+    pub batches: u64,
+    /// Simulated makespan: the last batch's completion instant.
+    pub makespan_secs: f64,
+    /// Simulated seconds replicas spent computing, summed.
+    pub busy_secs: f64,
+    /// Total simulated NPU cycles across all replicas.
+    pub total_cycles: u64,
+    /// Queueing-delay distribution over served requests.
+    pub queue: LatencyStats,
+    /// Batch-compute distribution over served requests.
+    pub compute: LatencyStats,
+    /// End-to-end distribution — the fleet tail-latency headline.
+    pub total: LatencyStats,
+    /// Aggregate memory counters over every stepped batch.
+    pub mem: MemCounts,
+    /// Aggregate op counters (lookups conserve against serving runs).
+    pub ops: OpCounts,
+    /// Per-replica lifetime totals, ascending replica index.
+    pub per_replica: Vec<ReplicaStats>,
+    /// Autoscaler decision log, in simulated-time order.
+    pub scale_events: Vec<ScaleEvent>,
+    pub per_batch: Vec<FleetBatch>,
+    /// Per-request records, in dispatch order (not serialized to JSON;
+    /// tests and tooling consume them in-process).
+    // eonsim-lint: allow(schema, reason = "in-process only by design: per-request rows would bloat the JSON report and fleet_to_json tests assert their absence")
+    pub per_request: Vec<RequestLatency>,
+}
+
+impl FleetReport {
+    /// Fraction of provisioned fleet-seconds spent computing.
+    pub fn utilization(&self) -> f64 {
+        let denom = self.makespan_secs * self.replicas as f64;
+        if denom > 0.0 {
+            self.busy_secs / denom
+        } else {
+            0.0
+        }
+    }
+
+    /// Served requests per simulated second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan_secs > 0.0 {
+            self.served as f64 / self.makespan_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// SLO-meeting served requests per simulated second (with the SLO
+    /// disabled there are no violations, so goodput == throughput).
+    pub fn goodput_rps(&self) -> f64 {
+        if self.makespan_secs > 0.0 {
+            (self.served - self.slo_violations) as f64 / self.makespan_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of offered requests dropped at full replica queues.
+    pub fn drop_rate(&self) -> f64 {
+        if self.offered > 0 {
+            self.dropped as f64 / self.offered as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of offered requests shed by SLO admission control.
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered > 0 {
+            self.shed as f64 / self.offered as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Active replica-seconds per served request — the "what does this
+    /// traffic cost to serve" number autoscaling tries to shrink.
+    pub fn cost_per_request(&self) -> f64 {
+        let active: f64 = self.per_replica.iter().map(|r| r.active_secs).sum();
+        if self.served > 0 {
+            active / self.served as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One replica's live state inside the event loop.
+struct Replica<'a> {
+    sim: ServingSim<'a>,
+    queue: VecDeque<(u64, f64)>,
+    /// Completion instant of the batch in flight (<= clock when idle).
+    busy_until: f64,
+    /// Requests in the in-flight batch (stale once `busy_until` passes;
+    /// [`Replica::load`] masks it by the clock).
+    in_flight: usize,
+    /// Provisioned-and-on (stays true while draining).
+    active: bool,
+    /// Scale-down in progress: serves its queue, accepts nothing new.
+    draining: bool,
+    /// Accepts no routed arrivals before this instant.
+    warmup_until: f64,
+    /// Instant the current activation began.
+    activated_at: f64,
+    /// Accumulated active time over completed activations.
+    active_secs: f64,
+    /// EWMA of observed batch compute seconds (admission predictor).
+    est_batch_secs: f64,
+    served: u64,
+    batches: u64,
+    busy_secs: f64,
+    total_cycles: u64,
+}
+
+impl<'a> Replica<'a> {
+    fn new(cfg: &'a SimConfig) -> Replica<'a> {
+        Replica {
+            sim: ServingSim::new(cfg),
+            queue: VecDeque::new(),
+            busy_until: 0.0,
+            in_flight: 0,
+            active: false,
+            draining: false,
+            warmup_until: 0.0,
+            activated_at: 0.0,
+            active_secs: 0.0,
+            est_batch_secs: 0.0,
+            served: 0,
+            batches: 0,
+            busy_secs: 0.0,
+            total_cycles: 0,
+        }
+    }
+
+    /// Outstanding work at simulated instant `now`: queued requests
+    /// plus the in-flight batch (the JSQ / po2 routing metric).
+    fn load(&self, now: f64) -> usize {
+        self.queue.len() + if self.busy_until > now { self.in_flight } else { 0 }
+    }
+
+    /// Predicted delay an arrival admitted at `now` would see: residual
+    /// busy time plus the batches ahead of it priced at the EWMA batch
+    /// cost (optimistically 0 before the first observation).
+    fn predicted_delay(&self, now: f64, max_batch: usize) -> f64 {
+        let residual = (self.busy_until - now).max(0.0);
+        let batches_ahead = (self.queue.len() + 1).div_ceil(max_batch);
+        residual + batches_ahead as f64 * self.est_batch_secs
+    }
+}
+
+/// The routing decision: which accepting replica takes this arrival.
+/// `accepting` holds replica indices in ascending order; `load` prices
+/// each. Returns `None` only when `accepting` is empty.
+fn pick_replica(
+    policy: RouterPolicy,
+    accepting: &[usize],
+    load: impl Fn(usize) -> usize,
+    rr_next: &mut u64,
+    rng: &mut SplitMix64,
+) -> Option<usize> {
+    if accepting.is_empty() {
+        return None;
+    }
+    Some(match policy {
+        RouterPolicy::RoundRobin => {
+            // the cursor keeps striding as the accepting set changes,
+            // which preserves the even spread across membership churn
+            let k = (*rr_next % accepting.len() as u64) as usize;
+            *rr_next += 1;
+            accepting[k]
+        }
+        RouterPolicy::Jsq => {
+            // strict < keeps the lowest index on ties (deterministic)
+            let mut best = accepting[0];
+            for &i in &accepting[1..] {
+                if load(i) < load(best) {
+                    best = i;
+                }
+            }
+            best
+        }
+        RouterPolicy::PowerOfTwo => {
+            let n = accepting.len() as u64;
+            if n == 1 {
+                return Some(accepting[0]);
+            }
+            // two *distinct* uniform draws: the second skips the first
+            let a = rng.next_below(n);
+            let b = (a + 1 + rng.next_below(n - 1)) % n;
+            let (a, b) = (accepting[a as usize], accepting[b as usize]);
+            // ties keep the first draw, so the choice is a pure
+            // function of the rng stream and the two loads
+            if load(b) < load(a) {
+                b
+            } else {
+                a
+            }
+        }
+    })
+}
+
+/// Run the configured fleet serving simulation to completion.
+pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
+    cfg.validate()?;
+    let s = &cfg.serving;
+    let fl = &cfg.fleet;
+    let mut arrivals = ArrivalProcess::from_config(s)?;
+    let mut rng = SplitMix64::new(fl.seed);
+    let mut rr_next = 0u64;
+
+    let mut replicas: Vec<Replica> = (0..fl.replicas).map(|_| Replica::new(cfg)).collect();
+    // without the autoscaler the whole provisioned pool serves; with it
+    // the floor starts warm and the rest wait for scale-up decisions
+    let initially_active = if fl.autoscale { fl.min_replicas } else { fl.replicas };
+    for r in replicas.iter_mut().take(initially_active) {
+        r.active = true;
+    }
+
+    let mut issued = 0u64;
+    let mut dropped = 0u64;
+    let mut shed = 0u64;
+    let mut clock = 0.0f64;
+    let mut busy_secs = 0.0f64;
+    let mut total_cycles = 0u64;
+    let mut mem = MemCounts::default();
+    let mut ops = OpCounts::default();
+    let mut per_batch: Vec<FleetBatch> = Vec::new();
+    let mut per_request: Vec<RequestLatency> = Vec::new();
+    let mut scale_events: Vec<ScaleEvent> = Vec::new();
+    let mut next_eval = fl.scale_window_secs;
+    let mut window_busy = 0.0f64;
+
+    let refill = |issued: &mut u64, arrivals: &mut ArrivalProcess| -> Option<(u64, f64)> {
+        if *issued >= s.requests as u64 {
+            return None;
+        }
+        let id = *issued;
+        *issued += 1;
+        Some((id, arrivals.next_arrival()))
+    };
+    let mut next_arrival = refill(&mut issued, &mut arrivals);
+
+    loop {
+        // 1. autoscaler windows due at or before the clock. Utilization
+        //    is compute committed at dispatch over accepting capacity,
+        //    so a burst landing in one window can read above 1.0.
+        while fl.autoscale && next_eval <= clock {
+            let accepting = replicas.iter().filter(|r| r.active && !r.draining).count();
+            let util = window_busy / (fl.scale_window_secs * accepting.max(1) as f64);
+            window_busy = 0.0;
+            if util > fl.scale_up_util && accepting < fl.max_active() {
+                // prefer waking a cold replica; otherwise cancel the
+                // newest drain (it is still warm, no penalty)
+                if let Some(i) = replicas.iter().position(|r| !r.active) {
+                    let r = &mut replicas[i];
+                    r.active = true;
+                    r.draining = false;
+                    r.warmup_until = next_eval + fl.warmup_secs;
+                    r.activated_at = next_eval;
+                    scale_events.push(ScaleEvent {
+                        time_secs: next_eval,
+                        action: "up".to_string(),
+                        replica: i,
+                        active_after: accepting + 1,
+                        utilization: util,
+                    });
+                } else if let Some(i) = replicas.iter().position(|r| r.active && r.draining) {
+                    replicas[i].draining = false;
+                    scale_events.push(ScaleEvent {
+                        time_secs: next_eval,
+                        action: "up".to_string(),
+                        replica: i,
+                        active_after: accepting + 1,
+                        utilization: util,
+                    });
+                }
+            } else if util < fl.scale_down_util && accepting > fl.min_replicas {
+                // drain the highest-index accepting replica: it keeps
+                // serving its queue but receives nothing new
+                if let Some(i) = replicas.iter().rposition(|r| r.active && !r.draining) {
+                    replicas[i].draining = true;
+                    scale_events.push(ScaleEvent {
+                        time_secs: next_eval,
+                        action: "down".to_string(),
+                        replica: i,
+                        active_after: accepting - 1,
+                        utilization: util,
+                    });
+                }
+            }
+            next_eval += fl.scale_window_secs;
+        }
+
+        // 2. route and admit every arrival at or before the clock
+        while let Some((id, at)) = next_arrival {
+            if at > clock {
+                break;
+            }
+            let accepting: Vec<usize> = replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.active && !r.draining && r.warmup_until <= at)
+                .map(|(i, _)| i)
+                .collect();
+            let pick = pick_replica(
+                fl.router,
+                &accepting,
+                |i| replicas[i].load(at),
+                &mut rr_next,
+                &mut rng,
+            );
+            match pick {
+                // unreachable in practice: validation keeps at least
+                // min_replicas >= 1 replicas accepting at all times
+                None => shed += 1,
+                Some(t) => {
+                    let r = &mut replicas[t];
+                    if fl.slo_secs > 0.0 && r.predicted_delay(at, s.max_batch) > fl.slo_secs {
+                        shed += 1;
+                    } else if s.queue_capacity > 0 && r.queue.len() >= s.queue_capacity {
+                        dropped += 1;
+                    } else {
+                        r.queue.push_back((id, at));
+                    }
+                }
+            }
+            next_arrival = refill(&mut issued, &mut arrivals);
+        }
+
+        // 3. finalize drains that went idle and empty
+        for r in replicas.iter_mut() {
+            if r.draining && r.queue.is_empty() && r.busy_until <= clock {
+                r.active = false;
+                r.draining = false;
+                r.active_secs += (clock - r.activated_at).max(0.0);
+            }
+        }
+
+        // 4. dispatch every replica whose policy says go at this instant
+        //    (a drained or arrival-starved remainder flushes, mirroring
+        //    the single-replica loop's end-of-arrivals flush)
+        let ready: Vec<usize> = replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.active && r.busy_until <= clock && !r.queue.is_empty())
+            .filter(|(_, r)| match policy_dispatch_time(s, &r.queue, clock) {
+                Some(t) => t <= clock,
+                None => next_arrival.is_none() || r.draining,
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if !ready.is_empty() {
+            // plan serially in replica order, step cores in parallel
+            // (each worker owns its replica), apply serially again —
+            // so the report never depends on cfg.threads
+            let mut jobs: Vec<(usize, usize, usize, &mut Replica)> = replicas
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| ready.binary_search(i).is_ok())
+                .map(|(i, r)| {
+                    let n = r.queue.len().min(s.max_batch);
+                    let variant = r.sim.variant_for(n);
+                    (i, n, variant, r)
+                })
+                .collect();
+            let stepped = crate::parallel::parallel_map_mut(cfg.threads, &mut jobs, |job| {
+                let (_, _, variant, r) = job;
+                Ok(r.sim.core_for(*variant)?.step())
+            })?;
+            for ((i, n, variant, r), (cycles, compute_secs, bmem, bops)) in
+                jobs.iter_mut().zip(stepped)
+            {
+                let (i, n, variant) = (*i, *n, *variant);
+                // Degraded-replica ("straggler") model: the LAST
+                // provisioned replica runs at a slower effective clock
+                // — same cycles of intrinsic work, `straggler_factor`
+                // times the wall seconds. Cycle counters stay unscaled
+                // so cycle conservation holds fleet-wide.
+                let compute_secs = if i == fl.replicas.max(1) - 1 {
+                    compute_secs * fl.straggler_factor
+                } else {
+                    compute_secs
+                };
+                let complete = clock + compute_secs;
+                for _ in 0..n {
+                    let (id, at) = r.queue.pop_front().expect("n <= queue.len()");
+                    per_request.push(RequestLatency {
+                        id,
+                        arrival_secs: at,
+                        queue_secs: clock - at,
+                        compute_secs,
+                        total_secs: complete - at,
+                    });
+                }
+                per_batch.push(FleetBatch {
+                    replica: i,
+                    dispatch_secs: clock,
+                    complete_secs: complete,
+                    requests: n,
+                    variant,
+                    compute_secs,
+                    queued_after: r.queue.len(),
+                });
+                r.busy_until = complete;
+                r.in_flight = n;
+                r.est_batch_secs = if r.batches == 0 {
+                    compute_secs
+                } else {
+                    0.5 * r.est_batch_secs + 0.5 * compute_secs
+                };
+                r.served += n as u64;
+                r.batches += 1;
+                r.busy_secs += compute_secs;
+                r.total_cycles += cycles;
+                busy_secs += compute_secs;
+                total_cycles += cycles;
+                window_busy += compute_secs;
+                mem.add(&bmem);
+                ops.add(&bops);
+            }
+            continue;
+        }
+
+        // 5. advance the clock to the next event: arrival, in-flight
+        //    completion, a future (timeout) dispatch, or — only while
+        //    any of those exist — the next autoscaler window
+        let mut next: Option<f64> = next_arrival.map(|(_, at)| at);
+        for r in &replicas {
+            if !r.active {
+                continue;
+            }
+            let t = if r.busy_until > clock {
+                r.busy_until
+            } else if r.queue.is_empty() {
+                continue;
+            } else {
+                match policy_dispatch_time(s, &r.queue, clock) {
+                    Some(t) if t > clock => t,
+                    // at-or-before-now decisions were dispatched above;
+                    // a None here waits on arrivals (already a candidate)
+                    _ => continue,
+                }
+            };
+            next = Some(next.map_or(t, |n| n.min(t)));
+        }
+        match next {
+            None => break,
+            Some(t) => {
+                let t = if fl.autoscale && next_eval < t { next_eval } else { t };
+                clock = clock.max(t);
+            }
+        }
+    }
+
+    let makespan_secs = per_batch.iter().map(|b| b.complete_secs).fold(0.0f64, f64::max);
+    let end = clock.max(makespan_secs);
+    for r in replicas.iter_mut() {
+        if r.active {
+            r.active_secs += (end - r.activated_at).max(0.0);
+        }
+    }
+    let per_replica: Vec<ReplicaStats> = replicas
+        .iter()
+        .enumerate()
+        .map(|(i, r)| ReplicaStats {
+            replica: i,
+            served: r.served,
+            batches: r.batches,
+            busy_secs: r.busy_secs,
+            active_secs: r.active_secs,
+            utilization: if makespan_secs > 0.0 { r.busy_secs / makespan_secs } else { 0.0 },
+            total_cycles: r.total_cycles,
+        })
+        .collect();
+    let slo_violations = if fl.slo_secs > 0.0 {
+        per_request.iter().filter(|q| q.total_secs > fl.slo_secs).count() as u64
+    } else {
+        0
+    };
+    let queue_samples: Vec<f64> = per_request.iter().map(|q| q.queue_secs).collect();
+    let compute_samples: Vec<f64> = per_request.iter().map(|q| q.compute_secs).collect();
+    let total_samples: Vec<f64> = per_request.iter().map(|q| q.total_secs).collect();
+    Ok(FleetReport {
+        platform: cfg.hardware.name.clone(),
+        router: fl.router.name().to_string(),
+        policy: s.policy.name().to_string(),
+        arrival: s.arrival.name().to_string(),
+        arrival_rate: s.arrival_rate,
+        replicas: fl.replicas,
+        offered: issued,
+        served: per_request.len() as u64,
+        dropped,
+        shed,
+        slo_secs: fl.slo_secs,
+        slo_violations,
+        batches: per_batch.len() as u64,
+        makespan_secs,
+        busy_secs,
+        total_cycles,
+        queue: LatencyStats::from_samples(&queue_samples),
+        compute: LatencyStats::from_samples(&compute_samples),
+        total: LatencyStats::from_samples(&total_samples),
+        mem,
+        ops,
+        per_replica,
+        scale_events,
+        per_batch,
+        per_request,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::config::OnchipPolicy;
+    use crate::coordinator::serving;
+
+    /// The serving unit-test workload, fleet edition.
+    fn small_cfg() -> SimConfig {
+        let mut cfg = presets::tpuv6e_dlrm_small();
+        cfg.workload.embedding.num_tables = 4;
+        cfg.workload.embedding.rows_per_table = 10_000;
+        cfg.workload.embedding.pool = 8;
+        cfg.hardware.mem.policy = OnchipPolicy::Spm;
+        cfg.serving.requests = 120;
+        cfg.serving.arrival_rate = 200_000.0;
+        cfg.serving.max_batch = 16;
+        cfg
+    }
+
+    /// Seconds one full `max_batch`-sized batch takes on this config's
+    /// hardware. The stochastic tests below scale every arrival rate,
+    /// SLO, and autoscaler window by this probe instead of hard-coding
+    /// rates, so they keep exercising the intended operating point
+    /// (sub-/near-/over-saturation) even as the compute model evolves.
+    fn probe_batch_secs(cfg: &SimConfig) -> f64 {
+        let mut p = cfg.clone();
+        p.workload.batch_size = cfg.serving.max_batch;
+        p.workload.num_batches = 1;
+        crate::engine::Simulator::new(p).run().unwrap().exec_time_secs()
+    }
+
+    fn assert_conserves(r: &FleetReport) {
+        assert_eq!(r.served + r.dropped + r.shed, r.offered, "conservation");
+        let mut ids: Vec<u64> = r.per_request.iter().map(|q| q.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, r.served, "no duplicated served ids");
+    }
+
+    #[test]
+    fn round_robin_cycles_through_accepting_replicas() {
+        let mut rr = 0u64;
+        let mut rng = SplitMix64::new(1);
+        let accepting = [0usize, 2, 5];
+        let picks: Vec<usize> = (0..6)
+            .map(|_| {
+                pick_replica(RouterPolicy::RoundRobin, &accepting, |_| 0, &mut rr, &mut rng)
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(picks, vec![0, 2, 5, 0, 2, 5]);
+        assert_eq!(
+            pick_replica(RouterPolicy::RoundRobin, &[], |_| 0, &mut rr, &mut rng),
+            None
+        );
+    }
+
+    #[test]
+    fn jsq_picks_least_loaded_lowest_index_on_ties() {
+        let mut rr = 0u64;
+        let mut rng = SplitMix64::new(1);
+        let loads = [3usize, 1, 1, 2];
+        let pick =
+            pick_replica(RouterPolicy::Jsq, &[0, 1, 2, 3], |i| loads[i], &mut rr, &mut rng);
+        assert_eq!(pick, Some(1), "load 1 at both 1 and 2: lowest index wins");
+    }
+
+    #[test]
+    fn po2_is_deterministic_and_prefers_the_less_loaded_draw() {
+        let loads = [9usize, 0, 9, 9];
+        let accepting = [0usize, 1, 2, 3];
+        // identical seeds => identical pick sequences
+        let seq = |seed: u64| -> Vec<usize> {
+            let mut rng = SplitMix64::new(seed);
+            let mut rr = 0u64;
+            (0..32)
+                .map(|_| {
+                    pick_replica(RouterPolicy::PowerOfTwo, &accepting, |i| loads[i], &mut rr, &mut rng)
+                        .unwrap()
+                })
+                .collect()
+        };
+        assert_eq!(seq(7), seq(7));
+        // whenever replica 1 is sampled it must win its pair; over 32
+        // draws of distinct pairs it is sampled with overwhelming odds
+        assert!(seq(7).contains(&1));
+        // single accepting replica needs no draws
+        let mut rng = SplitMix64::new(7);
+        let mut rr = 0u64;
+        let only =
+            pick_replica(RouterPolicy::PowerOfTwo, &[4], |_| 0, &mut rr, &mut rng);
+        assert_eq!(only, Some(4));
+    }
+
+    #[test]
+    fn single_replica_fleet_matches_serving_exactly() {
+        let cfg = small_cfg();
+        let sr = serving::simulate(&cfg).unwrap();
+        let fr = simulate(&cfg).unwrap();
+        assert_eq!(fr.replicas, 1);
+        assert_eq!((fr.offered, fr.served, fr.dropped, fr.shed), (sr.offered, sr.served, sr.dropped, 0));
+        assert_eq!(fr.per_request, sr.per_request, "request-for-request identical");
+        assert_eq!(fr.per_batch.len(), sr.per_batch.len());
+        for (fb, sb) in fr.per_batch.iter().zip(&sr.per_batch) {
+            assert_eq!(fb.replica, 0);
+            assert_eq!(
+                (fb.dispatch_secs, fb.complete_secs, fb.requests, fb.variant, fb.queued_after),
+                (sb.dispatch_secs, sb.complete_secs, sb.requests, sb.variant, sb.queued_after)
+            );
+        }
+        assert_eq!(fr.total_cycles, sr.total_cycles);
+        assert_eq!(fr.total, sr.total);
+    }
+
+    #[test]
+    fn fleet_spreads_load_and_conserves() {
+        let mut cfg = small_cfg();
+        cfg.fleet.replicas = 4;
+        cfg.serving.requests = 200;
+        // 2.5x one replica's service rate: comfortably within the
+        // 4-replica fleet's capacity, heavy enough that one replica
+        // alone cannot absorb it
+        let mu = cfg.serving.max_batch as f64 / probe_batch_secs(&cfg);
+        cfg.serving.arrival_rate = 2.5 * mu;
+        for router in [RouterPolicy::RoundRobin, RouterPolicy::Jsq, RouterPolicy::PowerOfTwo] {
+            cfg.fleet.router = router;
+            let r = simulate(&cfg).unwrap();
+            assert_conserves(&r);
+            assert_eq!(r.served, 200, "unbounded queues serve everything");
+            let used = r.per_replica.iter().filter(|p| p.served > 0).count();
+            assert!(used >= 2, "{}: load must spread, used {used}", router.name());
+            assert_eq!(
+                r.per_replica.iter().map(|p| p.served).sum::<u64>(),
+                r.served,
+                "per-replica served sums to the fleet total"
+            );
+            assert!(r.utilization() > 0.0 && r.utilization() <= 1.0 + 1e-9);
+            assert!(r.cost_per_request() > 0.0);
+        }
+    }
+
+    #[test]
+    fn slo_admission_sheds_and_accounts() {
+        let mut cfg = small_cfg();
+        cfg.fleet.replicas = 2;
+        cfg.serving.requests = 300;
+        // 4x overload per replica against an SLO of 1.5 batch times:
+        // queues would grow without bound, so admission must shed —
+        // while the freshly-idle replica still admits (served > 0)
+        let s_full = probe_batch_secs(&cfg);
+        let mu = cfg.serving.max_batch as f64 / s_full;
+        cfg.fleet.slo_secs = 1.5 * s_full;
+        cfg.serving.arrival_rate = 8.0 * mu;
+        let r = simulate(&cfg).unwrap();
+        assert_conserves(&r);
+        assert!(r.shed > 0, "a 1.5-batch SLO under 4x overload must shed");
+        assert!(r.shed_rate() > 0.0 && r.shed_rate() < 1.0);
+        // shedding keeps queues short: nothing waits unbounded
+        assert!(r.served > 0);
+        assert!(r.goodput_rps() <= r.throughput_rps());
+    }
+
+    #[test]
+    fn autoscaler_scales_up_logs_events_and_respects_warmup() {
+        let mut cfg = small_cfg();
+        cfg.fleet.replicas = 4;
+        cfg.fleet.autoscale = true;
+        cfg.fleet.min_replicas = 1;
+        // window/warmup in units of one batch's compute; a 3x-overload
+        // stream long enough (600 reqs) that every scaled-up replica
+        // clears warmup with traffic to spare. scale_down_util = 0
+        // isolates the scale-up path.
+        let s_full = probe_batch_secs(&cfg);
+        let mu = cfg.serving.max_batch as f64 / s_full;
+        cfg.fleet.scale_window_secs = 2.0 * s_full;
+        cfg.fleet.warmup_secs = 3.0 * s_full;
+        cfg.fleet.scale_up_util = 0.5;
+        cfg.fleet.scale_down_util = 0.0;
+        cfg.serving.requests = 600;
+        cfg.serving.arrival_rate = 3.0 * mu;
+        let r = simulate(&cfg).unwrap();
+        assert_conserves(&r);
+        let ups: Vec<&ScaleEvent> =
+            r.scale_events.iter().filter(|e| e.action == "up").collect();
+        assert!(!ups.is_empty(), "sustained overload must scale up");
+        for e in &ups {
+            // no batch on a scaled-up replica dispatches inside warmup
+            let first = r
+                .per_batch
+                .iter()
+                .filter(|b| b.replica == e.replica && b.dispatch_secs >= e.time_secs)
+                .map(|b| b.dispatch_secs)
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                first >= e.time_secs + cfg.fleet.warmup_secs - 1e-12,
+                "replica {} dispatched at {first} inside warmup after {}",
+                e.replica,
+                e.time_secs
+            );
+        }
+        // scaled-up replicas actually took load off the floor replica
+        assert!(r.per_replica.iter().filter(|p| p.served > 0).count() >= 2);
+    }
+
+    #[test]
+    fn autoscaler_cuts_cost_and_drains_between_bursts() {
+        let mut cfg = small_cfg();
+        cfg.fleet.replicas = 3;
+        cfg.fleet.autoscale = true;
+        cfg.fleet.min_replicas = 1;
+        // bursts at 8x a replica's service rate (mean 0.5x, factor 16)
+        // separated by long deep-idle valleys (30 batch-times at
+        // mean/16): up during bursts, down in the valleys
+        let s_full = probe_batch_secs(&cfg);
+        let mu = cfg.serving.max_batch as f64 / s_full;
+        cfg.fleet.scale_window_secs = 2.0 * s_full;
+        cfg.fleet.warmup_secs = 0.0;
+        cfg.fleet.scale_up_util = 0.5;
+        cfg.fleet.scale_down_util = 0.25;
+        cfg.serving.arrival = crate::config::ArrivalKind::Bursty;
+        cfg.serving.arrival_rate = 0.5 * mu;
+        cfg.serving.burst_factor = 16.0;
+        cfg.serving.burst_on_secs = 2.0 * s_full;
+        cfg.serving.burst_off_secs = 30.0 * s_full;
+        cfg.serving.requests = 600;
+        let r = simulate(&cfg).unwrap();
+        assert_conserves(&r);
+        assert_eq!(r.served, 600, "unbounded queues, no SLO: everything serves");
+        let ups = r.scale_events.iter().filter(|e| e.action == "up").count();
+        let downs = r.scale_events.iter().filter(|e| e.action == "down").count();
+        assert!(ups > 0, "bursts must scale up");
+        assert!(downs > 0, "idle gaps between bursts must scale down");
+        // the whole point: autoscaling serves the same traffic for
+        // fewer active replica-seconds than keeping all 3 always on
+        let mut always_on = cfg.clone();
+        always_on.fleet.autoscale = false;
+        let fixed = simulate(&always_on).unwrap();
+        assert_eq!(fixed.served, 600);
+        assert!(
+            r.cost_per_request() < fixed.cost_per_request(),
+            "autoscaled {} vs always-on {}",
+            r.cost_per_request(),
+            fixed.cost_per_request()
+        );
+    }
+
+    #[test]
+    fn straggler_scales_seconds_exactly_and_leaves_cycles_intrinsic() {
+        let mut cfg = small_cfg();
+        cfg.fleet.replicas = 2;
+        cfg.fleet.router = RouterPolicy::RoundRobin;
+        cfg.fleet.straggler_factor = 3.0;
+        cfg.serving.requests = 2; // one single-request batch per replica
+        let r = simulate(&cfg).unwrap();
+        assert_conserves(&r);
+        assert_eq!(r.served, 2);
+        let first = |rep: usize| {
+            r.per_batch
+                .iter()
+                .find(|b| b.replica == rep)
+                .expect("round-robin gives each replica one request")
+        };
+        let (b0, b1) = (first(0), first(1));
+        // identical intrinsic batches (same variant, same step index) —
+        // only the straggler's effective clock differs
+        assert_eq!((b0.requests, b0.variant), (b1.requests, b1.variant));
+        let ratio = b1.compute_secs / b0.compute_secs;
+        assert!(
+            (ratio - cfg.fleet.straggler_factor).abs() < 1e-9,
+            "straggler compute ratio {ratio}, want exactly 3.0"
+        );
+        // cycles count intrinsic work, not wall seconds: unscaled
+        assert_eq!(
+            r.per_replica[0].total_cycles,
+            r.per_replica[1].total_cycles
+        );
+    }
+
+    #[test]
+    fn fleet_report_is_identical_across_host_threads() {
+        let mut cfg = small_cfg();
+        cfg.fleet.replicas = 4;
+        cfg.fleet.router = RouterPolicy::PowerOfTwo;
+        cfg.serving.requests = 160;
+        cfg.serving.arrival_rate = 1_500_000.0;
+        cfg.threads = 1;
+        let base = simulate(&cfg).unwrap();
+        for threads in [2usize, 4, 8] {
+            cfg.threads = threads;
+            let r = simulate(&cfg).unwrap();
+            assert_eq!(r.per_request, base.per_request, "threads = {threads}");
+            assert_eq!(r.per_batch, base.per_batch, "threads = {threads}");
+            assert_eq!(r.total_cycles, base.total_cycles, "threads = {threads}");
+        }
+    }
+}

@@ -15,7 +15,10 @@
 //! loop with open-loop arrivals, a bounded queue, pluggable batching
 //! policies, and tail-latency reporting — no functional execution, all
 //! timing in simulated NPU seconds from [`crate::engine::SimCore`].
+//! [`fleet`] scales it out: N replica serving loops behind a router
+//! with SLO admission control and a utilization-driven autoscaler.
 
+pub mod fleet;
 pub mod serving;
 
 use std::collections::VecDeque;

@@ -29,7 +29,7 @@
 //! counts never change a byte of the report (the core's device fan-out
 //! is bit-identical for any `threads`).
 
-use crate::config::{BatchPolicyKind, SimConfig};
+use crate::config::{BatchPolicyKind, ServingConfig, SimConfig};
 use crate::engine::{SimCore, TraceSource};
 use crate::stats::{MemCounts, OpCounts};
 use crate::trace::ArrivalProcess;
@@ -183,7 +183,7 @@ impl ServingReport {
 /// One compiled variant's persistent engine core: stepping it advances
 /// the variant's own on-chip state and workload trace stream, so
 /// repeated batches of the same size see realistic cross-batch warmth.
-struct VariantCore {
+pub(crate) struct VariantCore {
     core: SimCore,
     source: TraceSource,
 }
@@ -202,7 +202,7 @@ impl VariantCore {
     }
 
     /// Step one batch; returns (cycles, compute secs, mem, ops).
-    fn step(&mut self) -> (u64, f64, MemCounts, OpCounts) {
+    pub(crate) fn step(&mut self) -> (u64, f64, MemCounts, OpCounts) {
         let r = self.core.step_batch(self.source.next_trace());
         let cycles = r.cycles.total();
         (cycles, self.core.cycles_to_secs(cycles), r.mem, r.ops)
@@ -210,15 +210,16 @@ impl VariantCore {
 }
 
 /// The discrete-event serving simulation (single simulated NPU pod,
-/// open-loop arrivals, one batch in flight at a time).
-struct ServingSim<'a> {
+/// open-loop arrivals, one batch in flight at a time). The fleet layer
+/// ([`super::fleet`]) instantiates one per replica.
+pub(crate) struct ServingSim<'a> {
     cfg: &'a SimConfig,
     variants: Vec<usize>,
     cores: Vec<Option<VariantCore>>,
 }
 
 impl<'a> ServingSim<'a> {
-    fn new(cfg: &'a SimConfig) -> ServingSim<'a> {
+    pub(crate) fn new(cfg: &'a SimConfig) -> ServingSim<'a> {
         let variants = cfg.serving.variants();
         let cores = variants.iter().map(|_| None).collect();
         ServingSim { cfg, variants, cores }
@@ -228,11 +229,11 @@ impl<'a> ServingSim<'a> {
     /// to `n` itself (like the functional coordinator) should the
     /// variant list ever stop covering the dispatch bound — never a
     /// variant smaller than the batch.
-    fn variant_for(&self, n: usize) -> usize {
+    pub(crate) fn variant_for(&self, n: usize) -> usize {
         self.variants.iter().copied().find(|&v| v >= n).unwrap_or(n)
     }
 
-    fn core_for(&mut self, variant: usize) -> anyhow::Result<&mut VariantCore> {
+    pub(crate) fn core_for(&mut self, variant: usize) -> anyhow::Result<&mut VariantCore> {
         let idx = match self.variants.iter().position(|&v| v == variant) {
             Some(idx) => idx,
             None => {
@@ -253,23 +254,34 @@ impl<'a> ServingSim<'a> {
     /// `Some(t)` = at simulated instant `t` (>= now), `None` = keep
     /// waiting for arrivals.
     fn dispatch_time(&self, queue: &VecDeque<(u64, f64)>, now: f64) -> Option<f64> {
-        let s = &self.cfg.serving;
-        match s.policy {
-            BatchPolicyKind::Dynamic => Some(now),
-            BatchPolicyKind::Size => {
-                if queue.len() >= s.max_batch {
-                    Some(now)
-                } else {
-                    None
-                }
+        policy_dispatch_time(&self.cfg.serving, queue, now)
+    }
+}
+
+/// The batching policy's dispatch decision for an idle server holding a
+/// non-empty `queue` at simulated instant `now` — shared between the
+/// single-replica loop here and the per-replica queues in
+/// [`super::fleet`], so both layers batch identically.
+pub(crate) fn policy_dispatch_time(
+    s: &ServingConfig,
+    queue: &VecDeque<(u64, f64)>,
+    now: f64,
+) -> Option<f64> {
+    match s.policy {
+        BatchPolicyKind::Dynamic => Some(now),
+        BatchPolicyKind::Size => {
+            if queue.len() >= s.max_batch {
+                Some(now)
+            } else {
+                None
             }
-            BatchPolicyKind::Timeout => {
-                if queue.len() >= s.max_batch {
-                    Some(now)
-                } else {
-                    let oldest = queue.front().expect("non-empty queue").1;
-                    Some(now.max(oldest + s.timeout_secs))
-                }
+        }
+        BatchPolicyKind::Timeout => {
+            if queue.len() >= s.max_batch {
+                Some(now)
+            } else {
+                let oldest = queue.front().expect("non-empty queue").1;
+                Some(now.max(oldest + s.timeout_secs))
             }
         }
     }
@@ -453,6 +465,35 @@ mod tests {
         assert_eq!(LatencyStats::from_samples(&[]), LatencyStats::default());
         let one = LatencyStats::from_samples(&[7.0]);
         assert_eq!((one.p50, one.p99, one.max), (7.0, 7.0, 7.0));
+    }
+
+    #[test]
+    fn latency_stats_edge_cases_stay_finite_and_exact() {
+        // empty: all-zero, and crucially finite (writers format these)
+        let empty = LatencyStats::from_samples(&[]);
+        for v in [empty.mean, empty.p50, empty.p95, empty.p99, empty.max] {
+            assert_eq!(v, 0.0);
+            assert!(v.is_finite());
+        }
+        // one sample: every percentile and the mean collapse onto it
+        let one = LatencyStats::from_samples(&[3.25]);
+        assert_eq!((one.mean, one.p50, one.p95, one.p99, one.max), (3.25, 3.25, 3.25, 3.25, 3.25));
+        // all-equal samples: nearest-rank never interpolates, so every
+        // statistic is exactly the common value at any sample count
+        for n in [2usize, 3, 10, 97] {
+            let xs = vec![0.125f64; n];
+            let s = LatencyStats::from_samples(&xs);
+            assert_eq!(
+                (s.mean, s.p50, s.p95, s.p99, s.max),
+                (0.125, 0.125, 0.125, 0.125, 0.125),
+                "n = {n}"
+            );
+        }
+        // two distinct samples: nearest-rank p50 is the *lower* one
+        // (rank ceil(0.5 * 2) = 1), the upper tail the higher
+        let two = LatencyStats::from_samples(&[4.0, 2.0]);
+        assert_eq!((two.p50, two.p95, two.p99, two.max), (2.0, 4.0, 4.0, 4.0));
+        assert_eq!(two.mean, 3.0);
     }
 
     #[test]

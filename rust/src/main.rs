@@ -10,8 +10,10 @@
 //!   help       this text
 
 use eonsim::cli::Args;
-use eonsim::config::{presets, ArrivalKind, BatchPolicyKind, OnchipPolicy, ShardStrategy, SimConfig};
-use eonsim::coordinator::{serving, Coordinator, EngineTiming};
+use eonsim::config::{
+    presets, ArrivalKind, BatchPolicyKind, OnchipPolicy, RouterPolicy, ShardStrategy, SimConfig,
+};
+use eonsim::coordinator::{fleet, serving, Coordinator, EngineTiming};
 use eonsim::engine::Simulator;
 use eonsim::runtime::dlrm::{random_request, DlrmExecutor};
 use eonsim::runtime::Runtime;
@@ -60,17 +62,24 @@ COMMANDS:
                --queue-capacity <n>   bounded queue (0 = unbounded) [0]
                --arrival <a>          poisson|bursty|trace  [poisson]
                --arrival-trace <file> inter-arrival gaps, secs per line
+               --replicas <n>         fleet of n replica pods behind a router [1]
+               --router <p>           round_robin|jsq|po2   [round_robin]
+               --slo-ms <x>           shed arrivals whose predicted delay
+                                      exceeds x ms (0 = no admission control) [0]
                --csv <file> / --json <file>   write the serving report
-               (plus the `run` workload/sharding flags, or --config with a
-               [serving] section)
+               (plus the `run` workload/sharding flags, or --config with
+               [serving] / [fleet] sections; --replicas > 1, --slo-ms > 0,
+               or fleet.autoscale routes through the fleet layer and
+               writes a FleetReport instead)
              functional PJRT demo (needs `make artifacts`):
                --functional           run the legacy functional demo
                --artifacts <dir>      artifact directory    [artifacts]
   sweep      parameter sweep -> CSV on stdout
-               --param <batch|tables|alpha|onchip_mb|cores|devices|nodes|replicate_top_k|arrival_rate>
+               --param <batch|tables|alpha|onchip_mb|cores|devices|nodes|replicate_top_k|arrival_rate|replicas>
                --values <comma-separated>   e.g. 32,64,128
                --policy <p> [spm]  (plus the `run` flags)
                arrival_rate sweeps the serving loop (serving-report columns);
+               replicas sweeps the fleet layer (fleet-report columns);
                points fan out across a --threads-bounded worker pool; rows
                print in sweep order either way
   bench      host-performance microbenchmarks (hot paths + sharded fan-out)
@@ -201,7 +210,21 @@ fn apply_serving_flags(cfg: &mut SimConfig, args: &Args) -> anyhow::Result<()> {
         sv.trace_path = Some(path.to_string());
         sv.arrival = ArrivalKind::Trace;
     }
+    let fl = &mut cfg.fleet;
+    fl.replicas = args.usize_flag("replicas", fl.replicas)?;
+    if let Some(r) = args.flag("router") {
+        fl.router = RouterPolicy::parse(r)?;
+    }
+    fl.slo_secs = args.f64_flag("slo-ms", fl.slo_secs * 1e3)? / 1e3;
     Ok(())
+}
+
+/// True when the configuration asks for anything only the fleet layer
+/// models — multiple replicas, SLO admission, or autoscaling. The
+/// single-replica default keeps `serve` on the PR 5 loop (and its
+/// report shape) byte-for-byte.
+fn wants_fleet(cfg: &SimConfig) -> bool {
+    cfg.fleet.replicas > 1 || cfg.fleet.autoscale || cfg.fleet.slo_secs > 0.0
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
@@ -395,6 +418,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         return cmd_serve_functional(args);
     }
     let cfg = build_config(args)?;
+    if wants_fleet(&cfg) {
+        return cmd_serve_fleet(args, &cfg);
+    }
     let s = &cfg.serving;
     println!(
         "serving {} requests at {:.0} req/s ({}) -> {} batching (max batch {}, \
@@ -450,6 +476,103 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(path) = args.flag("json") {
         std::fs::write(path, writer::serving_to_json(&report))?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve_fleet(args: &Args, cfg: &SimConfig) -> anyhow::Result<()> {
+    let s = &cfg.serving;
+    let fl = &cfg.fleet;
+    println!(
+        "fleet-serving {} requests at {:.0} req/s ({}) -> {} replicas ({} router, \
+         {} batching, max batch {}{}{}) on {} ({} device(s)/replica)",
+        s.requests,
+        s.arrival_rate,
+        s.arrival.name(),
+        fl.replicas,
+        fl.router.name(),
+        s.policy.name(),
+        s.max_batch,
+        if fl.slo_secs > 0.0 {
+            format!(", SLO {:.2} ms", fl.slo_secs * 1e3)
+        } else {
+            String::new()
+        },
+        if fl.autoscale {
+            format!(", autoscale {}..{}", fl.min_replicas, fl.max_active())
+        } else {
+            String::new()
+        },
+        cfg.hardware.name,
+        cfg.sharding.devices,
+    );
+    let t0 = std::time::Instant::now();
+    let report = fleet::simulate(cfg)?;
+    let host = t0.elapsed().as_secs_f64();
+    println!(
+        "  served        : {} of {} offered ({} dropped, {} shed, {} SLO violations) \
+         in {} batches",
+        report.served, report.offered, report.dropped, report.shed, report.slo_violations,
+        report.batches
+    );
+    println!(
+        "  makespan      : {:.3} ms simulated, fleet utilization {:.1}%, \
+         {:.0} req/s served ({:.0} goodput)",
+        report.makespan_secs * 1e3,
+        report.utilization() * 100.0,
+        report.throughput_rps(),
+        report.goodput_rps()
+    );
+    println!(
+        "  cost          : {:.3} ms active replica-time per request",
+        report.cost_per_request() * 1e3
+    );
+    let row = |name: &str, l: &serving::LatencyStats| {
+        println!(
+            "  {name:<13} : mean {:8.3}  p50 {:8.3}  p95 {:8.3}  p99 {:8.3}  max {:8.3}  ms",
+            l.mean * 1e3,
+            l.p50 * 1e3,
+            l.p95 * 1e3,
+            l.p99 * 1e3,
+            l.max * 1e3
+        );
+    };
+    row("queue", &report.queue);
+    row("compute", &report.compute);
+    row("total", &report.total);
+    for r in &report.per_replica {
+        println!(
+            "    replica {}: {:>6} served in {:>5} batches, busy {:8.3} ms, \
+             active {:8.3} ms, util {:.1}%",
+            r.replica,
+            r.served,
+            r.batches,
+            r.busy_secs * 1e3,
+            r.active_secs * 1e3,
+            r.utilization * 100.0
+        );
+    }
+    if !report.scale_events.is_empty() {
+        println!("  scale events  : {}", report.scale_events.len());
+        for e in &report.scale_events {
+            println!(
+                "    {:10.3} ms: {:>4} replica {} (util {:.2}, {} accepting after)",
+                e.time_secs * 1e3,
+                e.action,
+                e.replica,
+                e.utilization,
+                e.active_after
+            );
+        }
+    }
+    println!("  host wall     : {host:.2} s");
+    if let Some(path) = args.flag("csv") {
+        std::fs::write(path, writer::fleet_to_csv(&report))?;
+        println!("  wrote {path}");
+    }
+    if let Some(path) = args.flag("json") {
+        std::fs::write(path, writer::fleet_to_json(&report))?;
         println!("  wrote {path}");
     }
     Ok(())
@@ -555,6 +678,46 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         println!(
             "arrival_rate,batch_policy,arrival,p50_ms,p95_ms,p99_ms,utilization,\
              drop_rate,batches,throughput_rps"
+        );
+        for row in rows {
+            println!("{row}");
+        }
+        return Ok(());
+    }
+    // replica-count points drive the fleet layer: each point is a whole
+    // fleet simulation, so the saturation knee (p99 vs replicas) and the
+    // cost of over-provisioning read straight off the CSV
+    if param == "replicas" {
+        let mut points = Vec::with_capacity(values.len());
+        for &v in &values {
+            let mut cfg = base.clone();
+            cfg.fleet.replicas = v as usize;
+            if values.len() > 1 {
+                cfg.threads = 1;
+            }
+            cfg.validate()?;
+            points.push((v, cfg));
+        }
+        let rows = eonsim::parallel::parallel_map_with(base.threads, &points, |(v, cfg)| {
+            let r = fleet::simulate(cfg)?;
+            Ok(format!(
+                "{v},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.6},{:.6},{},{:e}",
+                r.router,
+                r.policy,
+                r.total.p50 * 1e3,
+                r.total.p95 * 1e3,
+                r.total.p99 * 1e3,
+                r.utilization(),
+                r.goodput_rps(),
+                r.drop_rate(),
+                r.shed_rate(),
+                r.batches,
+                r.cost_per_request(),
+            ))
+        })?;
+        println!(
+            "replicas,router,batch_policy,p50_ms,p95_ms,p99_ms,utilization,\
+             goodput_rps,drop_rate,shed_rate,batches,cost_per_request"
         );
         for row in rows {
             println!("{row}");

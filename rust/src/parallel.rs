@@ -41,6 +41,43 @@ where
     Ok(out)
 }
 
+/// Run `f` over `items` on up to `threads` workers with *mutable* access
+/// to each item, preserving input order in the output. The fleet serving
+/// layer uses this to step independent replica cores concurrently: each
+/// worker owns a contiguous chunk of the slice, so no item is ever
+/// visible to two workers. `threads <= 1` (or a single item) runs inline
+/// on the caller's thread — identical results.
+pub fn parallel_map_mut<T, R, F>(
+    threads: usize,
+    items: &mut [T],
+    f: F,
+) -> anyhow::Result<Vec<R>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&mut T) -> anyhow::Result<R> + Sync,
+{
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads <= 1 {
+        return items.iter_mut().map(&f).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let results: Vec<anyhow::Result<Vec<R>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks_mut(chunk)
+            .map(|part| {
+                s.spawn(|| part.iter_mut().map(&f).collect::<anyhow::Result<Vec<R>>>())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
+    });
+    let mut out = Vec::with_capacity(items.len());
+    for r in results {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
 /// [`parallel_map_with`] at the host's available parallelism — the
 /// default for figure/validation sweeps whose point count is the only
 /// bound the caller cares about.
@@ -89,5 +126,36 @@ mod tests {
     #[test]
     fn available_threads_is_positive() {
         assert!(available_threads() >= 1);
+    }
+
+    #[test]
+    fn mut_map_mutates_in_place_and_preserves_order() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let mut items: Vec<u64> = (0..37).collect();
+            let out = parallel_map_mut(threads, &mut items, |x| {
+                *x += 100;
+                Ok(*x * 2)
+            })
+            .unwrap();
+            let want_items: Vec<u64> = (100..137).collect();
+            let want_out: Vec<u64> = want_items.iter().map(|&x| x * 2).collect();
+            assert_eq!(items, want_items, "threads = {threads}");
+            assert_eq!(out, want_out, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn mut_map_propagates_errors_and_handles_empty() {
+        let mut items = [1u64, 2, 3];
+        let err = parallel_map_mut(2, &mut items, |x| {
+            if *x == 3 {
+                Err(anyhow::anyhow!("boom at {x}"))
+            } else {
+                Ok(*x)
+            }
+        });
+        assert!(err.unwrap_err().to_string().contains("boom at 3"));
+        let out = parallel_map_mut::<u64, u64, _>(4, &mut [], |x| Ok(*x)).unwrap();
+        assert!(out.is_empty());
     }
 }

@@ -232,6 +232,134 @@ pub fn serving_to_csv(report: &ServingReport) -> String {
     out
 }
 
+// --------------------------------------------------------------- fleet
+
+use crate::coordinator::fleet::{FleetReport, ReplicaStats, ScaleEvent};
+
+fn replica_json(r: &ReplicaStats) -> String {
+    format!(
+        concat!(
+            "{{\"replica\":{},\"served\":{},\"batches\":{},\"busy_secs\":{:e},",
+            "\"active_secs\":{:e},\"utilization\":{:.6},\"total_cycles\":{}}}"
+        ),
+        r.replica, r.served, r.batches, r.busy_secs, r.active_secs, r.utilization,
+        r.total_cycles,
+    )
+}
+
+fn scale_event_json(e: &ScaleEvent) -> String {
+    format!(
+        concat!(
+            "{{\"time_secs\":{:e},\"action\":\"{}\",\"replica\":{},",
+            "\"active_after\":{},\"utilization\":{:.6}}}"
+        ),
+        e.time_secs, e.action, e.replica, e.active_after, e.utilization,
+    )
+}
+
+/// Full fleet report as a JSON object: fleet-wide summary metrics, the
+/// three latency distributions, aggregate counters, per-replica totals,
+/// the autoscaler event log, and the per-batch log. Byte-deterministic
+/// for a fixed config seed regardless of host thread count
+/// (per-request records are in-process only).
+pub fn fleet_to_json(report: &FleetReport) -> String {
+    let per_replica: Vec<String> = report.per_replica.iter().map(replica_json).collect();
+    let scale_events: Vec<String> = report.scale_events.iter().map(scale_event_json).collect();
+    let batches: Vec<String> = report
+        .per_batch
+        .iter()
+        .map(|b| {
+            format!(
+                concat!(
+                    "{{\"replica\":{},\"dispatch_secs\":{:e},\"complete_secs\":{:e},",
+                    "\"requests\":{},\"variant\":{},\"compute_secs\":{:e},",
+                    "\"queued_after\":{}}}"
+                ),
+                b.replica,
+                b.dispatch_secs,
+                b.complete_secs,
+                b.requests,
+                b.variant,
+                b.compute_secs,
+                b.queued_after,
+            )
+        })
+        .collect();
+    format!(
+        concat!(
+            "{{\"platform\":\"{}\",\"router\":\"{}\",\"policy\":\"{}\",",
+            "\"arrival\":\"{}\",\"arrival_rate\":{:e},\"replicas\":{},",
+            "\"offered\":{},\"served\":{},\"dropped\":{},\"shed\":{},",
+            "\"drop_rate\":{:.6},\"shed_rate\":{:.6},",
+            "\"slo_secs\":{:e},\"slo_violations\":{},",
+            "\"batches\":{},\"makespan_secs\":{:e},\"busy_secs\":{:e},",
+            "\"utilization\":{:.6},\"throughput_rps\":{:e},\"goodput_rps\":{:e},",
+            "\"cost_per_request\":{:e},\"total_cycles\":{},",
+            "\"latency\":{{\"queue\":{},\"compute\":{},\"total\":{}}},",
+            "\"ops\":{{\"macs\":{},\"vpu_ops\":{},\"lookups\":{},\"replicated_hits\":{}}},",
+            "\"mem\":{{\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
+            "\"offchip_writes\":{},\"hits\":{},\"misses\":{},\"global_hits\":{}}},",
+            "\"per_replica\":[{}],\"scale_events\":[{}],\"per_batch\":[{}]}}"
+        ),
+        report.platform,
+        report.router,
+        report.policy,
+        report.arrival,
+        report.arrival_rate,
+        report.replicas,
+        report.offered,
+        report.served,
+        report.dropped,
+        report.shed,
+        report.drop_rate(),
+        report.shed_rate(),
+        report.slo_secs,
+        report.slo_violations,
+        report.batches,
+        report.makespan_secs,
+        report.busy_secs,
+        report.utilization(),
+        report.throughput_rps(),
+        report.goodput_rps(),
+        report.cost_per_request(),
+        report.total_cycles,
+        latency_json(&report.queue),
+        latency_json(&report.compute),
+        latency_json(&report.total),
+        report.ops.macs,
+        report.ops.vpu_ops,
+        report.ops.lookups,
+        report.ops.replicated_hits,
+        report.mem.onchip_reads,
+        report.mem.onchip_writes,
+        report.mem.offchip_reads,
+        report.mem.offchip_writes,
+        report.mem.hits,
+        report.mem.misses,
+        report.mem.global_hits,
+        per_replica.join(","),
+        scale_events.join(","),
+        batches.join(","),
+    )
+}
+
+/// One CSV row per dispatched batch, tagged with its replica.
+pub fn fleet_to_csv(report: &FleetReport) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "batch,replica,dispatch_secs,complete_secs,requests,variant,compute_secs,queued_after\n",
+    );
+    for (i, b) in report.per_batch.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "{},{},{:e},{:e},{},{},{:e},{}",
+            i, b.replica, b.dispatch_secs, b.complete_secs, b.requests, b.variant,
+            b.compute_secs, b.queued_after,
+        );
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -424,5 +552,180 @@ mod tests {
             lines[1].split(',').count(),
             "header and row column counts agree"
         );
+    }
+
+    fn fleet_report() -> FleetReport {
+        use crate::coordinator::fleet::FleetBatch;
+        use crate::coordinator::serving::RequestLatency;
+        FleetReport {
+            platform: "tpuv6e".into(),
+            router: "jsq".into(),
+            policy: "dynamic".into(),
+            arrival: "poisson".into(),
+            arrival_rate: 400_000.0,
+            replicas: 2,
+            offered: 5,
+            served: 3,
+            dropped: 1,
+            shed: 1,
+            slo_secs: 2e-3,
+            slo_violations: 1,
+            batches: 2,
+            makespan_secs: 4e-3,
+            busy_secs: 2e-3,
+            total_cycles: 1234,
+            queue: LatencyStats { mean: 1e-4, p50: 1e-4, p95: 2e-4, p99: 2e-4, max: 2e-4 },
+            compute: LatencyStats::default(),
+            total: LatencyStats { mean: 1e-3, p50: 1e-3, p95: 2e-3, p99: 2e-3, max: 2e-3 },
+            mem: crate::stats::MemCounts { offchip_reads: 9, ..Default::default() },
+            ops: crate::stats::OpCounts { lookups: 10, ..Default::default() },
+            per_replica: vec![
+                crate::coordinator::fleet::ReplicaStats {
+                    replica: 0,
+                    served: 2,
+                    batches: 1,
+                    busy_secs: 1e-3,
+                    active_secs: 4e-3,
+                    utilization: 0.25,
+                    total_cycles: 700,
+                },
+                crate::coordinator::fleet::ReplicaStats {
+                    replica: 1,
+                    served: 1,
+                    batches: 1,
+                    busy_secs: 1e-3,
+                    active_secs: 2e-3,
+                    utilization: 0.25,
+                    total_cycles: 534,
+                },
+            ],
+            scale_events: vec![crate::coordinator::fleet::ScaleEvent {
+                time_secs: 1e-3,
+                action: "up".into(),
+                replica: 1,
+                active_after: 2,
+                utilization: 0.9,
+            }],
+            per_batch: vec![
+                FleetBatch {
+                    replica: 0,
+                    dispatch_secs: 0.0,
+                    complete_secs: 1e-3,
+                    requests: 2,
+                    variant: 2,
+                    compute_secs: 1e-3,
+                    queued_after: 0,
+                },
+                FleetBatch {
+                    replica: 1,
+                    dispatch_secs: 2e-3,
+                    complete_secs: 3e-3,
+                    requests: 1,
+                    variant: 1,
+                    compute_secs: 1e-3,
+                    queued_after: 0,
+                },
+            ],
+            per_request: vec![RequestLatency {
+                id: 0,
+                arrival_secs: 0.0,
+                queue_secs: 0.0,
+                compute_secs: 1e-3,
+                total_secs: 1e-3,
+            }],
+        }
+    }
+
+    #[test]
+    fn fleet_json_is_well_formed_and_complete() {
+        let json = fleet_to_json(&fleet_report());
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        for key in [
+            "\"router\":\"jsq\"",
+            "\"policy\":\"dynamic\"",
+            "\"replicas\":2",
+            "\"offered\":5",
+            "\"served\":3",
+            "\"dropped\":1",
+            "\"shed\":1",
+            "\"drop_rate\":0.2",
+            "\"shed_rate\":0.2",
+            "\"slo_violations\":1",
+            "\"goodput_rps\":",
+            "\"cost_per_request\":",
+            "\"latency\":{\"queue\":{\"mean\":",
+            "\"per_replica\":[{\"replica\":0,",
+            "\"active_secs\":",
+            "\"scale_events\":[{\"time_secs\":",
+            "\"action\":\"up\"",
+            "\"active_after\":2",
+            "\"per_batch\":[{\"replica\":0,",
+            "\"queued_after\":0",
+        ] {
+            assert!(json.contains(key), "missing `{key}` in {json}");
+        }
+        // per-request records are in-process only
+        assert!(!json.contains("per_request"));
+    }
+
+    #[test]
+    fn fleet_csv_rows_match_batches_with_replica_column() {
+        let csv = fleet_to_csv(&fleet_report());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("batch,replica,dispatch_secs"));
+        assert!(lines[1].starts_with("0,0,"));
+        assert!(lines[2].starts_with("1,1,"));
+        assert_eq!(
+            lines[0].split(',').count(),
+            lines[1].split(',').count(),
+            "header and row column counts agree"
+        );
+    }
+
+    #[test]
+    fn empty_reports_serialize_finite() {
+        // zero served requests must never leak NaN/inf into the output
+        // (every ratio in the report types is zero-denominator guarded)
+        let mut sr = serving_report();
+        sr.offered = 0;
+        sr.served = 0;
+        sr.dropped = 0;
+        sr.batches = 0;
+        sr.makespan_secs = 0.0;
+        sr.busy_secs = 0.0;
+        sr.queue = LatencyStats::default();
+        sr.compute = LatencyStats::default();
+        sr.total = LatencyStats::default();
+        sr.per_batch.clear();
+        sr.per_request.clear();
+        let json = serving_to_json(&sr);
+        assert!(!json.contains("NaN") && !json.contains("inf"), "{json}");
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(serving_to_csv(&sr).lines().count(), 1, "header only");
+
+        let mut fr = fleet_report();
+        fr.offered = 0;
+        fr.served = 0;
+        fr.dropped = 0;
+        fr.shed = 0;
+        fr.slo_violations = 0;
+        fr.batches = 0;
+        fr.makespan_secs = 0.0;
+        fr.busy_secs = 0.0;
+        fr.queue = LatencyStats::default();
+        fr.compute = LatencyStats::default();
+        fr.total = LatencyStats::default();
+        fr.per_replica.clear();
+        fr.scale_events.clear();
+        fr.per_batch.clear();
+        fr.per_request.clear();
+        let json = fleet_to_json(&fr);
+        assert!(!json.contains("NaN") && !json.contains("inf"), "{json}");
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(json.contains("\"utilization\":0.000000"));
+        assert!(json.contains("\"per_replica\":[]"));
+        assert_eq!(fleet_to_csv(&fr).lines().count(), 1, "header only");
     }
 }

@@ -1,0 +1,164 @@
+//! Integration tests for fleet-scale serving: byte-identical fleet
+//! reports across host thread counts on multi-node pods, the
+//! queue-aware-routing acceptance criterion (JSQ and po2 strictly beat
+//! round-robin p99 on a fleet with a degraded replica), bursty-arrival
+//! routing, and conservation through the full config -> fleet -> writer
+//! stack.
+
+use eonsim::config::{presets, ArrivalKind, OnchipPolicy, RouterPolicy, SimConfig};
+use eonsim::coordinator::fleet;
+use eonsim::engine::Simulator;
+use eonsim::stats::writer;
+
+/// Small fleet deployment: the serving integration workload with the
+/// replica count and router set per test.
+fn fleet_cfg() -> SimConfig {
+    let mut cfg = presets::tpuv6e_dlrm_small();
+    cfg.workload.embedding.num_tables = 8;
+    cfg.workload.embedding.rows_per_table = 20_000;
+    cfg.workload.embedding.pool = 8;
+    cfg.workload.trace.alpha = 1.1;
+    cfg.hardware.mem.policy = OnchipPolicy::Spm;
+    cfg.serving.requests = 96;
+    cfg.serving.arrival_rate = 300_000.0;
+    cfg.serving.max_batch = 32;
+    cfg
+}
+
+/// Simulated seconds one full `max_batch`-sized batch takes: the unit
+/// the stochastic tests scale arrival rates and burst windows by, so
+/// their operating point tracks the compute model instead of going
+/// stale with hard-coded rates.
+fn full_batch_secs(cfg: &SimConfig) -> f64 {
+    let mut probe = cfg.clone();
+    probe.workload.batch_size = cfg.serving.max_batch;
+    probe.workload.num_batches = 1;
+    Simulator::new(probe).run().unwrap().exec_time_secs()
+}
+
+fn p99_for(base: &SimConfig, router: RouterPolicy) -> f64 {
+    let mut cfg = base.clone();
+    cfg.fleet.router = router;
+    let r = fleet::simulate(&cfg).unwrap();
+    assert_eq!(r.served + r.dropped + r.shed, r.offered, "conservation");
+    assert_eq!(r.served, r.offered, "unbounded queues, no SLO: all served");
+    r.total.p99
+}
+
+/// Acceptance (issue criterion): fleet JSON *and* CSV are byte-identical
+/// across `--threads 1/2/8` on a 4-replica fleet where every replica is
+/// a 2x2 multi-node pod with hot-row replication — the deployment where
+/// the host-parallel replica stepping actually fans out.
+#[test]
+fn fleet_report_is_byte_identical_across_thread_counts_on_pods() {
+    let run = |threads: usize| {
+        let mut cfg = fleet_cfg();
+        cfg.sharding.devices = 4;
+        cfg.sharding.topology.nodes = 2;
+        cfg.sharding.replicate_top_k = 64;
+        cfg.fleet.replicas = 4;
+        cfg.fleet.router = RouterPolicy::PowerOfTwo;
+        cfg.threads = threads;
+        let r = fleet::simulate(&cfg).unwrap();
+        (writer::fleet_to_json(&r), writer::fleet_to_csv(&r))
+    };
+    let (json, csv) = run(1);
+    for threads in [2usize, 8] {
+        let (j, c) = run(threads);
+        assert_eq!(json, j, "JSON bytes diverged at threads = {threads}");
+        assert_eq!(csv, c, "CSV bytes diverged at threads = {threads}");
+    }
+    // and plain repetition is byte-stable too
+    assert_eq!(run(1).0, json);
+}
+
+/// Acceptance (issue criterion): queue-aware routing strictly beats
+/// round-robin p99 on a fleet with one degraded replica.
+///
+/// Why the straggler: in a *homogeneous* fleet with near-deterministic
+/// service, round-robin splits a Poisson stream into per-replica
+/// Erlang-N arrivals whose variance reduction exactly offsets JSQ's
+/// pooling gain — the policies tie to within noise, with no robust
+/// ordering. Capacity heterogeneity ("The Tail at Scale") is the regime
+/// where queue awareness is structural: RR keeps feeding the 2x-slow
+/// replica its full quarter share, so its queue — and the fleet p99 —
+/// diverges, while JSQ and po2 both observe the backlog and shift load
+/// to the healthy replicas.
+#[test]
+fn queue_aware_routers_beat_round_robin_p99_with_a_straggler() {
+    let mut cfg = fleet_cfg();
+    cfg.fleet.replicas = 4;
+    cfg.fleet.straggler_factor = 2.0;
+    cfg.serving.requests = 600;
+    // 90% of the heterogeneous fleet's capacity (3 healthy replicas
+    // plus a half-speed one): saturates under RR's blind quarter-split,
+    // stable when routing follows the queues
+    let mu = cfg.serving.max_batch as f64 / full_batch_secs(&cfg);
+    cfg.serving.arrival_rate = 0.9 * (3.0 + 1.0 / 2.0) * mu;
+    let rr = p99_for(&cfg, RouterPolicy::RoundRobin);
+    let jsq = p99_for(&cfg, RouterPolicy::Jsq);
+    let po2 = p99_for(&cfg, RouterPolicy::PowerOfTwo);
+    assert!(jsq < rr, "JSQ p99 {jsq} must beat round-robin {rr}");
+    assert!(po2 < rr, "po2 p99 {po2} must beat round-robin {rr}");
+}
+
+/// The same straggler ordering holds under bursty (MMPP) arrivals: the
+/// on-phase floods all replicas at once, and only queue-aware routing
+/// keeps the slow replica's share in check through the burst.
+#[test]
+fn jsq_beats_round_robin_p99_under_bursty_arrivals_with_a_straggler() {
+    let mut cfg = fleet_cfg();
+    cfg.fleet.replicas = 4;
+    cfg.fleet.straggler_factor = 2.0;
+    cfg.serving.requests = 600;
+    cfg.serving.arrival = ArrivalKind::Bursty;
+    let s_full = full_batch_secs(&cfg);
+    let mu = cfg.serving.max_batch as f64 / s_full;
+    // mean at half the heterogeneous capacity, bursting to 2x it
+    cfg.serving.arrival_rate = 0.5 * (3.0 + 1.0 / 2.0) * mu;
+    cfg.serving.burst_factor = 4.0;
+    cfg.serving.burst_on_secs = 40.0 * s_full;
+    cfg.serving.burst_off_secs = 40.0 * s_full;
+    let rr = p99_for(&cfg, RouterPolicy::RoundRobin);
+    let jsq = p99_for(&cfg, RouterPolicy::Jsq);
+    assert!(jsq < rr, "bursty JSQ p99 {jsq} must beat round-robin {rr}");
+}
+
+/// The full `[fleet]` config -> simulate -> writers path: SLO shedding
+/// and queue drops both account, per-replica totals sum, and the
+/// JSON/CSV shapes stay self-consistent.
+#[test]
+fn fleet_stack_roundtrip_through_writers() {
+    let mut cfg = fleet_cfg();
+    cfg.fleet.replicas = 2;
+    cfg.fleet.router = RouterPolicy::Jsq;
+    cfg.serving.requests = 300;
+    cfg.serving.queue_capacity = 8;
+    let s_full = full_batch_secs(&cfg);
+    cfg.fleet.slo_secs = 1.5 * s_full;
+    cfg.serving.arrival_rate = 8.0 * cfg.serving.max_batch as f64 / s_full;
+    let r = fleet::simulate(&cfg).unwrap();
+    assert_eq!(r.served + r.dropped + r.shed, r.offered, "conservation");
+    assert_eq!(r.offered, 300);
+    assert!(r.served > 0, "admission must still serve");
+    assert!(r.shed + r.dropped > 0, "4x overload must refuse load");
+    assert!(r.goodput_rps() <= r.throughput_rps() + 1e-12);
+    assert_eq!(
+        r.per_replica.iter().map(|p| p.served).sum::<u64>(),
+        r.served,
+        "per-replica served sums to the fleet total"
+    );
+    let json = writer::fleet_to_json(&r);
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    assert!(json.contains(&format!("\"served\":{}", r.served)));
+    assert!(json.contains(&format!("\"shed\":{}", r.shed)));
+    assert!(json.contains("\"goodput_rps\":"));
+    assert!(json.contains("\"per_replica\":["));
+    assert!(json.contains("\"scale_events\":["));
+    let csv = writer::fleet_to_csv(&r);
+    assert_eq!(
+        csv.lines().count() as u64,
+        r.batches + 1,
+        "header + one row per batch"
+    );
+}

@@ -553,6 +553,28 @@ fn serve_smoke_runs_shipped_serving_config() {
     assert!(json.contains("\"policy\":"));
 }
 
+/// Tier-1 fleet smoke (issue satellite): the shipped fleet config
+/// drives the full fleet layer — po2 router, SLO admission, autoscaler
+/// — end to end, shrunk for speed.
+#[test]
+fn fleet_smoke_runs_shipped_fleet_config() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut cfg = SimConfig::from_file(dir.join("fleet_4x.toml")).unwrap();
+    cfg.workload.embedding.num_tables = cfg.workload.embedding.num_tables.min(4);
+    cfg.workload.embedding.rows_per_table = cfg.workload.embedding.rows_per_table.min(10_000);
+    cfg.workload.embedding.pool = cfg.workload.embedding.pool.min(8);
+    cfg.serving.requests = 64;
+    let report = eonsim::coordinator::fleet::simulate(&cfg).unwrap();
+    assert_eq!(report.served + report.dropped + report.shed, report.offered);
+    assert!(report.served > 0);
+    assert_eq!(report.replicas, 4);
+    assert!(report.total.p99 >= report.total.p50);
+    let json = writer::fleet_to_json(&report);
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    assert!(json.contains("\"router\":\"po2\""));
+    assert!(json.contains("\"per_replica\":["));
+}
+
 #[test]
 fn multicore_global_config_reports_global_hits() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");

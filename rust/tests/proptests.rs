@@ -4,7 +4,7 @@
 //! seeds.
 
 use eonsim::champsim::{ChampCache, ChampPolicy};
-use eonsim::config::{presets, CachePolicyKind, OnchipPolicy, ShardStrategy, SimConfig};
+use eonsim::config::{presets, CachePolicyKind, OnchipPolicy, RouterPolicy, ShardStrategy, SimConfig};
 use eonsim::engine::Simulator;
 use eonsim::mem::policy::pinning::Profile;
 use eonsim::mem::{Cache, MemController};
@@ -571,6 +571,88 @@ fn prop_serving_batcher_conserves_request_ids() {
         assert!(
             report.per_batch.iter().all(|b| b.requests <= cfg.serving.max_batch),
             "{tag}"
+        );
+    });
+}
+
+/// Fleet-wide request conservation: across every router policy, arrival
+/// process, replica count, queue bound, SLO, and autoscaler setting,
+/// `served + dropped + shed == offered`, no served id is dropped on the
+/// floor, duplicated, or invented, per-replica totals sum to the fleet
+/// totals, and no batch exceeds the dispatch bound.
+#[test]
+fn prop_fleet_router_conserves_requests() {
+    forall("fleet conservation", 8, |rng| {
+        let mut cfg = presets::tpuv6e_dlrm_small();
+        // tiny workload: the property is about routing and admission
+        cfg.workload.embedding.num_tables = 1 + rng.next_below(3) as usize;
+        cfg.workload.embedding.rows_per_table = 1_000;
+        cfg.workload.embedding.pool = 1 + rng.next_below(4) as usize;
+        cfg.hardware.mem.policy = OnchipPolicy::Spm;
+        let s = &mut cfg.serving;
+        s.requests = 1 + rng.next_below(150) as usize;
+        s.arrival_rate = 1_000.0 * (1.0 + rng.next_f64() * 999.0);
+        s.max_batch = 1 + rng.next_below(24) as usize;
+        s.queue_capacity =
+            [0, 4 + rng.next_below(12) as usize][rng.next_below(2) as usize];
+        s.policy = [
+            eonsim::config::BatchPolicyKind::Dynamic,
+            eonsim::config::BatchPolicyKind::Size,
+            eonsim::config::BatchPolicyKind::Timeout,
+        ][rng.next_below(3) as usize];
+        s.arrival = [
+            eonsim::config::ArrivalKind::Poisson,
+            eonsim::config::ArrivalKind::Bursty,
+        ][rng.next_below(2) as usize];
+        s.timeout_secs = rng.next_f64() * 2e-3;
+        s.seed = rng.next_u64();
+        let fl = &mut cfg.fleet;
+        fl.replicas = 1 + rng.next_below(4) as usize;
+        fl.router = [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::Jsq,
+            RouterPolicy::PowerOfTwo,
+        ][rng.next_below(3) as usize];
+        fl.slo_secs = [0.0, 1e-5 * (1.0 + rng.next_f64() * 99.0)]
+            [rng.next_below(2) as usize];
+        fl.autoscale = rng.next_below(2) == 1;
+        fl.seed = rng.next_u64();
+        let requests = cfg.serving.requests as u64;
+        let tag = format!(
+            "{} x {} replicas, {} reqs, cap {}, slo {:e}, autoscale {}",
+            cfg.fleet.router.name(),
+            cfg.fleet.replicas,
+            requests,
+            cfg.serving.queue_capacity,
+            cfg.fleet.slo_secs,
+            cfg.fleet.autoscale,
+        );
+
+        let r = eonsim::coordinator::fleet::simulate(&cfg).unwrap();
+        assert_eq!(r.offered, requests, "{tag}");
+        assert_eq!(r.served + r.dropped + r.shed, r.offered, "{tag}: conservation");
+        if cfg.serving.queue_capacity == 0 && cfg.fleet.slo_secs == 0.0 {
+            assert_eq!(r.served, requests, "{tag}: nothing may be refused");
+        }
+        let mut ids: Vec<u64> = r.per_request.iter().map(|q| q.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, r.served, "{tag}: served ids unique");
+        assert!(ids.iter().all(|&id| id < requests), "{tag}: ids in range");
+        for q in &r.per_request {
+            assert!(q.queue_secs >= 0.0 && q.queue_secs.is_finite(), "{tag}");
+            assert!(q.compute_secs > 0.0 && q.compute_secs.is_finite(), "{tag}");
+        }
+        assert_eq!(
+            r.per_replica.iter().map(|p| p.served).sum::<u64>(),
+            r.served,
+            "{tag}: per-replica sums"
+        );
+        let batched: u64 = r.per_batch.iter().map(|b| b.requests as u64).sum();
+        assert_eq!(batched, r.served, "{tag}: every served request batched");
+        assert!(
+            r.per_batch.iter().all(|b| b.requests <= cfg.serving.max_batch),
+            "{tag}: dispatch bound"
         );
     });
 }

@@ -72,6 +72,7 @@ const TIME_PATHS: &[&str] = &[
     "rust/src/stats/",
     "rust/src/trace/",
     "rust/src/coordinator/serving.rs",
+    "rust/src/coordinator/fleet.rs",
 ];
 const CONC_EXEMPT: &[&str] = &["rust/src/parallel.rs", "rust/src/sharding/mod.rs"];
 
@@ -234,6 +235,30 @@ const SCHEMA: &[SchemaReq] = &[
         name: "ServingReport",
         csv: &[],
         json: &["serving_to_json"],
+    },
+    SchemaReq {
+        file: "rust/src/coordinator/fleet.rs",
+        name: "FleetBatch",
+        csv: &["fleet_to_csv"],
+        json: &["fleet_to_json"],
+    },
+    SchemaReq {
+        file: "rust/src/coordinator/fleet.rs",
+        name: "ReplicaStats",
+        csv: &[],
+        json: &["replica_json"],
+    },
+    SchemaReq {
+        file: "rust/src/coordinator/fleet.rs",
+        name: "ScaleEvent",
+        csv: &[],
+        json: &["scale_event_json"],
+    },
+    SchemaReq {
+        file: "rust/src/coordinator/fleet.rs",
+        name: "FleetReport",
+        csv: &[],
+        json: &["fleet_to_json"],
     },
 ];
 

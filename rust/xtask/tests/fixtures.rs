@@ -69,6 +69,29 @@ fn sim_time_fixture() {
     assert_clean("sim_time_good");
 }
 
+/// `coordinator/fleet.rs` is a simulated-time path: a host clock read in
+/// the fleet event loop must fire, and the clean loop must stay clean.
+#[test]
+fn fleet_sim_time_fixture() {
+    assert_fires("fleet_time_bad", "sim-time");
+    assert_clean("fleet_time_good");
+}
+
+/// The schema rule covers `FleetReport`: a field the fleet JSON writer
+/// drops is exactly one finding, named after the field.
+#[test]
+fn fleet_schema_fixture() {
+    let findings = lint_fixture("fleet_schema_bad");
+    assert_eq!(findings.len(), 1, "fleet JSON drops `shed`: {findings:?}");
+    assert_eq!(findings[0].rule, "schema");
+    assert!(
+        findings[0].message.contains("FleetReport.shed"),
+        "finding names the field: {:?}",
+        findings[0]
+    );
+    assert_clean("fleet_schema_good");
+}
+
 #[test]
 fn concurrency_fixture() {
     assert_fires("concurrency_bad", "concurrency");

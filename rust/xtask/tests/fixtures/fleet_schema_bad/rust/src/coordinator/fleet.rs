@@ -1,0 +1,7 @@
+//! Bad: `shed` is a public fleet report field that never reaches the
+//! JSON writer.
+
+pub struct FleetReport {
+    pub served: u64,
+    pub shed: u64,
+}

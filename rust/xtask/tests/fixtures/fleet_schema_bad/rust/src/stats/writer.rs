@@ -1,0 +1,7 @@
+//! Fleet emitter that silently drops the `shed` count.
+
+use crate::coordinator::fleet::FleetReport;
+
+pub fn fleet_to_json(r: &FleetReport) -> String {
+    format!("{{\"served\":{}}}", r.served)
+}

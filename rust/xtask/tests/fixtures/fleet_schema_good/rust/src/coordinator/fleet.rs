@@ -1,0 +1,6 @@
+//! Good: every fleet report field reaches the JSON writer.
+
+pub struct FleetReport {
+    pub served: u64,
+    pub shed: u64,
+}

@@ -1,0 +1,7 @@
+//! Fleet emitter covering the full report schema.
+
+use crate::coordinator::fleet::FleetReport;
+
+pub fn fleet_to_json(r: &FleetReport) -> String {
+    format!("{{\"served\":{},\"shed\":{}}}", r.served, r.shed)
+}

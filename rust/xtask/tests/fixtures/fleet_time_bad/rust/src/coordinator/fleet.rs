@@ -1,0 +1,7 @@
+//! Bad: the fleet autoscaler reads the host wall clock instead of the
+//! simulated one.
+
+pub fn autoscale_eval_at() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}
