@@ -1,0 +1,106 @@
+//! Fault injection & failure recovery: run one open-loop stream
+//! through an escalating chaos script and print each client strategy's
+//! availability headline.
+//!
+//! Three acts:
+//! 1. a scripted mid-stream crash against a client with **no retry
+//!    budget** — every stranded copy is a permanently failed request;
+//! 2. the same crash with **bounded retries + failover** — the stranded
+//!    copies re-route to the healthy replicas and availability comes
+//!    back;
+//! 3. random crashes layered with transient slowdowns, fleet-wide link
+//!    degradation, hedging, and health-aware eviction — the full
+//!    recovery stack under compound faults.
+//!
+//! Every fault instant is drawn from dedicated SplitMix64 streams, so
+//! each act reprints byte-identically on every run and thread count.
+//!
+//! Run: `cargo run --release --example faulty_fleet`
+
+use eonsim::config::{presets, OnchipPolicy, RouterPolicy};
+use eonsim::coordinator::fleet;
+use eonsim::engine::Simulator;
+
+fn main() -> anyhow::Result<()> {
+    let mut base = presets::tpuv6e_dlrm_small();
+    base.workload.embedding.num_tables = 16;
+    base.workload.embedding.rows_per_table = 100_000;
+    base.workload.embedding.pool = 32;
+    base.workload.trace.alpha = 1.1;
+    base.hardware.mem.policy = OnchipPolicy::Spm;
+    base.serving.requests = 600;
+    base.serving.max_batch = 32;
+    base.fleet.replicas = 4;
+    base.fleet.router = RouterPolicy::Jsq;
+
+    // service-capacity anchor: a full batch's simulated seconds
+    let mut probe = base.clone();
+    probe.workload.batch_size = base.serving.max_batch;
+    probe.workload.num_batches = 1;
+    let batch_secs = Simulator::new(probe).run()?.exec_time_secs();
+    let mu = base.serving.max_batch as f64 / batch_secs;
+    base.serving.arrival_rate = 0.8 * 4.0 * mu; // 80% of fleet capacity
+
+    // one scripted crash of replica 0, mid-stream
+    let crash_at = 40.0 * batch_secs;
+    let mttr = 10.0 * batch_secs;
+
+    println!(
+        "== chaos script: 4 replicas (jsq) at {:.0} req/s, crash replica 0 ==",
+        base.serving.arrival_rate
+    );
+    println!(
+        "{:>28} {:>9} {:>7} {:>8} {:>9} {:>10} {:>12}",
+        "client strategy", "avail %", "failed", "retries", "failovers", "hedged", "p99 inc ms"
+    );
+    let act = |title: &str, tweak: &dyn Fn(&mut eonsim::config::SimConfig)| {
+        let mut cfg = base.clone();
+        cfg.faults.crash_at_secs = vec![crash_at];
+        cfg.faults.crash_replica = vec![0];
+        cfg.faults.mttr_secs = mttr;
+        tweak(&mut cfg);
+        let r = fleet::simulate(&cfg)?;
+        let f = r.faults.as_ref().expect("active faults attach a summary");
+        println!(
+            "{:>28} {:>9.3} {:>7} {:>8} {:>9} {:>10} {:>12.3}",
+            title,
+            f.availability * 100.0,
+            f.failed,
+            f.retries,
+            f.failovers,
+            f.hedged,
+            f.incident_p99_secs * 1e3,
+        );
+        anyhow::Ok(())
+    };
+    act("no retries (attempts = 1)", &|cfg| {
+        cfg.faults.max_attempts = 1;
+    })?;
+    act("retries + failover (3)", &|cfg| {
+        cfg.faults.max_attempts = 3;
+    })?;
+    act("+ hedging at 3 batch times", &|cfg| {
+        cfg.faults.max_attempts = 3;
+        cfg.faults.hedge_secs = 3.0 * batch_secs;
+    })?;
+    act("full stack, compound faults", &|cfg| {
+        cfg.faults.mtbf_secs = 80.0 * batch_secs;
+        cfg.faults.max_attempts = 3;
+        cfg.faults.hedge_secs = 3.0 * batch_secs;
+        cfg.faults.slowdown_factor = 4.0;
+        cfg.faults.slowdown_mtbf_secs = 30.0 * batch_secs;
+        cfg.faults.slowdown_duration_secs = 5.0 * batch_secs;
+        cfg.faults.link_degrade_factor = 2.0;
+        cfg.faults.link_degrade_mtbf_secs = 60.0 * batch_secs;
+        cfg.faults.link_degrade_duration_secs = 8.0 * batch_secs;
+        cfg.faults.health_evict = 0.25;
+    })?;
+    println!();
+    println!("takeaways: a crash with no retry budget converts every stranded");
+    println!("copy into a lost request; bounded retries with failover recover");
+    println!("all of them for the price of a fatter incident-window tail, and");
+    println!("hedging trades duplicate batch slots for tail latency. The");
+    println!("incident/steady p99 split shows the outage cost that a single");
+    println!("fleet-wide p99 would smear away.");
+    Ok(())
+}

@@ -119,30 +119,33 @@ pub struct BenchReport {
     pub sharded: ShardedComparison,
 }
 
-/// Time `f` over `reps` repetitions after one warmup.
-fn time<F: FnMut()>(reps: usize, mut f: F) -> (f64, f64, f64) {
-    f(); // warmup
+/// Time `f` over `reps` repetitions after one warmup. A failing
+/// repetition (e.g. a simulator error) aborts the section and names it
+/// via the caller, instead of panicking mid-benchmark.
+fn time<F: FnMut() -> anyhow::Result<()>>(reps: usize, mut f: F) -> anyhow::Result<(f64, f64, f64)> {
+    f()?; // warmup
     let mut times = Vec::with_capacity(reps);
     for _ in 0..reps {
         let t0 = Instant::now();
-        f();
+        f()?;
         times.push(t0.elapsed().as_secs_f64());
     }
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
     let max = times.iter().cloned().fold(0.0, f64::max);
-    (mean, min, max)
+    Ok((mean, min, max))
 }
 
-fn section<F: FnMut()>(
+fn section<F: FnMut() -> anyhow::Result<()>>(
     id: &'static str,
     label: impl Into<String>,
     items: u64,
     reps: usize,
     f: F,
-) -> SectionResult {
-    let (mean_secs, min_secs, max_secs) = time(reps, f);
-    SectionResult { id, label: label.into(), items, reps, mean_secs, min_secs, max_secs }
+) -> anyhow::Result<SectionResult> {
+    let (mean_secs, min_secs, max_secs) =
+        time(reps, f).map_err(|e| e.context(format!("bench section `{id}`")))?;
+    Ok(SectionResult { id, label: label.into(), items, reps, mean_secs, min_secs, max_secs })
 }
 
 /// The 4-device profiled serving workload the sharded comparison runs:
@@ -186,8 +189,9 @@ pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
             for _ in 0..n_samples {
                 sink ^= z.sample(&mut rng);
             }
+            Ok(())
         },
-    ));
+    )?);
 
     // 2) cache access throughput (128 MB, 16-way, skewed stream)
     let n_acc = opts.scaled(8_000_000);
@@ -205,7 +209,8 @@ pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
             for &a in &addrs {
                 cache.access(a);
             }
-        }));
+            Ok(())
+        })?);
     }
 
     // 3) DRAM + controller throughput
@@ -222,8 +227,9 @@ pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
                 ctrl.enqueue(a, i as u64 / 32);
             }
             ctrl.drain();
+            Ok(())
         },
-    ));
+    )?);
 
     // 4) trace generation
     let mut w = presets::dlrm_rmc2_small(if opts.smoke { 64 } else { 256 });
@@ -235,11 +241,12 @@ pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
         lookups,
         reps,
         || {
-            let mut g = TraceGenerator::new(&w).unwrap();
+            let mut g = TraceGenerator::new(&w)?;
             let b = g.next_batch();
             std::hint::black_box(&b);
+            Ok(())
         },
-    ));
+    )?);
 
     // 5) end-to-end single-device sim rate (the classic §Perf metric)
     for (id, name, policy) in [
@@ -257,10 +264,11 @@ pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
             line_accesses,
             reps,
             || {
-                let r = Simulator::new(cfg.clone()).run().unwrap();
+                let r = Simulator::new(cfg.clone()).run()?;
                 std::hint::black_box(r.total_cycles());
+                Ok(())
             },
-        ));
+        )?);
     }
 
     // 6) simulated-time serving loop (`eonsim serve`'s hot path): an
@@ -286,10 +294,11 @@ pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
             n_requests,
             reps,
             || {
-                let r = crate::coordinator::serving::simulate(&scfg).unwrap();
+                let r = crate::coordinator::serving::simulate(&scfg)?;
                 std::hint::black_box((r.served, r.total.p99));
+                Ok(())
             },
-        ));
+        )?);
 
         // 6b) fleet serving (`eonsim serve --replicas`): the same open
         // loop routed across 4 replica pods by join-shortest-queue, with
@@ -306,10 +315,11 @@ pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
             n_requests,
             reps,
             || {
-                let r = crate::coordinator::fleet::simulate(&fcfg).unwrap();
+                let r = crate::coordinator::fleet::simulate(&fcfg)?;
                 std::hint::black_box((r.served, r.total.p99));
+                Ok(())
             },
-        ));
+        )?);
     }
 
     // 7) sharded end-to-end: identical profiled 4-device run at
@@ -321,13 +331,15 @@ pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
     let line_accesses =
         serial_cfg.workload.lookups_per_batch() * batches as u64 * 8;
     let (serial_secs, serial_min, serial_max) = time(reps, || {
-        let r = Simulator::new(serial_cfg.clone()).run().unwrap();
+        let r = Simulator::new(serial_cfg.clone()).run()?;
         std::hint::black_box(r.total_cycles());
-    });
+        Ok(())
+    })?;
     let (parallel_secs, parallel_min, parallel_max) = time(reps, || {
-        let r = Simulator::new(parallel_cfg.clone()).run().unwrap();
+        let r = Simulator::new(parallel_cfg.clone()).run()?;
         std::hint::black_box(r.total_cycles());
-    });
+        Ok(())
+    })?;
     sections.push(SectionResult {
         id: "sharded_e2e_serial",
         label: format!("sharded e2e (4 dev, threads 1, batch {})", serial_cfg.workload.batch_size),

@@ -34,8 +34,8 @@ impl Args {
             // `--key=value` or `--key value` or bare switch
             if let Some((k, v)) = name.split_once('=') {
                 flags.insert(k.to_string(), v.to_string());
-            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                flags.insert(name.to_string(), it.next().unwrap());
+            } else if let Some(value) = it.next_if(|n| !n.starts_with("--")) {
+                flags.insert(name.to_string(), value);
             } else {
                 switches.push(name.to_string());
             }

@@ -533,6 +533,126 @@ impl Default for FleetConfig {
     }
 }
 
+/// Fault-injection and failure-recovery configuration (`[faults]`):
+/// deterministic replica crashes (random MTBF/MTTR renewal processes
+/// and/or a scripted schedule), transient slowdown and link-degradation
+/// episodes, and the client-side recovery machinery — bounded retries
+/// with exponential backoff, hedged requests, and EWMA health-aware
+/// routing. Entirely inert at the defaults: with [`FaultsConfig::active`]
+/// false, `eonsim serve` runs the byte-identical PR 7 fleet loop. All
+/// times are simulated seconds (`*_ms` keys in TOML/CLI).
+#[derive(Debug, Clone)]
+pub struct FaultsConfig {
+    /// Mean simulated seconds between random crashes per replica
+    /// (`mtbf_ms` in TOML; exponential inter-failure times from the
+    /// dedicated fault stream). `0` disables random crashes.
+    pub mtbf_secs: f64,
+    /// Mean-time-to-repair in seconds (`mttr_ms`): a crashed replica
+    /// comes back up this long after the crash, then cold-restarts (it
+    /// re-pays `fleet.warmup_ms` plus `refill_ms` before accepting).
+    pub mttr_secs: f64,
+    /// Scripted crash instants in seconds (`crash_at_ms`, integer
+    /// milliseconds): deterministic schedule, paired index-for-index
+    /// with `crash_replica`. Merged with the random MTBF process.
+    pub crash_at_secs: Vec<f64>,
+    /// Replica index each scripted crash hits (`crash_replica`).
+    pub crash_replica: Vec<usize>,
+    /// Cache-refill penalty in seconds (`refill_ms`) a cold-restarted
+    /// replica pays on top of `fleet.warmup_ms`: its SimCore state is
+    /// discarded, so the first post-restart batches re-warm on-chip
+    /// memory and the admission gate reflects that.
+    pub refill_secs: f64,
+    /// Transient-slowdown episode multiplier (`slowdown_factor`):
+    /// batches a replica dispatches inside an episode take this many
+    /// times their intrinsic compute seconds (cycles stay unscaled,
+    /// like `fleet.straggler_factor`). `1.0` disables episodes.
+    pub slowdown_factor: f64,
+    /// Mean seconds between slowdown episodes per replica
+    /// (`slowdown_mtbf_ms`, exponential).
+    pub slowdown_mtbf_secs: f64,
+    /// Fixed slowdown episode length in seconds (`slowdown_duration_ms`).
+    pub slowdown_duration_secs: f64,
+    /// Inter-node link-degradation multiplier (`link_degrade_factor`):
+    /// during a fleet-wide episode the `[topology]` inter tier's
+    /// effective bytes/cycle drops by this factor, so a dispatched
+    /// batch pays `(factor - 1)` extra copies of its inter-node
+    /// exchange seconds as exposed wall time. `1.0` disables.
+    pub link_degrade_factor: f64,
+    /// Mean seconds between link-degradation episodes
+    /// (`link_degrade_mtbf_ms`, exponential, one fleet-wide process).
+    pub link_degrade_mtbf_secs: f64,
+    /// Fixed link-degradation episode length in seconds
+    /// (`link_degrade_duration_ms`).
+    pub link_degrade_duration_secs: f64,
+    /// Retry budget per request (`max_attempts`): total tries including
+    /// the first. A request whose copies all die with the budget spent
+    /// counts as permanently `failed`.
+    pub max_attempts: usize,
+    /// Base retry backoff in seconds (`backoff_ms`): attempt `k`
+    /// re-enqueues `backoff * 2^(k-1)` after the failure (exponential
+    /// backoff on the simulated clock).
+    pub backoff_secs: f64,
+    /// Hedge delay in seconds (`hedge_ms`): a request still queued this
+    /// long after admission gets a duplicate on a second replica; the
+    /// first completion wins and the loser's work is still charged.
+    /// Pick it near the steady-state p99 queue delay. `0` disables.
+    pub hedge_secs: f64,
+    /// Health-aware routing threshold (`health_evict`): a replica whose
+    /// EWMA health score falls below this leaves the routing candidate
+    /// set until probe requests lift it back. `0` disables health
+    /// routing (crashed replicas are still skipped while down).
+    pub health_evict: f64,
+    /// Probe cadence in seconds (`probe_ms`): an evicted-but-up replica
+    /// is probed with one routed request at most this often; successful
+    /// probes recover its health score and re-admit it.
+    pub probe_secs: f64,
+    /// Fault-stream RNG seed (forked per replica for crash and slowdown
+    /// draws, plus one fleet-wide link stream; independent of router,
+    /// arrival, and workload seeds).
+    pub seed: u64,
+}
+
+impl FaultsConfig {
+    /// Whether any crash source (random or scripted) is configured.
+    pub fn crashes_possible(&self) -> bool {
+        self.mtbf_secs > 0.0 || !self.crash_at_secs.is_empty()
+    }
+
+    /// Whether the fault-aware fleet loop is engaged at all. False (the
+    /// default) keeps `fleet::simulate` on the PR 7 loop, byte for byte.
+    pub fn active(&self) -> bool {
+        self.crashes_possible()
+            || self.slowdown_factor > 1.0
+            || self.link_degrade_factor > 1.0
+            || self.hedge_secs > 0.0
+            || self.health_evict > 0.0
+    }
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            mtbf_secs: 0.0,
+            mttr_secs: 10e-3,
+            crash_at_secs: Vec::new(),
+            crash_replica: Vec::new(),
+            refill_secs: 1e-3,
+            slowdown_factor: 1.0,
+            slowdown_mtbf_secs: 50e-3,
+            slowdown_duration_secs: 5e-3,
+            link_degrade_factor: 1.0,
+            link_degrade_mtbf_secs: 100e-3,
+            link_degrade_duration_secs: 10e-3,
+            max_attempts: 3,
+            backoff_secs: 0.5e-3,
+            hedge_secs: 0.0,
+            health_evict: 0.0,
+            probe_secs: 2e-3,
+            seed: 0xFA_017,
+        }
+    }
+}
+
 /// Vector + matrix unit configuration for one NPU core.
 #[derive(Debug, Clone)]
 pub struct CoreConfig {
@@ -788,6 +908,10 @@ pub struct SimConfig {
     /// Fleet-scale serving (`[fleet]`): replica count, router, SLO
     /// admission, autoscaling. Inert at the single-replica default.
     pub fleet: FleetConfig,
+    /// Fault injection and recovery (`[faults]`): crashes, slowdown and
+    /// link-degradation episodes, retries/hedging, health routing.
+    /// Inert (byte-identical fleet reports) at the defaults.
+    pub faults: FaultsConfig,
     /// Host worker threads for the per-device fan-out and driver sweeps
     /// (`[sim] threads` / `--threads`; default = available parallelism).
     /// Purely a host-performance knob: any value produces byte-identical
@@ -798,11 +922,17 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
-    /// Load from a TOML-subset file (see `configs/*.toml`).
+    /// Load from a TOML-subset file (see `configs/*.toml`). Errors name
+    /// the offending file so a bad `--config` path or a typo inside it
+    /// is diagnosable from the CLI message alone.
     pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<SimConfig> {
-        let text = std::fs::read_to_string(path.as_ref())?;
-        let table = Table::parse(&text)?;
-        Ok(SimConfig::from_table(&table)?)
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read config {}: {e}", path.display()))?;
+        let table = Table::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse config {}: {e}", path.display()))?;
+        SimConfig::from_table(&table)
+            .map_err(|e| anyhow::anyhow!("config {}: {e}", path.display()))
     }
 
     /// Build from a parsed table; unknown keys are ignored, missing keys
@@ -955,6 +1085,46 @@ impl SimConfig {
         fl.warmup_secs = t.float_or("fleet.warmup_ms", fl.warmup_secs * 1e3)? / 1e3;
         fl.straggler_factor = t.float_or("fleet.straggler_factor", fl.straggler_factor)?;
         fl.seed = t.u64_or("fleet.seed", fl.seed)?;
+
+        let fa = &mut cfg.faults;
+        fa.mtbf_secs = t.float_or("faults.mtbf_ms", fa.mtbf_secs * 1e3)? / 1e3;
+        fa.mttr_secs = t.float_or("faults.mttr_ms", fa.mttr_secs * 1e3)? / 1e3;
+        if t.contains("faults.crash_at_ms") {
+            fa.crash_at_secs = t
+                .int_array("faults.crash_at_ms")?
+                .iter()
+                .map(|&ms| ms as f64 / 1e3)
+                .collect();
+        }
+        if t.contains("faults.crash_replica") {
+            // negatives survive the cast here; validate() rejects them
+            // via the paired range check with the key name attached
+            fa.crash_replica = t
+                .int_array("faults.crash_replica")?
+                .iter()
+                .map(|&i| i as usize)
+                .collect();
+        }
+        fa.refill_secs = t.float_or("faults.refill_ms", fa.refill_secs * 1e3)? / 1e3;
+        fa.slowdown_factor = t.float_or("faults.slowdown_factor", fa.slowdown_factor)?;
+        fa.slowdown_mtbf_secs =
+            t.float_or("faults.slowdown_mtbf_ms", fa.slowdown_mtbf_secs * 1e3)? / 1e3;
+        fa.slowdown_duration_secs =
+            t.float_or("faults.slowdown_duration_ms", fa.slowdown_duration_secs * 1e3)? / 1e3;
+        fa.link_degrade_factor =
+            t.float_or("faults.link_degrade_factor", fa.link_degrade_factor)?;
+        fa.link_degrade_mtbf_secs =
+            t.float_or("faults.link_degrade_mtbf_ms", fa.link_degrade_mtbf_secs * 1e3)? / 1e3;
+        fa.link_degrade_duration_secs = t.float_or(
+            "faults.link_degrade_duration_ms",
+            fa.link_degrade_duration_secs * 1e3,
+        )? / 1e3;
+        fa.max_attempts = t.usize_or("faults.max_attempts", fa.max_attempts)?;
+        fa.backoff_secs = t.float_or("faults.backoff_ms", fa.backoff_secs * 1e3)? / 1e3;
+        fa.hedge_secs = t.float_or("faults.hedge_ms", fa.hedge_secs * 1e3)? / 1e3;
+        fa.health_evict = t.float_or("faults.health_evict", fa.health_evict)?;
+        fa.probe_secs = t.float_or("faults.probe_ms", fa.probe_secs * 1e3)? / 1e3;
+        fa.seed = t.u64_or("faults.seed", fa.seed)?;
 
         cfg.threads = t.usize_or("sim.threads", cfg.threads)?;
         cfg.seed = t.u64_or("seed", cfg.seed)?;
@@ -1174,6 +1344,159 @@ impl SimConfig {
                     "scale-down threshold must satisfy 0 <= scale_down_util < \
                      scale_up_util = {} (equal thresholds would oscillate), got {}",
                     fl.scale_up_util, fl.scale_down_util
+                ),
+            );
+        }
+        // `[faults]` checks use the NaN-rejecting `!(x >= bound)` form
+        // throughout: a NaN fails every comparison, so the negated
+        // comparison rejects it with the key name attached instead of
+        // letting it poison the simulated clock downstream.
+        let fa = &self.faults;
+        if !(fa.mtbf_secs >= 0.0) {
+            return invalid(
+                "faults.mtbf_ms",
+                format!("mean time between failures must be >= 0 (0 disables), got {} s", fa.mtbf_secs),
+            );
+        }
+        if fa.crashes_possible() && !(fa.mttr_secs > 0.0) {
+            return invalid(
+                "faults.mttr_ms",
+                format!(
+                    "mean time to repair must be positive when crashes are \
+                     configured, got {} s",
+                    fa.mttr_secs
+                ),
+            );
+        }
+        if fa.crash_at_secs.len() != fa.crash_replica.len() {
+            return invalid(
+                "faults.crash_replica",
+                format!(
+                    "scripted schedule pairs index-for-index: crash_at_ms has {} \
+                     entries but crash_replica has {}",
+                    fa.crash_at_secs.len(),
+                    fa.crash_replica.len()
+                ),
+            );
+        }
+        if let Some(t) = fa.crash_at_secs.iter().find(|&&t| !(t >= 0.0)) {
+            return invalid(
+                "faults.crash_at_ms",
+                format!("scripted crash instants must be >= 0 ms, got {} s", t),
+            );
+        }
+        if let Some(&i) = fa.crash_replica.iter().find(|&&i| i >= fl.replicas) {
+            return invalid(
+                "faults.crash_replica",
+                format!(
+                    "scripted crash targets replica {} but only {} replicas are \
+                     provisioned (indices are 0-based)",
+                    i, fl.replicas
+                ),
+            );
+        }
+        if !(fa.refill_secs >= 0.0) {
+            return invalid(
+                "faults.refill_ms",
+                format!("cold-restart cache-refill penalty must be >= 0, got {} s", fa.refill_secs),
+            );
+        }
+        if !(fa.slowdown_factor >= 1.0) {
+            return invalid(
+                "faults.slowdown_factor",
+                format!("slowdown multiplier must be >= 1.0 (1.0 disables), got {}", fa.slowdown_factor),
+            );
+        }
+        if fa.slowdown_factor > 1.0 {
+            if !(fa.slowdown_mtbf_secs > 0.0) {
+                return invalid(
+                    "faults.slowdown_mtbf_ms",
+                    format!(
+                        "episode inter-arrival mean must be positive when \
+                         slowdown_factor > 1, got {} s",
+                        fa.slowdown_mtbf_secs
+                    ),
+                );
+            }
+            if !(fa.slowdown_duration_secs > 0.0) {
+                return invalid(
+                    "faults.slowdown_duration_ms",
+                    format!(
+                        "episode length must be positive when slowdown_factor > 1, \
+                         got {} s",
+                        fa.slowdown_duration_secs
+                    ),
+                );
+            }
+        }
+        if !(fa.link_degrade_factor >= 1.0) {
+            return invalid(
+                "faults.link_degrade_factor",
+                format!(
+                    "link-degradation multiplier must be >= 1.0 (1.0 disables), got {}",
+                    fa.link_degrade_factor
+                ),
+            );
+        }
+        if fa.link_degrade_factor > 1.0 {
+            if !(fa.link_degrade_mtbf_secs > 0.0) {
+                return invalid(
+                    "faults.link_degrade_mtbf_ms",
+                    format!(
+                        "episode inter-arrival mean must be positive when \
+                         link_degrade_factor > 1, got {} s",
+                        fa.link_degrade_mtbf_secs
+                    ),
+                );
+            }
+            if !(fa.link_degrade_duration_secs > 0.0) {
+                return invalid(
+                    "faults.link_degrade_duration_ms",
+                    format!(
+                        "episode length must be positive when \
+                         link_degrade_factor > 1, got {} s",
+                        fa.link_degrade_duration_secs
+                    ),
+                );
+            }
+        }
+        if fa.max_attempts == 0 {
+            return invalid(
+                "faults.max_attempts",
+                "retry budget counts the first try, so it must be >= 1 \
+                 (1 = fail permanently on the first crash)"
+                    .into(),
+            );
+        }
+        if !(fa.backoff_secs >= 0.0) {
+            return invalid(
+                "faults.backoff_ms",
+                format!("retry backoff must be >= 0, got {} s", fa.backoff_secs),
+            );
+        }
+        if !(fa.hedge_secs >= 0.0) {
+            return invalid(
+                "faults.hedge_ms",
+                format!("hedge delay must be >= 0 (0 disables), got {} s", fa.hedge_secs),
+            );
+        }
+        if !(fa.health_evict >= 0.0 && fa.health_evict < 1.0) {
+            return invalid(
+                "faults.health_evict",
+                format!(
+                    "health eviction threshold must be in [0, 1) (0 disables; a \
+                     healthy replica scores 1.0), got {}",
+                    fa.health_evict
+                ),
+            );
+        }
+        if fa.health_evict > 0.0 && !(fa.probe_secs > 0.0) {
+            return invalid(
+                "faults.probe_ms",
+                format!(
+                    "probe cadence must be positive when health routing is on \
+                     (probes are the only re-admission path), got {} s",
+                    fa.probe_secs
                 ),
             );
         }
@@ -1615,6 +1938,111 @@ mod tests {
         let t = Table::parse("[fleet]\nreplicas = 4\nmax_replicas = 16").unwrap();
         let fl = SimConfig::from_table(&t).unwrap().fleet;
         assert_eq!(fl.max_active(), 4, "ceiling clamps to provisioned replicas");
+    }
+
+    #[test]
+    fn faults_defaults_are_inert() {
+        let fa = SimConfig::from_table(&Table::parse("").unwrap()).unwrap().faults;
+        assert!(!fa.active(), "default [faults] must keep the PR 7 fleet loop");
+        assert!(!fa.crashes_possible());
+        assert_eq!(fa.mtbf_secs, 0.0);
+        assert_eq!(fa.slowdown_factor, 1.0);
+        assert_eq!(fa.link_degrade_factor, 1.0);
+        assert_eq!(fa.hedge_secs, 0.0);
+        assert_eq!(fa.health_evict, 0.0);
+        assert_eq!(fa.max_attempts, 3, "retry budget is ready when crashes turn on");
+    }
+
+    #[test]
+    fn faults_section_parses() {
+        let t = Table::parse(
+            "[fleet]\nreplicas = 4\n\
+             [faults]\nmtbf_ms = 20\nmttr_ms = 5\ncrash_at_ms = [1, 3]\n\
+             crash_replica = [0, 2]\nrefill_ms = 2\nslowdown_factor = 3\n\
+             slowdown_mtbf_ms = 40\nslowdown_duration_ms = 4\n\
+             link_degrade_factor = 2\nlink_degrade_mtbf_ms = 80\n\
+             link_degrade_duration_ms = 8\nmax_attempts = 5\nbackoff_ms = 0.25\n\
+             hedge_ms = 1.5\nhealth_evict = 0.4\nprobe_ms = 3\nseed = 99",
+        )
+        .unwrap();
+        let fa = SimConfig::from_table(&t).unwrap().faults;
+        assert!(fa.active() && fa.crashes_possible());
+        assert!((fa.mtbf_secs - 20e-3).abs() < 1e-12);
+        assert!((fa.mttr_secs - 5e-3).abs() < 1e-12);
+        assert_eq!(fa.crash_at_secs.len(), 2);
+        assert!((fa.crash_at_secs[0] - 1e-3).abs() < 1e-12);
+        assert!((fa.crash_at_secs[1] - 3e-3).abs() < 1e-12);
+        assert_eq!(fa.crash_replica, vec![0, 2]);
+        assert!((fa.refill_secs - 2e-3).abs() < 1e-12);
+        assert_eq!(fa.slowdown_factor, 3.0);
+        assert!((fa.slowdown_mtbf_secs - 40e-3).abs() < 1e-12);
+        assert!((fa.slowdown_duration_secs - 4e-3).abs() < 1e-12);
+        assert_eq!(fa.link_degrade_factor, 2.0);
+        assert!((fa.link_degrade_mtbf_secs - 80e-3).abs() < 1e-12);
+        assert!((fa.link_degrade_duration_secs - 8e-3).abs() < 1e-12);
+        assert_eq!(fa.max_attempts, 5);
+        assert!((fa.backoff_secs - 0.25e-3).abs() < 1e-12);
+        assert!((fa.hedge_secs - 1.5e-3).abs() < 1e-12);
+        assert_eq!(fa.health_evict, 0.4);
+        assert!((fa.probe_secs - 3e-3).abs() < 1e-12);
+        assert_eq!(fa.seed, 99);
+    }
+
+    #[test]
+    fn faults_validation_rejects_bad_values_with_clear_errors() {
+        for (doc, key) in [
+            ("[faults]\nmtbf_ms = -1", "faults.mtbf_ms"),
+            ("[faults]\nmtbf_ms = nan", "faults.mtbf_ms"),
+            ("[faults]\nmtbf_ms = 10\nmttr_ms = 0", "faults.mttr_ms"),
+            ("[faults]\nmtbf_ms = 10\nmttr_ms = nan", "faults.mttr_ms"),
+            // schedule arrays pair index-for-index
+            ("[faults]\ncrash_at_ms = [1, 2]\ncrash_replica = [0]", "faults.crash_replica"),
+            ("[faults]\ncrash_at_ms = [-1]\ncrash_replica = [0]", "faults.crash_at_ms"),
+            // replica index out of the provisioned range (and the negative
+            // that survives the integer cast)
+            ("[fleet]\nreplicas = 2\n[faults]\ncrash_at_ms = [1]\ncrash_replica = [2]",
+             "faults.crash_replica"),
+            ("[faults]\ncrash_at_ms = [1]\ncrash_replica = [-1]", "faults.crash_replica"),
+            ("[faults]\nmtbf_ms = 10\nrefill_ms = -1", "faults.refill_ms"),
+            ("[faults]\nslowdown_factor = 0.5", "faults.slowdown_factor"),
+            ("[faults]\nslowdown_factor = nan", "faults.slowdown_factor"),
+            ("[faults]\nslowdown_factor = 2\nslowdown_mtbf_ms = 0", "faults.slowdown_mtbf_ms"),
+            ("[faults]\nslowdown_factor = 2\nslowdown_duration_ms = 0",
+             "faults.slowdown_duration_ms"),
+            ("[faults]\nlink_degrade_factor = 0.9", "faults.link_degrade_factor"),
+            ("[faults]\nlink_degrade_factor = 2\nlink_degrade_mtbf_ms = 0",
+             "faults.link_degrade_mtbf_ms"),
+            ("[faults]\nlink_degrade_factor = 2\nlink_degrade_duration_ms = nan",
+             "faults.link_degrade_duration_ms"),
+            ("[faults]\nmtbf_ms = 10\nmax_attempts = 0", "faults.max_attempts"),
+            ("[faults]\nmtbf_ms = 10\nbackoff_ms = -1", "faults.backoff_ms"),
+            ("[faults]\nhedge_ms = -1", "faults.hedge_ms"),
+            ("[faults]\nhealth_evict = 1.0", "faults.health_evict"),
+            ("[faults]\nhealth_evict = -0.1", "faults.health_evict"),
+            ("[faults]\nhealth_evict = nan", "faults.health_evict"),
+            ("[faults]\nhealth_evict = 0.5\nprobe_ms = 0", "faults.probe_ms"),
+        ] {
+            let err = SimConfig::from_table(&Table::parse(doc).unwrap())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(key), "`{doc}` must name `{key}`: {err}");
+        }
+        // mttr/max_attempts/probe_ms checks only bind once their feature is
+        // configured: the defaults alone stay valid
+        for doc in [
+            "[faults]\nmttr_ms = 0",
+            "[faults]\nmax_attempts = 0",
+            "[faults]\nprobe_ms = 0",
+        ] {
+            // max_attempts = 0 is always rejected (the budget counts the
+            // first try); the other two are inert without their feature
+            let r = SimConfig::from_table(&Table::parse(doc).unwrap());
+            if doc.contains("max_attempts") {
+                assert!(r.is_err(), "`{doc}` must be rejected");
+            } else {
+                assert!(r.is_ok(), "`{doc}` is inert while its feature is off");
+            }
+        }
     }
 
     #[test]

@@ -80,6 +80,7 @@ pub fn tpuv6e_dlrm_small() -> SimConfig {
         sharding: ShardingConfig::default(),
         serving: ServingConfig::default(),
         fleet: FleetConfig::default(),
+        faults: FaultsConfig::default(),
         threads: super::default_threads(),
         seed: 0xE05_1337,
     }

@@ -1,0 +1,1142 @@
+//! Deterministic fault injection & failure recovery for fleet serving.
+//!
+//! PR 7's fleet loop assumes perfectly reliable replicas; production
+//! fleets fail. This module is the fault-aware twin of
+//! [`super::fleet::simulate`], engaged only when `[faults]` is active
+//! (the plain loop stays byte-identical otherwise). It injects, all on
+//! the simulated clock and from dedicated SplitMix64 streams:
+//!
+//! * **crashes** — a per-replica MTBF renewal process and/or a scripted
+//!   `crash_at_ms`/`crash_replica` schedule. A crash voids the
+//!   in-flight batch (its work is lost, not charged) and drops the
+//!   queue; the replica returns `mttr_ms` later as a **cold restart**:
+//!   its [`ServingSim`] warmth is discarded and it re-pays
+//!   `fleet.warmup_ms` plus the `refill_ms` cache-refill penalty
+//!   before accepting again;
+//! * **slowdown episodes** — per-replica exponential arrivals of
+//!   fixed-length episodes that multiply dispatched batches' compute
+//!   seconds by `slowdown_factor` (cycles stay intrinsic, like the
+//!   straggler knob);
+//! * **link degradation** — fleet-wide episodes during which the
+//!   `[topology]` inter tier runs `link_degrade_factor` times slower: a
+//!   dispatched batch pays `(factor - 1)` extra copies of its
+//!   inter-node exchange seconds as exposed wall time (a first-order
+//!   model over [`BatchStep::inter_secs`]).
+//!
+//! On top sits the client-side recovery machinery:
+//!
+//! * **bounded retries** — copies lost to a crash re-enqueue through
+//!   exponential backoff (`backoff_ms * 2^(attempt-1)`) up to
+//!   `max_attempts` total tries, then count as permanently `failed`;
+//!   a retry routed to a different replica is a `failover`;
+//! * **hedged requests** — a request still queued `hedge_ms` after
+//!   admission gets one duplicate on a second replica; the first
+//!   completion wins (`hedge_wins` when the duplicate), the loser's
+//!   batch work is still charged (`hedge_wasted`);
+//! * **health-aware routing** — an EWMA health score per replica
+//!   (crash => 0, each completed batch moves it toward
+//!   intrinsic/effective compute) evicts a replica from the candidate
+//!   set below `health_evict`; probe requests every `probe_ms` are the
+//!   re-admission path.
+//!
+//! Request conservation is the load-bearing invariant:
+//! `offered == served + dropped + shed + failed`, with hedged
+//! duplicates never double-counting as served (tested, and proptested
+//! across schedules, routers, and retry policies). Reports stay
+//! byte-identical at any `--threads`: every phase is serial in replica
+//! order except the core stepping, which reuses the fleet loop's
+//! [`parallel_map_mut`](crate::parallel::parallel_map_mut) plan.
+
+use crate::config::{FaultsConfig, SimConfig};
+use crate::coordinator::fleet::{pick_replica, FleetBatch, FleetReport, ReplicaStats, ScaleEvent};
+use crate::coordinator::serving::{
+    policy_dispatch_parts, BatchStep, LatencyStats, RequestLatency, ServingSim,
+};
+use crate::stats::{MemCounts, OpCounts};
+use crate::testutil::SplitMix64;
+use crate::trace::ArrivalProcess;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// One injected fault transition, on the simulated clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Simulated instant the transition happened.
+    pub time_secs: f64,
+    /// `"crash"`, `"restore"`, `"slowdown_start"`, `"slowdown_end"`,
+    /// `"link_degrade_start"`, or `"link_degrade_end"`.
+    pub kind: String,
+    /// Replica acted on; `-1` for fleet-wide link episodes.
+    pub replica: i64,
+}
+
+/// Fault-injection and recovery outcomes, attached to the
+/// [`FleetReport`] as `faults` (JSON only, and only when `[faults]` is
+/// active — an absent section leaves the report bytes untouched).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSummary {
+    /// served / offered — the availability headline.
+    pub availability: f64,
+    /// Crash events injected (random + scripted).
+    pub crashes: u64,
+    /// Requests permanently failed after exhausting `max_attempts`.
+    pub failed: u64,
+    /// Distinct requests retried at least once.
+    pub retried: u64,
+    /// Total re-enqueue events (one request can retry several times).
+    pub retries: u64,
+    /// Retries that re-routed to a different replica than the one that
+    /// failed them.
+    pub failovers: u64,
+    /// Requests that received a hedged duplicate.
+    pub hedged: u64,
+    /// Hedged requests whose *duplicate* finished first.
+    pub hedge_wins: u64,
+    /// Batch slots spent on duplicate copies whose twin had already
+    /// been served (work charged, response discarded).
+    pub hedge_wasted: u64,
+    /// Mean observed crash-to-accepting-again time (MTTR + warmup +
+    /// refill as the clients actually experienced it); 0 if no crashes.
+    pub mttr_observed_secs: f64,
+    /// p99 total latency over requests whose lifetime avoided every
+    /// fault incident window.
+    pub steady_p99_secs: f64,
+    /// p99 total latency over requests overlapping an incident window.
+    pub incident_p99_secs: f64,
+    /// Every injected fault transition, in processing order.
+    pub events: Vec<FaultEvent>,
+}
+
+/// Exponential sample with the given mean (same transform as
+/// [`ArrivalProcess`]'s Poisson gaps: `1 - U` keeps ln's argument
+/// nonzero).
+fn exp(rng: &mut SplitMix64, mean: f64) -> f64 {
+    -mean * (1.0 - rng.next_f64()).ln()
+}
+
+/// One live copy of a request on some replica's queue or in a batch.
+#[derive(Debug, Clone, Copy)]
+struct Job {
+    id: u64,
+    /// First admission instant — latency is measured from here across
+    /// retries and hedges.
+    arrival_secs: f64,
+    /// This copy's enqueue instant (what the batching timeout and the
+    /// hedge delay run from).
+    enq_secs: f64,
+    /// 1-based try counter against `faults.max_attempts`.
+    attempt: u32,
+    /// A duplicate exists (or existed) for this id — hedge at most once.
+    hedged: bool,
+    /// This copy IS the hedged duplicate.
+    dup: bool,
+}
+
+/// The in-flight batch's cost, held until completion (or voided by a
+/// crash) so a killed batch charges nothing.
+struct PendingBatch {
+    dispatch_secs: f64,
+    complete_secs: f64,
+    variant: usize,
+    cycles: u64,
+    /// Effective wall seconds (straggler/slowdown/link applied).
+    compute_secs: f64,
+    /// The variant's unscaled compute seconds (health-score input).
+    intrinsic_secs: f64,
+    queued_after: usize,
+    mem: MemCounts,
+    ops: OpCounts,
+}
+
+/// One replica's live state inside the fault-aware event loop.
+struct FRep<'a> {
+    sim: ServingSim<'a>,
+    queue: VecDeque<Job>,
+    busy_until: f64,
+    in_flight: Vec<Job>,
+    batch: Option<PendingBatch>,
+    active: bool,
+    draining: bool,
+    /// False between a crash and its restart.
+    up: bool,
+    down_until: f64,
+    warmup_until: f64,
+    activated_at: f64,
+    active_secs: f64,
+    est_batch_secs: f64,
+    /// Whether `est_batch_secs` holds an observation (reset on cold
+    /// restart together with the SimCore warmth).
+    est_seeded: bool,
+    /// EWMA health score in [0, 1]; 1 = healthy, crash resets to 0.
+    health: f64,
+    next_probe_at: f64,
+    crash_rng: SplitMix64,
+    slow_rng: SplitMix64,
+    /// Next random crash instant (INFINITY while disabled or down).
+    next_crash_at: f64,
+    /// This replica's scripted crash instants, ascending.
+    scripted: VecDeque<f64>,
+    slow_active: bool,
+    slow_until: f64,
+    next_slow_at: f64,
+    served: u64,
+    batches: u64,
+    busy_secs: f64,
+    total_cycles: u64,
+}
+
+impl<'a> FRep<'a> {
+    fn new(cfg: &'a SimConfig, index: usize, fseed: &mut SplitMix64) -> FRep<'a> {
+        let fa = &cfg.faults;
+        let mut crash_rng = fseed.fork(2 * index as u64 + 1);
+        let mut slow_rng = fseed.fork(2 * index as u64 + 2);
+        let next_crash_at = if fa.mtbf_secs > 0.0 {
+            exp(&mut crash_rng, fa.mtbf_secs)
+        } else {
+            f64::INFINITY
+        };
+        let next_slow_at = if fa.slowdown_factor > 1.0 {
+            exp(&mut slow_rng, fa.slowdown_mtbf_secs)
+        } else {
+            f64::INFINITY
+        };
+        let mut scripted: Vec<f64> = fa
+            .crash_at_secs
+            .iter()
+            .zip(&fa.crash_replica)
+            .filter(|&(_, &r)| r == index)
+            .map(|(&t, _)| t)
+            .collect();
+        scripted.sort_by(|a, b| a.total_cmp(b));
+        FRep {
+            sim: ServingSim::new(cfg),
+            queue: VecDeque::new(),
+            busy_until: 0.0,
+            in_flight: Vec::new(),
+            batch: None,
+            active: false,
+            draining: false,
+            up: true,
+            down_until: 0.0,
+            warmup_until: 0.0,
+            activated_at: 0.0,
+            active_secs: 0.0,
+            est_batch_secs: 0.0,
+            est_seeded: false,
+            health: 1.0,
+            next_probe_at: 0.0,
+            crash_rng,
+            slow_rng,
+            next_crash_at,
+            scripted: scripted.into(),
+            slow_active: false,
+            slow_until: 0.0,
+            next_slow_at,
+            served: 0,
+            batches: 0,
+            busy_secs: 0.0,
+            total_cycles: 0,
+        }
+    }
+
+    /// Outstanding work at `now` (the JSQ / po2 routing metric).
+    fn load(&self, now: f64) -> usize {
+        self.queue.len() + if self.busy_until > now { self.in_flight.len() } else { 0 }
+    }
+
+    /// Next crash due on this replica, random or scripted.
+    fn next_crash_time(&self) -> f64 {
+        let scripted = self.scripted.front().copied().unwrap_or(f64::INFINITY);
+        self.next_crash_at.min(scripted)
+    }
+
+    /// Whether the router may target this replica at `t` (health-aware
+    /// when `health_evict > 0`; down or warming replicas never accept).
+    fn accepting_at(&self, t: f64, fa: &FaultsConfig) -> bool {
+        self.active
+            && !self.draining
+            && self.up
+            && self.warmup_until <= t
+            && (fa.health_evict <= 0.0 || self.health >= fa.health_evict)
+    }
+
+    /// Predicted delay for an admission at `now` (same formula as the
+    /// plain fleet loop's SLO gate).
+    fn predicted_delay(&self, now: f64, max_batch: usize) -> f64 {
+        let residual = (self.busy_until - now).max(0.0);
+        let batches_ahead = (self.queue.len() + 1).div_ceil(max_batch);
+        residual + batches_ahead as f64 * self.est_batch_secs
+    }
+}
+
+/// A copy awaiting its backoff before re-enqueueing.
+#[derive(Debug, Clone, Copy)]
+struct Retry {
+    due: f64,
+    /// Creation order — the deterministic tie-break for equal dues.
+    seq: u64,
+    /// Replica the copy died on (failover = re-routed elsewhere).
+    from: usize,
+    job: Job,
+}
+
+/// Client-side recovery bookkeeping: which ids are alive where, which
+/// are done, and every retry/hedge counter the summary reports.
+struct Recovery {
+    /// Live copies per id (queued + in flight + awaiting retry).
+    copies: BTreeMap<u64, u32>,
+    /// Ids served to completion (first copy to finish wins).
+    completed: BTreeSet<u64>,
+    retry_buf: Vec<Retry>,
+    next_seq: u64,
+    retried_ids: BTreeSet<u64>,
+    retries: u64,
+    failed: u64,
+    failovers: u64,
+    hedged: u64,
+    hedge_wins: u64,
+    hedge_wasted: u64,
+}
+
+impl Recovery {
+    fn new() -> Recovery {
+        Recovery {
+            copies: BTreeMap::new(),
+            completed: BTreeSet::new(),
+            retry_buf: Vec::new(),
+            next_seq: 0,
+            retried_ids: BTreeSet::new(),
+            retries: 0,
+            failed: 0,
+            failovers: 0,
+            hedged: 0,
+            hedge_wins: 0,
+            hedge_wasted: 0,
+        }
+    }
+
+    /// Drop one live copy of `job` (crash path). If it was the last
+    /// copy of an unserved id, spend a retry attempt (backoff into the
+    /// buffer) or mark the request permanently failed.
+    fn kill_copy(&mut self, fa: &FaultsConfig, job: Job, from: usize, now: f64) {
+        let c = self.copies.get_mut(&job.id).expect("killed copy was accounted live");
+        *c -= 1;
+        let remaining = *c;
+        if remaining == 0 {
+            self.copies.remove(&job.id);
+        }
+        if self.completed.contains(&job.id) || remaining > 0 {
+            // a twin already answered, or still can
+            return;
+        }
+        if job.attempt as usize >= fa.max_attempts {
+            self.failed += 1;
+            return;
+        }
+        self.retries += 1;
+        self.retried_ids.insert(job.id);
+        let backoff = fa.backoff_secs * (1u64 << (job.attempt - 1).min(32)) as f64;
+        self.retry_buf.push(Retry {
+            due: now + backoff,
+            seq: self.next_seq,
+            from,
+            job: Job { attempt: job.attempt + 1, hedged: false, dup: false, ..job },
+        });
+        self.next_seq += 1;
+        self.copies.insert(job.id, 1);
+    }
+}
+
+/// Run the fault-aware fleet simulation to completion. Called by
+/// [`super::fleet::simulate`] when `cfg.faults.active()`; expects an
+/// already-validated config.
+pub(crate) fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
+    let s = &cfg.serving;
+    let fl = &cfg.fleet;
+    let fa = &cfg.faults;
+    let mut arrivals = ArrivalProcess::from_config(s)?;
+    let mut rng = SplitMix64::new(fl.seed);
+    let mut fseed = SplitMix64::new(fa.seed);
+    let mut rr_next = 0u64;
+    let n_rep = fl.replicas;
+
+    let mut reps: Vec<FRep> =
+        (0..n_rep).map(|i| FRep::new(cfg, i, &mut fseed)).collect();
+    let initially_active = if fl.autoscale { fl.min_replicas } else { fl.replicas };
+    for r in reps.iter_mut().take(initially_active) {
+        r.active = true;
+    }
+    let mut link_rng = fseed.fork(0x11_4B);
+    let mut link_active = false;
+    let mut link_until = 0.0f64;
+    let mut next_link_at = if fa.link_degrade_factor > 1.0 {
+        exp(&mut link_rng, fa.link_degrade_mtbf_secs)
+    } else {
+        f64::INFINITY
+    };
+
+    let mut rec = Recovery::new();
+    let mut crashes = 0u64;
+    let mut mttr_sum = 0.0f64;
+    let mut events: Vec<FaultEvent> = Vec::new();
+    let mut incidents: Vec<(f64, f64)> = Vec::new();
+
+    let mut issued = 0u64;
+    let mut dropped = 0u64;
+    let mut shed = 0u64;
+    let mut clock = 0.0f64;
+    let mut busy_secs = 0.0f64;
+    let mut total_cycles = 0u64;
+    let mut mem = MemCounts::default();
+    let mut ops = OpCounts::default();
+    let mut per_batch: Vec<FleetBatch> = Vec::new();
+    let mut per_request: Vec<RequestLatency> = Vec::new();
+    let mut scale_events: Vec<ScaleEvent> = Vec::new();
+    let mut next_eval = fl.scale_window_secs;
+    let mut window_busy = 0.0f64;
+
+    let refill = |issued: &mut u64, arrivals: &mut ArrivalProcess| -> Option<(u64, f64)> {
+        if *issued >= s.requests as u64 {
+            return None;
+        }
+        let id = *issued;
+        *issued += 1;
+        Some((id, arrivals.next_arrival()))
+    };
+    let mut next_arrival = refill(&mut issued, &mut arrivals);
+    // a retry finding no accepting replica re-defers by this quantum
+    // instead of burning an attempt (progress without a spin loop)
+    let defer_quantum = if fa.backoff_secs > 0.0 {
+        fa.backoff_secs
+    } else {
+        fa.mttr_secs.max(1e-6)
+    };
+
+    loop {
+        // 1. completions due: charge the batch, serve the winning
+        //    copies, count the wasted duplicates
+        for i in 0..n_rep {
+            let r = &mut reps[i];
+            if r.batch.is_none() || r.busy_until > clock {
+                continue;
+            }
+            let b = r.batch.take().expect("checked above");
+            r.batches += 1;
+            r.busy_secs += b.compute_secs;
+            r.total_cycles += b.cycles;
+            busy_secs += b.compute_secs;
+            total_cycles += b.cycles;
+            mem.add(&b.mem);
+            ops.add(&b.ops);
+            per_batch.push(FleetBatch {
+                replica: i,
+                dispatch_secs: b.dispatch_secs,
+                complete_secs: b.complete_secs,
+                requests: r.in_flight.len(),
+                variant: b.variant,
+                compute_secs: b.compute_secs,
+                queued_after: b.queued_after,
+            });
+            r.est_batch_secs = if r.est_seeded {
+                0.5 * r.est_batch_secs + 0.5 * b.compute_secs
+            } else {
+                b.compute_secs
+            };
+            r.est_seeded = true;
+            if fa.health_evict > 0.0 {
+                let sample = if b.compute_secs > 0.0 {
+                    (b.intrinsic_secs / b.compute_secs).min(1.0)
+                } else {
+                    1.0
+                };
+                r.health = 0.7 * r.health + 0.3 * sample;
+            }
+            for job in r.in_flight.drain(..) {
+                let c = rec.copies.get_mut(&job.id).expect("served copy was accounted live");
+                *c -= 1;
+                if *c == 0 {
+                    rec.copies.remove(&job.id);
+                }
+                if rec.completed.contains(&job.id) {
+                    rec.hedge_wasted += 1;
+                    continue;
+                }
+                rec.completed.insert(job.id);
+                if job.dup {
+                    rec.hedge_wins += 1;
+                }
+                r.served += 1;
+                per_request.push(RequestLatency {
+                    id: job.id,
+                    arrival_secs: job.arrival_secs,
+                    queue_secs: b.dispatch_secs - job.arrival_secs,
+                    compute_secs: b.compute_secs,
+                    total_secs: b.complete_secs - job.arrival_secs,
+                });
+            }
+        }
+
+        // 2. restarts due: cold — warmth and the batch-cost estimate
+        //    are gone, warmup + cache refill gate acceptance
+        for (i, r) in reps.iter_mut().enumerate() {
+            if r.up || r.down_until > clock {
+                continue;
+            }
+            let t = r.down_until;
+            r.up = true;
+            r.sim = ServingSim::new(cfg);
+            r.est_batch_secs = 0.0;
+            r.est_seeded = false;
+            r.warmup_until = t + fl.warmup_secs + fa.refill_secs;
+            r.busy_until = t;
+            if fa.mtbf_secs > 0.0 {
+                r.next_crash_at = t + exp(&mut r.crash_rng, fa.mtbf_secs);
+            }
+            events.push(FaultEvent {
+                time_secs: t,
+                kind: "restore".to_string(),
+                replica: i as i64,
+            });
+        }
+
+        // 3. crashes due: void the in-flight batch, fail the queue into
+        //    the retry machinery
+        for i in 0..n_rep {
+            loop {
+                let tc = reps[i].next_crash_time();
+                if tc > clock {
+                    break;
+                }
+                let was_up = {
+                    let r = &mut reps[i];
+                    // consume whichever source fired (scripted wins
+                    // ties; the random process re-arms at restore)
+                    if r.scripted.front().map_or(false, |&t| t <= r.next_crash_at) {
+                        r.scripted.pop_front();
+                    } else {
+                        r.next_crash_at = f64::INFINITY;
+                    }
+                    if !r.up {
+                        // a scripted crash landing while already down
+                        // is consumed without effect
+                        continue;
+                    }
+                    r.up = false;
+                    r.down_until = tc + fa.mttr_secs;
+                    r.health = 0.0;
+                    r.batch = None;
+                    r.busy_until = tc;
+                    true
+                };
+                if was_up {
+                    crashes += 1;
+                    let back = tc + fa.mttr_secs + fl.warmup_secs + fa.refill_secs;
+                    mttr_sum += back - tc;
+                    incidents.push((tc, back));
+                    events.push(FaultEvent {
+                        time_secs: tc,
+                        kind: "crash".to_string(),
+                        replica: i as i64,
+                    });
+                    let dead: Vec<Job> = {
+                        let r = &mut reps[i];
+                        r.in_flight.drain(..).chain(r.queue.drain(..)).collect()
+                    };
+                    for job in dead {
+                        rec.kill_copy(fa, job, i, tc);
+                    }
+                }
+            }
+        }
+
+        // 4. slowdown / link episode boundaries due (bookkeeping only —
+        //    the multipliers read the flags at dispatch time)
+        if fa.slowdown_factor > 1.0 {
+            for (i, r) in reps.iter_mut().enumerate() {
+                loop {
+                    if r.slow_active {
+                        if r.slow_until > clock {
+                            break;
+                        }
+                        let t = r.slow_until;
+                        r.slow_active = false;
+                        r.next_slow_at = t + exp(&mut r.slow_rng, fa.slowdown_mtbf_secs);
+                        events.push(FaultEvent {
+                            time_secs: t,
+                            kind: "slowdown_end".to_string(),
+                            replica: i as i64,
+                        });
+                    } else {
+                        if r.next_slow_at > clock {
+                            break;
+                        }
+                        let t = r.next_slow_at;
+                        r.slow_active = true;
+                        r.slow_until = t + fa.slowdown_duration_secs;
+                        incidents.push((t, r.slow_until));
+                        events.push(FaultEvent {
+                            time_secs: t,
+                            kind: "slowdown_start".to_string(),
+                            replica: i as i64,
+                        });
+                    }
+                }
+            }
+        }
+        if fa.link_degrade_factor > 1.0 {
+            loop {
+                if link_active {
+                    if link_until > clock {
+                        break;
+                    }
+                    link_active = false;
+                    next_link_at =
+                        link_until + exp(&mut link_rng, fa.link_degrade_mtbf_secs);
+                    events.push(FaultEvent {
+                        time_secs: link_until,
+                        kind: "link_degrade_end".to_string(),
+                        replica: -1,
+                    });
+                } else {
+                    if next_link_at > clock {
+                        break;
+                    }
+                    link_active = true;
+                    link_until = next_link_at + fa.link_degrade_duration_secs;
+                    incidents.push((next_link_at, link_until));
+                    events.push(FaultEvent {
+                        time_secs: next_link_at,
+                        kind: "link_degrade_start".to_string(),
+                        replica: -1,
+                    });
+                }
+            }
+        }
+
+        // 5. autoscaler windows due (capacity counts up replicas only)
+        while fl.autoscale && next_eval <= clock {
+            let accepting = reps.iter().filter(|r| r.active && !r.draining && r.up).count();
+            let util = window_busy / (fl.scale_window_secs * accepting.max(1) as f64);
+            window_busy = 0.0;
+            if util > fl.scale_up_util && accepting < fl.max_active() {
+                if let Some(i) = reps.iter().position(|r| !r.active) {
+                    let r = &mut reps[i];
+                    r.active = true;
+                    r.draining = false;
+                    r.warmup_until = r.warmup_until.max(next_eval + fl.warmup_secs);
+                    r.activated_at = next_eval;
+                    scale_events.push(ScaleEvent {
+                        time_secs: next_eval,
+                        action: "up".to_string(),
+                        replica: i,
+                        active_after: accepting + 1,
+                        utilization: util,
+                    });
+                } else if let Some(i) = reps.iter().position(|r| r.active && r.draining) {
+                    reps[i].draining = false;
+                    scale_events.push(ScaleEvent {
+                        time_secs: next_eval,
+                        action: "up".to_string(),
+                        replica: i,
+                        active_after: accepting + 1,
+                        utilization: util,
+                    });
+                }
+            } else if util < fl.scale_down_util && accepting > fl.min_replicas {
+                if let Some(i) = reps.iter().rposition(|r| r.active && !r.draining && r.up) {
+                    reps[i].draining = true;
+                    scale_events.push(ScaleEvent {
+                        time_secs: next_eval,
+                        action: "down".to_string(),
+                        replica: i,
+                        active_after: accepting - 1,
+                        utilization: util,
+                    });
+                }
+            }
+            next_eval += fl.scale_window_secs;
+        }
+        // finalize drains that went idle and empty
+        for r in reps.iter_mut() {
+            if r.draining && r.queue.is_empty() && r.batch.is_none() && r.busy_until <= clock {
+                r.active = false;
+                r.draining = false;
+                r.active_secs += (clock - r.activated_at).max(0.0);
+            }
+        }
+
+        // 6. retries due: re-route through the normal router (bypassing
+        //    the SLO gate — the client already committed to this id)
+        if !rec.retry_buf.is_empty() {
+            let mut due: Vec<Retry> = Vec::new();
+            rec.retry_buf.retain(|rt| {
+                if rt.due <= clock {
+                    due.push(*rt);
+                    false
+                } else {
+                    true
+                }
+            });
+            due.sort_by(|a, b| a.due.total_cmp(&b.due).then(a.seq.cmp(&b.seq)));
+            for mut rt in due {
+                let accepting: Vec<usize> = (0..n_rep)
+                    .filter(|&j| reps[j].accepting_at(rt.due, fa))
+                    .collect();
+                let pick = pick_replica(
+                    fl.router,
+                    &accepting,
+                    |j| reps[j].load(rt.due),
+                    &mut rr_next,
+                    &mut rng,
+                );
+                match pick {
+                    None => {
+                        // nobody accepting yet: re-defer without
+                        // spending an attempt
+                        rt.due = clock + defer_quantum;
+                        rt.seq = rec.next_seq;
+                        rec.next_seq += 1;
+                        rec.retry_buf.push(rt);
+                    }
+                    Some(tgt) => {
+                        if s.queue_capacity > 0 && reps[tgt].queue.len() >= s.queue_capacity {
+                            dropped += 1;
+                            let c = rec
+                                .copies
+                                .get_mut(&rt.job.id)
+                                .expect("retry copy was accounted live");
+                            *c -= 1;
+                            if *c == 0 {
+                                rec.copies.remove(&rt.job.id);
+                            }
+                        } else {
+                            if tgt != rt.from {
+                                rec.failovers += 1;
+                            }
+                            reps[tgt].queue.push_back(Job { enq_secs: rt.due, ..rt.job });
+                        }
+                    }
+                }
+            }
+        }
+
+        // 7. arrivals due: probe an evicted replica when one is owed a
+        //    probe, otherwise route normally
+        while let Some((id, at)) = next_arrival {
+            if at > clock {
+                break;
+            }
+            let mut probe = None;
+            if fa.health_evict > 0.0 {
+                probe = (0..n_rep).find(|&j| {
+                    let r = &reps[j];
+                    r.active
+                        && !r.draining
+                        && r.up
+                        && r.warmup_until <= at
+                        && r.health < fa.health_evict
+                        && r.next_probe_at <= at
+                });
+                if let Some(p) = probe {
+                    reps[p].next_probe_at = at + fa.probe_secs;
+                }
+            }
+            let pick = probe.or_else(|| {
+                let accepting: Vec<usize> =
+                    (0..n_rep).filter(|&j| reps[j].accepting_at(at, fa)).collect();
+                pick_replica(fl.router, &accepting, |j| reps[j].load(at), &mut rr_next, &mut rng)
+            });
+            match pick {
+                None => shed += 1,
+                Some(t) => {
+                    let is_probe = probe == Some(t);
+                    let r = &mut reps[t];
+                    // probes skip the SLO gate: an evicted replica's
+                    // stale estimate must not starve its re-admission
+                    if !is_probe
+                        && fl.slo_secs > 0.0
+                        && r.predicted_delay(at, s.max_batch) > fl.slo_secs
+                    {
+                        shed += 1;
+                    } else if s.queue_capacity > 0 && r.queue.len() >= s.queue_capacity {
+                        dropped += 1;
+                    } else {
+                        r.queue.push_back(Job {
+                            id,
+                            arrival_secs: at,
+                            enq_secs: at,
+                            attempt: 1,
+                            hedged: false,
+                            dup: false,
+                        });
+                        rec.copies.insert(id, 1);
+                    }
+                }
+            }
+            next_arrival = refill(&mut issued, &mut arrivals);
+        }
+
+        // 8. hedges due: one duplicate per overdue queued request, to a
+        //    second replica; un-hedgeable now = forfeited (never rescanned)
+        if fa.hedge_secs > 0.0 {
+            loop {
+                let mut found: Option<(usize, usize)> = None;
+                'scan: for i in 0..n_rep {
+                    for k in 0..reps[i].queue.len() {
+                        let job = reps[i].queue[k];
+                        if !job.hedged
+                            && !rec.completed.contains(&job.id)
+                            && job.enq_secs + fa.hedge_secs <= clock
+                        {
+                            found = Some((i, k));
+                            break 'scan;
+                        }
+                    }
+                }
+                let Some((i, k)) = found else { break };
+                let job = reps[i].queue[k];
+                let accepting: Vec<usize> = (0..n_rep)
+                    .filter(|&j| j != i && reps[j].accepting_at(clock, fa))
+                    .collect();
+                let pick = pick_replica(
+                    fl.router,
+                    &accepting,
+                    |j| reps[j].load(clock),
+                    &mut rr_next,
+                    &mut rng,
+                );
+                // hedge at most once per id, even when no second
+                // replica can take it right now (keeps this scan finite)
+                reps[i].queue[k].hedged = true;
+                match pick {
+                    Some(tgt)
+                        if !(s.queue_capacity > 0
+                            && reps[tgt].queue.len() >= s.queue_capacity) =>
+                    {
+                        rec.hedged += 1;
+                        *rec.copies.get_mut(&job.id).expect("queued copy is live") += 1;
+                        reps[tgt].queue.push_back(Job {
+                            enq_secs: clock,
+                            hedged: true,
+                            dup: true,
+                            ..job
+                        });
+                    }
+                    _ => {}
+                }
+            }
+        }
+
+        // 9. dispatch every up replica whose policy says go (flush only
+        //    once arrivals AND retries ran dry, or while draining)
+        let ready: Vec<usize> = (0..n_rep)
+            .filter(|&i| {
+                let r = &reps[i];
+                r.active
+                    && r.up
+                    && r.busy_until <= clock
+                    && r.batch.is_none()
+                    && !r.queue.is_empty()
+                    && match policy_dispatch_parts(
+                        s,
+                        r.queue.len(),
+                        r.queue.front().expect("non-empty").enq_secs,
+                        clock,
+                    ) {
+                        Some(t) => t <= clock,
+                        None => {
+                            (next_arrival.is_none() && rec.retry_buf.is_empty()) || r.draining
+                        }
+                    }
+            })
+            .collect();
+        if !ready.is_empty() {
+            let mut jobs: Vec<(usize, usize, usize, &mut FRep)> = reps
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| ready.binary_search(i).is_ok())
+                .map(|(i, r)| {
+                    let n = r.queue.len().min(s.max_batch);
+                    let variant = r.sim.variant_for(n);
+                    (i, n, variant, r)
+                })
+                .collect();
+            let stepped = crate::parallel::parallel_map_mut(cfg.threads, &mut jobs, |job| {
+                let (_, _, variant, r) = job;
+                Ok(r.sim.core_for(*variant)?.step_detail())
+            })?;
+            for ((i, n, variant, r), step) in jobs.iter_mut().zip(stepped) {
+                let (i, n, variant) = (*i, *n, *variant);
+                let mut eff = step.compute_secs;
+                if i == fl.replicas.max(1) - 1 {
+                    eff *= fl.straggler_factor;
+                }
+                if r.slow_active {
+                    eff *= fa.slowdown_factor;
+                }
+                if link_active {
+                    eff += step.inter_secs * (fa.link_degrade_factor - 1.0);
+                }
+                let complete = clock + eff;
+                r.in_flight = (0..n)
+                    .map(|_| r.queue.pop_front().expect("n <= queue.len()"))
+                    .collect();
+                r.batch = Some(PendingBatch {
+                    dispatch_secs: clock,
+                    complete_secs: complete,
+                    variant,
+                    cycles: step.cycles,
+                    compute_secs: eff,
+                    intrinsic_secs: step.compute_secs,
+                    queued_after: r.queue.len(),
+                    mem: step.mem,
+                    ops: step.ops,
+                });
+                r.busy_until = complete;
+                window_busy += eff;
+            }
+            continue;
+        }
+
+        // 10. advance the clock to the next event — fault boundaries
+        //     count only while work remains, so injected processes never
+        //     keep a finished run alive
+        let work_remaining = next_arrival.is_some()
+            || !rec.retry_buf.is_empty()
+            || reps.iter().any(|r| !r.queue.is_empty() || r.batch.is_some());
+        if !work_remaining {
+            break;
+        }
+        let mut next: Option<f64> = None;
+        let mut cand = |t: f64| {
+            if t > clock && t.is_finite() {
+                next = Some(next.map_or(t, |n| n.min(t)));
+            }
+        };
+        if let Some((_, at)) = next_arrival {
+            cand(at);
+        }
+        for rt in &rec.retry_buf {
+            cand(rt.due);
+        }
+        for r in &reps {
+            if r.up {
+                if r.batch.is_some() {
+                    cand(r.busy_until);
+                } else if r.active && !r.queue.is_empty() {
+                    if let Some(t) = policy_dispatch_parts(
+                        s,
+                        r.queue.len(),
+                        r.queue.front().expect("non-empty").enq_secs,
+                        clock,
+                    ) {
+                        cand(t);
+                    }
+                }
+                cand(r.next_crash_time());
+            } else {
+                cand(r.down_until);
+            }
+            if fa.slowdown_factor > 1.0 {
+                cand(if r.slow_active { r.slow_until } else { r.next_slow_at });
+            }
+            if fa.hedge_secs > 0.0 {
+                for job in &r.queue {
+                    if !job.hedged {
+                        cand(job.enq_secs + fa.hedge_secs);
+                    }
+                }
+            }
+        }
+        if fa.link_degrade_factor > 1.0 {
+            cand(if link_active { link_until } else { next_link_at });
+        }
+        match next {
+            None => break,
+            Some(t) => {
+                let t = if fl.autoscale && next_eval < t { next_eval } else { t };
+                clock = clock.max(t);
+            }
+        }
+    }
+
+    let makespan_secs = per_batch.iter().map(|b| b.complete_secs).fold(0.0f64, f64::max);
+    let end = clock.max(makespan_secs);
+    for r in reps.iter_mut() {
+        if r.active {
+            r.active_secs += (end - r.activated_at).max(0.0);
+        }
+    }
+    let per_replica: Vec<ReplicaStats> = reps
+        .iter()
+        .enumerate()
+        .map(|(i, r)| ReplicaStats {
+            replica: i,
+            served: r.served,
+            batches: r.batches,
+            busy_secs: r.busy_secs,
+            active_secs: r.active_secs,
+            utilization: if makespan_secs > 0.0 { r.busy_secs / makespan_secs } else { 0.0 },
+            total_cycles: r.total_cycles,
+        })
+        .collect();
+    let slo_violations = if fl.slo_secs > 0.0 {
+        per_request.iter().filter(|q| q.total_secs > fl.slo_secs).count() as u64
+    } else {
+        0
+    };
+    let queue_samples: Vec<f64> = per_request.iter().map(|q| q.queue_secs).collect();
+    let compute_samples: Vec<f64> = per_request.iter().map(|q| q.compute_secs).collect();
+    let total_samples: Vec<f64> = per_request.iter().map(|q| q.total_secs).collect();
+
+    // steady vs incident tails: a request whose [arrival, completion]
+    // lifetime overlaps any incident window is incident-attributed
+    let mut steady: Vec<f64> = Vec::new();
+    let mut incident: Vec<f64> = Vec::new();
+    for q in &per_request {
+        let (start, stop) = (q.arrival_secs, q.arrival_secs + q.total_secs);
+        if incidents.iter().any(|&(a, b)| start < b && stop > a) {
+            incident.push(q.total_secs);
+        } else {
+            steady.push(q.total_secs);
+        }
+    }
+    let served = per_request.len() as u64;
+    let summary = FaultSummary {
+        availability: if issued > 0 { served as f64 / issued as f64 } else { 0.0 },
+        crashes,
+        failed: rec.failed,
+        retried: rec.retried_ids.len() as u64,
+        retries: rec.retries,
+        failovers: rec.failovers,
+        hedged: rec.hedged,
+        hedge_wins: rec.hedge_wins,
+        hedge_wasted: rec.hedge_wasted,
+        mttr_observed_secs: if crashes > 0 { mttr_sum / crashes as f64 } else { 0.0 },
+        steady_p99_secs: LatencyStats::from_samples(&steady).p99,
+        incident_p99_secs: LatencyStats::from_samples(&incident).p99,
+        events,
+    };
+    Ok(FleetReport {
+        platform: cfg.hardware.name.clone(),
+        router: fl.router.name().to_string(),
+        policy: s.policy.name().to_string(),
+        arrival: s.arrival.name().to_string(),
+        arrival_rate: s.arrival_rate,
+        replicas: fl.replicas,
+        offered: issued,
+        served,
+        dropped,
+        shed,
+        slo_secs: fl.slo_secs,
+        slo_violations,
+        batches: per_batch.len() as u64,
+        makespan_secs,
+        busy_secs,
+        total_cycles,
+        queue: LatencyStats::from_samples(&queue_samples),
+        compute: LatencyStats::from_samples(&compute_samples),
+        total: LatencyStats::from_samples(&total_samples),
+        mem,
+        ops,
+        per_replica,
+        scale_events,
+        per_batch,
+        per_request,
+        faults: Some(summary),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, OnchipPolicy, RouterPolicy};
+    use crate::coordinator::fleet;
+
+    /// The fleet unit-test workload with a scripted single crash.
+    fn small_cfg() -> SimConfig {
+        let mut cfg = presets::tpuv6e_dlrm_small();
+        cfg.workload.embedding.num_tables = 4;
+        cfg.workload.embedding.rows_per_table = 10_000;
+        cfg.workload.embedding.pool = 8;
+        cfg.hardware.mem.policy = OnchipPolicy::Spm;
+        cfg.serving.requests = 120;
+        cfg.serving.arrival_rate = 200_000.0;
+        cfg.serving.max_batch = 16;
+        cfg.fleet.replicas = 2;
+        cfg
+    }
+
+    fn assert_conserves(r: &FleetReport) {
+        let f = r.faults.as_ref().expect("fault loop attaches a summary");
+        assert_eq!(
+            r.served + r.dropped + r.shed + f.failed,
+            r.offered,
+            "offered == served + dropped + shed + failed"
+        );
+        let mut ids: Vec<u64> = r.per_request.iter().map(|q| q.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, r.served, "hedged duplicates never double-serve");
+    }
+
+    #[test]
+    fn exp_sampler_is_deterministic_and_positive() {
+        let mut a = SplitMix64::new(9);
+        let mut b = SplitMix64::new(9);
+        for _ in 0..64 {
+            let (x, y) = (exp(&mut a, 3.0), exp(&mut b, 3.0));
+            assert_eq!(x, y);
+            assert!(x >= 0.0 && x.is_finite());
+        }
+    }
+
+    #[test]
+    fn scripted_crash_retries_and_conserves() {
+        let mut cfg = small_cfg();
+        // crash replica 0 mid-stream; retries land on replica 1
+        cfg.faults.crash_at_secs = vec![1e-4];
+        cfg.faults.crash_replica = vec![0];
+        cfg.faults.mttr_secs = 5e-3;
+        let r = fleet::simulate(&cfg).unwrap();
+        let f = r.faults.as_ref().unwrap();
+        assert_eq!(f.crashes, 1);
+        assert_conserves(&r);
+        assert_eq!(r.served, 120, "with retries and a healthy twin nothing is lost");
+        assert!(f.retries > 0, "the crash must strand copies into retries");
+        assert!(f.failovers > 0, "retries re-route off the crashed replica");
+        let kinds: Vec<&str> = f.events.iter().map(|e| e.kind.as_str()).collect();
+        assert!(kinds.contains(&"crash") && kinds.contains(&"restore"));
+        assert!(
+            f.mttr_observed_secs
+                >= cfg.faults.mttr_secs + cfg.fleet.warmup_secs + cfg.faults.refill_secs - 1e-12
+        );
+    }
+
+    #[test]
+    fn no_retry_budget_loses_requests_permanently() {
+        let mut cfg = small_cfg();
+        cfg.faults.crash_at_secs = vec![1e-4];
+        cfg.faults.crash_replica = vec![0];
+        cfg.faults.max_attempts = 1; // first try is the only try
+        let r = fleet::simulate(&cfg).unwrap();
+        let f = r.faults.as_ref().unwrap();
+        assert_conserves(&r);
+        assert!(f.failed > 0, "attempt budget 1 turns crash losses permanent");
+        assert_eq!(f.retries, 0);
+        assert!(r.served < r.offered);
+    }
+
+    #[test]
+    fn inactive_faults_still_route_through_fault_loop_when_forced() {
+        // hedge_secs > 0 activates the fault loop without any crashes:
+        // the conservation identity must hold with failed == 0
+        let mut cfg = small_cfg();
+        cfg.faults.hedge_secs = 10.0; // far beyond the run: never fires
+        cfg.fleet.router = RouterPolicy::Jsq;
+        let r = fleet::simulate(&cfg).unwrap();
+        let f = r.faults.as_ref().unwrap();
+        assert_conserves(&r);
+        assert_eq!((f.crashes, f.failed, f.hedged), (0, 0, 0));
+        assert_eq!(r.served, 120);
+    }
+}

@@ -44,6 +44,7 @@
 //! request for request, batch for batch (tested).
 
 use crate::config::{RouterPolicy, SimConfig};
+use crate::coordinator::faults::FaultSummary;
 use crate::coordinator::serving::{policy_dispatch_time, LatencyStats, RequestLatency};
 use crate::coordinator::serving::ServingSim;
 use crate::stats::{MemCounts, OpCounts};
@@ -153,6 +154,10 @@ pub struct FleetReport {
     pub per_replica: Vec<ReplicaStats>,
     /// Autoscaler decision log, in simulated-time order.
     pub scale_events: Vec<ScaleEvent>,
+    /// Fault-injection outcomes — `Some` exactly when `[faults]` is
+    /// active (the JSON gains a `faults` block; with `None` the report
+    /// bytes are identical to the fault-free fleet loop's).
+    pub faults: Option<FaultSummary>,
     pub per_batch: Vec<FleetBatch>,
     /// Per-request records, in dispatch order (not serialized to JSON;
     /// tests and tooling consume them in-process).
@@ -286,7 +291,7 @@ impl<'a> Replica<'a> {
 /// The routing decision: which accepting replica takes this arrival.
 /// `accepting` holds replica indices in ascending order; `load` prices
 /// each. Returns `None` only when `accepting` is empty.
-fn pick_replica(
+pub(crate) fn pick_replica(
     policy: RouterPolicy,
     accepting: &[usize],
     load: impl Fn(usize) -> usize,
@@ -337,6 +342,12 @@ fn pick_replica(
 /// Run the configured fleet serving simulation to completion.
 pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
     cfg.validate()?;
+    if cfg.faults.active() {
+        // the fault-aware twin loop; keeping the plain loop below
+        // untouched is what guarantees byte-identical reports whenever
+        // `[faults]` is absent
+        return super::faults::simulate(cfg);
+    }
     let s = &cfg.serving;
     let fl = &cfg.fleet;
     let mut arrivals = ArrivalProcess::from_config(s)?;
@@ -639,6 +650,7 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
         ops,
         per_replica,
         scale_events,
+        faults: None,
         per_batch,
         per_request,
     })

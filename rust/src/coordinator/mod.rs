@@ -17,7 +17,11 @@
 //! timing in simulated NPU seconds from [`crate::engine::SimCore`].
 //! [`fleet`] scales it out: N replica serving loops behind a router
 //! with SLO admission control and a utilization-driven autoscaler.
+//! [`faults`] is fleet's fault-aware twin: deterministic crash /
+//! slowdown / link-degradation injection with retries, hedging, and
+//! health-aware failover, engaged only when `[faults]` is active.
 
+pub mod faults;
 pub mod fleet;
 pub mod serving;
 

@@ -203,10 +203,39 @@ impl VariantCore {
 
     /// Step one batch; returns (cycles, compute secs, mem, ops).
     pub(crate) fn step(&mut self) -> (u64, f64, MemCounts, OpCounts) {
+        let s = self.step_detail();
+        (s.cycles, s.compute_secs, s.mem, s.ops)
+    }
+
+    /// [`VariantCore::step`] plus the inter-node exchange seconds the
+    /// fault loop's link-degradation model scales — the serving and
+    /// fleet loops ignore the extra field, so their reports are
+    /// untouched by its existence.
+    pub(crate) fn step_detail(&mut self) -> BatchStep {
         let r = self.core.step_batch(self.source.next_trace());
         let cycles = r.cycles.total();
-        (cycles, self.core.cycles_to_secs(cycles), r.mem, r.ops)
+        BatchStep {
+            cycles,
+            compute_secs: self.core.cycles_to_secs(cycles),
+            inter_secs: self.core.cycles_to_secs(r.cycles.exchange_inter),
+            mem: r.mem,
+            ops: r.ops,
+        }
     }
+}
+
+/// One stepped batch's simulated cost, as the fault-aware fleet loop
+/// consumes it.
+pub(crate) struct BatchStep {
+    /// Total simulated NPU cycles.
+    pub(crate) cycles: u64,
+    /// Total simulated compute seconds (`cycles` at the core clock).
+    pub(crate) compute_secs: f64,
+    /// The inter-node tier's transfer seconds within `compute_secs` —
+    /// the part a degraded `[topology]` inter link stretches.
+    pub(crate) inter_secs: f64,
+    pub(crate) mem: MemCounts,
+    pub(crate) ops: OpCounts,
 }
 
 /// The discrete-event serving simulation (single simulated NPU pod,
@@ -267,21 +296,33 @@ pub(crate) fn policy_dispatch_time(
     queue: &VecDeque<(u64, f64)>,
     now: f64,
 ) -> Option<f64> {
+    let oldest = queue.front().expect("non-empty queue").1;
+    policy_dispatch_parts(s, queue.len(), oldest, now)
+}
+
+/// [`policy_dispatch_time`] over the decision's raw inputs — queue
+/// depth and the oldest entry's enqueue instant — so the fault loop's
+/// richer queue entries batch under the very same policy.
+pub(crate) fn policy_dispatch_parts(
+    s: &ServingConfig,
+    queued: usize,
+    oldest_secs: f64,
+    now: f64,
+) -> Option<f64> {
     match s.policy {
         BatchPolicyKind::Dynamic => Some(now),
         BatchPolicyKind::Size => {
-            if queue.len() >= s.max_batch {
+            if queued >= s.max_batch {
                 Some(now)
             } else {
                 None
             }
         }
         BatchPolicyKind::Timeout => {
-            if queue.len() >= s.max_batch {
+            if queued >= s.max_batch {
                 Some(now)
             } else {
-                let oldest = queue.front().expect("non-empty queue").1;
-                Some(now.max(oldest + s.timeout_secs))
+                Some(now.max(oldest_secs + s.timeout_secs))
             }
         }
     }

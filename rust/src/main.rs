@@ -66,20 +66,31 @@ COMMANDS:
                --router <p>           round_robin|jsq|po2   [round_robin]
                --slo-ms <x>           shed arrivals whose predicted delay
                                       exceeds x ms (0 = no admission control) [0]
+               --faults <mtbf_ms>     deterministic crash/restart injection:
+                                      mean time between replica crashes [0 = off]
+               --fault-mttr-ms <x>    mean time to repair a crashed replica [10]
+               --fault-retries <n>    retry budget per request (attempts) [3]
+               --fault-backoff-ms <x> base retry backoff, doubles per attempt [0.5]
+               --hedge-ms <x>         duplicate a request to a second replica
+                                      after x ms in queue (0 = off) [0]
+               --health-evict <x>     evict replicas whose EWMA health drops
+                                      below x, probe to re-admit (0 = off) [0]
                --csv <file> / --json <file>   write the serving report
                (plus the `run` workload/sharding flags, or --config with
-               [serving] / [fleet] sections; --replicas > 1, --slo-ms > 0,
-               or fleet.autoscale routes through the fleet layer and
-               writes a FleetReport instead)
+               [serving] / [fleet] / [faults] sections; --replicas > 1,
+               --slo-ms > 0, fleet.autoscale, or active [faults] routes
+               through the fleet layer and writes a FleetReport instead)
              functional PJRT demo (needs `make artifacts`):
                --functional           run the legacy functional demo
                --artifacts <dir>      artifact directory    [artifacts]
   sweep      parameter sweep -> CSV on stdout
-               --param <batch|tables|alpha|onchip_mb|cores|devices|nodes|replicate_top_k|arrival_rate|replicas>
+               --param <batch|tables|alpha|onchip_mb|cores|devices|nodes|replicate_top_k|arrival_rate|replicas|mtbf_ms>
                --values <comma-separated>   e.g. 32,64,128
                --policy <p> [spm]  (plus the `run` flags)
                arrival_rate sweeps the serving loop (serving-report columns);
                replicas sweeps the fleet layer (fleet-report columns);
+               mtbf_ms sweeps crash rates through the fault-aware fleet
+               layer (availability / failover columns);
                points fan out across a --threads-bounded worker pool; rows
                print in sweep order either way
   bench      host-performance microbenchmarks (hot paths + sharded fan-out)
@@ -216,6 +227,13 @@ fn apply_serving_flags(cfg: &mut SimConfig, args: &Args) -> anyhow::Result<()> {
         fl.router = RouterPolicy::parse(r)?;
     }
     fl.slo_secs = args.f64_flag("slo-ms", fl.slo_secs * 1e3)? / 1e3;
+    let fa = &mut cfg.faults;
+    fa.mtbf_secs = args.f64_flag("faults", fa.mtbf_secs * 1e3)? / 1e3;
+    fa.mttr_secs = args.f64_flag("fault-mttr-ms", fa.mttr_secs * 1e3)? / 1e3;
+    fa.max_attempts = args.usize_flag("fault-retries", fa.max_attempts)?;
+    fa.backoff_secs = args.f64_flag("fault-backoff-ms", fa.backoff_secs * 1e3)? / 1e3;
+    fa.hedge_secs = args.f64_flag("hedge-ms", fa.hedge_secs * 1e3)? / 1e3;
+    fa.health_evict = args.f64_flag("health-evict", fa.health_evict)?;
     Ok(())
 }
 
@@ -224,7 +242,10 @@ fn apply_serving_flags(cfg: &mut SimConfig, args: &Args) -> anyhow::Result<()> {
 /// single-replica default keeps `serve` on the PR 5 loop (and its
 /// report shape) byte-for-byte.
 fn wants_fleet(cfg: &SimConfig) -> bool {
-    cfg.fleet.replicas > 1 || cfg.fleet.autoscale || cfg.fleet.slo_secs > 0.0
+    cfg.fleet.replicas > 1
+        || cfg.fleet.autoscale
+        || cfg.fleet.slo_secs > 0.0
+        || cfg.faults.active()
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
@@ -566,6 +587,42 @@ fn cmd_serve_fleet(args: &Args, cfg: &SimConfig) -> anyhow::Result<()> {
             );
         }
     }
+    if let Some(f) = &report.faults {
+        println!(
+            "  availability  : {:.4}% ({} failed permanently of {} offered)",
+            f.availability * 100.0,
+            f.failed,
+            report.offered
+        );
+        println!(
+            "  faults        : {} crashes, {} failovers, {} requests retried \
+             ({} retries), MTTR observed {:.3} ms",
+            f.crashes,
+            f.failovers,
+            f.retried,
+            f.retries,
+            f.mttr_observed_secs * 1e3
+        );
+        if f.hedged > 0 {
+            println!(
+                "  hedging       : {} hedged, {} duplicate wins, {} wasted duplicates",
+                f.hedged, f.hedge_wins, f.hedge_wasted
+            );
+        }
+        println!(
+            "  p99 split     : steady {:.3} ms vs incident {:.3} ms",
+            f.steady_p99_secs * 1e3,
+            f.incident_p99_secs * 1e3
+        );
+        for e in &f.events {
+            println!(
+                "    {:10.3} ms: {:<16} {}",
+                e.time_secs * 1e3,
+                e.kind,
+                if e.replica < 0 { "fleet-wide".to_string() } else { format!("replica {}", e.replica) }
+            );
+        }
+    }
     println!("  host wall     : {host:.2} s");
     if let Some(path) = args.flag("csv") {
         std::fs::write(path, writer::fleet_to_csv(&report))?;
@@ -718,6 +775,57 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         println!(
             "replicas,router,batch_policy,p50_ms,p95_ms,p99_ms,utilization,\
              goodput_rps,drop_rate,shed_rate,batches,cost_per_request"
+        );
+        for row in rows {
+            println!("{row}");
+        }
+        return Ok(());
+    }
+    // crash-rate points drive the fault-aware fleet layer: each point
+    // injects crashes at a different MTBF so availability vs
+    // over-provisioning reads straight off the CSV (0 = fault-free
+    // baseline through the same loop, forced active via a no-op hedge)
+    if param == "mtbf_ms" {
+        let mut points = Vec::with_capacity(values.len());
+        for &v in &values {
+            let mut cfg = base.clone();
+            cfg.faults.mtbf_secs = v / 1e3;
+            if !cfg.faults.active() {
+                // keep the 0-MTBF baseline in the fault loop so every
+                // row reports the same availability columns (hedge delay
+                // far beyond any makespan: active but never fires)
+                cfg.faults.hedge_secs = 1e9;
+            }
+            if values.len() > 1 {
+                cfg.threads = 1;
+            }
+            cfg.validate()?;
+            points.push((v, cfg));
+        }
+        let rows = eonsim::parallel::parallel_map_with(base.threads, &points, |(v, cfg)| {
+            let r = fleet::simulate(cfg)?;
+            let f = r
+                .faults
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("mtbf_ms sweep expects a fault summary"))?;
+            Ok(format!(
+                "{v},{},{},{:.6},{},{},{},{},{:.4},{:.4},{:.4},{:.4}",
+                r.replicas,
+                r.router,
+                f.availability,
+                f.crashes,
+                f.failed,
+                f.retries,
+                f.failovers,
+                f.mttr_observed_secs * 1e3,
+                f.steady_p99_secs * 1e3,
+                f.incident_p99_secs * 1e3,
+                r.total.p99 * 1e3,
+            ))
+        })?;
+        println!(
+            "mtbf_ms,replicas,router,availability,crashes,failed,retries,\
+             failovers,mttr_observed_ms,steady_p99_ms,incident_p99_ms,p99_ms"
         );
         for row in rows {
             println!("{row}");

@@ -234,6 +234,7 @@ pub fn serving_to_csv(report: &ServingReport) -> String {
 
 // --------------------------------------------------------------- fleet
 
+use crate::coordinator::faults::{FaultEvent, FaultSummary};
 use crate::coordinator::fleet::{FleetReport, ReplicaStats, ScaleEvent};
 
 fn replica_json(r: &ReplicaStats) -> String {
@@ -257,12 +258,53 @@ fn scale_event_json(e: &ScaleEvent) -> String {
     )
 }
 
+fn fault_event_json(e: &FaultEvent) -> String {
+    format!(
+        "{{\"time_secs\":{:e},\"kind\":\"{}\",\"replica\":{}}}",
+        e.time_secs, e.kind, e.replica,
+    )
+}
+
+fn fault_summary_json(f: &FaultSummary) -> String {
+    let events: Vec<String> = f.events.iter().map(fault_event_json).collect();
+    format!(
+        concat!(
+            "{{\"availability\":{:.6},\"crashes\":{},\"failed\":{},",
+            "\"retried\":{},\"retries\":{},\"failovers\":{},",
+            "\"hedged\":{},\"hedge_wins\":{},\"hedge_wasted\":{},",
+            "\"mttr_observed_secs\":{:e},\"steady_p99_secs\":{:e},",
+            "\"incident_p99_secs\":{:e},\"events\":[{}]}}"
+        ),
+        f.availability,
+        f.crashes,
+        f.failed,
+        f.retried,
+        f.retries,
+        f.failovers,
+        f.hedged,
+        f.hedge_wins,
+        f.hedge_wasted,
+        f.mttr_observed_secs,
+        f.steady_p99_secs,
+        f.incident_p99_secs,
+        events.join(","),
+    )
+}
+
 /// Full fleet report as a JSON object: fleet-wide summary metrics, the
 /// three latency distributions, aggregate counters, per-replica totals,
 /// the autoscaler event log, and the per-batch log. Byte-deterministic
 /// for a fixed config seed regardless of host thread count
-/// (per-request records are in-process only).
+/// (per-request records are in-process only). With `[faults]` active a
+/// `faults` block (availability, retry/hedge/failover counters, the
+/// fault event log) precedes `per_replica`; with `report.faults`
+/// `None` the bytes are exactly the fault-free report's.
 pub fn fleet_to_json(report: &FleetReport) -> String {
+    let faults = report
+        .faults
+        .as_ref()
+        .map(|f| format!("\"faults\":{},", fault_summary_json(f)))
+        .unwrap_or_default();
     let per_replica: Vec<String> = report.per_replica.iter().map(replica_json).collect();
     let scale_events: Vec<String> = report.scale_events.iter().map(scale_event_json).collect();
     let batches: Vec<String> = report
@@ -299,7 +341,7 @@ pub fn fleet_to_json(report: &FleetReport) -> String {
             "\"ops\":{{\"macs\":{},\"vpu_ops\":{},\"lookups\":{},\"replicated_hits\":{}}},",
             "\"mem\":{{\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
             "\"offchip_writes\":{},\"hits\":{},\"misses\":{},\"global_hits\":{}}},",
-            "\"per_replica\":[{}],\"scale_events\":[{}],\"per_batch\":[{}]}}"
+            "{}\"per_replica\":[{}],\"scale_events\":[{}],\"per_batch\":[{}]}}"
         ),
         report.platform,
         report.router,
@@ -337,6 +379,7 @@ pub fn fleet_to_json(report: &FleetReport) -> String {
         report.mem.hits,
         report.mem.misses,
         report.mem.global_hits,
+        faults,
         per_replica.join(","),
         scale_events.join(","),
         batches.join(","),
@@ -606,6 +649,7 @@ mod tests {
                 active_after: 2,
                 utilization: 0.9,
             }],
+            faults: None,
             per_batch: vec![
                 FleetBatch {
                     replica: 0,
@@ -667,6 +711,62 @@ mod tests {
         }
         // per-request records are in-process only
         assert!(!json.contains("per_request"));
+    }
+
+    #[test]
+    fn fleet_json_has_no_faults_block_when_faults_are_inactive() {
+        // byte-identity requirement: a report without `[faults]` must not
+        // mention faults anywhere in the serialized output
+        let json = fleet_to_json(&fleet_report());
+        assert!(!json.contains("faults"), "{json}");
+        assert!(!fleet_to_csv(&fleet_report()).contains("faults"));
+    }
+
+    #[test]
+    fn fleet_json_includes_fault_summary_when_present() {
+        let mut fr = fleet_report();
+        fr.faults = Some(crate::coordinator::faults::FaultSummary {
+            availability: 0.9975,
+            crashes: 2,
+            failed: 1,
+            retried: 3,
+            retries: 4,
+            failovers: 2,
+            hedged: 5,
+            hedge_wins: 1,
+            hedge_wasted: 4,
+            mttr_observed_secs: 1.5e-3,
+            steady_p99_secs: 1e-3,
+            incident_p99_secs: 3e-3,
+            events: vec![crate::coordinator::faults::FaultEvent {
+                time_secs: 1e-3,
+                kind: "crash".into(),
+                replica: 0,
+            }],
+        });
+        let json = fleet_to_json(&fr);
+        for key in [
+            "\"faults\":{\"availability\":0.997500",
+            "\"crashes\":2",
+            "\"failed\":1",
+            "\"retried\":3",
+            "\"retries\":4",
+            "\"failovers\":2",
+            "\"hedged\":5",
+            "\"hedge_wins\":1",
+            "\"hedge_wasted\":4",
+            "\"mttr_observed_secs\":",
+            "\"steady_p99_secs\":",
+            "\"incident_p99_secs\":",
+            "\"events\":[{\"time_secs\":",
+            "\"kind\":\"crash\"",
+            "\"replica\":0",
+        ] {
+            assert!(json.contains(key), "missing `{key}` in {json}");
+        }
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        // the CSV schema is shared with the no-fault path and stays unchanged
+        assert_eq!(fleet_to_csv(&fr), fleet_to_csv(&fleet_report()));
     }
 
     #[test]

@@ -37,19 +37,26 @@ pub fn read_index_trace(path: impl AsRef<Path>) -> anyhow::Result<Vec<u64>> {
     let mut r = BufReader::new(
         File::open(path).map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?,
     );
+    let truncated = |what: &str| {
+        move |e: std::io::Error| anyhow::anyhow!("{}: truncated {what}: {e}", path.display())
+    };
     let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic).map_err(truncated("header magic"))?;
     anyhow::ensure!(&magic == MAGIC, "{}: not an EONT trace file", path.display());
     let mut buf4 = [0u8; 4];
-    r.read_exact(&mut buf4)?;
+    r.read_exact(&mut buf4).map_err(truncated("header version"))?;
     let version = u32::from_le_bytes(buf4);
-    anyhow::ensure!(version == VERSION, "unsupported trace version {version}");
+    anyhow::ensure!(
+        version == VERSION,
+        "{}: unsupported trace version {version}",
+        path.display()
+    );
     let mut buf8 = [0u8; 8];
-    r.read_exact(&mut buf8)?;
+    r.read_exact(&mut buf8).map_err(truncated("index count"))?;
     let count = u64::from_le_bytes(buf8) as usize;
     let mut out = Vec::with_capacity(count);
     for _ in 0..count {
-        r.read_exact(&mut buf8)?;
+        r.read_exact(&mut buf8).map_err(truncated("index payload"))?;
         out.push(u64::from_le_bytes(buf8));
     }
     Ok(out)
@@ -95,5 +102,20 @@ mod tests {
     fn missing_file_error_mentions_path() {
         let err = read_index_trace("/nonexistent/xyz.eont").unwrap_err();
         assert!(err.to_string().contains("xyz.eont"));
+    }
+
+    #[test]
+    fn truncated_file_error_mentions_path_and_section() {
+        let path = tmp("short.eont");
+        // valid magic + version, count promises 5 indices, payload has 1
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&5u64.to_le_bytes());
+        bytes.extend_from_slice(&42u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_index_trace(&path).unwrap_err().to_string();
+        assert!(err.contains("short.eont") && err.contains("truncated index payload"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -1,0 +1,322 @@
+//! Integration tests for deterministic fault injection & failure
+//! recovery (ISSUE 8 acceptance criteria): inactive `[faults]` leaves
+//! the fleet report without any fault fields, a crash schedule produces
+//! byte-identical reports across `--threads 1/2/8` on multi-node pods,
+//! retries + failover restore >= 99% availability on a schedule where a
+//! retry-less client loses requests permanently, cold restarts pay
+//! MTTR + warmup + cache refill before accepting again, hedged
+//! duplicates never double-serve, and slowdown / link-degradation
+//! episodes stretch the affected batches.
+
+use eonsim::config::{presets, OnchipPolicy, RouterPolicy, SimConfig};
+use eonsim::coordinator::fleet;
+use eonsim::engine::Simulator;
+use eonsim::stats::writer;
+
+/// Small fleet deployment, mirroring the fleet suite's workload.
+fn fault_cfg() -> SimConfig {
+    let mut cfg = presets::tpuv6e_dlrm_small();
+    cfg.workload.embedding.num_tables = 8;
+    cfg.workload.embedding.rows_per_table = 20_000;
+    cfg.workload.embedding.pool = 8;
+    cfg.workload.trace.alpha = 1.1;
+    cfg.hardware.mem.policy = OnchipPolicy::Spm;
+    cfg.serving.requests = 96;
+    cfg.serving.arrival_rate = 300_000.0;
+    cfg.serving.max_batch = 32;
+    cfg.fleet.replicas = 2;
+    cfg.fleet.router = RouterPolicy::Jsq;
+    cfg
+}
+
+/// Simulated seconds one full `max_batch`-sized batch takes — the unit
+/// fault schedules and rates scale by, so the operating point tracks
+/// the compute model instead of hard-coded instants going stale.
+fn full_batch_secs(cfg: &SimConfig) -> f64 {
+    let mut probe = cfg.clone();
+    probe.workload.batch_size = cfg.serving.max_batch;
+    probe.workload.num_batches = 1;
+    Simulator::new(probe).run().unwrap().exec_time_secs()
+}
+
+/// The load-bearing invariant: ids are conserved through crashes,
+/// retries, and hedges, and no id is served twice.
+fn assert_conserves(r: &fleet::FleetReport) {
+    let f = r.faults.as_ref().expect("active faults attach a summary");
+    assert_eq!(
+        r.served + r.dropped + r.shed + f.failed,
+        r.offered,
+        "offered == served + dropped + shed + failed"
+    );
+    let mut ids: Vec<u64> = r.per_request.iter().map(|q| q.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len() as u64, r.served, "hedged duplicates never double-serve");
+}
+
+/// Acceptance (issue criterion): with `[faults]` absent the report
+/// carries no fault fields at all — the JSON and CSV stay on the plain
+/// fleet loop's shape, byte for byte.
+#[test]
+fn inactive_faults_leave_fleet_report_without_fault_fields() {
+    let cfg = fault_cfg();
+    assert!(!cfg.faults.active(), "defaults must be inert");
+    let r = fleet::simulate(&cfg).unwrap();
+    assert!(r.faults.is_none(), "inactive faults take the plain loop");
+    assert_eq!(r.served + r.dropped + r.shed, r.offered);
+    let json = writer::fleet_to_json(&r);
+    let csv = writer::fleet_to_csv(&r);
+    assert!(!json.contains("faults"), "no fault keys may leak: {json}");
+    assert!(!json.contains("availability"));
+    assert!(!csv.contains("faults"));
+    // and repetition is byte-stable
+    let r2 = fleet::simulate(&cfg).unwrap();
+    assert_eq!(writer::fleet_to_json(&r2), json);
+    assert_eq!(writer::fleet_to_csv(&r2), csv);
+}
+
+/// Acceptance (issue criterion): a crash schedule with every fault
+/// mechanism engaged reports byte-identically across `--threads 1/2/8`
+/// on a fleet of 2x2 multi-node pods with hot-row replication.
+#[test]
+fn crash_schedule_report_byte_identical_across_thread_counts_on_pods() {
+    let s_full = {
+        let mut cfg = fault_cfg();
+        cfg.sharding.devices = 4;
+        cfg.sharding.topology.nodes = 2;
+        cfg.sharding.replicate_top_k = 64;
+        full_batch_secs(&cfg)
+    };
+    let run = |threads: usize| {
+        let mut cfg = fault_cfg();
+        cfg.sharding.devices = 4;
+        cfg.sharding.topology.nodes = 2;
+        cfg.sharding.replicate_top_k = 64;
+        cfg.fleet.replicas = 4;
+        cfg.fleet.router = RouterPolicy::PowerOfTwo;
+        cfg.serving.requests = 200;
+        let fa = &mut cfg.faults;
+        fa.crash_at_secs = vec![0.5 * s_full];
+        fa.crash_replica = vec![0];
+        fa.mtbf_secs = 20.0 * s_full;
+        fa.mttr_secs = 2.0 * s_full;
+        fa.refill_secs = 0.5 * s_full;
+        fa.slowdown_factor = 2.0;
+        fa.slowdown_mtbf_secs = 5.0 * s_full;
+        fa.slowdown_duration_secs = 2.0 * s_full;
+        fa.link_degrade_factor = 2.0;
+        fa.link_degrade_mtbf_secs = 8.0 * s_full;
+        fa.link_degrade_duration_secs = 2.0 * s_full;
+        fa.hedge_secs = 2.0 * s_full;
+        fa.health_evict = 0.3;
+        fa.probe_secs = s_full;
+        cfg.threads = threads;
+        cfg.validate().unwrap();
+        let r = fleet::simulate(&cfg).unwrap();
+        assert_conserves(&r);
+        (writer::fleet_to_json(&r), writer::fleet_to_csv(&r))
+    };
+    let (json, csv) = run(1);
+    assert!(json.contains("\"faults\":{"), "summary attached: {json}");
+    for threads in [2usize, 8] {
+        let (j, c) = run(threads);
+        assert_eq!(json, j, "JSON bytes diverged at threads = {threads}");
+        assert_eq!(csv, c, "CSV bytes diverged at threads = {threads}");
+    }
+}
+
+/// Acceptance (issue criterion): on a crash schedule where a client
+/// with no retry budget permanently loses requests, bounded retries +
+/// health-aware failover restore availability to >= 99%.
+#[test]
+fn retries_and_failover_restore_availability_to_99_percent() {
+    let mut base = fault_cfg();
+    base.serving.requests = 200;
+    base.faults.crash_at_secs = vec![1e-4];
+    base.faults.crash_replica = vec![0];
+    base.faults.mttr_secs = 5e-3;
+
+    let mut no_retry = base.clone();
+    no_retry.faults.max_attempts = 1;
+    let r0 = fleet::simulate(&no_retry).unwrap();
+    let f0 = r0.faults.as_ref().unwrap();
+    assert_conserves(&r0);
+    assert!(f0.failed > 0, "retry-less crash losses must be permanent");
+    assert!(
+        f0.availability < 0.995,
+        "the schedule must actually hurt: availability {}",
+        f0.availability
+    );
+
+    let mut retry = base.clone();
+    retry.faults.max_attempts = 4;
+    let r1 = fleet::simulate(&retry).unwrap();
+    let f1 = r1.faults.as_ref().unwrap();
+    assert_conserves(&r1);
+    assert!(f1.retries > 0 && f1.failovers > 0, "recovery must engage");
+    assert!(
+        f1.availability >= 0.99,
+        "retries + failover must restore availability: {}",
+        f1.availability
+    );
+    assert!(r1.served > r0.served);
+}
+
+/// Cold-restart semantics: between the crash and `crash + mttr +
+/// warmup + refill` the replica dispatches nothing, and the observed
+/// MTTR reports the full client-visible outage.
+#[test]
+fn cold_restart_pays_mttr_warmup_and_refill_before_accepting() {
+    let mut cfg = fault_cfg();
+    let s_full = full_batch_secs(&cfg);
+    cfg.serving.requests = 200;
+    let mu = cfg.serving.max_batch as f64 / s_full;
+    cfg.serving.arrival_rate = 1.5 * mu;
+    let tc = 0.5 * s_full;
+    cfg.faults.crash_at_secs = vec![tc];
+    cfg.faults.crash_replica = vec![0];
+    cfg.faults.mttr_secs = s_full;
+    cfg.fleet.warmup_secs = 0.5 * s_full;
+    cfg.faults.refill_secs = 0.5 * s_full;
+    let back = tc + cfg.faults.mttr_secs + cfg.fleet.warmup_secs + cfg.faults.refill_secs;
+    let r = fleet::simulate(&cfg).unwrap();
+    let f = r.faults.as_ref().unwrap();
+    assert_conserves(&r);
+    assert_eq!(f.crashes, 1);
+    assert!(f.retries > 0, "the crash must strand in-flight work");
+    assert!(r.makespan_secs > back, "the run extends past the outage window");
+    for b in r.per_batch.iter().filter(|b| b.replica == 0) {
+        assert!(
+            b.dispatch_secs <= tc + 1e-12 || b.dispatch_secs >= back - 1e-12,
+            "replica 0 dispatched at {} inside its outage ({tc}..{back})",
+            b.dispatch_secs
+        );
+    }
+    assert!((f.mttr_observed_secs - (back - tc)).abs() < 1e-9);
+    let kinds: Vec<&str> = f.events.iter().map(|e| e.kind.as_str()).collect();
+    assert_eq!(kinds.iter().filter(|k| **k == "crash").count(), 1);
+    assert_eq!(kinds.iter().filter(|k| **k == "restore").count(), 1);
+}
+
+/// Hedged requests: under sustained overload every overdue queued
+/// request gets exactly one duplicate, the first completion wins, and
+/// the loser's batch slot is charged as waste — with ids conserved.
+#[test]
+fn hedged_duplicates_first_completion_wins_and_work_is_charged() {
+    let mut cfg = fault_cfg();
+    let s_full = full_batch_secs(&cfg);
+    cfg.serving.requests = 300;
+    let mu = cfg.serving.max_batch as f64 / s_full;
+    // 3x the 2-replica fleet's capacity: queues build, hedges fire
+    cfg.serving.arrival_rate = 3.0 * 2.0 * mu;
+    cfg.faults.hedge_secs = 2.0 * s_full;
+    let r = fleet::simulate(&cfg).unwrap();
+    let f = r.faults.as_ref().unwrap();
+    assert_conserves(&r);
+    assert_eq!(r.served, r.offered, "no crashes, unbounded queues: all served");
+    assert!(f.hedged > 0, "overload must trigger hedging");
+    assert!(f.hedge_wins <= f.hedged);
+    assert_eq!(
+        f.hedge_wasted, f.hedged,
+        "with no crashes both copies complete, so exactly one per hedge is wasted"
+    );
+    assert_eq!((f.crashes, f.failed), (0, 0));
+}
+
+/// Transient slowdown episodes make the affected batches pay the
+/// multiplier: total busy seconds strictly exceed the fault-free twin
+/// run, and the incident-window tail dominates the steady one.
+#[test]
+fn slowdown_episodes_stretch_busy_time_and_incident_tail() {
+    let mut base = fault_cfg();
+    let s_full = full_batch_secs(&base);
+    base.serving.requests = 300;
+    let mu = base.serving.max_batch as f64 / s_full;
+    base.serving.arrival_rate = 0.7 * 2.0 * mu;
+    // forced through the fault loop with no episode: the comparison twin
+    let mut plain = base.clone();
+    plain.faults.hedge_secs = 1e9;
+    let r_plain = fleet::simulate(&plain).unwrap();
+    assert_conserves(&r_plain);
+
+    let mut slow = base.clone();
+    slow.faults.slowdown_factor = 8.0;
+    slow.faults.slowdown_mtbf_secs = s_full;
+    slow.faults.slowdown_duration_secs = 1.5 * s_full;
+    let r_slow = fleet::simulate(&slow).unwrap();
+    let f = r_slow.faults.as_ref().unwrap();
+    assert_conserves(&r_slow);
+    assert!(
+        f.events.iter().any(|e| e.kind == "slowdown_start"),
+        "episodes must fire within the run"
+    );
+    assert!(
+        r_slow.busy_secs > r_plain.busy_secs,
+        "slowed batches must charge more wall time: {} vs {}",
+        r_slow.busy_secs,
+        r_plain.busy_secs
+    );
+    assert!(f.incident_p99_secs >= f.steady_p99_secs);
+    assert!(f.incident_p99_secs > 0.0);
+}
+
+/// Fleet-wide link degradation stretches multi-node batches by the
+/// inter-tier share: busy seconds strictly exceed the fault-free twin
+/// on 2x2 pods, and the episode events are fleet-wide (`replica: -1`).
+#[test]
+fn link_degradation_stretches_multinode_pod_batches() {
+    let mut base = fault_cfg();
+    base.sharding.devices = 4;
+    base.sharding.topology.nodes = 2;
+    let s_full = full_batch_secs(&base);
+    base.serving.requests = 200;
+    let mu = base.serving.max_batch as f64 / s_full;
+    base.serving.arrival_rate = 0.8 * 2.0 * mu;
+    let mut plain = base.clone();
+    plain.faults.hedge_secs = 1e9;
+    let r_plain = fleet::simulate(&plain).unwrap();
+
+    let mut degraded = base.clone();
+    degraded.faults.link_degrade_factor = 4.0;
+    degraded.faults.link_degrade_mtbf_secs = s_full;
+    degraded.faults.link_degrade_duration_secs = 2.0 * s_full;
+    let r = fleet::simulate(&degraded).unwrap();
+    let f = r.faults.as_ref().unwrap();
+    assert_conserves(&r);
+    let starts: Vec<_> =
+        f.events.iter().filter(|e| e.kind == "link_degrade_start").collect();
+    assert!(!starts.is_empty(), "episodes must fire within the run");
+    assert!(starts.iter().all(|e| e.replica == -1), "link episodes are fleet-wide");
+    assert!(
+        r.busy_secs > r_plain.busy_secs,
+        "degraded inter-tier must stretch pod batches: {} vs {}",
+        r.busy_secs,
+        r_plain.busy_secs
+    );
+}
+
+/// Conservation holds for every router with random crashes layered on
+/// a scripted one plus bounded queues (drops), retries, and hedging.
+#[test]
+fn combined_faults_conserve_ids_for_every_router() {
+    let mut base = fault_cfg();
+    let s_full = full_batch_secs(&base);
+    base.serving.requests = 200;
+    let mu = base.serving.max_batch as f64 / s_full;
+    base.serving.arrival_rate = 1.5 * mu;
+    base.serving.queue_capacity = 8;
+    base.faults.crash_at_secs = vec![0.5 * s_full];
+    base.faults.crash_replica = vec![0];
+    base.faults.mtbf_secs = 4.0 * s_full;
+    base.faults.mttr_secs = 0.5 * s_full;
+    base.faults.hedge_secs = 3.0 * s_full;
+    for router in [RouterPolicy::RoundRobin, RouterPolicy::Jsq, RouterPolicy::PowerOfTwo] {
+        let mut cfg = base.clone();
+        cfg.fleet.router = router;
+        let r = fleet::simulate(&cfg).unwrap();
+        let f = r.faults.as_ref().unwrap();
+        assert_conserves(&r);
+        assert!(f.crashes >= 1, "the scripted crash fires under {router:?}");
+        assert_eq!(r.offered, 200);
+    }
+}

@@ -656,3 +656,111 @@ fn prop_fleet_router_conserves_requests() {
         );
     });
 }
+
+/// Fault-injection conservation: across random crash schedules (random
+/// MTBF/MTTR plus scripted crashes), slowdown and link-degradation
+/// episodes, every router, every retry budget, and hedging on or off,
+/// `served + dropped + shed + failed == offered`, hedged duplicates
+/// never double-count as served, every completed batch slot is either a
+/// serve or a charged hedge waste, and a zero-crash schedule with
+/// unbounded queues fails nothing.
+#[test]
+fn prop_fault_recovery_conserves_requests() {
+    forall("fault conservation", 8, |rng| {
+        let mut cfg = presets::tpuv6e_dlrm_small();
+        // tiny workload: the property is about recovery accounting
+        cfg.workload.embedding.num_tables = 1 + rng.next_below(3) as usize;
+        cfg.workload.embedding.rows_per_table = 1_000;
+        cfg.workload.embedding.pool = 1 + rng.next_below(4) as usize;
+        cfg.hardware.mem.policy = OnchipPolicy::Spm;
+        let s = &mut cfg.serving;
+        s.requests = 1 + rng.next_below(150) as usize;
+        s.arrival_rate = 1_000.0 * (1.0 + rng.next_f64() * 999.0);
+        s.max_batch = 1 + rng.next_below(24) as usize;
+        s.queue_capacity =
+            [0, 4 + rng.next_below(12) as usize][rng.next_below(2) as usize];
+        s.seed = rng.next_u64();
+        let fl = &mut cfg.fleet;
+        fl.replicas = 2 + rng.next_below(3) as usize;
+        fl.router = [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::Jsq,
+            RouterPolicy::PowerOfTwo,
+        ][rng.next_below(3) as usize];
+        fl.seed = rng.next_u64();
+        let replicas = fl.replicas;
+        let fa = &mut cfg.faults;
+        // random crash process (possibly off) + up to 2 scripted crashes
+        fa.mtbf_secs = [0.0, 1e-4 * (1.0 + rng.next_f64() * 99.0)]
+            [rng.next_below(2) as usize];
+        fa.mttr_secs = 1e-5 * (1.0 + rng.next_f64() * 99.0);
+        for _ in 0..rng.next_below(3) {
+            fa.crash_at_secs.push(1e-5 * (1.0 + rng.next_f64() * 999.0));
+            fa.crash_replica.push(rng.next_below(replicas as u64) as usize);
+        }
+        fa.slowdown_factor = [1.0, 1.5 + rng.next_f64() * 6.5][rng.next_below(2) as usize];
+        fa.slowdown_mtbf_secs = 1e-4 * (1.0 + rng.next_f64() * 9.0);
+        fa.slowdown_duration_secs = 1e-5 * (1.0 + rng.next_f64() * 99.0);
+        fa.link_degrade_factor = [1.0, 2.0 + rng.next_f64() * 6.0][rng.next_below(2) as usize];
+        fa.link_degrade_mtbf_secs = 1e-4 * (1.0 + rng.next_f64() * 9.0);
+        fa.link_degrade_duration_secs = 1e-5 * (1.0 + rng.next_f64() * 99.0);
+        fa.max_attempts = 1 + rng.next_below(4) as usize;
+        fa.backoff_secs = 1e-6 * (1.0 + rng.next_f64() * 999.0);
+        fa.hedge_secs = [0.0, 1e-5 * (1.0 + rng.next_f64() * 999.0)]
+            [rng.next_below(2) as usize];
+        fa.health_evict = [0.0, 0.2 + rng.next_f64() * 0.3][rng.next_below(2) as usize];
+        fa.seed = rng.next_u64();
+        let crashes_possible = cfg.faults.crashes_possible();
+        let active = cfg.faults.active() || {
+            cfg.faults.hedge_secs = 1.0; // force the fault loop: never fires
+            true
+        };
+        assert!(active);
+        cfg.validate().unwrap_or_else(|e| panic!("config must be valid: {e}"));
+        let requests = cfg.serving.requests as u64;
+        let tag = format!(
+            "{} x {} replicas, {} reqs, cap {}, attempts {}, mtbf {:e}, hedge {:e}",
+            cfg.fleet.router.name(),
+            cfg.fleet.replicas,
+            requests,
+            cfg.serving.queue_capacity,
+            cfg.faults.max_attempts,
+            cfg.faults.mtbf_secs,
+            cfg.faults.hedge_secs,
+        );
+
+        let r = eonsim::coordinator::fleet::simulate(&cfg).unwrap();
+        let f = r.faults.as_ref().unwrap_or_else(|| panic!("{tag}: summary"));
+        assert_eq!(r.offered, requests, "{tag}");
+        assert_eq!(
+            r.served + r.dropped + r.shed + f.failed,
+            r.offered,
+            "{tag}: conservation"
+        );
+        let mut ids: Vec<u64> = r.per_request.iter().map(|q| q.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, r.served, "{tag}: served ids unique");
+        assert!(ids.iter().all(|&id| id < requests), "{tag}: ids in range");
+        assert!(f.hedge_wins <= f.hedged, "{tag}: wins bounded by hedges");
+        assert!(f.retried <= f.retries, "{tag}: distinct <= total retries");
+        if !crashes_possible {
+            assert_eq!(f.failed, 0, "{tag}: only crashes can fail a request");
+            assert_eq!((f.crashes, f.retries), (0, 0), "{tag}");
+            // (health eviction may still shed between probes, so only an
+            // un-evicting, unbounded config is guaranteed lossless)
+            if cfg.serving.queue_capacity == 0 && cfg.faults.health_evict == 0.0 {
+                assert_eq!(r.served, requests, "{tag}: nothing may be refused");
+            }
+        }
+        // every completed batch slot is a serve or a charged hedge waste
+        let batched: u64 = r.per_batch.iter().map(|b| b.requests as u64).sum();
+        assert_eq!(batched, r.served + f.hedge_wasted, "{tag}: slot accounting");
+        assert!(
+            r.per_batch.iter().all(|b| b.requests <= cfg.serving.max_batch),
+            "{tag}: dispatch bound"
+        );
+        let avail = if requests > 0 { r.served as f64 / requests as f64 } else { 0.0 };
+        assert!((f.availability - avail).abs() < 1e-12, "{tag}: availability");
+    });
+}

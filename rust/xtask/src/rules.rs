@@ -73,6 +73,7 @@ const TIME_PATHS: &[&str] = &[
     "rust/src/trace/",
     "rust/src/coordinator/serving.rs",
     "rust/src/coordinator/fleet.rs",
+    "rust/src/coordinator/faults.rs",
 ];
 const CONC_EXEMPT: &[&str] = &["rust/src/parallel.rs", "rust/src/sharding/mod.rs"];
 
@@ -259,6 +260,18 @@ const SCHEMA: &[SchemaReq] = &[
         name: "FleetReport",
         csv: &[],
         json: &["fleet_to_json"],
+    },
+    SchemaReq {
+        file: "rust/src/coordinator/faults.rs",
+        name: "FaultSummary",
+        csv: &[],
+        json: &["fault_summary_json"],
+    },
+    SchemaReq {
+        file: "rust/src/coordinator/faults.rs",
+        name: "FaultEvent",
+        csv: &[],
+        json: &["fault_event_json"],
     },
 ];
 

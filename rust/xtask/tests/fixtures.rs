@@ -92,6 +92,29 @@ fn fleet_schema_fixture() {
     assert_clean("fleet_schema_good");
 }
 
+/// `coordinator/faults.rs` is a simulated-time path: a host clock read
+/// in the fault injector must fire, and seeded draws must stay clean.
+#[test]
+fn faults_sim_time_fixture() {
+    assert_fires("faults_time_bad", "sim-time");
+    assert_clean("faults_time_good");
+}
+
+/// The schema rule covers `FaultSummary`: a field the fault JSON writer
+/// drops is exactly one finding, named after the field.
+#[test]
+fn faults_schema_fixture() {
+    let findings = lint_fixture("faults_schema_bad");
+    assert_eq!(findings.len(), 1, "fault JSON drops `failovers`: {findings:?}");
+    assert_eq!(findings[0].rule, "schema");
+    assert!(
+        findings[0].message.contains("FaultSummary.failovers"),
+        "finding names the field: {:?}",
+        findings[0]
+    );
+    assert_clean("faults_schema_good");
+}
+
 #[test]
 fn concurrency_fixture() {
     assert_fires("concurrency_bad", "concurrency");

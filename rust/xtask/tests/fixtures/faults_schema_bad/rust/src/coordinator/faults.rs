@@ -1,0 +1,7 @@
+//! Bad: `failovers` is a public fault-summary field that never reaches
+//! the JSON writer.
+
+pub struct FaultSummary {
+    pub availability: f64,
+    pub failovers: u64,
+}

@@ -1,0 +1,7 @@
+//! Fault emitter that silently drops the `failovers` count.
+
+use crate::coordinator::faults::FaultSummary;
+
+pub fn fault_summary_json(f: &FaultSummary) -> String {
+    format!("{{\"availability\":{:.6}}}", f.availability)
+}

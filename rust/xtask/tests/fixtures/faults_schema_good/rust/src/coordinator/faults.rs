@@ -1,0 +1,6 @@
+//! Good: every fault-summary field reaches the JSON writer.
+
+pub struct FaultSummary {
+    pub availability: f64,
+    pub failovers: u64,
+}

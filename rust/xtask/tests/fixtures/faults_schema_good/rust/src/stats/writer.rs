@@ -1,0 +1,7 @@
+//! Fault emitter covering the full summary schema.
+
+use crate::coordinator::faults::FaultSummary;
+
+pub fn fault_summary_json(f: &FaultSummary) -> String {
+    format!("{{\"availability\":{:.6},\"failovers\":{}}}", f.availability, f.failovers)
+}

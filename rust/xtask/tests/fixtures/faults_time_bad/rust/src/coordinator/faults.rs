@@ -1,0 +1,7 @@
+//! Bad: the fault injector samples the host wall clock for a crash
+//! instant instead of drawing from the simulated schedule.
+
+pub fn next_crash_at() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,6 @@
+//! Good: crash instants advance on the simulated clock from seeded
+//! exponential draws only.
+
+pub fn next_crash_at(clock: f64, mtbf_draw: f64) -> f64 {
+    clock + mtbf_draw
+}
