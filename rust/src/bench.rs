@@ -271,6 +271,30 @@ pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
         )?);
     }
 
+    // 5b) energy accounting overhead: the same single-device LRU run
+    // with [energy] enabled, so `bench cmp` shows what the per-batch
+    // `energy::estimate_batch` pass costs on top of `e2e_lru` (it
+    // should stay within noise of free — the counts already exist)
+    {
+        let mut cfg = presets::tpuv6e_dlrm_small();
+        cfg.workload.batch_size = if opts.smoke { 32 } else { 256 };
+        cfg.workload.num_batches = 1;
+        cfg.hardware.mem.policy = OnchipPolicy::Cache(CachePolicyKind::Lru);
+        cfg.energy.enabled = true;
+        let line_accesses = cfg.workload.lookups_per_batch() * 8;
+        sections.push(section(
+            "e2e_energy",
+            format!("end-to-end sim (lru + energy, batch {})", cfg.workload.batch_size),
+            line_accesses,
+            reps,
+            || {
+                let r = Simulator::new(cfg.clone()).run()?;
+                std::hint::black_box((r.total_cycles(), r.total_energy()));
+                Ok(())
+            },
+        )?);
+    }
+
     // 6) simulated-time serving loop (`eonsim serve`'s hot path): an
     // open-loop Poisson stream through the dynamic batcher, every batch
     // stepped on a persistent SimCore — the request-level layer's cost

@@ -29,7 +29,7 @@ struct Block {
 
 const MAX_RRPV: u8 = 3;
 
-/// ChampSim-like cache: `sets x ways` of [`Block`].
+/// ChampSim-like cache: `sets x ways` of `Block` entries.
 pub struct ChampCache {
     sets: usize,
     ways: usize,

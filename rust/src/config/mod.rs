@@ -452,6 +452,42 @@ impl RouterPolicy {
     }
 }
 
+/// Signal the fleet autoscaler acts on at each window boundary
+/// (`fleet.autoscale_policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AutoscalePolicy {
+    /// Scale on windowed fleet utilization (busy seconds / active
+    /// capacity) against `scale_up_util` / `scale_down_util` — the
+    /// classic ±1 policy.
+    Utilization,
+    /// Scale on *predicted power draw*: an EWMA of windowed busy
+    /// seconds sizes the active set so predicted dynamic load fits at
+    /// `scale_up_util` occupancy, stepping directly to that target
+    /// (possibly several replicas per boundary). Minimizes the static
+    /// energy of idle replicas; requires `[energy] enabled = true`.
+    Energy,
+}
+
+impl AutoscalePolicy {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "utilization" | "util" => Ok(Self::Utilization),
+            "energy" | "power" => Ok(Self::Energy),
+            other => Err(ConfigError::Invalid {
+                key: "fleet.autoscale_policy".into(),
+                msg: format!("unknown autoscale policy `{other}` (want utilization|energy)"),
+            }),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Utilization => "utilization",
+            Self::Energy => "energy",
+        }
+    }
+}
+
 /// Fleet-scale serving configuration (`[fleet]`): how many independent
 /// SimCore replicas serve the arrival stream, how requests route to
 /// them, and the SLO-admission / autoscaling knobs layered on top. Each
@@ -471,9 +507,13 @@ pub struct FleetConfig {
     /// admission control. Served requests finishing above the SLO count
     /// as `slo_violations` and are excluded from goodput.
     pub slo_secs: f64,
-    /// Enable the utilization-driven autoscaler. Off: all `replicas`
-    /// serve for the whole run.
+    /// Enable the autoscaler. Off: all `replicas` serve for the whole
+    /// run.
     pub autoscale: bool,
+    /// What signal the autoscaler acts on: windowed utilization (the
+    /// classic ±1 policy) or predicted power draw (`"energy"`, requires
+    /// `[energy] enabled = true`).
+    pub autoscale_policy: AutoscalePolicy,
     /// Autoscaler floor: never fewer active replicas than this.
     pub min_replicas: usize,
     /// Autoscaler ceiling; `0` = `replicas` (every provisioned slot).
@@ -521,6 +561,7 @@ impl Default for FleetConfig {
             router: RouterPolicy::RoundRobin,
             slo_secs: 0.0,
             autoscale: false,
+            autoscale_policy: AutoscalePolicy::Utilization,
             min_replicas: 1,
             max_replicas: 0,
             scale_up_util: 0.8,
@@ -649,6 +690,71 @@ impl Default for FaultsConfig {
             health_evict: 0.0,
             probe_secs: 2e-3,
             seed: 0xFA_017,
+        }
+    }
+}
+
+/// Energy-observability configuration (`[energy]`): the per-action
+/// energy table ([`crate::energy::EnergyTable`] overrides, pJ per
+/// action / pJ per ICI byte / static watts) and the `enabled` switch.
+/// Entirely inert by default: with `enabled = false` every report
+/// (JSON and CSV) stays byte-identical to the pre-energy output — the
+/// legacy scalar `energy_joules` keeps its original formula and no
+/// per-component block is emitted anywhere.
+#[derive(Debug, Clone)]
+pub struct EnergyConfig {
+    /// Turn per-component energy reporting on: per-batch
+    /// `BatchResult::energy`, the `SimReport` component aggregate,
+    /// serving/fleet energy blocks (joules-per-request, average power,
+    /// idle static energy), and the energy autoscale policy's input.
+    pub enabled: bool,
+    /// One systolic-array MAC (pJ).
+    pub mac_pj: f64,
+    /// One VPU lane-operation (pJ).
+    pub vpu_op_pj: f64,
+    /// One on-chip SRAM line read (pJ).
+    pub sram_read_pj: f64,
+    /// One on-chip SRAM line write (pJ).
+    pub sram_write_pj: f64,
+    /// One off-chip (HBM) line transfer (pJ).
+    pub dram_access_pj: f64,
+    /// One intra-node ICI exchange byte (pJ/B).
+    pub ici_intra_pj_per_byte: f64,
+    /// One inter-node ICI exchange byte (pJ/B).
+    pub ici_inter_pj_per_byte: f64,
+    /// Static leakage + clock power per replica in watts.
+    pub static_watts: f64,
+}
+
+impl EnergyConfig {
+    /// The per-action table these overrides describe.
+    pub fn table(&self) -> crate::energy::EnergyTable {
+        crate::energy::EnergyTable {
+            mac_pj: self.mac_pj,
+            vpu_op_pj: self.vpu_op_pj,
+            sram_read_pj: self.sram_read_pj,
+            sram_write_pj: self.sram_write_pj,
+            dram_access_pj: self.dram_access_pj,
+            ici_intra_pj_per_byte: self.ici_intra_pj_per_byte,
+            ici_inter_pj_per_byte: self.ici_inter_pj_per_byte,
+            static_watts: self.static_watts,
+        }
+    }
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        let t = crate::energy::EnergyTable::default();
+        EnergyConfig {
+            enabled: false,
+            mac_pj: t.mac_pj,
+            vpu_op_pj: t.vpu_op_pj,
+            sram_read_pj: t.sram_read_pj,
+            sram_write_pj: t.sram_write_pj,
+            dram_access_pj: t.dram_access_pj,
+            ici_intra_pj_per_byte: t.ici_intra_pj_per_byte,
+            ici_inter_pj_per_byte: t.ici_inter_pj_per_byte,
+            static_watts: t.static_watts,
         }
     }
 }
@@ -912,6 +1018,10 @@ pub struct SimConfig {
     /// link-degradation episodes, retries/hedging, health routing.
     /// Inert (byte-identical fleet reports) at the defaults.
     pub faults: FaultsConfig,
+    /// Energy observability (`[energy]`): per-action table overrides
+    /// and the `enabled` switch. Inert (byte-identical reports) when
+    /// disabled, which is the default.
+    pub energy: EnergyConfig,
     /// Host worker threads for the per-device fan-out and driver sweeps
     /// (`[sim] threads` / `--threads`; default = available parallelism).
     /// Purely a host-performance knob: any value produces byte-identical
@@ -1076,6 +1186,9 @@ impl SimConfig {
         }
         fl.slo_secs = t.float_or("fleet.slo_ms", fl.slo_secs * 1e3)? / 1e3;
         fl.autoscale = t.bool_or("fleet.autoscale", fl.autoscale)?;
+        if t.contains("fleet.autoscale_policy") {
+            fl.autoscale_policy = AutoscalePolicy::parse(t.str_("fleet.autoscale_policy")?)?;
+        }
         fl.min_replicas = t.usize_or("fleet.min_replicas", fl.min_replicas)?;
         fl.max_replicas = t.usize_or("fleet.max_replicas", fl.max_replicas)?;
         fl.scale_up_util = t.float_or("fleet.scale_up_util", fl.scale_up_util)?;
@@ -1125,6 +1238,19 @@ impl SimConfig {
         fa.health_evict = t.float_or("faults.health_evict", fa.health_evict)?;
         fa.probe_secs = t.float_or("faults.probe_ms", fa.probe_secs * 1e3)? / 1e3;
         fa.seed = t.u64_or("faults.seed", fa.seed)?;
+
+        let en = &mut cfg.energy;
+        en.enabled = t.bool_or("energy.enabled", en.enabled)?;
+        en.mac_pj = t.float_or("energy.mac_pj", en.mac_pj)?;
+        en.vpu_op_pj = t.float_or("energy.vpu_op_pj", en.vpu_op_pj)?;
+        en.sram_read_pj = t.float_or("energy.sram_read_pj", en.sram_read_pj)?;
+        en.sram_write_pj = t.float_or("energy.sram_write_pj", en.sram_write_pj)?;
+        en.dram_access_pj = t.float_or("energy.dram_access_pj", en.dram_access_pj)?;
+        en.ici_intra_pj_per_byte =
+            t.float_or("energy.ici_intra_pj_per_byte", en.ici_intra_pj_per_byte)?;
+        en.ici_inter_pj_per_byte =
+            t.float_or("energy.ici_inter_pj_per_byte", en.ici_inter_pj_per_byte)?;
+        en.static_watts = t.float_or("energy.static_watts", en.static_watts)?;
 
         cfg.threads = t.usize_or("sim.threads", cfg.threads)?;
         cfg.seed = t.u64_or("seed", cfg.seed)?;
@@ -1498,6 +1624,65 @@ impl SimConfig {
                      (probes are the only re-admission path), got {} s",
                     fa.probe_secs
                 ),
+            );
+        }
+        // `[energy]` uses the same NaN-rejecting `!(x >= 0.0)` form: a
+        // NaN table entry would silently poison every joule downstream.
+        let en = &self.energy;
+        if !(en.mac_pj >= 0.0) {
+            return invalid(
+                "energy.mac_pj",
+                format!("per-action energy must be >= 0 pJ, got {}", en.mac_pj),
+            );
+        }
+        if !(en.vpu_op_pj >= 0.0) {
+            return invalid(
+                "energy.vpu_op_pj",
+                format!("per-action energy must be >= 0 pJ, got {}", en.vpu_op_pj),
+            );
+        }
+        if !(en.sram_read_pj >= 0.0) {
+            return invalid(
+                "energy.sram_read_pj",
+                format!("per-action energy must be >= 0 pJ, got {}", en.sram_read_pj),
+            );
+        }
+        if !(en.sram_write_pj >= 0.0) {
+            return invalid(
+                "energy.sram_write_pj",
+                format!("per-action energy must be >= 0 pJ, got {}", en.sram_write_pj),
+            );
+        }
+        if !(en.dram_access_pj >= 0.0) {
+            return invalid(
+                "energy.dram_access_pj",
+                format!("per-action energy must be >= 0 pJ, got {}", en.dram_access_pj),
+            );
+        }
+        if !(en.ici_intra_pj_per_byte >= 0.0) {
+            return invalid(
+                "energy.ici_intra_pj_per_byte",
+                format!("per-byte energy must be >= 0 pJ/B, got {}", en.ici_intra_pj_per_byte),
+            );
+        }
+        if !(en.ici_inter_pj_per_byte >= 0.0) {
+            return invalid(
+                "energy.ici_inter_pj_per_byte",
+                format!("per-byte energy must be >= 0 pJ/B, got {}", en.ici_inter_pj_per_byte),
+            );
+        }
+        if !(en.static_watts >= 0.0) {
+            return invalid(
+                "energy.static_watts",
+                format!("static power must be >= 0 W, got {}", en.static_watts),
+            );
+        }
+        if matches!(fl.autoscale_policy, AutoscalePolicy::Energy) && !en.enabled {
+            return invalid(
+                "fleet.autoscale_policy",
+                "the energy policy scales on predicted power draw, which needs \
+                 per-component accounting — set [energy] enabled = true"
+                    .into(),
             );
         }
         let s = &self.sharding;
@@ -2043,6 +2228,78 @@ mod tests {
                 assert!(r.is_ok(), "`{doc}` is inert while its feature is off");
             }
         }
+    }
+
+    #[test]
+    fn energy_defaults_are_inert_and_match_the_table() {
+        let cfg = SimConfig::from_table(&Table::parse("").unwrap()).unwrap();
+        assert!(!cfg.energy.enabled, "energy reporting is opt-in");
+        assert_eq!(cfg.fleet.autoscale_policy, AutoscalePolicy::Utilization);
+        let t = cfg.energy.table();
+        let d = crate::energy::EnergyTable::default();
+        assert_eq!(t.mac_pj, d.mac_pj);
+        assert_eq!(t.dram_access_pj, d.dram_access_pj);
+        assert_eq!(t.ici_intra_pj_per_byte, d.ici_intra_pj_per_byte);
+        assert_eq!(t.ici_inter_pj_per_byte, d.ici_inter_pj_per_byte);
+        assert_eq!(t.static_watts, d.static_watts);
+    }
+
+    #[test]
+    fn energy_section_parses() {
+        let t = Table::parse(
+            "[energy]\nenabled = true\nmac_pj = 0.4\nvpu_op_pj = 0.1\n\
+             sram_read_pj = 30\nsram_write_pj = 35\ndram_access_pj = 2000\n\
+             ici_intra_pj_per_byte = 4\nici_inter_pj_per_byte = 80\n\
+             static_watts = 25\n\
+             [fleet]\nreplicas = 4\nautoscale = true\n\
+             autoscale_policy = \"energy\"",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_table(&t).unwrap();
+        assert!(cfg.energy.enabled);
+        assert_eq!(cfg.energy.mac_pj, 0.4);
+        assert_eq!(cfg.energy.sram_write_pj, 35.0);
+        assert_eq!(cfg.energy.dram_access_pj, 2000.0);
+        assert_eq!(cfg.energy.ici_intra_pj_per_byte, 4.0);
+        assert_eq!(cfg.energy.ici_inter_pj_per_byte, 80.0);
+        assert_eq!(cfg.energy.static_watts, 25.0);
+        assert_eq!(cfg.fleet.autoscale_policy, AutoscalePolicy::Energy);
+    }
+
+    #[test]
+    fn autoscale_policy_roundtrip() {
+        for s in ["utilization", "energy"] {
+            assert_eq!(AutoscalePolicy::parse(s).unwrap().name(), s);
+        }
+        assert_eq!(AutoscalePolicy::parse("util").unwrap(), AutoscalePolicy::Utilization);
+        assert_eq!(AutoscalePolicy::parse("power").unwrap(), AutoscalePolicy::Energy);
+        assert!(AutoscalePolicy::parse("carbon").is_err());
+    }
+
+    #[test]
+    fn energy_validation_rejects_bad_values_with_clear_errors() {
+        for (doc, key) in [
+            ("[energy]\nmac_pj = -1", "energy.mac_pj"),
+            ("[energy]\nmac_pj = nan", "energy.mac_pj"),
+            ("[energy]\nvpu_op_pj = -1", "energy.vpu_op_pj"),
+            ("[energy]\nsram_read_pj = -1", "energy.sram_read_pj"),
+            ("[energy]\nsram_write_pj = nan", "energy.sram_write_pj"),
+            ("[energy]\ndram_access_pj = -1", "energy.dram_access_pj"),
+            ("[energy]\nici_intra_pj_per_byte = -1", "energy.ici_intra_pj_per_byte"),
+            ("[energy]\nici_inter_pj_per_byte = nan", "energy.ici_inter_pj_per_byte"),
+            ("[energy]\nstatic_watts = -1", "energy.static_watts"),
+            // the energy autoscale policy needs the accounting it scales on
+            ("[fleet]\nautoscale_policy = \"energy\"", "fleet.autoscale_policy"),
+            ("[fleet]\nautoscale_policy = \"carbon\"", "fleet.autoscale_policy"),
+        ] {
+            let err = SimConfig::from_table(&Table::parse(doc).unwrap())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(key), "`{doc}` must name `{key}`: {err}");
+        }
+        // zero per-action costs are legal (a lower-bound what-if table)
+        let t = Table::parse("[energy]\nenabled = true\nmac_pj = 0\nstatic_watts = 0").unwrap();
+        assert!(SimConfig::from_table(&t).is_ok());
     }
 
     #[test]

@@ -81,6 +81,7 @@ pub fn tpuv6e_dlrm_small() -> SimConfig {
         serving: ServingConfig::default(),
         fleet: FleetConfig::default(),
         faults: FaultsConfig::default(),
+        energy: EnergyConfig::default(),
         threads: super::default_threads(),
         seed: 0xE05_1337,
     }

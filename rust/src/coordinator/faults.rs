@@ -10,7 +10,7 @@
 //!   `crash_at_ms`/`crash_replica` schedule. A crash voids the
 //!   in-flight batch (its work is lost, not charged) and drops the
 //!   queue; the replica returns `mttr_ms` later as a **cold restart**:
-//!   its [`ServingSim`] warmth is discarded and it re-pays
+//!   its `ServingSim` warmth is discarded and it re-pays
 //!   `fleet.warmup_ms` plus the `refill_ms` cache-refill penalty
 //!   before accepting again;
 //! * **slowdown episodes** — per-replica exponential arrivals of
@@ -21,7 +21,7 @@
 //!   `[topology]` inter tier runs `link_degrade_factor` times slower: a
 //!   dispatched batch pays `(factor - 1)` extra copies of its
 //!   inter-node exchange seconds as exposed wall time (a first-order
-//!   model over [`BatchStep::inter_secs`]).
+//!   model over `BatchStep::inter_secs`).
 //!
 //! On top sits the client-side recovery machinery:
 //!
@@ -47,10 +47,12 @@
 //! order except the core stepping, which reuses the fleet loop's
 //! [`parallel_map_mut`](crate::parallel::parallel_map_mut) plan.
 
-use crate::config::{FaultsConfig, SimConfig};
-use crate::coordinator::fleet::{pick_replica, FleetBatch, FleetReport, ReplicaStats, ScaleEvent};
+use crate::config::{AutoscalePolicy, FaultsConfig, SimConfig};
+use crate::coordinator::fleet::{
+    pick_replica, FleetBatch, FleetEnergy, FleetReport, ReplicaStats, ScaleEvent,
+};
 use crate::coordinator::serving::{
-    policy_dispatch_parts, BatchStep, LatencyStats, RequestLatency, ServingSim,
+    policy_dispatch_parts, BatchStep, LatencyStats, RequestLatency, ServingEnergy, ServingSim,
 };
 use crate::stats::{MemCounts, OpCounts};
 use crate::testutil::SplitMix64;
@@ -145,6 +147,9 @@ struct PendingBatch {
     queued_after: usize,
     mem: MemCounts,
     ops: OpCounts,
+    /// Per-component energy (`[energy] enabled` only) — held with the
+    /// batch so a crash voids the charge along with the work.
+    energy: Option<crate::energy::EnergyReport>,
 }
 
 /// One replica's live state inside the fault-aware event loop.
@@ -182,6 +187,12 @@ struct FRep<'a> {
     batches: u64,
     busy_secs: f64,
     total_cycles: u64,
+    /// Accumulated per-component energy over *completed* batches
+    /// (`[energy] enabled` only; crash-voided batches never land here).
+    energy: Option<crate::energy::EnergyReport>,
+    /// Intrinsic batch seconds of completed batches — the window their
+    /// static energy already covers (see the fleet loop's twin field).
+    energy_busy_secs: f64,
 }
 
 impl<'a> FRep<'a> {
@@ -235,6 +246,8 @@ impl<'a> FRep<'a> {
             batches: 0,
             busy_secs: 0.0,
             total_cycles: 0,
+            energy: None,
+            energy_busy_secs: 0.0,
         }
     }
 
@@ -393,6 +406,10 @@ pub(crate) fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
     let mut scale_events: Vec<ScaleEvent> = Vec::new();
     let mut next_eval = fl.scale_window_secs;
     let mut window_busy = 0.0f64;
+    // EWMA demand predictor for the energy autoscale policy (twin of
+    // the plain fleet loop's)
+    let mut pred_busy = 0.0f64;
+    let mut windows_seen = 0u64;
 
     let refill = |issued: &mut u64, arrivals: &mut ArrivalProcess| -> Option<(u64, f64)> {
         if *issued >= s.requests as u64 {
@@ -427,6 +444,10 @@ pub(crate) fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
             total_cycles += b.cycles;
             mem.add(&b.mem);
             ops.add(&b.ops);
+            if let Some(e) = &b.energy {
+                r.energy.get_or_insert_with(Default::default).add(e);
+                r.energy_busy_secs += b.intrinsic_secs;
+            }
             per_batch.push(FleetBatch {
                 replica: i,
                 dispatch_secs: b.dispatch_secs,
@@ -616,8 +637,18 @@ pub(crate) fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
         while fl.autoscale && next_eval <= clock {
             let accepting = reps.iter().filter(|r| r.active && !r.draining && r.up).count();
             let util = window_busy / (fl.scale_window_secs * accepting.max(1) as f64);
+            pred_busy = if windows_seen == 0 {
+                window_busy
+            } else {
+                0.5 * pred_busy + 0.5 * window_busy
+            };
+            windows_seen += 1;
             window_busy = 0.0;
-            if util > fl.scale_up_util && accepting < fl.max_active() {
+
+            let wake_one = |reps: &mut Vec<FRep>,
+                            scale_events: &mut Vec<ScaleEvent>,
+                            accepting: usize,
+                            util: f64| {
                 if let Some(i) = reps.iter().position(|r| !r.active) {
                     let r = &mut reps[i];
                     r.active = true;
@@ -631,6 +662,7 @@ pub(crate) fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
                         active_after: accepting + 1,
                         utilization: util,
                     });
+                    true
                 } else if let Some(i) = reps.iter().position(|r| r.active && r.draining) {
                     reps[i].draining = false;
                     scale_events.push(ScaleEvent {
@@ -640,8 +672,15 @@ pub(crate) fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
                         active_after: accepting + 1,
                         utilization: util,
                     });
+                    true
+                } else {
+                    false
                 }
-            } else if util < fl.scale_down_util && accepting > fl.min_replicas {
+            };
+            let drain_one = |reps: &mut Vec<FRep>,
+                            scale_events: &mut Vec<ScaleEvent>,
+                            accepting: usize,
+                            util: f64| {
                 if let Some(i) = reps.iter().rposition(|r| r.active && !r.draining && r.up) {
                     reps[i].draining = true;
                     scale_events.push(ScaleEvent {
@@ -651,6 +690,38 @@ pub(crate) fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
                         active_after: accepting - 1,
                         utilization: util,
                     });
+                    true
+                } else {
+                    false
+                }
+            };
+
+            match fl.autoscale_policy {
+                AutoscalePolicy::Utilization => {
+                    if util > fl.scale_up_util && accepting < fl.max_active() {
+                        wake_one(&mut reps, &mut scale_events, accepting, util);
+                    } else if util < fl.scale_down_util && accepting > fl.min_replicas {
+                        drain_one(&mut reps, &mut scale_events, accepting, util);
+                    }
+                }
+                AutoscalePolicy::Energy => {
+                    // power-proportional sizing, twin of the plain fleet
+                    // loop's: jump to the fewest replicas absorbing the
+                    // predicted demand at `scale_up_util` headroom
+                    let demand = pred_busy / fl.scale_window_secs;
+                    let target = ((demand / fl.scale_up_util).ceil() as usize)
+                        .clamp(fl.min_replicas, fl.max_active());
+                    let mut active_now = accepting;
+                    while active_now < target
+                        && wake_one(&mut reps, &mut scale_events, active_now, util)
+                    {
+                        active_now += 1;
+                    }
+                    while active_now > target
+                        && drain_one(&mut reps, &mut scale_events, active_now, util)
+                    {
+                        active_now -= 1;
+                    }
                 }
             }
             next_eval += fl.scale_window_secs;
@@ -890,6 +961,7 @@ pub(crate) fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
                     queued_after: r.queue.len(),
                     mem: step.mem,
                     ops: step.ops,
+                    energy: step.energy,
                 });
                 r.busy_until = complete;
                 window_busy += eff;
@@ -1001,6 +1073,32 @@ pub(crate) fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
         }
     }
     let served = per_request.len() as u64;
+    let energy = if cfg.energy.enabled {
+        let watts = cfg.energy.static_watts;
+        let mut components = crate::energy::EnergyReport::default();
+        let mut idle_secs = 0.0f64;
+        let mut per_replica_j = Vec::with_capacity(reps.len());
+        for r in &reps {
+            let comp = r.energy.unwrap_or_default();
+            components.add(&comp);
+            // time a replica was powered but not computing — warmup,
+            // drain, downtime-adjacent stretches — burns static only
+            let idle = (r.active_secs - r.energy_busy_secs).max(0.0);
+            idle_secs += idle;
+            per_replica_j.push(comp.total_j() + watts * idle);
+        }
+        let rolled = ServingEnergy::roll_up(components, watts, idle_secs, makespan_secs, served);
+        Some(FleetEnergy {
+            components: rolled.components,
+            idle_static_j: rolled.idle_static_j,
+            total_j: rolled.total_j,
+            joules_per_request: rolled.joules_per_request,
+            avg_power_w: rolled.avg_power_w,
+            per_replica_j,
+        })
+    } else {
+        None
+    };
     let summary = FaultSummary {
         availability: if issued > 0 { served as f64 / issued as f64 } else { 0.0 },
         crashes,
@@ -1043,6 +1141,7 @@ pub(crate) fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
         per_batch,
         per_request,
         faults: Some(summary),
+        energy,
     })
 }
 
@@ -1138,5 +1237,41 @@ mod tests {
         assert_conserves(&r);
         assert_eq!((f.crashes, f.failed, f.hedged), (0, 0, 0));
         assert_eq!(r.served, 120);
+    }
+
+    #[test]
+    fn fault_loop_reports_energy_only_when_enabled() {
+        let mut cfg = small_cfg();
+        cfg.faults.crash_at_secs = vec![1e-4];
+        cfg.faults.crash_replica = vec![0];
+        cfg.faults.mttr_secs = 5e-3;
+        let blind = fleet::simulate(&cfg).unwrap();
+        assert!(blind.energy.is_none(), "energy stays absent until [energy] enables it");
+
+        cfg.energy.enabled = true;
+        let r = fleet::simulate(&cfg).unwrap();
+        assert_conserves(&r);
+        let e = r.energy.as_ref().expect("enabled run attaches fleet energy");
+        assert_eq!(e.per_replica_j.len(), cfg.fleet.replicas);
+        let per_replica_sum: f64 = e.per_replica_j.iter().sum();
+        assert!(
+            (per_replica_sum - e.total_j).abs() <= 1e-9 * e.total_j.max(1.0),
+            "per-replica joules partition the fleet total: {per_replica_sum} vs {}",
+            e.total_j
+        );
+        assert!(
+            (e.components.total_j() + e.idle_static_j - e.total_j).abs()
+                <= 1e-9 * e.total_j.max(1.0)
+        );
+        assert!(e.total_j > 0.0 && e.joules_per_request > 0.0 && e.avg_power_w > 0.0);
+        assert!(
+            (e.joules_per_request - e.total_j / r.served as f64).abs() <= 1e-12 * e.total_j,
+            "joules/request divides total energy by served requests"
+        );
+        assert_eq!(r.cost_per_request(), e.joules_per_request);
+        // the crash voids in-flight work: both runs serve the same
+        // requests, so the energy channel never perturbs the schedule
+        assert_eq!(r.per_batch, blind.per_batch);
+        assert_eq!(r.served, blind.served);
     }
 }

@@ -6,7 +6,7 @@
 //! *datacenter* serving millions of users. This module scales the same
 //! discrete-event model out (the multi-chip/pod serving axis NeuSim
 //! frames, PAPERS.md): each replica is an independent
-//! [`ServingSim`] — its own persistent variant cores, bounded queue,
+//! `ServingSim` — its own persistent variant cores, bounded queue,
 //! and batching policy, optionally a full multi-node `[topology]` pod —
 //! and a global event loop routes every arrival to one replica:
 //!
@@ -43,10 +43,10 @@
 //! config default) reproduces [`super::serving::simulate`] exactly —
 //! request for request, batch for batch (tested).
 
-use crate::config::{RouterPolicy, SimConfig};
+use crate::config::{AutoscalePolicy, RouterPolicy, SimConfig};
 use crate::coordinator::faults::FaultSummary;
 use crate::coordinator::serving::{policy_dispatch_time, LatencyStats, RequestLatency};
-use crate::coordinator::serving::ServingSim;
+use crate::coordinator::serving::{ServingEnergy, ServingSim};
 use crate::stats::{MemCounts, OpCounts};
 use crate::testutil::SplitMix64;
 use crate::trace::ArrivalProcess;
@@ -106,6 +106,33 @@ pub struct ScaleEvent {
     pub utilization: f64,
 }
 
+/// Fleet-level energy rollup, present only with `[energy] enabled`
+/// (see [`crate::energy`]): the fleet-wide component breakdown, the
+/// open-loop rollups, and each replica's total joules. Per replica,
+/// static energy covers its full active time — batch compute is charged
+/// inside `components.static_j` (intrinsic batch seconds), the rest of
+/// its activation as idle static — so a replica parked behind the
+/// autoscaler's warmup window burns static-only energy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetEnergy {
+    /// Per-component joules over every dispatched batch, fleet-wide.
+    pub components: crate::energy::EnergyReport,
+    /// Static joules over non-computing active replica time, summed
+    /// across replicas (warmup, drains, and queue-empty gaps).
+    pub idle_static_j: f64,
+    /// `components.total_j() + idle_static_j`.
+    pub total_j: f64,
+    /// `total_j / served` — the fleet's joules per served request (0
+    /// when nothing was served). Also what [`FleetReport::cost_per_request`]
+    /// reports while energy is enabled.
+    pub joules_per_request: f64,
+    /// `total_j / makespan_secs` (0 for an empty makespan).
+    pub avg_power_w: f64,
+    /// Each provisioned replica's total joules (dynamic + static over
+    /// its active time), ascending replica index; sums to `total_j`.
+    pub per_replica_j: Vec<f64>,
+}
+
 /// Everything one fleet serving simulation measured.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
@@ -158,6 +185,10 @@ pub struct FleetReport {
     /// active (the JSON gains a `faults` block; with `None` the report
     /// bytes are identical to the fault-free fleet loop's).
     pub faults: Option<FaultSummary>,
+    /// Energy rollup — `Some` exactly when `[energy]` is enabled (the
+    /// JSON gains an `energy` block; with `None` the report bytes are
+    /// identical to the pre-energy fleet loop's).
+    pub energy: Option<FleetEnergy>,
     pub per_batch: Vec<FleetBatch>,
     /// Per-request records, in dispatch order (not serialized to JSON;
     /// tests and tooling consume them in-process).
@@ -213,9 +244,14 @@ impl FleetReport {
         }
     }
 
-    /// Active replica-seconds per served request — the "what does this
-    /// traffic cost to serve" number autoscaling tries to shrink.
+    /// The "what does this traffic cost to serve" number autoscaling
+    /// tries to shrink. With `[energy]` enabled this is the fleet's
+    /// joules per served request; otherwise it falls back to the
+    /// energy-blind proxy, active replica-seconds per served request.
     pub fn cost_per_request(&self) -> f64 {
+        if let Some(e) = &self.energy {
+            return e.joules_per_request;
+        }
         let active: f64 = self.per_replica.iter().map(|r| r.active_secs).sum();
         if self.served > 0 {
             active / self.served as f64
@@ -250,6 +286,12 @@ struct Replica<'a> {
     batches: u64,
     busy_secs: f64,
     total_cycles: u64,
+    /// Accumulated per-component energy (`[energy] enabled` only).
+    energy: Option<crate::energy::EnergyReport>,
+    /// Intrinsic (pre-straggler) batch seconds — exactly the window
+    /// `estimate_batch` already charged static energy over, so idle
+    /// static picks up the rest of the replica's active time.
+    energy_busy_secs: f64,
 }
 
 impl<'a> Replica<'a> {
@@ -269,6 +311,8 @@ impl<'a> Replica<'a> {
             batches: 0,
             busy_secs: 0.0,
             total_cycles: 0,
+            energy: None,
+            energy_busy_secs: 0.0,
         }
     }
 
@@ -375,6 +419,10 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
     let mut scale_events: Vec<ScaleEvent> = Vec::new();
     let mut next_eval = fl.scale_window_secs;
     let mut window_busy = 0.0f64;
+    // EWMA of per-window committed compute, the energy policy's demand
+    // predictor (seeded by the first window's observation)
+    let mut pred_busy = 0.0f64;
+    let mut windows_seen = 0u64;
 
     let refill = |issued: &mut u64, arrivals: &mut ArrivalProcess| -> Option<(u64, f64)> {
         if *issued >= s.requests as u64 {
@@ -393,10 +441,20 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
         while fl.autoscale && next_eval <= clock {
             let accepting = replicas.iter().filter(|r| r.active && !r.draining).count();
             let util = window_busy / (fl.scale_window_secs * accepting.max(1) as f64);
+            pred_busy = if windows_seen == 0 {
+                window_busy
+            } else {
+                0.5 * pred_busy + 0.5 * window_busy
+            };
+            windows_seen += 1;
             window_busy = 0.0;
-            if util > fl.scale_up_util && accepting < fl.max_active() {
-                // prefer waking a cold replica; otherwise cancel the
-                // newest drain (it is still warm, no penalty)
+
+            // wake a cold replica — or, cheaper, cancel the newest
+            // drain (it is still warm, no warmup penalty)
+            let wake_one = |replicas: &mut Vec<Replica>,
+                            scale_events: &mut Vec<ScaleEvent>,
+                            accepting: usize,
+                            util: f64| {
                 if let Some(i) = replicas.iter().position(|r| !r.active) {
                     let r = &mut replicas[i];
                     r.active = true;
@@ -410,6 +468,7 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
                         active_after: accepting + 1,
                         utilization: util,
                     });
+                    true
                 } else if let Some(i) = replicas.iter().position(|r| r.active && r.draining) {
                     replicas[i].draining = false;
                     scale_events.push(ScaleEvent {
@@ -419,10 +478,17 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
                         active_after: accepting + 1,
                         utilization: util,
                     });
+                    true
+                } else {
+                    false
                 }
-            } else if util < fl.scale_down_util && accepting > fl.min_replicas {
-                // drain the highest-index accepting replica: it keeps
-                // serving its queue but receives nothing new
+            };
+            // drain the highest-index accepting replica: it keeps
+            // serving its queue but receives nothing new
+            let drain_one = |replicas: &mut Vec<Replica>,
+                            scale_events: &mut Vec<ScaleEvent>,
+                            accepting: usize,
+                            util: f64| {
                 if let Some(i) = replicas.iter().rposition(|r| r.active && !r.draining) {
                     replicas[i].draining = true;
                     scale_events.push(ScaleEvent {
@@ -432,6 +498,43 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
                         active_after: accepting - 1,
                         utilization: util,
                     });
+                    true
+                } else {
+                    false
+                }
+            };
+
+            match fl.autoscale_policy {
+                AutoscalePolicy::Utilization => {
+                    if util > fl.scale_up_util && accepting < fl.max_active() {
+                        wake_one(&mut replicas, &mut scale_events, accepting, util);
+                    } else if util < fl.scale_down_util && accepting > fl.min_replicas {
+                        drain_one(&mut replicas, &mut scale_events, accepting, util);
+                    }
+                }
+                AutoscalePolicy::Energy => {
+                    // Energy-proportional sizing: every accepting replica
+                    // draws static power whether busy or idle, so total
+                    // predicted power is minimized by the *fewest*
+                    // replicas that absorb the predicted demand at
+                    // `scale_up_util` headroom. Unlike the utilization
+                    // policy's one-step-per-window hysteresis, this jumps
+                    // straight to the target — several ScaleEvents can
+                    // share one window boundary.
+                    let demand = pred_busy / fl.scale_window_secs;
+                    let target = ((demand / fl.scale_up_util).ceil() as usize)
+                        .clamp(fl.min_replicas, fl.max_active());
+                    let mut active_now = accepting;
+                    while active_now < target
+                        && wake_one(&mut replicas, &mut scale_events, active_now, util)
+                    {
+                        active_now += 1;
+                    }
+                    while active_now > target
+                        && drain_one(&mut replicas, &mut scale_events, active_now, util)
+                    {
+                        active_now -= 1;
+                    }
                 }
             }
             next_eval += fl.scale_window_secs;
@@ -511,21 +614,28 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
                 .collect();
             let stepped = crate::parallel::parallel_map_mut(cfg.threads, &mut jobs, |job| {
                 let (_, _, variant, r) = job;
-                Ok(r.sim.core_for(*variant)?.step())
+                Ok(r.sim.core_for(*variant)?.step_detail())
             })?;
-            for ((i, n, variant, r), (cycles, compute_secs, bmem, bops)) in
-                jobs.iter_mut().zip(stepped)
-            {
+            for ((i, n, variant, r), step) in jobs.iter_mut().zip(stepped) {
                 let (i, n, variant) = (*i, *n, *variant);
+                let cycles = step.cycles;
+                if let Some(e) = &step.energy {
+                    r.energy.get_or_insert_with(Default::default).add(e);
+                    // static inside `e` covers exactly these intrinsic
+                    // seconds; the straggler's stretched wall time is
+                    // charged as idle static with the rest of the
+                    // replica's active time
+                    r.energy_busy_secs += step.compute_secs;
+                }
                 // Degraded-replica ("straggler") model: the LAST
                 // provisioned replica runs at a slower effective clock
                 // — same cycles of intrinsic work, `straggler_factor`
                 // times the wall seconds. Cycle counters stay unscaled
                 // so cycle conservation holds fleet-wide.
                 let compute_secs = if i == fl.replicas.max(1) - 1 {
-                    compute_secs * fl.straggler_factor
+                    step.compute_secs * fl.straggler_factor
                 } else {
-                    compute_secs
+                    step.compute_secs
                 };
                 let complete = clock + compute_secs;
                 for _ in 0..n {
@@ -561,8 +671,8 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
                 busy_secs += compute_secs;
                 total_cycles += cycles;
                 window_busy += compute_secs;
-                mem.add(&bmem);
-                ops.add(&bops);
+                mem.add(&step.mem);
+                ops.add(&step.ops);
             }
             continue;
         }
@@ -626,6 +736,31 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
     let queue_samples: Vec<f64> = per_request.iter().map(|q| q.queue_secs).collect();
     let compute_samples: Vec<f64> = per_request.iter().map(|q| q.compute_secs).collect();
     let total_samples: Vec<f64> = per_request.iter().map(|q| q.total_secs).collect();
+    let served = per_request.len() as u64;
+    let energy = if cfg.energy.enabled {
+        let watts = cfg.energy.static_watts;
+        let mut components = crate::energy::EnergyReport::default();
+        let mut idle_secs = 0.0f64;
+        let mut per_replica_j = Vec::with_capacity(replicas.len());
+        for r in &replicas {
+            let comp = r.energy.unwrap_or_default();
+            components.add(&comp);
+            let idle = (r.active_secs - r.energy_busy_secs).max(0.0);
+            idle_secs += idle;
+            per_replica_j.push(comp.total_j() + watts * idle);
+        }
+        let rolled = ServingEnergy::roll_up(components, watts, idle_secs, makespan_secs, served);
+        Some(FleetEnergy {
+            components: rolled.components,
+            idle_static_j: rolled.idle_static_j,
+            total_j: rolled.total_j,
+            joules_per_request: rolled.joules_per_request,
+            avg_power_w: rolled.avg_power_w,
+            per_replica_j,
+        })
+    } else {
+        None
+    };
     Ok(FleetReport {
         platform: cfg.hardware.name.clone(),
         router: fl.router.name().to_string(),
@@ -634,7 +769,7 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
         arrival_rate: s.arrival_rate,
         replicas: fl.replicas,
         offered: issued,
-        served: per_request.len() as u64,
+        served,
         dropped,
         shed,
         slo_secs: fl.slo_secs,
@@ -651,6 +786,7 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<FleetReport> {
         per_replica,
         scale_events,
         faults: None,
+        energy,
         per_batch,
         per_request,
     })
@@ -933,6 +1069,98 @@ mod tests {
             r.per_replica[0].total_cycles,
             r.per_replica[1].total_cycles
         );
+    }
+
+    #[test]
+    fn fleet_energy_rolls_up_per_replica_and_folds_into_cost() {
+        let mut cfg = small_cfg();
+        cfg.fleet.replicas = 4;
+        cfg.serving.requests = 200;
+        let mu = cfg.serving.max_batch as f64 / probe_batch_secs(&cfg);
+        cfg.serving.arrival_rate = 2.5 * mu;
+
+        let blind = simulate(&cfg).unwrap();
+        assert!(blind.energy.is_none(), "[energy] absent must not add report fields");
+
+        cfg.energy.enabled = true;
+        let r = simulate(&cfg).unwrap();
+        let e = r.energy.as_ref().expect("[energy] enabled fills the rollup");
+        assert_eq!(e.per_replica_j.len(), 4, "one entry per provisioned replica");
+        // per-replica joules partition the fleet total exactly
+        let sum: f64 = e.per_replica_j.iter().sum();
+        assert!(
+            (sum - e.total_j).abs() <= 1e-9 * e.total_j,
+            "per-replica sum {sum} vs total {}",
+            e.total_j
+        );
+        assert!((e.total_j - (e.components.total_j() + e.idle_static_j)).abs() < 1e-12);
+        assert!(e.joules_per_request > 0.0);
+        assert_eq!(r.cost_per_request(), e.joules_per_request, "cost folds to joules");
+        // energy must not perturb the simulated schedule itself
+        assert_eq!(r.per_batch, blind.per_batch);
+        assert_eq!(r.per_request, blind.per_request);
+    }
+
+    #[test]
+    fn energy_autoscale_policy_diverges_from_utilization_policy() {
+        let mut cfg = small_cfg();
+        cfg.fleet.replicas = 3;
+        cfg.fleet.autoscale = true;
+        cfg.fleet.min_replicas = 1;
+        cfg.energy.enabled = true;
+        // the bursty up/down regime from the utilization-policy test:
+        // bursts force scale-up, deep valleys force scale-down
+        let s_full = probe_batch_secs(&cfg);
+        let mu = cfg.serving.max_batch as f64 / s_full;
+        cfg.fleet.scale_window_secs = 2.0 * s_full;
+        cfg.fleet.warmup_secs = 0.0;
+        cfg.fleet.scale_up_util = 0.5;
+        cfg.fleet.scale_down_util = 0.25;
+        cfg.serving.arrival = crate::config::ArrivalKind::Bursty;
+        cfg.serving.arrival_rate = 0.5 * mu;
+        cfg.serving.burst_factor = 16.0;
+        cfg.serving.burst_on_secs = 2.0 * s_full;
+        cfg.serving.burst_off_secs = 30.0 * s_full;
+        cfg.serving.requests = 600;
+
+        let util = simulate(&cfg).unwrap();
+        cfg.fleet.autoscale_policy = AutoscalePolicy::Energy;
+        let energy = simulate(&cfg).unwrap();
+        assert_conserves(&energy);
+        assert_eq!(energy.served, 600);
+        let ups = energy.scale_events.iter().filter(|e| e.action == "up").count();
+        let downs = energy.scale_events.iter().filter(|e| e.action == "down").count();
+        assert!(ups > 0, "bursts must scale up under the energy policy too");
+        assert!(downs > 0, "valleys must drain under the energy policy");
+        assert_ne!(
+            energy.scale_events, util.scale_events,
+            "the power-proportional target must produce a distinct decision log"
+        );
+        // both runs price their energy; the rollup stays consistent
+        let e = energy.energy.as_ref().unwrap();
+        assert!((e.avg_power_w - e.total_j / energy.makespan_secs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_policy_is_deterministic_across_host_threads() {
+        let mut cfg = small_cfg();
+        cfg.fleet.replicas = 4;
+        cfg.fleet.autoscale = true;
+        cfg.fleet.autoscale_policy = AutoscalePolicy::Energy;
+        cfg.energy.enabled = true;
+        let s_full = probe_batch_secs(&cfg);
+        cfg.fleet.scale_window_secs = 2.0 * s_full;
+        cfg.serving.requests = 160;
+        cfg.serving.arrival_rate = 1_500_000.0;
+        cfg.threads = 1;
+        let base = simulate(&cfg).unwrap();
+        for threads in [2usize, 8] {
+            cfg.threads = threads;
+            let r = simulate(&cfg).unwrap();
+            assert_eq!(r.per_batch, base.per_batch, "threads = {threads}");
+            assert_eq!(r.scale_events, base.scale_events, "threads = {threads}");
+            assert_eq!(r.energy, base.energy, "threads = {threads}");
+        }
     }
 
     #[test]

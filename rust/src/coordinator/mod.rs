@@ -16,10 +16,17 @@
 //! policies, and tail-latency reporting — no functional execution, all
 //! timing in simulated NPU seconds from [`crate::engine::SimCore`].
 //! [`fleet`] scales it out: N replica serving loops behind a router
-//! with SLO admission control and a utilization-driven autoscaler.
+//! with SLO admission control and an autoscaler driven by utilization
+//! hysteresis or, with `[energy]` enabled, by predicted power draw.
 //! [`faults`] is fleet's fault-aware twin: deterministic crash /
 //! slowdown / link-degradation injection with retries, hedging, and
 //! health-aware failover, engaged only when `[faults]` is active.
+//!
+//! Both serving layers aggregate the opt-in per-batch energy channel
+//! (see [`crate::energy`]) into idle-aware rollups — joules per
+//! request, average power, per-replica attribution. How the three
+//! loops stack, and the byte-identity staircase between them, is
+//! diagrammed in `docs/ARCHITECTURE.md` at the repo root.
 
 pub mod faults;
 pub mod fleet;

@@ -8,7 +8,7 @@
 //! This module provides exactly that (the request-level layer MOSAIC
 //! and ONNXim build over validated batch models):
 //!
-//! * an [`ArrivalProcess`](crate::trace::ArrivalProcess) offers
+//! * an [`ArrivalProcess`] offers
 //!   `serving.requests` requests on the simulated clock;
 //! * a bounded queue holds them (overflow arrivals are *dropped* and
 //!   counted);
@@ -97,6 +97,54 @@ impl LatencyStats {
     }
 }
 
+/// Serving-level energy rollup, present only with `[energy] enabled`
+/// (see [`crate::energy`]): the per-component joules summed over every
+/// dispatched batch, plus the open-loop quantities a batch run cannot
+/// know — static energy burned while the queue sat empty, joules per
+/// served request, and average power over the simulated makespan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingEnergy {
+    /// Per-component joules over every dispatched batch (static charged
+    /// only while computing; idle time is `idle_static_j`).
+    pub components: crate::energy::EnergyReport,
+    /// Static joules while the server sat idle: `static_watts *
+    /// (makespan - busy)`. Together with `components.static_j` this
+    /// makes static energy cover the whole makespan.
+    pub idle_static_j: f64,
+    /// `components.total_j() + idle_static_j`.
+    pub total_j: f64,
+    /// `total_j / served` (0 when nothing was served).
+    pub joules_per_request: f64,
+    /// `total_j / makespan_secs` (0 for an empty makespan).
+    pub avg_power_w: f64,
+}
+
+impl ServingEnergy {
+    /// Roll accumulated per-batch components up to the serving level.
+    /// `idle_secs` is the simulated time static power burned outside
+    /// batch compute (single server: makespan - busy; fleet: summed
+    /// per-replica active - busy). Shared by the serving, fleet, and
+    /// fault loops so all three charge idle static energy and
+    /// per-request joules identically.
+    pub(crate) fn roll_up(
+        components: crate::energy::EnergyReport,
+        static_watts: f64,
+        idle_secs: f64,
+        makespan_secs: f64,
+        served: u64,
+    ) -> ServingEnergy {
+        let idle_static_j = static_watts * idle_secs.max(0.0);
+        let total_j = components.total_j() + idle_static_j;
+        ServingEnergy {
+            components,
+            idle_static_j,
+            total_j,
+            joules_per_request: if served > 0 { total_j / served as f64 } else { 0.0 },
+            avg_power_w: if makespan_secs > 0.0 { total_j / makespan_secs } else { 0.0 },
+        }
+    }
+}
+
 /// Everything one serving simulation measured.
 #[derive(Debug, Clone)]
 pub struct ServingReport {
@@ -138,6 +186,9 @@ pub struct ServingReport {
     /// tests and tooling consume them in-process).
     // eonsim-lint: allow(schema, reason = "in-process only by design: per-request rows would bloat the JSON report and serving_to_json tests assert their absence")
     pub per_request: Vec<RequestLatency>,
+    /// Energy rollup (`[energy] enabled` only; `None` keeps the
+    /// pre-energy report bytes).
+    pub energy: Option<ServingEnergy>,
 }
 
 impl ServingReport {
@@ -220,6 +271,7 @@ impl VariantCore {
             inter_secs: self.core.cycles_to_secs(r.cycles.exchange_inter),
             mem: r.mem,
             ops: r.ops,
+            energy: r.energy,
         }
     }
 }
@@ -236,6 +288,8 @@ pub(crate) struct BatchStep {
     pub(crate) inter_secs: f64,
     pub(crate) mem: MemCounts,
     pub(crate) ops: OpCounts,
+    /// Per-component energy for the step (`[energy] enabled` only).
+    pub(crate) energy: Option<crate::energy::EnergyReport>,
 }
 
 /// The discrete-event serving simulation (single simulated NPU pod,
@@ -343,6 +397,7 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<ServingReport> {
     let mut total_cycles = 0u64;
     let mut mem = MemCounts::default();
     let mut ops = OpCounts::default();
+    let mut energy_acc = cfg.energy.enabled.then(crate::energy::EnergyReport::default);
     let mut per_batch: Vec<ServedBatch> = Vec::new();
     let mut per_request: Vec<RequestLatency> = Vec::new();
 
@@ -406,12 +461,16 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<ServingReport> {
         clock = td;
         let n = queue.len().min(s.max_batch);
         let variant = sim.variant_for(n);
-        let (cycles, compute_secs, bmem, bops) = sim.core_for(variant)?.step();
+        let step = sim.core_for(variant)?.step_detail();
+        let (cycles, compute_secs) = (step.cycles, step.compute_secs);
         let complete = td + compute_secs;
         busy_secs += compute_secs;
         total_cycles += cycles;
-        mem.add(&bmem);
-        ops.add(&bops);
+        mem.add(&step.mem);
+        ops.add(&step.ops);
+        if let (Some(acc), Some(e)) = (energy_acc.as_mut(), step.energy.as_ref()) {
+            acc.add(e);
+        }
         for _ in 0..n {
             let (id, at) = queue.pop_front().expect("n <= queue.len()");
             per_request.push(RequestLatency {
@@ -439,6 +498,15 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<ServingReport> {
     let compute_samples: Vec<f64> = per_request.iter().map(|r| r.compute_secs).collect();
     let total_samples: Vec<f64> = per_request.iter().map(|r| r.total_secs).collect();
     let makespan_secs = per_batch.last().map(|b| b.complete_secs).unwrap_or(0.0);
+    let energy = energy_acc.map(|components| {
+        ServingEnergy::roll_up(
+            components,
+            cfg.energy.static_watts,
+            makespan_secs - busy_secs,
+            makespan_secs,
+            per_request.len() as u64,
+        )
+    });
     Ok(ServingReport {
         platform: cfg.hardware.name.clone(),
         policy: s.policy.name().to_string(),
@@ -458,6 +526,7 @@ pub fn simulate(cfg: &SimConfig) -> anyhow::Result<ServingReport> {
         ops,
         per_batch,
         per_request,
+        energy,
     })
 }
 
@@ -623,6 +692,56 @@ mod tests {
         assert_eq!(a.total_cycles, b.total_cycles);
         assert_eq!(a.per_batch, b.per_batch);
         assert_eq!(a.per_request, b.per_request);
+    }
+
+    #[test]
+    fn energy_absent_by_default_and_rolls_up_when_enabled() {
+        let r = simulate(&small_cfg()).unwrap();
+        assert!(r.energy.is_none(), "[energy] absent must not add report fields");
+
+        let mut cfg = small_cfg();
+        cfg.energy.enabled = true;
+        let r = simulate(&cfg).unwrap();
+        let e = r.energy.expect("[energy] enabled fills the rollup");
+        assert!(e.components.total_j() > 0.0);
+        assert!(e.components.dram_j > 0.0, "embedding traffic reaches DRAM");
+        // idle static covers exactly the non-busy part of the makespan
+        let want_idle = cfg.energy.static_watts * (r.makespan_secs - r.busy_secs).max(0.0);
+        assert!((e.idle_static_j - want_idle).abs() <= 1e-12 * want_idle.max(1.0));
+        assert!((e.total_j - (e.components.total_j() + e.idle_static_j)).abs() < 1e-15);
+        // busy static + idle static together span the makespan
+        let static_total = e.components.static_j + e.idle_static_j;
+        let want_static = cfg.energy.static_watts * r.makespan_secs;
+        assert!(
+            (static_total - want_static).abs() <= 1e-9 * want_static,
+            "static {static_total} vs makespan-derived {want_static}"
+        );
+        assert!((e.joules_per_request - e.total_j / r.served as f64).abs() < 1e-15);
+        assert!((e.avg_power_w - e.total_j / r.makespan_secs).abs() < 1e-12);
+        // average power can never drop below the static floor
+        assert!(e.avg_power_w >= cfg.energy.static_watts - 1e-9);
+    }
+
+    #[test]
+    fn energy_rollup_is_deterministic() {
+        let mut cfg = small_cfg();
+        cfg.energy.enabled = true;
+        let a = simulate(&cfg).unwrap();
+        let b = simulate(&cfg).unwrap();
+        assert_eq!(a.energy, b.energy);
+    }
+
+    #[test]
+    fn energy_roll_up_zero_guards_and_idle_clamp() {
+        // zero served / zero makespan must not leak NaN into the report
+        let zero = ServingEnergy::roll_up(crate::energy::EnergyReport::default(), 18.0, 0.0, 0.0, 0);
+        assert_eq!(zero.total_j, 0.0);
+        assert_eq!(zero.joules_per_request, 0.0);
+        assert_eq!(zero.avg_power_w, 0.0);
+        // numerical noise driving idle negative clamps to zero
+        let clamped =
+            ServingEnergy::roll_up(crate::energy::EnergyReport::default(), 18.0, -1e-18, 1.0, 1);
+        assert_eq!(clamped.idle_static_j, 0.0);
     }
 
     #[test]

@@ -8,11 +8,26 @@
 //! counts with the table. The default table uses published per-action
 //! estimates for a 7 nm-class accelerator (MAC and SRAM numbers in the
 //! Accelergy/Eyeriss lineage, HBM per-bit transfer energy from public
-//! HBM2e figures), scaled to the configured geometry.
+//! HBM2e figures, ICI per-byte costs in the on-package-SerDes vs
+//! cross-fabric range), scaled to the configured geometry.
+//!
+//! The module is the core of the energy observability layer
+//! (`docs/ARCHITECTURE.md` §Energy): [`estimate_batch`] prices one
+//! [`crate::stats::BatchResult`] into a per-component [`EnergyReport`]
+//! (SA MACs, VPU ops, SRAM reads/writes, DRAM line transfers, intra-/
+//! inter-node ICI bytes, static power × batch time), which
+//! `engine::SimCore::step_batch` attaches per batch when `[energy]` is
+//! enabled and the serving/fleet layers aggregate upward. [`annotate`]
+//! is the frozen legacy path used when `[energy]` is absent: it
+//! reproduces the original scalar `energy_joules` formula — including
+//! its float grouping and its deliberate omission of ICI traffic — so
+//! every pre-existing report stays byte-identical.
 
-use crate::stats::{MemCounts, OpCounts, SimReport};
+use crate::stats::{BatchResult, MemCounts, OpCounts, SimReport};
 
-/// Per-action energy table in picojoules.
+const PJ: f64 = 1e-12;
+
+/// Per-action energy table in picojoules (per-byte for the ICI tiers).
 #[derive(Debug, Clone)]
 pub struct EnergyTable {
     /// One systolic-array MAC (pJ).
@@ -25,6 +40,11 @@ pub struct EnergyTable {
     pub sram_write_pj: f64,
     /// One off-chip (HBM) line transfer (pJ).
     pub dram_access_pj: f64,
+    /// One intra-node ICI byte (pJ/B): on-package SerDes class.
+    pub ici_intra_pj_per_byte: f64,
+    /// One inter-node ICI byte (pJ/B): the node uplink / optical fabric,
+    /// an order of magnitude costlier per byte than the intra tier.
+    pub ici_inter_pj_per_byte: f64,
     /// Static leakage + clock power in watts (added as power * time).
     pub static_watts: f64,
 }
@@ -32,82 +52,164 @@ pub struct EnergyTable {
 impl Default for EnergyTable {
     fn default() -> Self {
         // 64 B line: SRAM ~0.08 pJ/bit read, HBM2e ~3.5 pJ/bit.
+        // ICI: ~1 pJ/bit on-package (8 pJ/B), ~20 pJ/bit across nodes.
         EnergyTable {
             mac_pj: 0.56,
             vpu_op_pj: 0.18,
             sram_read_pj: 41.0,
             sram_write_pj: 48.0,
             dram_access_pj: 1792.0,
+            ici_intra_pj_per_byte: 8.0,
+            ici_inter_pj_per_byte: 160.0,
             static_watts: 18.0,
         }
     }
 }
 
-/// Energy estimate breakdown in joules.
+/// Per-component energy breakdown in joules — the unit every layer of
+/// the observability stack speaks: one per batch
+/// (`BatchResult::energy`), summed into `SimReport::energy`, and folded
+/// with idle static energy into the serving/fleet energy blocks.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EnergyReport {
-    pub compute_j: f64,
-    pub onchip_j: f64,
-    pub offchip_j: f64,
+    /// Systolic-array MAC energy.
+    pub sa_j: f64,
+    /// VPU lane-operation energy.
+    pub vpu_j: f64,
+    /// On-chip SRAM read energy.
+    pub sram_read_j: f64,
+    /// On-chip SRAM write energy.
+    pub sram_write_j: f64,
+    /// Off-chip (HBM) line-transfer energy.
+    pub dram_j: f64,
+    /// Intra-node ICI exchange bytes.
+    pub ici_intra_j: f64,
+    /// Inter-node ICI exchange bytes (0 on flat topologies).
+    pub ici_inter_j: f64,
+    /// Static power × busy time (the batch's own execution window).
     pub static_j: f64,
 }
 
 impl EnergyReport {
+    /// Sum of every component.
     pub fn total_j(&self) -> f64 {
-        self.compute_j + self.onchip_j + self.offchip_j + self.static_j
+        self.sa_j
+            + self.vpu_j
+            + self.sram_read_j
+            + self.sram_write_j
+            + self.dram_j
+            + self.ici_intra_j
+            + self.ici_inter_j
+            + self.static_j
+    }
+
+    /// Everything except the static term.
+    pub fn dynamic_j(&self) -> f64 {
+        self.total_j() - self.static_j
+    }
+
+    /// Component-wise accumulation (per-batch → aggregate).
+    pub fn add(&mut self, other: &EnergyReport) {
+        self.sa_j += other.sa_j;
+        self.vpu_j += other.vpu_j;
+        self.sram_read_j += other.sram_read_j;
+        self.sram_write_j += other.sram_write_j;
+        self.dram_j += other.dram_j;
+        self.ici_intra_j += other.ici_intra_j;
+        self.ici_inter_j += other.ici_inter_j;
+        self.static_j += other.static_j;
     }
 }
 
-/// Estimate energy for aggregate counters + execution time.
+/// Price counters + exchange bytes + execution time into a
+/// per-component [`EnergyReport`].
+///
+/// Unlike the legacy scalar path, this charges ICI traffic: intra- and
+/// inter-node exchange bytes are billed at their per-tier pJ/byte (the
+/// fixed "ICI bytes are free" bug — a sharded run now reports strictly
+/// more energy than a single-device run with the same counters).
 pub fn estimate(
     table: &EnergyTable,
     mem: &MemCounts,
     ops: &OpCounts,
+    intra_bytes: u64,
+    inter_bytes: u64,
     exec_secs: f64,
 ) -> EnergyReport {
-    const PJ: f64 = 1e-12;
     EnergyReport {
-        compute_j: (ops.macs as f64 * table.mac_pj + ops.vpu_ops as f64 * table.vpu_op_pj) * PJ,
-        onchip_j: (mem.onchip_reads as f64 * table.sram_read_pj
-            + mem.onchip_writes as f64 * table.sram_write_pj)
-            * PJ,
-        offchip_j: (mem.offchip_total() as f64 * table.dram_access_pj) * PJ,
+        sa_j: ops.macs as f64 * table.mac_pj * PJ,
+        vpu_j: ops.vpu_ops as f64 * table.vpu_op_pj * PJ,
+        sram_read_j: mem.onchip_reads as f64 * table.sram_read_pj * PJ,
+        sram_write_j: mem.onchip_writes as f64 * table.sram_write_pj * PJ,
+        dram_j: mem.offchip_total() as f64 * table.dram_access_pj * PJ,
+        ici_intra_j: intra_bytes as f64 * table.ici_intra_pj_per_byte * PJ,
+        ici_inter_j: inter_bytes as f64 * table.ici_inter_pj_per_byte * PJ,
         static_j: table.static_watts * exec_secs,
     }
 }
 
-/// Estimate and attach total energy to a report.
-pub fn annotate(report: &mut SimReport, table: &EnergyTable) -> EnergyReport {
-    let e = estimate(
-        table,
-        &report.total_mem(),
-        &report.total_ops(),
-        report.exec_time_secs(),
-    );
-    report.energy_joules = e.total_j();
-    e
+/// Price one simulated batch: counters from the batch, exchange bytes
+/// split per tier from its per-device counters (PR 4 already tallies
+/// `inter_bytes` as the slice of `exchange_bytes` that crossed the node
+/// uplink), static power over the batch's own simulated seconds.
+pub fn estimate_batch(table: &EnergyTable, b: &BatchResult, batch_secs: f64) -> EnergyReport {
+    let mut intra_bytes = 0u64;
+    let mut inter_bytes = 0u64;
+    for d in &b.per_device {
+        intra_bytes += d.exchange_bytes.saturating_sub(d.inter_bytes);
+        inter_bytes += d.inter_bytes;
+    }
+    estimate(table, &b.mem, &b.ops, intra_bytes, inter_bytes, batch_secs)
+}
+
+/// Attach the *legacy* scalar total to a report and return it.
+///
+/// This is the `[energy]`-absent compatibility path: the expression
+/// below is the original PR-1 formula verbatim — same float grouping,
+/// same summation order, and (deliberately) no ICI term — because
+/// `energy_joules` is emitted with `{:e}` and a one-ulp change would
+/// alter report bytes. Enabled configs bypass this entirely and fill
+/// `energy_joules` from the per-component aggregate instead.
+pub fn annotate(report: &mut SimReport, table: &EnergyTable) -> f64 {
+    let mem = report.total_mem();
+    let ops = report.total_ops();
+    let compute_j =
+        (ops.macs as f64 * table.mac_pj + ops.vpu_ops as f64 * table.vpu_op_pj) * PJ;
+    let onchip_j = (mem.onchip_reads as f64 * table.sram_read_pj
+        + mem.onchip_writes as f64 * table.sram_write_pj)
+        * PJ;
+    let offchip_j = (mem.offchip_total() as f64 * table.dram_access_pj) * PJ;
+    let static_j = table.static_watts * report.exec_time_secs();
+    report.energy_joules = compute_j + onchip_j + offchip_j + static_j;
+    report.energy_joules
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stats::{CycleBreakdown, DeviceCounters};
+
+    fn zero_est(t: &EnergyTable, secs: f64) -> EnergyReport {
+        estimate(t, &MemCounts::default(), &OpCounts::default(), 0, 0, secs)
+    }
 
     #[test]
     fn zero_counts_only_static() {
         let t = EnergyTable::default();
-        let e = estimate(&t, &MemCounts::default(), &OpCounts::default(), 1.0);
-        assert_eq!(e.compute_j, 0.0);
-        assert_eq!(e.onchip_j, 0.0);
-        assert_eq!(e.offchip_j, 0.0);
+        let e = zero_est(&t, 1.0);
+        assert_eq!(e.dynamic_j(), 0.0);
         assert!((e.static_j - t.static_watts).abs() < 1e-12);
+        assert!((e.total_j() - t.static_watts).abs() < 1e-12);
     }
 
     #[test]
     fn offchip_dominates_per_access() {
         // The architectural argument for caches: one HBM access costs far
-        // more than one SRAM access.
+        // more than one SRAM access — and the inter-node tier costs far
+        // more per byte than the intra tier.
         let t = EnergyTable::default();
         assert!(t.dram_access_pj > 10.0 * t.sram_read_pj);
+        assert!(t.ici_inter_pj_per_byte > 10.0 * t.ici_intra_pj_per_byte);
     }
 
     #[test]
@@ -115,14 +217,123 @@ mod tests {
         let t = EnergyTable::default();
         let mem1 = MemCounts { offchip_reads: 100, ..Default::default() };
         let mem2 = MemCounts { offchip_reads: 200, ..Default::default() };
-        let e1 = estimate(&t, &mem1, &OpCounts::default(), 0.0);
-        let e2 = estimate(&t, &mem2, &OpCounts::default(), 0.0);
-        assert!((e2.offchip_j - 2.0 * e1.offchip_j).abs() < 1e-18);
+        let e1 = estimate(&t, &mem1, &OpCounts::default(), 0, 0, 0.0);
+        let e2 = estimate(&t, &mem2, &OpCounts::default(), 0, 0, 0.0);
+        assert!((e2.dram_j - 2.0 * e1.dram_j).abs() < 1e-18);
+        let x1 = estimate(&t, &MemCounts::default(), &OpCounts::default(), 50, 10, 0.0);
+        let x2 = estimate(&t, &MemCounts::default(), &OpCounts::default(), 100, 20, 0.0);
+        assert!((x2.ici_intra_j - 2.0 * x1.ici_intra_j).abs() < 1e-18);
+        assert!((x2.ici_inter_j - 2.0 * x1.ici_inter_j).abs() < 1e-18);
     }
 
     #[test]
     fn total_is_sum_of_parts() {
-        let e = EnergyReport { compute_j: 1.0, onchip_j: 2.0, offchip_j: 3.0, static_j: 4.0 };
-        assert_eq!(e.total_j(), 10.0);
+        let e = EnergyReport {
+            sa_j: 1.0,
+            vpu_j: 2.0,
+            sram_read_j: 3.0,
+            sram_write_j: 4.0,
+            dram_j: 5.0,
+            ici_intra_j: 6.0,
+            ici_inter_j: 7.0,
+            static_j: 8.0,
+        };
+        assert_eq!(e.total_j(), 36.0);
+        assert_eq!(e.dynamic_j(), 28.0);
+        let mut acc = e;
+        acc.add(&e);
+        assert_eq!(acc.total_j(), 72.0);
+    }
+
+    #[test]
+    fn exchange_bytes_are_charged_per_tier() {
+        // Regression for the "ICI bytes are free" bug: the same counters
+        // with exchange traffic must cost strictly more, and inter-node
+        // bytes more than the same volume intra-node.
+        let t = EnergyTable::default();
+        let base = zero_est(&t, 0.0);
+        let intra = estimate(&t, &MemCounts::default(), &OpCounts::default(), 1000, 0, 0.0);
+        let inter = estimate(&t, &MemCounts::default(), &OpCounts::default(), 0, 1000, 0.0);
+        assert_eq!(base.total_j(), 0.0);
+        assert!(intra.total_j() > 0.0);
+        assert!(inter.total_j() > intra.total_j());
+    }
+
+    #[test]
+    fn estimate_batch_splits_tiers_from_per_device_counters() {
+        let t = EnergyTable::default();
+        let b = BatchResult {
+            batch_index: 0,
+            cycles: CycleBreakdown::default(),
+            mem: MemCounts { offchip_reads: 10, ..Default::default() },
+            ops: OpCounts { macs: 100, ..Default::default() },
+            per_device: vec![
+                DeviceCounters {
+                    device: 0,
+                    exchange_bytes: 300,
+                    inter_bytes: 100,
+                    ..Default::default()
+                },
+                DeviceCounters {
+                    device: 1,
+                    exchange_bytes: 50,
+                    inter_bytes: 0,
+                    ..Default::default()
+                },
+            ],
+            energy: None,
+        };
+        let e = estimate_batch(&t, &b, 2.0);
+        let want = estimate(&t, &b.mem, &b.ops, 250, 100, 2.0);
+        assert_eq!(e, want);
+        assert!(e.ici_intra_j > 0.0 && e.ici_inter_j > 0.0);
+    }
+
+    #[test]
+    fn annotate_reproduces_legacy_scalar_and_ignores_ici() {
+        let t = EnergyTable::default();
+        let mut b = BatchResult {
+            batch_index: 0,
+            cycles: CycleBreakdown { embedding: 1000, ..Default::default() },
+            mem: MemCounts {
+                onchip_reads: 7,
+                onchip_writes: 3,
+                offchip_reads: 11,
+                offchip_writes: 2,
+                ..Default::default()
+            },
+            ops: OpCounts { macs: 1234, vpu_ops: 567, ..Default::default() },
+            per_device: Vec::new(),
+            energy: None,
+        };
+        let mut report = SimReport {
+            platform: "t".into(),
+            policy: "spm".into(),
+            batch_size: 1,
+            num_devices: 1,
+            nodes: 1,
+            freq_ghz: 1.0,
+            per_batch: vec![b.clone()],
+            energy_joules: 0.0,
+            energy: None,
+        };
+        let got = annotate(&mut report, &t);
+        const PJ: f64 = 1e-12;
+        let want = (1234.0 * t.mac_pj + 567.0 * t.vpu_op_pj) * PJ
+            + (7.0 * t.sram_read_pj + 3.0 * t.sram_write_pj) * PJ
+            + (13.0 * t.dram_access_pj) * PJ
+            + t.static_watts * report.exec_time_secs();
+        assert_eq!(got, want, "bit-exact legacy grouping");
+        assert_eq!(report.energy_joules, want);
+        // the legacy scalar deliberately never charges ICI bytes
+        b.per_device = vec![DeviceCounters {
+            device: 0,
+            exchange_bytes: 1 << 20,
+            inter_bytes: 1 << 10,
+            ..Default::default()
+        }];
+        let mut with_ici = report.clone();
+        with_ici.per_batch = vec![b];
+        assert_eq!(annotate(&mut with_ici, &t), want);
     }
 }

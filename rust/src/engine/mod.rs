@@ -32,7 +32,7 @@ pub mod matrix;
 
 use crate::compute::elementwise_cycles;
 use crate::config::{MnkLayer, OnchipPolicy, SimConfig};
-use crate::energy::{annotate, EnergyTable};
+use crate::energy::{annotate, estimate_batch, EnergyTable};
 use crate::mem::policy::pinning::{PinSet, Profile};
 use crate::sharding::replicate::HotRowReplicator;
 use crate::sharding::ShardedEmbeddingSim;
@@ -88,6 +88,9 @@ pub struct SimCore {
     source: Option<TraceSource>,
     /// Batches stepped so far (the next result's `batch_index`).
     steps: usize,
+    /// Per-action energy table when `[energy]` is enabled: every
+    /// stepped batch then carries its own component breakdown.
+    energy: Option<EnergyTable>,
 }
 
 impl SimCore {
@@ -189,6 +192,11 @@ impl SimCore {
             cursor: 0,
             scratch: BatchTrace { batch_index: 0, lookups: Vec::new() },
         };
+        let energy = if cfg.energy.enabled {
+            Some(cfg.energy.table())
+        } else {
+            None
+        };
         Ok(SimCore {
             cfg,
             emb_sim,
@@ -196,6 +204,7 @@ impl SimCore {
             top,
             source: Some(source),
             steps: 0,
+            energy,
         })
     }
 
@@ -231,6 +240,7 @@ impl SimCore {
             freq_ghz: self.cfg.hardware.freq_ghz,
             per_batch: Vec::new(),
             energy_joules: 0.0,
+            energy: None,
         }
     }
 
@@ -289,7 +299,7 @@ impl SimCore {
             exchange
         };
 
-        BatchResult {
+        let mut result = BatchResult {
             batch_index,
             cycles: CycleBreakdown {
                 bottom_mlp: bottom_r.cycles,
@@ -304,7 +314,13 @@ impl SimCore {
             mem,
             ops,
             per_device: emb_r.per_device,
+            energy: None,
+        };
+        if let Some(t) = &self.energy {
+            let batch_secs = cfg.hardware.cycles_to_secs(result.cycles.total());
+            result.energy = Some(estimate_batch(t, &result, batch_secs));
         }
+        result
     }
 }
 
@@ -341,7 +357,15 @@ impl Simulator {
         for _ in 0..self.cfg.workload.num_batches {
             report.per_batch.push(core.step_batch(source.next_trace()));
         }
-        annotate(&mut report, &self.energy_table);
+        if self.cfg.energy.enabled {
+            // per-component accounting: the aggregate is the sum of the
+            // per-batch breakdowns the core attached, and the scalar is
+            // its total (the legacy formula is bypassed entirely)
+            report.energy = report.total_energy();
+            report.energy_joules = report.energy.as_ref().map_or(0.0, |e| e.total_j());
+        } else {
+            annotate(&mut report, &self.energy_table);
+        }
         Ok(report)
     }
 }
@@ -467,6 +491,55 @@ mod tests {
             let lookups: u64 = b.per_device.iter().map(|d| d.ops.lookups).sum();
             assert_eq!(lookups, b.ops.lookups);
         }
+    }
+
+    // -------------------------------------------------------------- energy
+
+    #[test]
+    fn energy_enabled_fills_per_batch_and_aggregate() {
+        let mut cfg = small_cfg();
+        cfg.energy.enabled = true;
+        let report = Simulator::new(cfg).run().unwrap();
+        let agg = report.energy.expect("enabled run carries the component aggregate");
+        let mut sum = crate::energy::EnergyReport::default();
+        for b in &report.per_batch {
+            sum.add(b.energy.as_ref().expect("each batch carries its breakdown"));
+        }
+        assert_eq!(sum, agg, "aggregate is exactly the per-batch sum");
+        assert_eq!(report.energy_joules, agg.total_j());
+        assert!(agg.static_j > 0.0 && agg.dram_j > 0.0 && agg.sa_j > 0.0);
+    }
+
+    #[test]
+    fn energy_disabled_keeps_legacy_scalar_and_no_components() {
+        let report = Simulator::new(small_cfg()).run().unwrap();
+        assert!(report.energy.is_none(), "[energy] absent ⇒ no component block");
+        assert!(report.per_batch.iter().all(|b| b.energy.is_none()));
+        assert!(report.energy_joules > 0.0, "legacy scalar still annotated");
+    }
+
+    /// Regression for the "ICI bytes are free" bug: a sharded run must
+    /// report strictly more energy than its single-device counterpart —
+    /// the exchange traffic it pays is now charged per tier.
+    #[test]
+    fn sharded_run_charges_strictly_more_energy_than_single_device() {
+        let run_dev = |devices| {
+            let mut cfg = small_cfg();
+            cfg.energy.enabled = true;
+            cfg.workload.trace.alpha = 1.1;
+            cfg.sharding.devices = devices;
+            Simulator::new(cfg).run().unwrap().energy.unwrap()
+        };
+        let one = run_dev(1);
+        let four = run_dev(4);
+        assert_eq!(one.ici_intra_j + one.ici_inter_j, 0.0, "no exchange on one device");
+        assert!(four.ici_intra_j > 0.0, "sharded exchange bytes are charged");
+        assert!(
+            four.total_j() > one.total_j(),
+            "4-device {} J !> 1-device {} J",
+            four.total_j(),
+            one.total_j()
+        );
     }
 
     // ------------------------------------------------------- SimCore seam

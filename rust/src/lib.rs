@@ -18,9 +18,14 @@
 //! [`runtime`] loads and executes via PJRT — Python is never on the
 //! request path. [`coordinator`] serves batched inference requests,
 //! executing them functionally while [`engine`] simulates their timing.
+//! Cross-cutting layers ride on the same counters: [`energy`] charges
+//! per-component energy (opt-in, byte-preserving when off), and
+//! `coordinator::faults` injects deterministic failures into the fleet.
 //!
-//! See `DESIGN.md` for the system inventory and the per-figure experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! The module map and dataflow — trace → partitioner → engine →
+//! serving → fleet → writers, and where energy / faults / the invariant
+//! lint hook in — live in `docs/ARCHITECTURE.md` at the repo root;
+//! `EXPERIMENTS.md` holds paper-vs-measured results.
 
 pub mod bench;
 pub mod champsim;

@@ -11,7 +11,8 @@
 
 use eonsim::cli::Args;
 use eonsim::config::{
-    presets, ArrivalKind, BatchPolicyKind, OnchipPolicy, RouterPolicy, ShardStrategy, SimConfig,
+    presets, ArrivalKind, AutoscalePolicy, BatchPolicyKind, OnchipPolicy, RouterPolicy,
+    ShardStrategy, SimConfig,
 };
 use eonsim::coordinator::{fleet, serving, Coordinator, EngineTiming};
 use eonsim::engine::Simulator;
@@ -46,6 +47,9 @@ COMMANDS:
                --threads <n>          host worker threads for the per-device fan-out
                                       [available parallelism; 1 = fully serial;
                                        results are byte-identical for any n]
+               --energy               per-component energy accounting (SA / VPU /
+                                      SRAM / DRAM / ICI + static) in every report;
+                                      off by default, reports keep their old bytes
                --csv <file> / --json <file>   write reports
   validate   paper Fig. 3 validation vs the TPUv6e baseline
                --full                 full 32..2048 step-32 batch sweep
@@ -75,6 +79,9 @@ COMMANDS:
                                       after x ms in queue (0 = off) [0]
                --health-evict <x>     evict replicas whose EWMA health drops
                                       below x, probe to re-admit (0 = off) [0]
+               --autoscale-policy <p> utilization|energy  [utilization]
+                                      energy scales on predicted power draw and
+                                      requires --energy (or [energy] enabled)
                --csv <file> / --json <file>   write the serving report
                (plus the `run` workload/sharding flags, or --config with
                [serving] / [fleet] / [faults] sections; --replicas > 1,
@@ -234,6 +241,12 @@ fn apply_serving_flags(cfg: &mut SimConfig, args: &Args) -> anyhow::Result<()> {
     fa.backoff_secs = args.f64_flag("fault-backoff-ms", fa.backoff_secs * 1e3)? / 1e3;
     fa.hedge_secs = args.f64_flag("hedge-ms", fa.hedge_secs * 1e3)? / 1e3;
     fa.health_evict = args.f64_flag("health-evict", fa.health_evict)?;
+    if args.has("energy") {
+        cfg.energy.enabled = true;
+    }
+    if let Some(p) = args.flag("autoscale-policy") {
+        cfg.fleet.autoscale_policy = AutoscalePolicy::parse(p)?;
+    }
     Ok(())
 }
 
@@ -279,6 +292,19 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         println!("  hit rate      : {:.3}", m.hit_rate());
     }
     println!("  energy        : {:.3} mJ", report.energy_joules * 1e3);
+    if let Some(e) = &report.energy {
+        println!(
+            "  energy parts  : sa {:.3} + vpu {:.3} + sram {:.3} + dram {:.3} + \
+             ici {:.3} + static {:.3} = {:.3} mJ",
+            e.sa_j * 1e3,
+            e.vpu_j * 1e3,
+            (e.sram_read_j + e.sram_write_j) * 1e3,
+            e.dram_j * 1e3,
+            (e.ici_intra_j + e.ici_inter_j) * 1e3,
+            e.static_j * 1e3,
+            e.total_j() * 1e3
+        );
+    }
     println!("  host wall     : {host:.2} s");
     if report.num_devices > 1 {
         let exchange: u64 = report.per_batch.iter().map(|b| b.cycles.exchange).sum();
@@ -490,6 +516,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     row("queue", &report.queue);
     row("compute", &report.compute);
     row("total", &report.total);
+    if let Some(e) = &report.energy {
+        println!(
+            "  energy        : {:.3} mJ total ({:.3} mJ idle static), \
+             {:.3} mJ/request, {:.3} W avg",
+            e.total_j * 1e3,
+            e.idle_static_j * 1e3,
+            e.joules_per_request * 1e3,
+            e.avg_power_w
+        );
+    }
     println!("  host wall     : {host:.2} s");
     if let Some(path) = args.flag("csv") {
         std::fs::write(path, writer::serving_to_csv(&report))?;
@@ -545,10 +581,24 @@ fn cmd_serve_fleet(args: &Args, cfg: &SimConfig) -> anyhow::Result<()> {
         report.throughput_rps(),
         report.goodput_rps()
     );
-    println!(
-        "  cost          : {:.3} ms active replica-time per request",
-        report.cost_per_request() * 1e3
-    );
+    if let Some(e) = &report.energy {
+        println!(
+            "  energy        : {:.3} mJ fleet total ({:.3} mJ idle static), \
+             {:.3} W avg power",
+            e.total_j * 1e3,
+            e.idle_static_j * 1e3,
+            e.avg_power_w
+        );
+        println!(
+            "  cost          : {:.3} mJ per served request",
+            report.cost_per_request() * 1e3
+        );
+    } else {
+        println!(
+            "  cost          : {:.3} ms active replica-time per request",
+            report.cost_per_request() * 1e3
+        );
+    }
     let row = |name: &str, l: &serving::LatencyStats| {
         println!(
             "  {name:<13} : mean {:8.3}  p50 {:8.3}  p95 {:8.3}  p99 {:8.3}  max {:8.3}  ms",
@@ -563,9 +613,15 @@ fn cmd_serve_fleet(args: &Args, cfg: &SimConfig) -> anyhow::Result<()> {
     row("compute", &report.compute);
     row("total", &report.total);
     for r in &report.per_replica {
+        let energy_cell = report
+            .energy
+            .as_ref()
+            .and_then(|e| e.per_replica_j.get(r.replica))
+            .map(|j| format!(", {:.3} mJ", j * 1e3))
+            .unwrap_or_default();
         println!(
             "    replica {}: {:>6} served in {:>5} batches, busy {:8.3} ms, \
-             active {:8.3} ms, util {:.1}%",
+             active {:8.3} ms, util {:.1}%{energy_cell}",
             r.replica,
             r.served,
             r.batches,
@@ -719,8 +775,13 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         }
         let rows = eonsim::parallel::parallel_map_with(base.threads, &points, |(v, cfg)| {
             let r = serving::simulate(cfg)?;
+            let energy = r
+                .energy
+                .as_ref()
+                .map(|e| format!(",{:e},{:e}", e.joules_per_request, e.avg_power_w))
+                .unwrap_or_default();
             Ok(format!(
-                "{v},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{},{:.1}",
+                "{v},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{},{:.1}{energy}",
                 r.policy,
                 r.arrival,
                 r.total.p50 * 1e3,
@@ -734,7 +795,8 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         })?;
         println!(
             "arrival_rate,batch_policy,arrival,p50_ms,p95_ms,p99_ms,utilization,\
-             drop_rate,batches,throughput_rps"
+             drop_rate,batches,throughput_rps{}",
+            if base.energy.enabled { ",joules_per_request,avg_power_w" } else { "" }
         );
         for row in rows {
             println!("{row}");
@@ -757,8 +819,13 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         }
         let rows = eonsim::parallel::parallel_map_with(base.threads, &points, |(v, cfg)| {
             let r = fleet::simulate(cfg)?;
+            let energy = r
+                .energy
+                .as_ref()
+                .map(|e| format!(",{:e},{:e}", e.joules_per_request, e.avg_power_w))
+                .unwrap_or_default();
             Ok(format!(
-                "{v},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.6},{:.6},{},{:e}",
+                "{v},{},{},{:.4},{:.4},{:.4},{:.4},{:.1},{:.6},{:.6},{},{:e}{energy}",
                 r.router,
                 r.policy,
                 r.total.p50 * 1e3,
@@ -774,7 +841,8 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         })?;
         println!(
             "replicas,router,batch_policy,p50_ms,p95_ms,p99_ms,utilization,\
-             goodput_rps,drop_rate,shed_rate,batches,cost_per_request"
+             goodput_rps,drop_rate,shed_rate,batches,cost_per_request{}",
+            if base.energy.enabled { ",joules_per_request,avg_power_w" } else { "" }
         );
         for row in rows {
             println!("{row}");

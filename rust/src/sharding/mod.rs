@@ -37,6 +37,12 @@
 //! and the serial exchange (the defaults), results are bit-identical to
 //! the original table-sharded model; with one node (the default) the
 //! tiered accounting degenerates to exactly the flat model.
+//!
+//! The per-device and per-tier byte counters kept here (exchange bytes,
+//! uplink `inter_bytes`) also feed the opt-in energy model
+//! ([`crate::energy`]), which prices intra-node and uplink traffic at
+//! different pJ/byte rates. Where this module sits in the overall
+//! dataflow is mapped in `docs/ARCHITECTURE.md` at the repo root.
 
 pub mod replicate;
 pub mod topology;

@@ -3,6 +3,14 @@
 //! access ratio, and operation counts per memory and vector operation),
 //! plus CSV/JSON writers (no serde in the offline vendor set — both
 //! formats are emitted directly).
+//!
+//! Every public field of these report structs must reach both emitters
+//! in [`writer`] — the contract is machine-enforced by the repo's
+//! schema lint rule (see CONTRIBUTING.md). The opt-in per-batch /
+//! aggregate energy blocks ([`crate::energy::EnergyReport`]) ride on
+//! [`BatchResult`] and [`SimReport`] as `Option`s so that disabled
+//! configs keep their output byte-identical. The full report dataflow
+//! is mapped in `docs/ARCHITECTURE.md` at the repo root.
 
 pub mod writer;
 
@@ -154,6 +162,9 @@ pub struct BatchResult {
     /// Per-device embedding-stage split (one entry per device).
     // eonsim-lint: allow(schema, reason = "hierarchical payload flat CSV cannot express; emitted in full by the JSON writer (batch_json/device_json)")
     pub per_device: Vec<DeviceCounters>,
+    /// Per-component energy for this batch (`[energy] enabled` only;
+    /// None keeps the pre-energy report bytes).
+    pub energy: Option<crate::energy::EnergyReport>,
 }
 
 /// Overall simulation output: per-batch results + aggregates.
@@ -171,6 +182,10 @@ pub struct SimReport {
     pub per_batch: Vec<BatchResult>,
     /// Total energy estimate in joules (filled by the energy model).
     pub energy_joules: f64,
+    /// Per-component energy aggregate over all batches (`[energy]
+    /// enabled` only; None keeps the pre-energy report bytes). When
+    /// present, `energy_joules == energy.total_j()`.
+    pub energy: Option<crate::energy::EnergyReport>,
 }
 
 impl SimReport {
@@ -254,6 +269,24 @@ impl SimReport {
         out
     }
 
+    /// Aggregate the per-batch energy breakdowns component-wise (None
+    /// when energy accounting is disabled — no batch carries one).
+    pub fn total_energy(&self) -> Option<crate::energy::EnergyReport> {
+        let mut acc = crate::energy::EnergyReport::default();
+        let mut any = false;
+        for b in &self.per_batch {
+            if let Some(e) = &b.energy {
+                acc.add(e);
+                any = true;
+            }
+        }
+        if any {
+            Some(acc)
+        } else {
+            None
+        }
+    }
+
     /// Total bytes that crossed the inter-node fabric over all batches
     /// (0 on flat topologies and single-device runs).
     pub fn total_inter_node_bytes(&self) -> u64 {
@@ -293,6 +326,7 @@ mod tests {
             },
             ops: OpCounts { macs: 100, vpu_ops: 50, lookups: 20, replicated_hits: 0 },
             per_device: Vec::new(),
+            energy: None,
         }
     }
 
@@ -313,6 +347,7 @@ mod tests {
             freq_ghz: 1.0,
             per_batch: vec![batch(0, 100, 8, 2), batch(1, 200, 6, 4)],
             energy_joules: 0.0,
+            energy: None,
         };
         assert_eq!(report.total_cycles(), 122 + 222);
         let m = report.total_mem();
@@ -387,11 +422,31 @@ mod tests {
             freq_ghz: 1.0,
             per_batch: vec![b],
             energy_joules: 0.0,
+            energy: None,
         };
         // max 30 over mean 20
         assert!((report.imbalance_factor() - 1.5).abs() < 1e-12);
         // single-device (and empty) reports are balanced by definition
         assert_eq!(SimReport::default().imbalance_factor(), 1.0);
+    }
+
+    #[test]
+    fn total_energy_sums_per_batch_components() {
+        use crate::energy::EnergyReport;
+        let mut b0 = batch(0, 100, 0, 0);
+        b0.energy = Some(EnergyReport { sa_j: 1.0, dram_j: 2.0, ..Default::default() });
+        let mut b1 = batch(1, 100, 0, 0);
+        b1.energy = Some(EnergyReport { sa_j: 0.5, static_j: 4.0, ..Default::default() });
+        let mut report = SimReport { per_batch: vec![b0, b1], ..Default::default() };
+        let e = report.total_energy().expect("both batches carry energy");
+        assert_eq!(e.sa_j, 1.5);
+        assert_eq!(e.dram_j, 2.0);
+        assert_eq!(e.static_j, 4.0);
+        assert_eq!(e.total_j(), 7.5);
+        // disabled accounting leaves every batch at None
+        report.per_batch.iter_mut().for_each(|b| b.energy = None);
+        assert!(report.total_energy().is_none());
+        assert!(SimReport::default().total_energy().is_none());
     }
 
     #[test]
@@ -417,6 +472,7 @@ mod tests {
             freq_ghz: 1.0,
             per_batch: vec![b0, b1],
             energy_joules: 0.0,
+            energy: None,
         };
         let totals = report.total_per_device();
         assert_eq!(totals.len(), 2);

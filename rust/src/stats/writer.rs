@@ -5,7 +5,10 @@
 use super::{BatchResult, SimReport};
 use std::fmt::Write as _;
 
-/// One row per batch: index, per-stage cycles, memory counters.
+/// One row per batch: index, per-stage cycles, memory counters. With
+/// `[energy]` enabled (`report.energy` present) each row additionally
+/// carries its batch's per-component energy columns; disabled reports
+/// keep the pre-energy byte layout exactly.
 pub fn to_csv(report: &SimReport) -> String {
     let mut out = String::new();
     out.push_str(
@@ -13,10 +16,17 @@ pub fn to_csv(report: &SimReport) -> String {
          exchange_intra_cycles,exchange_inter_cycles,\
          interaction_cycles,top_mlp_cycles,\
          total_cycles,onchip_reads,onchip_writes,offchip_reads,offchip_writes,hits,misses,\
-         global_hits,macs,vpu_ops,lookups,replicated_hits\n",
+         global_hits,macs,vpu_ops,lookups,replicated_hits",
     );
+    if report.energy.is_some() {
+        out.push_str(
+            ",sa_j,vpu_j,sram_read_j,sram_write_j,dram_j,ici_intra_j,ici_inter_j,\
+             static_j,total_j",
+        );
+    }
+    out.push('\n');
     for b in &report.per_batch {
-        let _ = writeln!(
+        let _ = write!(
             out,
             "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             b.batch_index,
@@ -41,8 +51,46 @@ pub fn to_csv(report: &SimReport) -> String {
             b.ops.lookups,
             b.ops.replicated_hits,
         );
+        if report.energy.is_some() {
+            let e = b.energy.unwrap_or_default();
+            let _ = write!(
+                out,
+                ",{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e},{:e}",
+                e.sa_j,
+                e.vpu_j,
+                e.sram_read_j,
+                e.sram_write_j,
+                e.dram_j,
+                e.ici_intra_j,
+                e.ici_inter_j,
+                e.static_j,
+                e.total_j(),
+            );
+        }
+        out.push('\n');
     }
     out
+}
+
+/// Per-component [`crate::energy::EnergyReport`] as a JSON object
+/// (every component in joules, plus the `total_j` sum).
+fn energy_json(e: &crate::energy::EnergyReport) -> String {
+    format!(
+        concat!(
+            "{{\"sa_j\":{:e},\"vpu_j\":{:e},\"sram_read_j\":{:e},",
+            "\"sram_write_j\":{:e},\"dram_j\":{:e},\"ici_intra_j\":{:e},",
+            "\"ici_inter_j\":{:e},\"static_j\":{:e},\"total_j\":{:e}}}"
+        ),
+        e.sa_j,
+        e.vpu_j,
+        e.sram_read_j,
+        e.sram_write_j,
+        e.dram_j,
+        e.ici_intra_j,
+        e.ici_inter_j,
+        e.static_j,
+        e.total_j(),
+    )
 }
 
 fn device_json(d: &crate::stats::DeviceCounters) -> String {
@@ -68,6 +116,11 @@ fn device_json(d: &crate::stats::DeviceCounters) -> String {
 
 fn batch_json(b: &BatchResult) -> String {
     let per_device: Vec<String> = b.per_device.iter().map(device_json).collect();
+    let energy = b
+        .energy
+        .as_ref()
+        .map(|e| format!("\"energy\":{},", energy_json(e)))
+        .unwrap_or_default();
     format!(
         concat!(
             "{{\"batch\":{},\"cycles\":{{\"bottom_mlp\":{},\"embedding\":{},",
@@ -77,7 +130,7 @@ fn batch_json(b: &BatchResult) -> String {
             "\"mem\":{{\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
             "\"offchip_writes\":{},\"hits\":{},\"misses\":{},\"global_hits\":{}}},",
             "\"ops\":{{\"macs\":{},\"vpu_ops\":{},\"lookups\":{},\"replicated_hits\":{}}},",
-            "\"per_device\":[{}]}}"
+            "{}\"per_device\":[{}]}}"
         ),
         b.batch_index,
         b.cycles.bottom_mlp,
@@ -100,13 +153,22 @@ fn batch_json(b: &BatchResult) -> String {
         b.ops.vpu_ops,
         b.ops.lookups,
         b.ops.replicated_hits,
+        energy,
         per_device.join(","),
     )
 }
 
 /// Full report as a JSON object (overall metrics + per-batch array).
+/// With `[energy]` enabled an `energy` component-breakdown object
+/// precedes `per_batch` (and each batch carries its own); with
+/// `report.energy` `None` the bytes are exactly the pre-energy report's.
 pub fn to_json(report: &SimReport) -> String {
     let m = report.total_mem();
+    let energy = report
+        .energy
+        .as_ref()
+        .map(|e| format!("\"energy\":{},", energy_json(e)))
+        .unwrap_or_default();
     let batches: Vec<String> = report.per_batch.iter().map(batch_json).collect();
     format!(
         concat!(
@@ -115,7 +177,7 @@ pub fn to_json(report: &SimReport) -> String {
             "\"freq_ghz\":{},\"total_cycles\":{},\"exec_time_secs\":{:e},",
             "\"onchip_ratio\":{:.6},\"hit_rate\":{:.6},\"energy_joules\":{:e},",
             "\"imbalance_factor\":{:.6},\"replicated_hits\":{},",
-            "\"per_batch\":[{}]}}"
+            "{}\"per_batch\":[{}]}}"
         ),
         report.platform,
         report.policy,
@@ -131,13 +193,31 @@ pub fn to_json(report: &SimReport) -> String {
         report.energy_joules,
         report.imbalance_factor(),
         report.total_ops().replicated_hits,
+        energy,
         batches.join(",")
     )
 }
 
 // ------------------------------------------------------------- serving
 
-use crate::coordinator::serving::{LatencyStats, ServingReport};
+use crate::coordinator::serving::{LatencyStats, ServingEnergy, ServingReport};
+
+/// [`ServingEnergy`] as a JSON object: the per-component breakdown plus
+/// the serving-level rollups (idle static energy, joules per served
+/// request, average power over the makespan).
+fn serving_energy_json(e: &ServingEnergy) -> String {
+    format!(
+        concat!(
+            "{{\"components\":{},\"idle_static_j\":{:e},\"total_j\":{:e},",
+            "\"joules_per_request\":{:e},\"avg_power_w\":{:e}}}"
+        ),
+        energy_json(&e.components),
+        e.idle_static_j,
+        e.total_j,
+        e.joules_per_request,
+        e.avg_power_w,
+    )
+}
 
 fn latency_json(l: &LatencyStats) -> String {
     format!(
@@ -149,8 +229,15 @@ fn latency_json(l: &LatencyStats) -> String {
 /// Full serving report as a JSON object: summary metrics, the three
 /// latency distributions, aggregate counters, and the per-batch log.
 /// Byte-deterministic for a fixed config seed regardless of host
-/// thread count (per-request records are in-process only).
+/// thread count (per-request records are in-process only). With
+/// `[energy]` enabled an `energy` block precedes `per_batch`; with
+/// `report.energy` `None` the bytes are exactly the pre-energy report's.
 pub fn serving_to_json(report: &ServingReport) -> String {
+    let energy = report
+        .energy
+        .as_ref()
+        .map(|e| format!("\"energy\":{},", serving_energy_json(e)))
+        .unwrap_or_default();
     let batches: Vec<String> = report
         .per_batch
         .iter()
@@ -180,7 +267,7 @@ pub fn serving_to_json(report: &ServingReport) -> String {
             "\"ops\":{{\"macs\":{},\"vpu_ops\":{},\"lookups\":{},\"replicated_hits\":{}}},",
             "\"mem\":{{\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
             "\"offchip_writes\":{},\"hits\":{},\"misses\":{},\"global_hits\":{}}},",
-            "\"per_batch\":[{}]}}"
+            "{}\"per_batch\":[{}]}}"
         ),
         report.platform,
         report.policy,
@@ -211,6 +298,7 @@ pub fn serving_to_json(report: &ServingReport) -> String {
         report.mem.hits,
         report.mem.misses,
         report.mem.global_hits,
+        energy,
         batches.join(","),
     )
 }
@@ -235,7 +323,27 @@ pub fn serving_to_csv(report: &ServingReport) -> String {
 // --------------------------------------------------------------- fleet
 
 use crate::coordinator::faults::{FaultEvent, FaultSummary};
-use crate::coordinator::fleet::{FleetReport, ReplicaStats, ScaleEvent};
+use crate::coordinator::fleet::{FleetEnergy, FleetReport, ReplicaStats, ScaleEvent};
+
+/// [`FleetEnergy`] as a JSON object: the fleet-wide component breakdown,
+/// the serving-level rollups, and per-replica total joules (indexed by
+/// replica id).
+fn fleet_energy_json(e: &FleetEnergy) -> String {
+    let per_replica: Vec<String> = e.per_replica_j.iter().map(|j| format!("{:e}", j)).collect();
+    format!(
+        concat!(
+            "{{\"components\":{},\"idle_static_j\":{:e},\"total_j\":{:e},",
+            "\"joules_per_request\":{:e},\"avg_power_w\":{:e},",
+            "\"per_replica_j\":[{}]}}"
+        ),
+        energy_json(&e.components),
+        e.idle_static_j,
+        e.total_j,
+        e.joules_per_request,
+        e.avg_power_w,
+        per_replica.join(","),
+    )
+}
 
 fn replica_json(r: &ReplicaStats) -> String {
     format!(
@@ -298,8 +406,16 @@ fn fault_summary_json(f: &FaultSummary) -> String {
 /// (per-request records are in-process only). With `[faults]` active a
 /// `faults` block (availability, retry/hedge/failover counters, the
 /// fault event log) precedes `per_replica`; with `report.faults`
-/// `None` the bytes are exactly the fault-free report's.
+/// `None` the bytes are exactly the fault-free report's. With `[energy]`
+/// enabled an `energy` block (components, per-replica joules,
+/// joules-per-request) precedes the `faults` block; with `report.energy`
+/// `None` the bytes are exactly the pre-energy report's.
 pub fn fleet_to_json(report: &FleetReport) -> String {
+    let energy = report
+        .energy
+        .as_ref()
+        .map(|e| format!("\"energy\":{},", fleet_energy_json(e)))
+        .unwrap_or_default();
     let faults = report
         .faults
         .as_ref()
@@ -341,7 +457,7 @@ pub fn fleet_to_json(report: &FleetReport) -> String {
             "\"ops\":{{\"macs\":{},\"vpu_ops\":{},\"lookups\":{},\"replicated_hits\":{}}},",
             "\"mem\":{{\"onchip_reads\":{},\"onchip_writes\":{},\"offchip_reads\":{},",
             "\"offchip_writes\":{},\"hits\":{},\"misses\":{},\"global_hits\":{}}},",
-            "{}\"per_replica\":[{}],\"scale_events\":[{}],\"per_batch\":[{}]}}"
+            "{}{}\"per_replica\":[{}],\"scale_events\":[{}],\"per_batch\":[{}]}}"
         ),
         report.platform,
         report.router,
@@ -379,6 +495,7 @@ pub fn fleet_to_json(report: &FleetReport) -> String {
         report.mem.hits,
         report.mem.misses,
         report.mem.global_hits,
+        energy,
         faults,
         per_replica.join(","),
         scale_events.join(","),
@@ -439,8 +556,10 @@ mod tests {
                 },
                 ops: OpCounts { macs: 8, vpu_ops: 9, lookups: 10, replicated_hits: 0 },
                 per_device: Vec::new(),
+                energy: None,
             }],
             energy_joules: 1.5e-3,
+            energy: None,
         }
     }
 
@@ -553,6 +672,7 @@ mod tests {
                 compute_secs: 1e-3,
                 total_secs: 1e-3,
             }],
+            energy: None,
         }
     }
 
@@ -677,6 +797,7 @@ mod tests {
                 compute_secs: 1e-3,
                 total_secs: 1e-3,
             }],
+            energy: None,
         }
     }
 
@@ -827,5 +948,136 @@ mod tests {
         assert!(json.contains("\"utilization\":0.000000"));
         assert!(json.contains("\"per_replica\":[]"));
         assert_eq!(fleet_to_csv(&fr).lines().count(), 1, "header only");
+    }
+
+    fn energy_components() -> crate::energy::EnergyReport {
+        crate::energy::EnergyReport {
+            sa_j: 1e-3,
+            vpu_j: 2e-4,
+            sram_read_j: 3e-4,
+            sram_write_j: 4e-4,
+            dram_j: 5e-3,
+            ici_intra_j: 6e-5,
+            ici_inter_j: 7e-5,
+            static_j: 8e-3,
+        }
+    }
+
+    #[test]
+    fn sim_outputs_have_no_energy_block_when_disabled() {
+        // byte-identity requirement: `[energy]` absent must not add a
+        // single byte to either emitter ("energy_joules" predates the
+        // layer, so match the exact object key)
+        let json = to_json(&report());
+        assert!(!json.contains("\"energy\":"), "{json}");
+        let csv = to_csv(&report());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].ends_with("replicated_hits"));
+        assert!(!lines[0].contains("total_j"));
+    }
+
+    #[test]
+    fn sim_outputs_carry_energy_components_when_enabled() {
+        let mut r = report();
+        r.per_batch[0].energy = Some(energy_components());
+        r.energy = Some(energy_components());
+        let json = to_json(&r);
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        for key in [
+            "\"energy\":{\"sa_j\":",
+            "\"vpu_j\":",
+            "\"sram_read_j\":",
+            "\"sram_write_j\":",
+            "\"dram_j\":",
+            "\"ici_intra_j\":",
+            "\"ici_inter_j\":",
+            "\"static_j\":",
+            "\"total_j\":",
+        ] {
+            assert!(json.contains(key), "missing `{key}` in {json}");
+        }
+        // both the aggregate block and the per-batch block are emitted
+        assert_eq!(json.matches("\"energy\":{").count(), 2, "{json}");
+
+        let csv = to_csv(&r);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].ends_with(",sa_j,vpu_j,sram_read_j,sram_write_j,dram_j,ici_intra_j,ici_inter_j,static_j,total_j"));
+        assert_eq!(
+            lines[0].split(',').count(),
+            lines[1].split(',').count(),
+            "header and row column counts agree"
+        );
+    }
+
+    #[test]
+    fn serving_json_energy_block_tracks_report_energy() {
+        assert!(!serving_to_json(&serving_report()).contains("\"energy\":"));
+        let mut sr = serving_report();
+        sr.energy = Some(ServingEnergy {
+            components: energy_components(),
+            idle_static_j: 3.6e-2,
+            total_j: 5.1e-2,
+            joules_per_request: 1.7e-2,
+            avg_power_w: 12.75,
+        });
+        let json = serving_to_json(&sr);
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        for key in [
+            "\"energy\":{\"components\":{\"sa_j\":",
+            "\"idle_static_j\":",
+            "\"total_j\":",
+            "\"joules_per_request\":",
+            "\"avg_power_w\":",
+        ] {
+            assert!(json.contains(key), "missing `{key}` in {json}");
+        }
+        // the per-batch CSV log has no energy columns in either mode
+        assert_eq!(serving_to_csv(&sr), serving_to_csv(&serving_report()));
+    }
+
+    #[test]
+    fn fleet_json_energy_block_tracks_report_energy() {
+        assert!(!fleet_to_json(&fleet_report()).contains("\"energy\":"));
+        let mut fr = fleet_report();
+        fr.energy = Some(FleetEnergy {
+            components: energy_components(),
+            idle_static_j: 3.6e-2,
+            total_j: 5.1e-2,
+            joules_per_request: 1.7e-2,
+            avg_power_w: 12.75,
+            per_replica_j: vec![2.5e-2, 2.6e-2],
+        });
+        let json = fleet_to_json(&fr);
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        for key in [
+            "\"energy\":{\"components\":{\"sa_j\":",
+            "\"idle_static_j\":",
+            "\"joules_per_request\":",
+            "\"avg_power_w\":",
+            "\"per_replica_j\":[2.5e-2,2.6e-2]",
+        ] {
+            assert!(json.contains(key), "missing `{key}` in {json}");
+        }
+        // energy precedes faults; both blocks coexist
+        fr.faults = Some(crate::coordinator::faults::FaultSummary {
+            availability: 1.0,
+            crashes: 0,
+            failed: 0,
+            retried: 0,
+            retries: 0,
+            failovers: 0,
+            hedged: 0,
+            hedge_wins: 0,
+            hedge_wasted: 0,
+            mttr_observed_secs: 0.0,
+            steady_p99_secs: 0.0,
+            incident_p99_secs: 0.0,
+            events: Vec::new(),
+        });
+        let json = fleet_to_json(&fr);
+        assert!(json.contains("\"avg_power_w\":"), "{json}");
+        assert!(json.contains("\"faults\":{"), "{json}");
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(fleet_to_csv(&fr), fleet_to_csv(&fleet_report()));
     }
 }

@@ -514,7 +514,15 @@ fn simulator_run_is_byte_identical_to_manual_simcore_loop_on_shipped_configs() {
         for _ in 0..cfg.workload.num_batches {
             report.per_batch.push(core.step_batch(source.next_trace()));
         }
-        eonsim::energy::annotate(&mut report, &eonsim::energy::EnergyTable::default());
+        // mirror run(): enabled configs aggregate the per-batch
+        // breakdowns the core attached; disabled ones take the legacy
+        // scalar annotation
+        if cfg.energy.enabled {
+            report.energy = report.total_energy();
+            report.energy_joules = report.energy.as_ref().map_or(0.0, |e| e.total_j());
+        } else {
+            eonsim::energy::annotate(&mut report, &eonsim::energy::EnergyTable::default());
+        }
 
         assert_eq!(
             writer::to_json(&want),

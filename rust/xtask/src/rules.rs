@@ -262,6 +262,24 @@ const SCHEMA: &[SchemaReq] = &[
         json: &["fleet_to_json"],
     },
     SchemaReq {
+        file: "rust/src/energy/mod.rs",
+        name: "EnergyReport",
+        csv: &["to_csv"],
+        json: &["energy_json"],
+    },
+    SchemaReq {
+        file: "rust/src/coordinator/serving.rs",
+        name: "ServingEnergy",
+        csv: &[],
+        json: &["serving_energy_json"],
+    },
+    SchemaReq {
+        file: "rust/src/coordinator/fleet.rs",
+        name: "FleetEnergy",
+        csv: &[],
+        json: &["fleet_energy_json"],
+    },
+    SchemaReq {
         file: "rust/src/coordinator/faults.rs",
         name: "FaultSummary",
         csv: &[],

@@ -115,6 +115,36 @@ fn faults_schema_fixture() {
     assert_clean("faults_schema_good");
 }
 
+/// The schema rule covers `EnergyReport`: a component neither energy
+/// emitter carries is two findings (CSV and JSON), named after the field.
+#[test]
+fn energy_schema_fixture() {
+    let findings = lint_fixture("energy_schema_bad");
+    assert_eq!(findings.len(), 2, "`fan_j` misses CSV and JSON: {findings:?}");
+    for f in &findings {
+        assert_eq!(f.rule, "schema");
+        assert!(
+            f.message.contains("EnergyReport.fan_j"),
+            "finding names the field: {f:?}"
+        );
+    }
+    assert_clean("energy_schema_good");
+}
+
+/// The config-doc rule covers `[energy]`: a parsed energy key missing
+/// from the README's `[energy]` section is named.
+#[test]
+fn energy_config_doc_fixture() {
+    let findings = lint_fixture("energy_config_doc_bad");
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.rule == "config-doc" && f.message.contains("energy.static_watts")),
+        "undocumented energy key must be named: {findings:?}"
+    );
+    assert_clean("energy_config_doc_good");
+}
+
 #[test]
 fn concurrency_fixture() {
     assert_fires("concurrency_bad", "concurrency");

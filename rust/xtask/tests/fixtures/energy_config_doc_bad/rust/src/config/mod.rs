@@ -1,0 +1,13 @@
+//! Bad: `energy.static_watts` is parsed but missing from the README's
+//! `[energy]` section.
+
+pub struct EnergyConfig {
+    pub static_watts: f64,
+}
+
+impl EnergyConfig {
+    pub fn from_table(t: &Table) -> EnergyConfig {
+        let static_watts = t.float_or("energy.static_watts", 18.0);
+        EnergyConfig { static_watts }
+    }
+}

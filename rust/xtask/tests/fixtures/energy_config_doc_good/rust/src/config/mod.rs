@@ -1,0 +1,13 @@
+//! Good: the parsed energy key is documented under its `[energy]`
+//! section.
+
+pub struct EnergyConfig {
+    pub static_watts: f64,
+}
+
+impl EnergyConfig {
+    pub fn from_table(t: &Table) -> EnergyConfig {
+        let static_watts = t.float_or("energy.static_watts", 18.0);
+        EnergyConfig { static_watts }
+    }
+}

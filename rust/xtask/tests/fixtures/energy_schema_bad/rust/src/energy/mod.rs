@@ -1,0 +1,6 @@
+//! Bad: `fan_j` is a public energy component neither emitter carries.
+
+pub struct EnergyReport {
+    pub sa_j: f64,
+    pub fan_j: f64,
+}

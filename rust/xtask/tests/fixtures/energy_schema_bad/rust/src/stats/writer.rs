@@ -1,0 +1,11 @@
+//! Energy emitters that silently drop the `fan_j` component.
+
+use crate::energy::EnergyReport;
+
+pub fn energy_json(e: &EnergyReport) -> String {
+    format!("{{\"sa_j\":{}}}", e.sa_j)
+}
+
+pub fn to_csv(e: &EnergyReport) -> String {
+    format!("sa_j\n{}\n", e.sa_j)
+}

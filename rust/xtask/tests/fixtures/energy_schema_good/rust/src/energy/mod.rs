@@ -1,0 +1,6 @@
+//! Good: every energy component reaches both emitters.
+
+pub struct EnergyReport {
+    pub sa_j: f64,
+    pub fan_j: f64,
+}

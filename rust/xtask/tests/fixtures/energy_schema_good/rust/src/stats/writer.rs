@@ -1,0 +1,11 @@
+//! Energy emitters carrying the full component breakdown.
+
+use crate::energy::EnergyReport;
+
+pub fn energy_json(e: &EnergyReport) -> String {
+    format!("{{\"sa_j\":{},\"fan_j\":{}}}", e.sa_j, e.fan_j)
+}
+
+pub fn to_csv(e: &EnergyReport) -> String {
+    format!("sa_j,fan_j\n{},{}\n", e.sa_j, e.fan_j)
+}
