@@ -38,10 +38,8 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = SimConfig {
             hardware: presets::tpuv6e_hardware(),
             workload: wl.clone(),
-            sharding: eonsim::config::ShardingConfig::default(),
-            serving: eonsim::config::ServingConfig::default(),
-            threads: eonsim::config::default_threads(),
             seed: 7,
+            ..presets::tpuv6e_dlrm_small()
         };
         cfg.hardware.mem.policy = policy;
         let report = Simulator::new(cfg).run()?;

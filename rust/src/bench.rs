@@ -25,9 +25,11 @@ pub const SCHEMA_VERSION: u32 = 1;
 /// Knobs for one benchmark run.
 #[derive(Debug, Clone)]
 pub struct BenchOptions {
-    /// Reduced item counts and a single repetition — CI smoke scale.
+    /// Reduced item counts — CI smoke scale.
     pub smoke: bool,
-    /// Repetitions per section (after one warmup). Forced to 1 by smoke.
+    /// Repetitions per section (after one warmup). Honored at smoke
+    /// scale too, so CI can run enough reps to characterize per-section
+    /// noise (`noise_pct`) for the gating `bench cmp` threshold.
     pub reps: usize,
     /// Worker threads for the parallel leg of the sharded comparison.
     pub threads: usize,
@@ -45,11 +47,7 @@ impl Default for BenchOptions {
 
 impl BenchOptions {
     fn reps(&self) -> usize {
-        if self.smoke {
-            1
-        } else {
-            self.reps.max(1)
-        }
+        self.reps.max(1)
     }
 
     /// Scale an item count down for smoke runs.
@@ -81,6 +79,18 @@ impl SectionResult {
     pub fn items_per_sec(&self) -> f64 {
         if self.mean_secs > 0.0 {
             self.items as f64 / self.mean_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Run-to-run spread as a percentage of the mean,
+    /// `(max - min) / mean * 100` — the per-section noise estimate the
+    /// gating CI diff derives its `--fail-above` threshold from
+    /// (observed spread + safety margin). 0 for a degenerate mean.
+    pub fn noise_pct(&self) -> f64 {
+        if self.mean_secs > 0.0 {
+            (self.max_secs - self.min_secs) / self.mean_secs * 100.0
         } else {
             0.0
         }
@@ -295,6 +305,66 @@ pub fn run_hotpath(opts: &BenchOptions) -> anyhow::Result<BenchReport> {
         )?);
     }
 
+    // 5c) embedding hot path, scalar vs vectorized: the same skewed
+    // replicated single-device batch stream through the scalar
+    // reference loop and the batch-planned structure-of-arrays sweep
+    // (threads 1, identical state and traces) — the pair whose ratio is
+    // the vectorization speedup `bench cmp` tracks, and the regression
+    // canary if the plan path ever decays back toward per-lookup cost
+    {
+        let mut cfg = presets::tpuv6e_dlrm_small();
+        cfg.workload.batch_size = if opts.smoke { 32 } else { 256 };
+        cfg.workload.embedding.num_tables = 8;
+        cfg.workload.embedding.rows_per_table = 100_000;
+        cfg.workload.embedding.pool = 32;
+        cfg.workload.trace.alpha = 1.2;
+        cfg.hardware.mem.policy = OnchipPolicy::Cache(CachePolicyKind::Lru);
+        cfg.hardware.mem.onchip_bytes = 8 << 20;
+        cfg.threads = 1;
+        let n_batches = if opts.smoke { 2 } else { 8 };
+        let mut g = TraceGenerator::new(&cfg.workload)?;
+        let batches: Vec<_> = (0..n_batches).map(|_| g.next_batch()).collect();
+        let mut profile = crate::mem::policy::pinning::Profile::new();
+        for b in &batches {
+            for l in &b.lookups {
+                profile.record(l.table, l.row);
+            }
+        }
+        let replicas =
+            crate::sharding::replicate::HotRowReplicator::from_profile(&profile, 256);
+        let vec_lines = cfg
+            .workload
+            .embedding
+            .vec_bytes()
+            .div_ceil(cfg.hardware.mem.access_granularity)
+            .max(1);
+        let line_accesses =
+            cfg.workload.lookups_per_batch() * n_batches as u64 * vec_lines;
+        for (id, vectorized) in
+            [("hotpath_scalar", false), ("hotpath_vectorized", true)]
+        {
+            let mut sim = crate::engine::embedding::EmbeddingSim::new(&cfg);
+            sim.set_replicas(replicas.clone(), vec_lines);
+            sim.set_vectorized(vectorized);
+            let path = if vectorized { "vectorized" } else { "scalar" };
+            sections.push(section(
+                id,
+                format!(
+                    "embedding hot path ({path}, lru+replicas, batch {})",
+                    cfg.workload.batch_size
+                ),
+                line_accesses,
+                reps,
+                || {
+                    for b in &batches {
+                        std::hint::black_box(sim.simulate_batch(b).cycles);
+                    }
+                    Ok(())
+                },
+            )?);
+        }
+    }
+
     // 6) simulated-time serving loop (`eonsim serve`'s hot path): an
     // open-loop Poisson stream through the dynamic batcher, every batch
     // stepped on a persistent SimCore — the request-level layer's cost
@@ -413,7 +483,7 @@ pub fn to_json(report: &BenchReport) -> String {
                 concat!(
                     "{{\"id\":\"{}\",\"label\":\"{}\",\"items\":{},\"reps\":{},",
                     "\"mean_secs\":{:e},\"min_secs\":{:e},\"max_secs\":{:e},",
-                    "\"items_per_sec\":{:e}}}"
+                    "\"noise_pct\":{:e},\"items_per_sec\":{:e}}}"
                 ),
                 s.id,
                 s.label,
@@ -422,6 +492,7 @@ pub fn to_json(report: &BenchReport) -> String {
                 s.mean_secs,
                 s.min_secs,
                 s.max_secs,
+                s.noise_pct(),
                 s.items_per_sec(),
             )
         })
@@ -492,6 +563,9 @@ pub struct SnapshotSection {
     pub id: String,
     pub mean_secs: f64,
     pub items_per_sec: f64,
+    /// Per-section run-to-run spread recorded by the producing run
+    /// (`(max - min) / mean * 100`); 0.0 for pre-noise artifacts.
+    pub noise_pct: f64,
 }
 
 /// The fields of a `BENCH_hotpath.json` artifact the diff consumes.
@@ -531,7 +605,9 @@ pub fn parse_snapshot(text: &str) -> anyhow::Result<BenchSnapshot> {
             .and_then(Json::as_f64)
             .ok_or_else(|| anyhow::anyhow!("section `{id}` has no mean_secs"))?;
         let items_per_sec = s.get("items_per_sec").and_then(Json::as_f64).unwrap_or(0.0);
-        sections.push(SnapshotSection { id, mean_secs, items_per_sec });
+        // absent in artifacts written before the noise field existed
+        let noise_pct = s.get("noise_pct").and_then(Json::as_f64).unwrap_or(0.0);
+        sections.push(SnapshotSection { id, mean_secs, items_per_sec, noise_pct });
     }
     anyhow::ensure!(!sections.is_empty(), "artifact has no benchmark sections");
     let speedup = root
@@ -712,6 +788,7 @@ mod tests {
             "\"threads\":8",
             "\"sections\":[{",
             "\"id\":\"zipf_sample\"",
+            "\"noise_pct\":",
             "\"items_per_sec\":",
             "\"sharded\":{",
             "\"serial_secs\":",
@@ -818,11 +895,69 @@ mod tests {
     #[test]
     fn smoke_options_scale_down() {
         let opts = BenchOptions { smoke: true, ..Default::default() };
-        assert_eq!(opts.reps(), 1);
+        // smoke scales the item counts but honors --reps, so CI's smoke
+        // runs can still characterize per-section noise
+        assert_eq!(opts.reps(), 3);
+        assert_eq!(BenchOptions { reps: 0, ..opts.clone() }.reps(), 1);
         assert_eq!(opts.scaled(4_000_000), 200_000);
         assert_eq!(opts.scaled(10), 1, "scaling never reaches zero items");
         let full = BenchOptions::default();
         assert_eq!(full.scaled(4_000_000), 4_000_000);
         assert!(full.reps() >= 1);
+    }
+
+    #[test]
+    fn noise_pct_is_spread_over_mean() {
+        let s = synthetic().sections[0].clone();
+        // (0.6 - 0.4) / 0.5 * 100 = 40%
+        assert!((s.noise_pct() - 40.0).abs() < 1e-9, "{}", s.noise_pct());
+        let snap = parse_snapshot(&to_json(&synthetic())).unwrap();
+        assert!((snap.sections[0].noise_pct - 40.0).abs() < 1e-6);
+        // artifacts written before the field existed parse as 0.0
+        let legacy = to_json(&synthetic()).replace("\"noise_pct\"", "\"legacy_x\"");
+        let snap = parse_snapshot(&legacy).unwrap();
+        assert_eq!(snap.sections[0].noise_pct, 0.0);
+    }
+
+    #[test]
+    fn compare_files_names_the_offending_file_and_section() {
+        let dir = std::env::temp_dir();
+        let tag = std::process::id();
+        let ok = dir.join(format!("eonsim_bench_ok_{tag}.json"));
+        let truncated = dir.join(format!("eonsim_bench_truncated_{tag}.json"));
+        let nomean = dir.join(format!("eonsim_bench_nomean_{tag}.json"));
+        let full = to_json(&synthetic());
+        std::fs::write(&ok, &full).unwrap();
+
+        // a truncated artifact (e.g. an interrupted CI upload) must name
+        // the offending file, not diff as an empty snapshot
+        std::fs::write(&truncated, &full[..full.len() / 2]).unwrap();
+        let err = compare_files(ok.to_str().unwrap(), truncated.to_str().unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains(truncated.to_str().unwrap()),
+            "error names the file: {err}"
+        );
+
+        // a section missing mean_secs names both the section and file
+        std::fs::write(&nomean, full.replace("\"mean_secs\"", "\"not_mean\"")).unwrap();
+        let err = compare_files(ok.to_str().unwrap(), nomean.to_str().unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("zipf_sample"), "error names the section: {err}");
+        assert!(err.contains(nomean.to_str().unwrap()), "{err}");
+
+        // a missing file names its path too
+        let missing = dir.join(format!("eonsim_bench_missing_{tag}.json"));
+        let err = compare_files(ok.to_str().unwrap(), missing.to_str().unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot read"), "{err}");
+        assert!(err.contains(missing.to_str().unwrap()), "{err}");
+
+        for f in [&ok, &truncated, &nomean] {
+            std::fs::remove_file(f).ok();
+        }
     }
 }

@@ -1027,6 +1027,18 @@ pub struct SimConfig {
     /// Purely a host-performance knob: any value produces byte-identical
     /// reports, and `1` forces fully serial execution.
     pub threads: usize,
+    /// Use the batched structure-of-arrays embedding hot path
+    /// (`[sim] vectorized`, default `true`). Byte-identical to the
+    /// scalar reference loop at any setting — `false` only keeps the
+    /// per-lookup loop as a differential baseline.
+    pub vectorized: bool,
+    /// Speculative cross-batch window (`[sim] speculate_batches`,
+    /// default `1` = off): single-device runs fork the warm on-chip
+    /// hierarchy and execute up to this many batches in parallel,
+    /// committing sequentially under a zero-DRAM + disjoint-footprint
+    /// rule that keeps reports byte-identical. Purely a host-performance
+    /// knob like `threads`.
+    pub speculate_batches: usize,
     /// Global simulation seed (forked per component).
     pub seed: u64,
 }
@@ -1253,6 +1265,9 @@ impl SimConfig {
         en.static_watts = t.float_or("energy.static_watts", en.static_watts)?;
 
         cfg.threads = t.usize_or("sim.threads", cfg.threads)?;
+        cfg.vectorized = t.bool_or("sim.vectorized", cfg.vectorized)?;
+        cfg.speculate_batches =
+            t.usize_or("sim.speculate_batches", cfg.speculate_batches)?;
         cfg.seed = t.u64_or("seed", cfg.seed)?;
         cfg.validate()?;
         Ok(cfg)
@@ -1317,6 +1332,14 @@ impl SimConfig {
                 "sim.threads",
                 "at least one worker thread required (threads = 0 would run \
                  nothing; use threads = 1 for fully serial execution)"
+                    .into(),
+            );
+        }
+        if self.speculate_batches == 0 {
+            return invalid(
+                "sim.speculate_batches",
+                "speculation window must be >= 1 (speculate_batches = 1 \
+                 disables speculative cross-batch execution)"
                     .into(),
             );
         }
@@ -2330,6 +2353,30 @@ mod tests {
         let err = SimConfig::from_table(&t).unwrap_err().to_string();
         assert!(err.contains("sim.threads"), "error names the key: {err}");
         assert!(err.contains("threads = 1"), "error suggests the serial setting: {err}");
+    }
+
+    #[test]
+    fn sim_vectorized_parses_and_defaults_on() {
+        let t = Table::parse("[sim]\nvectorized = false").unwrap();
+        assert!(!SimConfig::from_table(&t).unwrap().vectorized);
+        let plain = SimConfig::from_table(&Table::parse("").unwrap()).unwrap();
+        assert!(plain.vectorized, "vectorized hot path is the default");
+    }
+
+    #[test]
+    fn sim_speculate_batches_parses_and_defaults_off() {
+        let t = Table::parse("[sim]\nspeculate_batches = 4").unwrap();
+        assert_eq!(SimConfig::from_table(&t).unwrap().speculate_batches, 4);
+        let plain = SimConfig::from_table(&Table::parse("").unwrap()).unwrap();
+        assert_eq!(plain.speculate_batches, 1, "speculation is opt-in");
+    }
+
+    #[test]
+    fn rejects_zero_speculate_batches_with_clear_error() {
+        let t = Table::parse("[sim]\nspeculate_batches = 0").unwrap();
+        let err = SimConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("sim.speculate_batches"), "error names the key: {err}");
+        assert!(err.contains("speculate_batches = 1"), "error suggests the off setting: {err}");
     }
 
     #[test]

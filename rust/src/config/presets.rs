@@ -83,6 +83,8 @@ pub fn tpuv6e_dlrm_small() -> SimConfig {
         faults: FaultsConfig::default(),
         energy: EnergyConfig::default(),
         threads: super::default_threads(),
+        vectorized: true,
+        speculate_batches: 1,
         seed: 0xE05_1337,
     }
 }

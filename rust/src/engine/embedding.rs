@@ -13,7 +13,8 @@ use crate::mem::policy::pinning::{PinSet, Profile};
 use crate::mem::{Cache, MemController, SoftwarePrefetcher};
 use crate::sharding::replicate::HotRowReplicator;
 use crate::stats::{MemCounts, OpCounts};
-use crate::trace::{AddressMap, BatchTrace};
+use crate::trace::plan::{CLASS_PINNED, CLASS_REPLICA, CLASS_STREAM};
+use crate::trace::{AddressMap, BatchPlan, BatchTrace};
 
 /// Per-batch result of the embedding stage.
 #[derive(Debug, Clone, Copy)]
@@ -31,6 +32,11 @@ pub struct EmbeddingStageResult {
 /// (its own cache / pin set / SPM stage), all cores share the optional
 /// *global* buffer and the off-chip controller. Hierarchy depth is
 /// therefore configurable: local-only (TPUv6e) or local + global.
+///
+/// `Clone` forks the complete hierarchy (caches, policy metadata, DRAM
+/// banks, controller window, cycle cursor) — the snapshot primitive
+/// behind speculative cross-batch execution (`[sim] speculate_batches`).
+#[derive(Clone)]
 pub struct EmbeddingSim {
     addr_map: AddressMap,
     /// Per-core local on-chip state.
@@ -62,13 +68,45 @@ pub struct EmbeddingSim {
     dim: usize,
     vpu_lanes: usize,
     vpu_sublanes: usize,
+    /// Use the batched structure-of-arrays hot path (`[sim] vectorized`).
+    vectorized: bool,
+    /// Pooled per-batch lookup plan — buffers reused across batches
+    /// (the `TablePartitioner::split_into` pattern; no steady-state
+    /// allocation, see [`plan_grow_events`](Self::plan_grow_events)).
+    plan: BatchPlan,
 }
 
+#[derive(Clone)]
 enum Mode {
     Spm,
     Cache(Cache),
     Pinning(PinSet),
 }
+
+/// Hierarchy counters captured at fork time so a committed speculative
+/// batch can be folded back as deltas (see
+/// [`EmbeddingSim::absorb_fork`]).
+#[derive(Debug, Clone)]
+pub struct HierarchySnapshotStats {
+    /// Per-core `(hits, misses)` for cache-mode cores, `None` otherwise.
+    core_stats: Vec<Option<(u64, u64)>>,
+    global_stats: Option<(u64, u64)>,
+    issued: u64,
+    now: u64,
+}
+
+impl HierarchySnapshotStats {
+    /// Off-chip lines issued when the snapshot was taken (the zero-DRAM
+    /// commit gate compares the fork's counter against this).
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+}
+
+/// Tag bits distinguishing local from global cache sets in the packed
+/// footprint ids [`EmbeddingSim::batch_footprint`] emits.
+const FOOTPRINT_LOCAL_TAG: u64 = 1 << 62;
+const FOOTPRINT_GLOBAL_TAG: u64 = 1 << 63;
 
 /// Gather-engine issue width for *off-chip* line fetches (DMA descriptor
 /// rate, lines/cycle). On-chip hits bypass the DMA engines entirely and
@@ -137,6 +175,8 @@ impl EmbeddingSim {
             dim: emb.dim,
             vpu_lanes: cfg.hardware.core.vpu_lanes,
             vpu_sublanes: cfg.hardware.core.vpu_sublanes,
+            vectorized: cfg.vectorized,
+            plan: BatchPlan::new(),
         }
     }
 
@@ -197,15 +237,46 @@ impl EmbeddingSim {
         self.simulate_batch_with_bags(trace, bags)
     }
 
+    /// Toggle the vectorized hot path (`[sim] vectorized`). Both paths
+    /// produce byte-identical results; the scalar loop stays as the
+    /// differential reference (`prop_vectorized_path_bit_identical`).
+    pub fn set_vectorized(&mut self, on: bool) {
+        self.vectorized = on;
+    }
+
+    /// Times the pooled plan buffers had to grow — the allocation-count
+    /// test hook for the no-per-batch-allocation invariant.
+    pub fn plan_grow_events(&self) -> u64 {
+        self.plan.grow_events()
+    }
+
     /// Like [`simulate_batch`](Self::simulate_batch) but with the exact
     /// number of distinct bags the trace's lookups belong to — needed
     /// for sharded sub-traces whose lengths are not pool-aligned
     /// (row-hashing and hot-row replication split bags across devices).
+    ///
+    /// Dispatches to the vectorized plan/sweep path when enabled *and*
+    /// the config can profit (a replica set or pinning mode); otherwise
+    /// the scalar reference loop runs — on plain SPM/cache configs every
+    /// lookup is a stream lookup, so a plan would be pure sort overhead
+    /// for an identical execution.
     pub fn simulate_batch_with_bags(
         &mut self,
         trace: &BatchTrace,
         bags: u64,
     ) -> EmbeddingStageResult {
+        let needs_plan = !self.replicas.is_empty()
+            || matches!(self.cores.first(), Some(Mode::Pinning(_)));
+        if self.vectorized && needs_plan {
+            self.simulate_vectorized(trace, bags)
+        } else {
+            self.simulate_scalar(trace, bags)
+        }
+    }
+
+    /// Reference per-lookup loop: probes the replica set (and pin set)
+    /// per lookup and walks the hierarchy in trace order.
+    fn simulate_scalar(&mut self, trace: &BatchTrace, bags: u64) -> EmbeddingStageResult {
         let base = self.now;
         let mut mem = MemCounts::default();
         let lines_per_vec = self.addr_map.lines_per_vec();
@@ -310,6 +381,188 @@ impl EmbeddingSim {
                 }
             }
         }
+        self.finish_batch(
+            trace,
+            bags,
+            base,
+            mem,
+            replicated_hits,
+            issued,
+            busy,
+            global_busy,
+            offchip_done,
+        )
+    }
+
+    /// Vectorized hot path: build the pooled batch plan (one sort plus a
+    /// merge-join classification), bulk-account the replica/pinned
+    /// classes with array arithmetic (phase A), then walk the remaining
+    /// *stream* lookups in trace order with the exact scalar hierarchy
+    /// body (phase B).
+    ///
+    /// Byte-identity with the scalar loop holds by construction:
+    /// replica/pinned lookups only ever touch commutative counters
+    /// (`mem.hits`/`mem.onchip_reads`/`busy` — never cache tags, the
+    /// controller, the prefetcher, or issue slots), so hoisting them out
+    /// of the position-order pass cannot change any stateful outcome,
+    /// and phase B preserves the scalar visit order for everything
+    /// stateful.
+    fn simulate_vectorized(&mut self, trace: &BatchTrace, bags: u64) -> EmbeddingStageResult {
+        let base = self.now;
+        let mut mem = MemCounts::default();
+        let lines_per_vec = self.addr_map.lines_per_vec();
+        let ncores = self.cores.len();
+        let mut issued = vec![0u64; ncores]; // per-core DMA line issues
+        let mut busy = vec![0u64; ncores]; // per-core local-buffer bytes
+        let mut global_busy: u64 = 0; // shared global-buffer bytes
+        let mut offchip_done = base;
+
+        let mut plan = std::mem::take(&mut self.plan);
+        self.classify(&mut plan, trace);
+
+        // phase A: one linear sweep over the class memo replaces a BTree
+        // probe per lookup (replicas) / per vector (pins)
+        let mut replicated_hits = 0u64;
+        let mut pinned_vecs = 0u64;
+        for (i, &class) in plan.classes().iter().enumerate() {
+            match class {
+                CLASS_REPLICA => {
+                    replicated_hits += 1;
+                    let core = (i / self.lookups_per_sample) % ncores;
+                    busy[core] += self.replica_lines * self.line_bytes;
+                }
+                CLASS_PINNED => {
+                    pinned_vecs += 1;
+                    let core = (i / self.lookups_per_sample) % ncores;
+                    busy[core] += lines_per_vec * self.line_bytes;
+                }
+                _ => {}
+            }
+        }
+        let onchip_lines =
+            replicated_hits * self.replica_lines + pinned_vecs * lines_per_vec;
+        mem.hits += onchip_lines;
+        mem.onchip_reads += onchip_lines;
+
+        // phase B: stream lookups in trace order, exact scalar semantics
+        for (i, lookup) in trace.lookups.iter().enumerate() {
+            if plan.classes()[i] != CLASS_STREAM {
+                continue;
+            }
+            let core = (i / self.lookups_per_sample) % ncores;
+            match &mut self.cores[core] {
+                Mode::Cache(cache) => {
+                    for line in self.addr_map.lines(lookup.table, lookup.row) {
+                        if cache.access(line).is_hit() {
+                            mem.hits += 1;
+                            mem.onchip_reads += 1;
+                            busy[core] += self.line_bytes;
+                            continue;
+                        }
+                        mem.misses += 1;
+                        mem.onchip_writes += 1; // local fill
+                        mem.onchip_reads += 1; // consume
+                        busy[core] += 2 * self.line_bytes;
+                        // local miss: consult the shared global buffer
+                        if let Some(g) = &mut self.global {
+                            if g.access(line).is_hit() {
+                                mem.global_hits += 1;
+                                mem.onchip_reads += 1; // global read
+                                global_busy += self.line_bytes;
+                                continue;
+                            }
+                            mem.onchip_writes += 1; // global fill
+                            global_busy += self.line_bytes;
+                        }
+                        mem.offchip_reads += 1;
+                        self.prefetcher.issue(1);
+                        self.prefetcher.consume();
+                        let arrival = base + issued[core] / self.issue_per_cycle;
+                        issued[core] += 1;
+                        if let Some(c) = self.controller.enqueue(line, arrival) {
+                            offchip_done = offchip_done.max(c.done_at);
+                        }
+                    }
+                }
+                Mode::Spm | Mode::Pinning(_) => {
+                    // a stream lookup in pinning mode is by definition
+                    // not pinned (those were classified out in phase A)
+                    if matches!(self.cores[core], Mode::Pinning(_)) {
+                        mem.misses += lines_per_vec;
+                    }
+                    mem.onchip_writes += lines_per_vec; // stage locally
+                    mem.onchip_reads += lines_per_vec; // VPU consumes
+                    busy[core] += 2 * lines_per_vec * self.line_bytes;
+                    for line in self.addr_map.lines(lookup.table, lookup.row) {
+                        // shared global buffer catches cross-core reuse
+                        if let Some(g) = &mut self.global {
+                            if g.access(line).is_hit() {
+                                mem.global_hits += 1;
+                                mem.onchip_reads += 1;
+                                global_busy += self.line_bytes;
+                                continue;
+                            }
+                            mem.onchip_writes += 1; // global fill
+                            global_busy += self.line_bytes;
+                        }
+                        mem.offchip_reads += 1;
+                        self.prefetcher.issue(1);
+                        self.prefetcher.consume();
+                        let arrival = base + issued[core] / self.issue_per_cycle;
+                        issued[core] += 1;
+                        if let Some(c) = self.controller.enqueue(line, arrival) {
+                            offchip_done = offchip_done.max(c.done_at);
+                        }
+                    }
+                }
+            }
+        }
+        self.plan = plan;
+        self.finish_batch(
+            trace,
+            bags,
+            base,
+            mem,
+            replicated_hits,
+            issued,
+            busy,
+            global_busy,
+            offchip_done,
+        )
+    }
+
+    /// Build the pooled plan's class memo for `trace`: the replica set
+    /// plus, in pinning mode, core 0's pin set (every core pins the same
+    /// workload-global set, see [`set_pin_set`](Self::set_pin_set)).
+    fn classify(&self, plan: &mut BatchPlan, trace: &BatchTrace) {
+        match self.cores.first() {
+            Some(Mode::Pinning(pins)) => {
+                plan.build(trace, self.replicas.iter(), pins.iter());
+            }
+            _ => plan.build(
+                trace,
+                self.replicas.iter(),
+                std::iter::empty::<&(u32, u64)>(),
+            ),
+        }
+    }
+
+    /// Shared batch epilogue for both hot paths: drain the controller,
+    /// overlap the VPU pooling work, convert byte/issue pressure into
+    /// cycles, advance the cycle cursor, and assemble the stage result.
+    fn finish_batch(
+        &mut self,
+        trace: &BatchTrace,
+        bags: u64,
+        base: u64,
+        mem: MemCounts,
+        replicated_hits: u64,
+        issued: Vec<u64>,
+        busy: Vec<u64>,
+        global_busy: u64,
+        mut offchip_done: u64,
+    ) -> EmbeddingStageResult {
+        let ncores = self.cores.len();
         for c in self.controller.drain() {
             offchip_done = offchip_done.max(c.done_at);
         }
@@ -358,6 +611,137 @@ impl EmbeddingSim {
             replicated_hits,
         };
         EmbeddingStageResult { cycles, mem, ops }
+    }
+
+    /// Whether this device's hierarchy tolerates set-granular speculative
+    /// commits: every cache level's replacement policy must confine its
+    /// state per set (SPM/pinning cores trivially qualify, BRRIP/DRRIP/
+    /// Random caches have cross-set state and decline).
+    pub fn speculation_safe(&self) -> bool {
+        let locals_ok = self.cores.iter().all(|m| match m {
+            Mode::Cache(c) => c.per_set_safe(),
+            Mode::Spm | Mode::Pinning(_) => true,
+        });
+        locals_ok && self.global.as_ref().map_or(true, |g| g.per_set_safe())
+    }
+
+    /// Capture the counters [`absorb_fork`](Self::absorb_fork) computes
+    /// deltas against. Take this *before* cloning speculative forks.
+    pub fn snapshot_stats(&self) -> HierarchySnapshotStats {
+        HierarchySnapshotStats {
+            core_stats: self
+                .cores
+                .iter()
+                .map(|m| match m {
+                    Mode::Cache(c) => Some((c.hits(), c.misses())),
+                    Mode::Spm | Mode::Pinning(_) => None,
+                })
+                .collect(),
+            global_stats: self.global.as_ref().map(|g| (g.hits(), g.misses())),
+            issued: self.controller.issued(),
+            now: self.now,
+        }
+    }
+
+    /// Off-chip lines issued so far. A speculative fork may only be
+    /// merged when this did not advance during its batch — the zero-DRAM
+    /// commit rule that keeps bank/bus/controller state untouched.
+    pub fn offchip_issued(&self) -> u64 {
+        self.controller.issued()
+    }
+
+    /// Conservative on-chip footprint of `trace`, written into `out` as
+    /// sorted deduplicated tagged set ids: every local cache set
+    /// (`core * sets + set`) and global cache set any of the batch's
+    /// *stream* lookup lines can touch. Pure address math — independent
+    /// of hierarchy state — so batch disjointness is decidable before
+    /// execution. Replica/pinned lookups contribute nothing (they only
+    /// touch commutative counters). Reuses the pooled plan buffers.
+    pub fn batch_footprint(&mut self, trace: &BatchTrace, out: &mut Vec<u64>) {
+        out.clear();
+        let mut plan = std::mem::take(&mut self.plan);
+        self.classify(&mut plan, trace);
+        let ncores = self.cores.len();
+        let local_sets = match self.cores.first() {
+            Some(Mode::Cache(c)) => c.sets(),
+            _ => 0,
+        };
+        for (i, lookup) in trace.lookups.iter().enumerate() {
+            if plan.classes()[i] != CLASS_STREAM {
+                continue;
+            }
+            let core = (i / self.lookups_per_sample) % ncores;
+            for line in self.addr_map.lines(lookup.table, lookup.row) {
+                if let Mode::Cache(c) = &self.cores[core] {
+                    out.push(FOOTPRINT_LOCAL_TAG | (core * local_sets + c.set_of(line)) as u64);
+                }
+                if let Some(g) = &self.global {
+                    out.push(FOOTPRINT_GLOBAL_TAG | g.set_of(line) as u64);
+                }
+            }
+        }
+        self.plan = plan;
+        out.sort_unstable();
+        out.dedup();
+    }
+
+    /// Fold a committed speculative fork back into this (true) state:
+    /// adopt the fork's version of every footprint set, fold its cache
+    /// hit/miss deltas relative to the fork-time `base` stats, and
+    /// advance the cycle cursor by the fork's batch cycles.
+    ///
+    /// Sound only under the commit rule the caller enforces: the fork
+    /// issued zero off-chip lines (bank, bus, controller, prefetcher and
+    /// issue state therefore never moved — a zero-DRAM batch's cycle
+    /// count is also independent of the cursor position), and its
+    /// footprint is disjoint from every batch executed since `base` was
+    /// captured (so the adopted sets still hold exactly the content the
+    /// fork derived its results from).
+    pub fn absorb_fork(
+        &mut self,
+        fork: &EmbeddingSim,
+        base: &HierarchySnapshotStats,
+        footprint: &[u64],
+    ) {
+        debug_assert_eq!(
+            fork.controller.issued(),
+            base.issued,
+            "absorb_fork requires a zero-DRAM fork"
+        );
+        let local_sets = match self.cores.first() {
+            Some(Mode::Cache(c)) => c.sets(),
+            _ => 0,
+        };
+        for &id in footprint {
+            if id & FOOTPRINT_GLOBAL_TAG != 0 {
+                if let (Some(g), Some(gf)) = (self.global.as_mut(), fork.global.as_ref()) {
+                    g.adopt_set((id & !FOOTPRINT_GLOBAL_TAG) as usize, gf);
+                }
+            } else if local_sets > 0 {
+                let raw = (id & !FOOTPRINT_LOCAL_TAG) as usize;
+                let (core, set) = (raw / local_sets, raw % local_sets);
+                if let (Mode::Cache(c), Mode::Cache(cf)) =
+                    (&mut self.cores[core], &fork.cores[core])
+                {
+                    c.adopt_set(set, cf);
+                }
+            }
+        }
+        for (i, base_stats) in base.core_stats.iter().enumerate() {
+            if let Some((bh, bm)) = base_stats {
+                if let (Mode::Cache(c), Mode::Cache(cf)) =
+                    (&mut self.cores[i], &fork.cores[i])
+                {
+                    c.absorb_stats(cf.hits(), cf.misses(), *bh, *bm);
+                }
+            }
+        }
+        if let (Some(g), Some(gf), Some((bh, bm))) =
+            (self.global.as_mut(), fork.global.as_ref(), base.global_stats)
+        {
+            g.absorb_stats(gf.hits(), gf.misses(), bh, bm);
+        }
+        self.now += fork.now.saturating_sub(base.now);
     }
 
     /// Software-prefetch coverage (optional analysis; see `mem::prefetch`).
@@ -590,5 +974,173 @@ mod tests {
         assert!(r.mem.global_hits > 0);
         // every local miss either hit global or went off-chip
         assert_eq!(r.mem.misses, r.mem.global_hits + r.mem.offchip_reads);
+    }
+
+    fn assert_results_eq(a: &EmbeddingStageResult, b: &EmbeddingStageResult, what: &str) {
+        assert_eq!(a.cycles, b.cycles, "{what}: cycles");
+        assert_eq!(a.mem, b.mem, "{what}: mem counters");
+        assert_eq!(a.ops.lookups, b.ops.lookups, "{what}: lookups");
+        assert_eq!(a.ops.vpu_ops, b.ops.vpu_ops, "{what}: vpu_ops");
+        assert_eq!(a.ops.macs, b.ops.macs, "{what}: macs");
+        assert_eq!(
+            a.ops.replicated_hits, b.ops.replicated_hits,
+            "{what}: replicated_hits"
+        );
+    }
+
+    #[test]
+    fn vectorized_path_bit_identical_to_scalar() {
+        for policy in [
+            OnchipPolicy::Spm,
+            OnchipPolicy::Cache(CachePolicyKind::Lru),
+            OnchipPolicy::Cache(CachePolicyKind::Srrip),
+            OnchipPolicy::Pinning,
+        ] {
+            let cfg = small_cfg(policy);
+            let lines_per_vec = cfg
+                .workload
+                .embedding
+                .vec_bytes()
+                .div_ceil(cfg.hardware.mem.access_granularity)
+                .max(1);
+            let run = |vectorized: bool| {
+                let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+                let mut sim = EmbeddingSim::new(&cfg);
+                sim.set_vectorized(vectorized);
+                let first = gen.next_batch();
+                let profile = EmbeddingSim::profile_batches(std::iter::once(&first));
+                if matches!(policy, OnchipPolicy::Pinning) {
+                    sim.set_pin_set(PinSet::from_profile(
+                        &profile,
+                        cfg.hardware.mem.onchip_bytes,
+                        cfg.workload.embedding.vec_bytes(),
+                    ));
+                }
+                // a replica set exercises the plan's REPLICA class in
+                // every mode (and, in pinning mode, its priority over
+                // the PINNED class for doubly-resident rows)
+                sim.set_replicas(
+                    HotRowReplicator::from_profile(&profile, 64),
+                    lines_per_vec,
+                );
+                let mut results = vec![sim.simulate_batch(&first)];
+                for _ in 0..2 {
+                    results.push(sim.simulate_batch(&gen.next_batch()));
+                }
+                (results, sim.now(), sim.cache_stats())
+            };
+            let (scalar, scalar_now, scalar_stats) = run(false);
+            let (vector, vector_now, vector_stats) = run(true);
+            for (a, b) in scalar.iter().zip(&vector) {
+                assert_results_eq(a, b, "scalar vs vectorized");
+            }
+            assert_eq!(scalar_now, vector_now, "cycle cursors must agree");
+            assert_eq!(scalar_stats, vector_stats, "cache stats must agree");
+        }
+    }
+
+    #[test]
+    fn plan_buffers_pool_across_batches() {
+        let cfg = small_cfg(OnchipPolicy::Spm);
+        let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+        let mut sim = EmbeddingSim::new(&cfg);
+        sim.set_vectorized(true);
+        let first = gen.next_batch();
+        let profile = EmbeddingSim::profile_batches(std::iter::once(&first));
+        sim.set_replicas(HotRowReplicator::from_profile(&profile, 32), 8);
+        sim.simulate_batch(&first);
+        let after_first = sim.plan_grow_events();
+        assert!(after_first >= 1, "vectorized run must build a plan");
+        for _ in 0..8 {
+            let t = gen.next_batch();
+            sim.simulate_batch(&t);
+        }
+        assert_eq!(
+            sim.plan_grow_events(),
+            after_first,
+            "steady-state batches must not reallocate plan buffers"
+        );
+    }
+
+    #[test]
+    fn speculation_safety_depends_on_policy_state_scope() {
+        for p in [
+            OnchipPolicy::Spm,
+            OnchipPolicy::Pinning,
+            OnchipPolicy::Cache(CachePolicyKind::Lru),
+            OnchipPolicy::Cache(CachePolicyKind::Srrip),
+            OnchipPolicy::Cache(CachePolicyKind::Fifo),
+        ] {
+            assert!(
+                EmbeddingSim::new(&small_cfg(p)).speculation_safe(),
+                "{p:?} has per-set replacement state"
+            );
+        }
+        for p in [
+            OnchipPolicy::Cache(CachePolicyKind::Brrip),
+            OnchipPolicy::Cache(CachePolicyKind::Drrip),
+            OnchipPolicy::Cache(CachePolicyKind::Random),
+        ] {
+            assert!(
+                !EmbeddingSim::new(&small_cfg(p)).speculation_safe(),
+                "{p:?} has cross-set replacement state"
+            );
+        }
+    }
+
+    #[test]
+    fn footprint_is_sorted_deduped_and_state_independent() {
+        let cfg = small_cfg(OnchipPolicy::Cache(CachePolicyKind::Lru));
+        let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+        let mut sim = EmbeddingSim::new(&cfg);
+        let t1 = gen.next_batch();
+        let t2 = gen.next_batch();
+        let mut cold = Vec::new();
+        sim.batch_footprint(&t1, &mut cold);
+        assert!(!cold.is_empty());
+        assert!(cold.windows(2).all(|w| w[0] < w[1]), "sorted + deduped");
+        sim.simulate_batch(&t2); // perturb hierarchy state
+        let mut warm = Vec::new();
+        sim.batch_footprint(&t1, &mut warm);
+        assert_eq!(cold, warm, "footprint must be pure address math");
+    }
+
+    #[test]
+    fn absorbed_fork_matches_serial_for_zero_dram_batch() {
+        // a cache big enough to hold the whole batch makes its second
+        // run fully resident — the zero-DRAM case the commit rule admits
+        let mut cfg = small_cfg(OnchipPolicy::Cache(CachePolicyKind::Lru));
+        cfg.hardware.mem.onchip_bytes = 64 << 20;
+        let mut gen = TraceGenerator::new(&cfg.workload).unwrap();
+        let mut sim = EmbeddingSim::new(&cfg);
+        let warm = gen.next_batch();
+        sim.simulate_batch(&warm);
+
+        let mut serial = sim.clone();
+        let want = serial.simulate_batch(&warm);
+
+        let base = sim.snapshot_stats();
+        let mut fp = Vec::new();
+        sim.batch_footprint(&warm, &mut fp);
+        let mut fork = sim.clone();
+        let got = fork.simulate_batch(&warm);
+        assert_eq!(
+            fork.offchip_issued(),
+            base.issued(),
+            "a fully resident batch must be zero-DRAM"
+        );
+        sim.absorb_fork(&fork, &base, &fp);
+
+        assert_results_eq(&got, &want, "fork vs serial");
+        assert_eq!(sim.now(), serial.now());
+        assert_eq!(sim.cache_stats(), serial.cache_stats());
+
+        // the absorbed state must keep behaving like the serial state
+        let next = gen.next_batch();
+        let a = sim.simulate_batch(&next);
+        let b = serial.simulate_batch(&next);
+        assert_results_eq(&a, &b, "post-absorb batch");
+        assert_eq!(sim.now(), serial.now());
+        assert_eq!(sim.cache_stats(), serial.cache_stats());
     }
 }

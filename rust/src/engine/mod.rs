@@ -253,6 +253,26 @@ impl SimCore {
     /// persistent hierarchy. `batch_index` numbers the steps in order,
     /// whatever trace the driver supplies.
     pub fn step_batch(&mut self, trace: &BatchTrace) -> BatchResult {
+        let emb_r = self.emb_sim.simulate_batch(trace);
+        self.finish_step(emb_r)
+    }
+
+    /// Simulate a sequence of batches, letting the embedding stage use
+    /// its speculative cross-batch window (`[sim] speculate_batches`)
+    /// where it applies. The surrounding MLP/interaction stages are
+    /// stateless per batch, so results are byte-identical to calling
+    /// [`step_batch`](Self::step_batch) in a loop — at any window size.
+    pub fn step_batches(&mut self, traces: &[&BatchTrace]) -> Vec<BatchResult> {
+        self.emb_sim
+            .simulate_batches(traces)
+            .into_iter()
+            .map(|emb_r| self.finish_step(emb_r))
+            .collect()
+    }
+
+    /// Wrap one embedding-stage result with the (stateless) bottom-MLP,
+    /// interaction and top-MLP stages into the batch's [`BatchResult`].
+    fn finish_step(&mut self, emb_r: crate::sharding::ShardedStageResult) -> BatchResult {
         let cfg = &self.cfg;
         let w = &cfg.workload;
         let hw = &cfg.hardware;
@@ -261,7 +281,6 @@ impl SimCore {
         self.steps += 1;
 
         let bottom_r = matrix::simulate_layers(hw, &self.bottom, elem);
-        let emb_r = self.emb_sim.simulate_batch(trace);
         // feature interaction: one elementwise combine over
         // (num_tables + 1) vectors of `dim` per sample
         let interact_elems =
@@ -353,9 +372,29 @@ impl Simulator {
         let mut core = SimCore::new(self.cfg.clone())?;
         let mut source = core.take_trace_source();
         let mut report = core.new_report();
-        report.per_batch.reserve(self.cfg.workload.num_batches);
-        for _ in 0..self.cfg.workload.num_batches {
-            report.per_batch.push(core.step_batch(source.next_trace()));
+        let n = self.cfg.workload.num_batches;
+        report.per_batch.reserve(n);
+        let k = self.cfg.speculate_batches.max(1);
+        if k > 1 && core.num_devices() == 1 {
+            // speculative window: buffer up to K owned traces per window
+            // (`next_trace`'s borrow only lives until the next call) and
+            // hand them to the core together. Byte-identical to the
+            // serial loop below at any K — enforced by tests.
+            let mut window: Vec<BatchTrace> = Vec::with_capacity(k);
+            let mut done = 0usize;
+            while done < n {
+                window.clear();
+                while window.len() < k && done + window.len() < n {
+                    window.push(source.next_trace().clone());
+                }
+                let refs: Vec<&BatchTrace> = window.iter().collect();
+                report.per_batch.extend(core.step_batches(&refs));
+                done += window.len();
+            }
+        } else {
+            for _ in 0..n {
+                report.per_batch.push(core.step_batch(source.next_trace()));
+            }
         }
         if self.cfg.energy.enabled {
             // per-component accounting: the aggregate is the sum of the
@@ -591,6 +630,40 @@ mod tests {
             assert_eq!(got.lookups, want.lookups, "batch {i}");
         }
         assert_eq!(source.position(), 4);
+    }
+
+    /// `[sim] speculate_batches` is a host-performance knob only: the
+    /// whole report must serialize to the same bytes at any window size,
+    /// on every on-chip policy (safe and unsafe alike).
+    #[test]
+    fn speculative_run_matches_serial_run_byte_identically() {
+        for policy in [
+            OnchipPolicy::Spm,
+            OnchipPolicy::Cache(CachePolicyKind::Lru),
+            OnchipPolicy::Cache(CachePolicyKind::Drrip),
+            OnchipPolicy::Pinning,
+        ] {
+            let mut cfg = small_cfg();
+            cfg.workload.num_batches = 6;
+            cfg.workload.trace.alpha = 1.2;
+            cfg.hardware.mem.policy = policy;
+            let serial = Simulator::new(cfg.clone()).run().unwrap();
+            for k in [2usize, 4] {
+                let mut scfg = cfg.clone();
+                scfg.speculate_batches = k;
+                let spec = Simulator::new(scfg).run().unwrap();
+                assert_eq!(
+                    crate::stats::writer::to_json(&serial),
+                    crate::stats::writer::to_json(&spec),
+                    "policy {policy:?} K={k}"
+                );
+                assert_eq!(
+                    crate::stats::writer::to_csv(&serial),
+                    crate::stats::writer::to_csv(&spec),
+                    "policy {policy:?} K={k}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -964,7 +964,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     println!(
         "benchmarking hot paths ({} scale, {} rep(s), {} thread(s))...",
         if opts.smoke { "smoke" } else { "full" },
-        if opts.smoke { 1 } else { opts.reps },
+        opts.reps.max(1),
         opts.threads,
     );
     let report = eonsim::bench::run_hotpath(&opts)?;

@@ -34,6 +34,7 @@ struct Pending {
 /// "oldest" is index 0 and the row-hit scan can early-exit at the first
 /// hit — with embedding vectors spanning 8 consecutive lines, the open
 /// row usually matches within the first few entries (§Perf iteration 3).
+#[derive(Clone)]
 pub struct MemController {
     dram: DramModel,
     window: Vec<Pending>,

@@ -44,6 +44,7 @@ pub enum RowOutcome {
 /// matches the configured `bandwidth_bytes_per_sec` (one 64 B line at
 /// 100 GB/s-per-channel occupies ~0.6 core cycles — rounding that up per
 /// access would understate HBM bandwidth by ~3x).
+#[derive(Clone)]
 pub struct DramModel {
     cfg: DramConfig,
     line_bytes: u64,

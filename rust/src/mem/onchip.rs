@@ -27,6 +27,7 @@ impl AccessOutcome {
 }
 
 /// Set-associative cache over line addresses.
+#[derive(Clone)]
 pub struct Cache {
     sets: usize,
     ways: usize,
@@ -141,6 +142,40 @@ impl Cache {
     pub fn reset_stats(&mut self) {
         self.hits = 0;
         self.misses = 0;
+    }
+
+    /// Set index a line address maps to — the conservative-footprint key
+    /// used by speculative cross-batch execution (`[sim] speculate_batches`).
+    #[inline]
+    pub fn set_of(&self, line_addr: u64) -> usize {
+        let line = line_addr / self.line_bytes;
+        // eonsim-lint: allow(underflow, reason = "sets >= 1 by construction (same invariant as access)")
+        (line as usize) & (self.sets - 1)
+    }
+
+    /// Whether the replacement policy tolerates set-granular merging of a
+    /// speculative fork (see [`PolicyImpl::per_set_safe`]).
+    pub fn per_set_safe(&self) -> bool {
+        self.policy.per_set_safe()
+    }
+
+    /// Adopt `set`'s tag row and replacement metadata from a speculative
+    /// fork cloned from this instance. Sound only when no other execution
+    /// touched `set` since the fork (disjoint-footprint commit rule).
+    pub fn adopt_set(&mut self, set: usize, from: &Cache) {
+        debug_assert_eq!(self.sets, from.sets);
+        debug_assert_eq!(self.ways, from.ways);
+        let base = set * self.ways;
+        self.tags[base..base + self.ways]
+            .copy_from_slice(&from.tags[base..base + self.ways]);
+        self.policy.adopt_set(set, &from.policy);
+    }
+
+    /// Fold a committed fork's hit/miss deltas (relative to the `base`
+    /// stats captured at fork time) into this instance's counters.
+    pub fn absorb_stats(&mut self, fork_hits: u64, fork_misses: u64, base_hits: u64, base_misses: u64) {
+        self.hits += fork_hits.saturating_sub(base_hits);
+        self.misses += fork_misses.saturating_sub(base_misses);
     }
 }
 

@@ -2,6 +2,7 @@
 
 use super::ReplacePolicy;
 
+#[derive(Clone)]
 pub struct Fifo {
     ways: usize,
     next: Vec<u32>, // per-set round-robin fill pointer
@@ -10,6 +11,11 @@ pub struct Fifo {
 impl Fifo {
     pub fn new(sets: usize, ways: usize) -> Self {
         Fifo { ways, next: vec![0; sets] }
+    }
+
+    /// Copy `set`'s fill pointer from a speculative fork of this instance.
+    pub fn adopt_set(&mut self, set: usize, from: &Fifo) {
+        self.next[set] = from.next[set];
     }
 }
 

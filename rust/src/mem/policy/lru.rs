@@ -5,6 +5,7 @@ use super::ReplacePolicy;
 /// Timestamp LRU: each (set, way) stores the global access counter at its
 /// last touch; the victim is the way with the smallest stamp. O(ways)
 /// victim search, O(1) hit/fill — the classic tag-store layout.
+#[derive(Clone)]
 pub struct Lru {
     ways: usize,
     stamps: Vec<u64>,
@@ -20,6 +21,18 @@ impl Lru {
     fn touch(&mut self, set: usize, way: usize) {
         self.clock += 1;
         self.stamps[set * self.ways + way] = self.clock;
+    }
+
+    /// Copy `set`'s stamp row from a speculative fork of this instance.
+    /// The merged clock takes the max so future stamps stay above every
+    /// adopted one — within-set stamp *order* (all that victim selection
+    /// observes) is preserved even though absolute values differ from a
+    /// serial execution.
+    pub fn adopt_set(&mut self, set: usize, from: &Lru) {
+        let base = set * self.ways;
+        self.stamps[base..base + self.ways]
+            .copy_from_slice(&from.stamps[base..base + self.ways]);
+        self.clock = self.clock.max(from.clock);
     }
 }
 

@@ -35,6 +35,7 @@ pub trait ReplacePolicy {
 }
 
 /// Statically dispatched policy selection.
+#[derive(Clone)]
 pub enum PolicyImpl {
     Lru(Lru),
     Srrip(Srrip),
@@ -53,6 +54,30 @@ impl PolicyImpl {
             CachePolicyKind::Drrip => PolicyImpl::Drrip(Drrip::new(sets, ways)),
             CachePolicyKind::Fifo => PolicyImpl::Fifo(Fifo::new(sets, ways)),
             CachePolicyKind::Random => PolicyImpl::Random(RandomRepl::new(sets, ways)),
+        }
+    }
+
+    /// Whether this policy's replacement state is confined per set, so a
+    /// speculative fork touching disjoint sets can be merged back
+    /// set-by-set without observable divergence. BRRIP (global
+    /// `fill_count`), DRRIP (global `psel` duel) and Random (one shared
+    /// RNG stream) have cross-set state and must decline.
+    pub fn per_set_safe(&self) -> bool {
+        matches!(
+            self,
+            PolicyImpl::Lru(_) | PolicyImpl::Srrip(_) | PolicyImpl::Fifo(_)
+        )
+    }
+
+    /// Copy `set`'s replacement metadata from a speculative fork. Only
+    /// valid for [`per_set_safe`](Self::per_set_safe) policies on forks
+    /// cloned from this instance (identical geometry and variant).
+    pub fn adopt_set(&mut self, set: usize, from: &PolicyImpl) {
+        match (self, from) {
+            (PolicyImpl::Lru(a), PolicyImpl::Lru(b)) => a.adopt_set(set, b),
+            (PolicyImpl::Srrip(a), PolicyImpl::Srrip(b)) => a.adopt_set(set, b),
+            (PolicyImpl::Fifo(a), PolicyImpl::Fifo(b)) => a.adopt_set(set, b),
+            _ => unreachable!("adopt_set is gated on per_set_safe policies"),
         }
     }
 }

@@ -119,6 +119,12 @@ impl PinSet {
     pub fn capacity_vectors(&self) -> usize {
         self.capacity_vectors
     }
+
+    /// Sorted (ascending `(table, row)`) iterator over the pinned ids —
+    /// merge-join input for [`crate::trace::BatchPlan`].
+    pub fn iter(&self) -> impl Iterator<Item = &(u32, u64)> {
+        self.pinned.iter()
+    }
 }
 
 #[cfg(test)]

@@ -3,6 +3,7 @@
 use super::ReplacePolicy;
 use crate::testutil::SplitMix64;
 
+#[derive(Clone)]
 pub struct RandomRepl {
     ways: usize,
     rng: SplitMix64,

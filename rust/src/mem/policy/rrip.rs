@@ -25,6 +25,7 @@ const PSEL_MAX: i32 = 1023;
 const PSEL_INIT: i32 = 512;
 
 /// Shared RRPV store + victim/aging logic (same as SRRIP's).
+#[derive(Clone)]
 struct Rrpv {
     ways: usize,
     rrpv: Vec<u8>,
@@ -57,6 +58,7 @@ impl Rrpv {
 }
 
 /// Bimodal RRIP.
+#[derive(Clone)]
 pub struct Brrip {
     rrpv: Rrpv,
     fill_count: u32,
@@ -102,6 +104,7 @@ impl ReplacePolicy for Brrip {
 }
 
 /// Dynamic RRIP with constituency set-dueling.
+#[derive(Clone)]
 pub struct Drrip {
     rrpv: Rrpv,
     brrip_fill_count: u32,

@@ -13,6 +13,7 @@ use super::ReplacePolicy;
 const MAX_RRPV: u8 = 3; // 2-bit
 const INSERT_RRPV: u8 = 2;
 
+#[derive(Clone)]
 pub struct Srrip {
     ways: usize,
     rrpv: Vec<u8>,
@@ -21,6 +22,14 @@ pub struct Srrip {
 impl Srrip {
     pub fn new(sets: usize, ways: usize) -> Self {
         Srrip { ways, rrpv: vec![MAX_RRPV; sets * ways] }
+    }
+
+    /// Copy `set`'s RRPV row from a speculative fork of this instance
+    /// (all SRRIP state is per-set, so this is a complete merge).
+    pub fn adopt_set(&mut self, set: usize, from: &Srrip) {
+        let base = set * self.ways;
+        self.rrpv[base..base + self.ways]
+            .copy_from_slice(&from.rrpv[base..base + self.ways]);
     }
 }
 

@@ -75,6 +75,12 @@ impl HotRowReplicator {
         self.k
     }
 
+    /// Sorted (ascending `(table, row)`) iterator over the replicated
+    /// ids — merge-join input for [`crate::trace::BatchPlan`].
+    pub fn iter(&self) -> impl Iterator<Item = &(u32, u64)> {
+        self.rows.iter()
+    }
+
     /// On-chip bytes the replica set pins on *each* device.
     pub fn pinned_bytes(&self, vec_bytes: u64) -> u64 {
         self.rows.len() as u64 * vec_bytes

@@ -21,10 +21,12 @@
 pub mod arrivals;
 pub mod gen;
 pub mod io;
+pub mod plan;
 pub mod zipf;
 
 pub use arrivals::ArrivalProcess;
 pub use gen::{BatchTrace, Lookup, TraceGenerator, WorkloadTrace};
+pub use plan::BatchPlan;
 pub use zipf::{RowPermutation, ZipfSampler};
 
 use crate::config::EmbeddingConfig;

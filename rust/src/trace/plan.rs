@@ -1,0 +1,268 @@
+//! Batch lookup plan: the structure-of-arrays pass behind the vectorized
+//! embedding hot path (`[sim] vectorized`, ROADMAP "Raw speed").
+//!
+//! The scalar engine probes the replica set (and, in pinning mode, the
+//! pin set) once per lookup — a BTree probe per lookup, millions per
+//! batch. A [`BatchPlan`] instead sorts the batch's lookup indices by
+//! `(table, row)` once, walks the run-length groups, and resolves each
+//! *unique* row's membership with a single merge-join step against the
+//! (already sorted) replica and pin sets. The resulting per-lookup class
+//! memo lets the engine bulk-account every replica/pinned lookup with
+//! pure array arithmetic and restrict the stateful position-order pass
+//! to the remaining stream lookups — byte-identical accounting, because
+//! replica/pinned lookups only ever touch commutative counters.
+//!
+//! Plan buffers are pooled: the owning simulator reuses one plan across
+//! batches (the `TablePartitioner::split_into` pattern), so steady-state
+//! simulation does no per-batch allocation. [`BatchPlan::grow_events`]
+//! counts capacity growth as the test hook for that invariant.
+
+use crate::trace::BatchTrace;
+
+/// Lookup classes produced by [`BatchPlan::build`]. `REPLICA` wins over
+/// `PINNED` (the scalar path consults the replica set first).
+pub const CLASS_STREAM: u8 = 0;
+pub const CLASS_REPLICA: u8 = 1;
+pub const CLASS_PINNED: u8 = 2;
+
+/// Sorted/grouped view of one batch's lookups plus the per-lookup class
+/// memo. Buffers persist across [`build`](Self::build) calls.
+#[derive(Debug, Clone, Default)]
+pub struct BatchPlan {
+    /// Lookup indices sorted by `(table, row)` (deterministic comparison
+    /// sort — equal keys form one group, intra-group order is irrelevant
+    /// because groups are only classified, never replayed).
+    order: Vec<u32>,
+    /// Per-lookup class (`CLASS_*`), indexed by trace position.
+    class: Vec<u8>,
+    /// Unique `(table, row)` groups in the last built batch.
+    groups: usize,
+    /// Times a pooled buffer had to grow capacity (allocation-count test
+    /// hook: constant batch sizes must plateau after the first build).
+    grow_events: u64,
+}
+
+impl BatchPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Classify `trace`'s lookups against the sorted `replicas` and
+    /// `pins` member sets (both ascending in `(table, row)` — BTreeSet
+    /// iteration order). Reuses the pooled buffers.
+    pub fn build<'a, R, P>(&mut self, trace: &BatchTrace, replicas: R, pins: P)
+    where
+        R: Iterator<Item = &'a (u32, u64)>,
+        P: Iterator<Item = &'a (u32, u64)>,
+    {
+        let n = trace.lookups.len();
+        self.order.clear();
+        self.class.clear();
+        if self.order.capacity() < n || self.class.capacity() < n {
+            self.grow_events += 1;
+            self.order.reserve(n);
+            self.class.reserve(n);
+        }
+        self.order.extend(0..n as u32);
+        self.class.resize(n, CLASS_STREAM);
+
+        let lookups = &trace.lookups;
+        self.order.sort_unstable_by_key(|&i| {
+            let l = lookups[i as usize];
+            (l.table, l.row)
+        });
+
+        let mut replicas = replicas.peekable();
+        let mut pins = pins.peekable();
+        let mut groups = 0usize;
+        let mut i = 0usize;
+        while i < n {
+            let key = {
+                let l = lookups[self.order[i] as usize];
+                (l.table, l.row)
+            };
+            let mut j = i + 1;
+            while j < n {
+                let l = lookups[self.order[j] as usize];
+                if (l.table, l.row) != key {
+                    break;
+                }
+                j += 1;
+            }
+            groups += 1;
+            // merge-join: both member sets are ascending, group keys are
+            // ascending, so each set is scanned at most once per batch
+            while replicas.peek().is_some_and(|&&k| k < key) {
+                replicas.next();
+            }
+            while pins.peek().is_some_and(|&&k| k < key) {
+                pins.next();
+            }
+            let class = if replicas.peek().is_some_and(|&&k| k == key) {
+                CLASS_REPLICA
+            } else if pins.peek().is_some_and(|&&k| k == key) {
+                CLASS_PINNED
+            } else {
+                CLASS_STREAM
+            };
+            if class != CLASS_STREAM {
+                for &idx in &self.order[i..j] {
+                    self.class[idx as usize] = class;
+                }
+            }
+            i = j;
+        }
+        self.groups = groups;
+    }
+
+    /// Per-lookup class memo, indexed by trace position.
+    #[inline]
+    pub fn classes(&self) -> &[u8] {
+        &self.class
+    }
+
+    /// Lookup indices in `(table, row)` order (the grouped view).
+    #[inline]
+    pub fn sorted_indices(&self) -> &[u32] {
+        &self.order
+    }
+
+    /// Unique `(table, row)` groups in the last built batch.
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    /// Times a pooled buffer had to grow (see struct docs).
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+
+    pub fn len(&self) -> usize {
+        self.class.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.class.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Lookup;
+    use std::collections::BTreeSet;
+
+    fn trace_of(ids: &[(u32, u64)]) -> BatchTrace {
+        BatchTrace {
+            batch_index: 0,
+            lookups: ids.iter().map(|&(table, row)| Lookup { table, row }).collect(),
+        }
+    }
+
+    fn set_of(ids: &[(u32, u64)]) -> BTreeSet<(u32, u64)> {
+        ids.iter().copied().collect()
+    }
+
+    #[test]
+    fn classifies_against_naive_membership() {
+        let trace = trace_of(&[
+            (0, 5),
+            (1, 2),
+            (0, 5),
+            (2, 9),
+            (1, 2),
+            (0, 1),
+            (3, 3),
+        ]);
+        let replicas = set_of(&[(0, 5), (3, 3)]);
+        let pins = set_of(&[(1, 2), (0, 5)]); // (0,5) also replicated
+        let mut plan = BatchPlan::new();
+        plan.build(&trace, replicas.iter(), pins.iter());
+        let want: Vec<u8> = trace
+            .lookups
+            .iter()
+            .map(|l| {
+                if replicas.contains(&(l.table, l.row)) {
+                    CLASS_REPLICA
+                } else if pins.contains(&(l.table, l.row)) {
+                    CLASS_PINNED
+                } else {
+                    CLASS_STREAM
+                }
+            })
+            .collect();
+        assert_eq!(plan.classes(), &want[..]);
+        assert_eq!(plan.groups(), 5, "5 unique (table,row) keys");
+    }
+
+    #[test]
+    fn replica_wins_over_pinned() {
+        let trace = trace_of(&[(4, 4)]);
+        let both = set_of(&[(4, 4)]);
+        let mut plan = BatchPlan::new();
+        plan.build(&trace, both.iter(), both.iter());
+        assert_eq!(plan.classes(), &[CLASS_REPLICA]);
+    }
+
+    #[test]
+    fn empty_sets_classify_everything_stream() {
+        let trace = trace_of(&[(0, 0), (1, 1), (0, 0)]);
+        let empty = BTreeSet::new();
+        let mut plan = BatchPlan::new();
+        plan.build(&trace, empty.iter(), empty.iter());
+        assert!(plan.classes().iter().all(|&c| c == CLASS_STREAM));
+        assert_eq!(plan.groups(), 2);
+        assert_eq!(plan.len(), 3);
+    }
+
+    #[test]
+    fn sorted_indices_group_equal_keys() {
+        let trace = trace_of(&[(1, 1), (0, 2), (1, 1), (0, 2), (0, 1)]);
+        let empty = BTreeSet::new();
+        let mut plan = BatchPlan::new();
+        plan.build(&trace, empty.iter(), empty.iter());
+        let keys: Vec<(u32, u64)> = plan
+            .sorted_indices()
+            .iter()
+            .map(|&i| {
+                let l = trace.lookups[i as usize];
+                (l.table, l.row)
+            })
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "indices must come back key-sorted");
+    }
+
+    #[test]
+    fn pooled_buffers_plateau() {
+        let trace = trace_of(&(0..256).map(|i| (0u32, i as u64 % 17)).collect::<Vec<_>>());
+        let empty = BTreeSet::new();
+        let mut plan = BatchPlan::new();
+        plan.build(&trace, empty.iter(), empty.iter());
+        let after_first = plan.grow_events();
+        assert!(after_first >= 1, "first build must allocate");
+        for _ in 0..32 {
+            plan.build(&trace, empty.iter(), empty.iter());
+        }
+        assert_eq!(
+            plan.grow_events(),
+            after_first,
+            "steady-state rebuilds must not grow the pooled buffers"
+        );
+    }
+
+    #[test]
+    fn deterministic_across_rebuilds() {
+        let trace = trace_of(&[(2, 2), (0, 9), (2, 2), (1, 4)]);
+        let replicas = set_of(&[(2, 2)]);
+        let empty = BTreeSet::new();
+        let mut a = BatchPlan::new();
+        let mut b = BatchPlan::new();
+        a.build(&trace, replicas.iter(), empty.iter());
+        b.build(&trace, replicas.iter(), empty.iter());
+        assert_eq!(a.classes(), b.classes());
+        assert_eq!(a.sorted_indices(), b.sorted_indices());
+        assert_eq!(a.groups(), b.groups());
+    }
+}

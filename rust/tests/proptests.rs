@@ -355,6 +355,66 @@ fn prop_parallel_run_bit_identical_to_serial() {
     });
 }
 
+/// The vectorized hot path and the speculative cross-batch window are
+/// pure host knobs: for every (vectorized × speculate_batches × threads)
+/// combination the report — cycles, every memory/op counter, the
+/// per-batch split, and the rendered CSV/JSON bytes — is bit-identical
+/// to the scalar serial run, across on-chip policies, device counts
+/// (speculation declines on multi-device but must stay exact), and
+/// hot-row replication.
+#[test]
+fn prop_vectorized_path_bit_identical() {
+    forall("vectorized+speculative==scalar serial", 6, |rng| {
+        let mut cfg = random_small_cfg(rng);
+        // 2..5 batches so speculation windows of 2 and 4 get real work
+        cfg.workload.num_batches = 2 + rng.next_below(4) as usize;
+        cfg.hardware.mem.policy = [
+            OnchipPolicy::Spm,
+            OnchipPolicy::Cache(CachePolicyKind::Lru),
+            OnchipPolicy::Cache(CachePolicyKind::Srrip),
+            OnchipPolicy::Pinning,
+        ][rng.next_below(4) as usize];
+        cfg.sharding.devices = 1 + rng.next_below(2) as usize; // 1 or 2
+        if rng.next_below(2) == 1 {
+            cfg.sharding.replicate_top_k = 32; // exercise the replica class
+        }
+        let run = |vectorized: bool, speculate: usize, threads: usize| {
+            let mut c = cfg.clone();
+            c.vectorized = vectorized;
+            c.speculate_batches = speculate;
+            c.threads = threads;
+            Simulator::new(c).run().unwrap()
+        };
+        let baseline = run(false, 1, 1);
+        for (vectorized, speculate, threads) in
+            [(true, 1, 1), (true, 2, 2), (true, 4, 5), (false, 2, 1), (false, 4, 3)]
+        {
+            let alt = run(vectorized, speculate, threads);
+            let tag = format!(
+                "vec={vectorized} k={speculate} t{threads} x{}d",
+                cfg.sharding.devices
+            );
+            assert_eq!(baseline.total_cycles(), alt.total_cycles(), "{tag}");
+            assert_eq!(baseline.total_mem(), alt.total_mem(), "{tag}");
+            assert_eq!(baseline.total_ops(), alt.total_ops(), "{tag}");
+            for (a, b) in baseline.per_batch.iter().zip(&alt.per_batch) {
+                assert_eq!(a.cycles, b.cycles, "{tag}");
+                assert_eq!(a.per_device, b.per_device, "{tag}");
+            }
+            assert_eq!(
+                eonsim::stats::writer::to_json(&baseline),
+                eonsim::stats::writer::to_json(&alt),
+                "JSON must be byte-identical ({tag})"
+            );
+            assert_eq!(
+                eonsim::stats::writer::to_csv(&baseline),
+                eonsim::stats::writer::to_csv(&alt),
+                "CSV must be byte-identical ({tag})"
+            );
+        }
+    });
+}
+
 /// Two-tier exchange accounting conserves bytes for every shard
 /// strategy × replication mode (none / per-device / per-node): each
 /// device's intra + inter tier bytes equal its flat-topology exchange

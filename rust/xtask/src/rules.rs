@@ -28,7 +28,8 @@ pub const RULES: &[(&str, &str)] = &[
     (
         "determinism",
         "no HashMap/HashSet in accounting/report paths (engine/, sharding/, stats/, \
-         mem/policy/, coordinator/) — iteration order must not leak into output",
+         mem/policy/, coordinator/, trace/plan.rs, and the snapshot-bearing mem \
+         models) — iteration order must not leak into output or merged snapshots",
     ),
     (
         "underflow",
@@ -51,7 +52,8 @@ pub const RULES: &[(&str, &str)] = &[
     ),
     (
         "concurrency",
-        "no thread::spawn/thread::scope outside parallel.rs and the sharded fan-out",
+        "no thread::spawn/thread::scope outside parallel.rs and the sharded fan-out — \
+         speculative snapshot forks included: they go through parallel_map_with",
     ),
 ];
 
@@ -61,6 +63,14 @@ const DET_PATHS: &[&str] = &[
     "rust/src/stats/",
     "rust/src/mem/policy/",
     "rust/src/coordinator/",
+    // The vectorized hot path and the speculation machinery: BatchPlan
+    // classification order and snapshot-merge order both feed directly
+    // into reported cycle counts, so hash iteration is banned there too
+    // (trace/gen.rs stays out — its HashSet never reaches a report).
+    "rust/src/trace/plan.rs",
+    "rust/src/mem/onchip.rs",
+    "rust/src/mem/controller.rs",
+    "rust/src/mem/dram.rs",
 ];
 const UND_PATHS: &[&str] =
     &["rust/src/engine/", "rust/src/compute/", "rust/src/mem/", "rust/src/sharding/"];

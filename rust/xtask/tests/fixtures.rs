@@ -152,6 +152,23 @@ fn concurrency_fixture() {
     assert_clean("concurrency_good");
 }
 
+/// `trace/plan.rs` is a determinism path: BatchPlan class order feeds
+/// reported cycles, so hash-grouped runs must fire and sorted runs pass.
+#[test]
+fn plan_determinism_fixture() {
+    assert_fires("plan_determinism_bad", "determinism");
+    assert_clean("plan_determinism_good");
+}
+
+/// The snapshot-bearing memory models stay inside the confined fan-out:
+/// ad-hoc threads forking hierarchy snapshots fire, forks routed through
+/// the parallel helper stay clean.
+#[test]
+fn snapshot_concurrency_fixture() {
+    assert_fires("snapshot_concurrency_bad", "concurrency");
+    assert_clean("snapshot_concurrency_good");
+}
+
 #[test]
 fn allow_machinery() {
     // reasonless allow: suppresses the finding but is itself a finding

@@ -1,0 +1,11 @@
+//! Bad: grouping batch-plan lookups through a HashMap — the class walk
+//! order would follow hash iteration, and the plan order feeds straight
+//! into reported cycle counts.
+
+pub fn group_runs(rows: &[u64]) -> Vec<(u64, u64)> {
+    let mut runs = std::collections::HashMap::new();
+    for &row in rows {
+        *runs.entry(row).or_insert(0u64) += 1;
+    }
+    runs.into_iter().collect()
+}

@@ -1,0 +1,15 @@
+//! Good: the same run-length grouping via a sort — the plan walks its
+//! classes in a deterministic, input-derived order.
+
+pub fn group_runs(rows: &[u64]) -> Vec<(u64, u64)> {
+    let mut sorted = rows.to_vec();
+    sorted.sort_unstable();
+    let mut runs: Vec<(u64, u64)> = Vec::new();
+    for &row in &sorted {
+        match runs.last_mut() {
+            Some((r, n)) if *r == row => *n += 1,
+            _ => runs.push((row, 1)),
+        }
+    }
+    runs
+}

@@ -1,0 +1,22 @@
+//! Bad: ad-hoc threads forking hierarchy snapshots — speculative forks
+//! must go through the confined fan-out in `parallel.rs`.
+
+#[derive(Clone)]
+pub struct Snapshot {
+    pub tags: Vec<u64>,
+}
+
+pub fn fork_and_touch(base: &Snapshot, batches: usize) -> Vec<Snapshot> {
+    let mut out = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..batches {
+            let fork = base.clone();
+            handles.push(s.spawn(move || fork));
+        }
+        for h in handles {
+            out.push(h.join().unwrap());
+        }
+    });
+    out
+}

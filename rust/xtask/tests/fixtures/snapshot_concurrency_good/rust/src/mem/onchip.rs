@@ -1,0 +1,13 @@
+//! Good: the same speculative forks, but routed through the confined
+//! fan-out helper — no thread primitives leak into the memory model.
+
+#[derive(Clone)]
+pub struct Snapshot {
+    pub tags: Vec<u64>,
+}
+
+pub fn fork_and_touch(base: &Snapshot, batches: usize) -> Vec<Snapshot> {
+    let seeds: Vec<usize> = (0..batches).collect();
+    crate::parallel::parallel_map_with(batches, &seeds, |_| Ok(base.clone()))
+        .expect("fork workers run infallible closures")
+}
